@@ -1,0 +1,83 @@
+//! Fig. 4 / Fig. 12 reproduction: LeNet-5 on the digits dataset (MNIST
+//! substitute) with random-filled M⊕ (Fig. 4) or N_tap=2 M⊕ (Fig. 12), at
+//! 0.4 / 0.6 / 0.8 bit/weight via N_out ∈ {10, 20}.
+//!
+//! Paper claims to reproduce (shape, not absolute numbers):
+//!   * training converges even at 0.4 bit/weight;
+//!   * larger N_out (20) gives better accuracy + less seed variance than
+//!     N_out=10 at the same rate;
+//!   * N_tap=2 (Fig. 12) trains at least as well as random fill.
+//!
+//! ```bash
+//! make artifacts SET=full
+//! cargo run --release --example fig4_mnist -- --scale 1.0 --seeds 3
+//! ```
+
+use anyhow::Result;
+
+use flexor::coordinator::experiments::{print_curves, print_table, run_all, scaled, RunSpec};
+use flexor::coordinator::Schedule;
+use flexor::runtime::{Manifest, Runtime};
+use flexor::substrate::argparse::Args;
+
+fn main() -> Result<()> {
+    let a = Args::new("fig4_mnist", "Fig. 4 / Fig. 12: LeNet-5 fractional rates")
+        .flag("scale", "step-count scale factor", Some("1.0"))
+        .flag("seeds", "seeds per point (paper: 6)", Some("2"))
+        .flag("steps", "base steps per run", Some("500"))
+        .switch("ntap2", "use the N_tap=2 configs (Fig. 12) instead of random M⊕")
+        .parse();
+    let scale = a.get_f32("scale");
+    let n_seeds = a.get_usize("seeds");
+    let steps = scaled(a.get_usize("steps"), scale);
+    let seeds: Vec<u64> = (0..n_seeds as u64).collect();
+    let tap = if a.get_bool("ntap2") { "tap2" } else { "rand" };
+
+    let sched = Schedule::mnist(1e-3, 100);
+    let mk = |label: &str, cfg: &str| {
+        RunSpec::new(label, cfg, "digits", steps)
+            .schedule(sched.clone())
+            .seeds(seeds.clone())
+            .eval_every((steps / 8).max(1))
+    };
+
+    let specs = vec![
+        mk("0.4 b/w (N_in=4, N_out=10)", &format!("fig4_lenet_{tap}_ni4_no10")),
+        mk("0.6 b/w (N_in=6, N_out=10)", &format!("fig4_lenet_{tap}_ni6_no10")),
+        mk("0.8 b/w (N_in=8, N_out=10)", &format!("fig4_lenet_{tap}_ni8_no10")),
+        mk("0.4 b/w (N_in=8, N_out=20)", &format!("fig4_lenet_{tap}_ni8_no20")),
+        mk("0.6 b/w (N_in=12, N_out=20)", &format!("fig4_lenet_{tap}_ni12_no20")),
+        mk("0.8 b/w (N_in=16, N_out=20)", &format!("fig4_lenet_{tap}_ni16_no20")),
+    ];
+
+    let rt = Runtime::cpu()?;
+    let man = Manifest::load(std::path::Path::new(flexor::ARTIFACTS_DIR))?;
+    let outs = run_all(&rt, &man, &specs)?;
+
+    let fig = if tap == "tap2" { "Fig. 12 (N_tap=2)" } else { "Fig. 4 (random M⊕)" };
+    print_table(&format!("{fig} — LeNet-5 on digits"), &outs);
+    print_curves(fig, &outs);
+
+    // paper's qualitative claims, checked mechanically:
+    let t = |i: usize| outs[i].top1_mean;
+    println!("\nclaims:");
+    println!(
+        "  [{}] all rates train above chance (min top1 {:.1}%)",
+        if outs.iter().all(|o| o.top1_mean > 0.2) { "ok" } else { "??" },
+        100.0 * outs.iter().map(|o| o.top1_mean).fold(f64::INFINITY, f64::min)
+    );
+    println!(
+        "  [{}] N_out=20 ≥ N_out=10 at 0.4 b/w ({:.1}% vs {:.1}%)",
+        if t(3) >= t(0) - 0.02 { "ok" } else { "??" },
+        100.0 * t(3),
+        100.0 * t(0)
+    );
+    println!(
+        "  [{}] rate ordering at N_out=20: 0.8 ≥ 0.6 ≥ 0.4 ({:.1} / {:.1} / {:.1})",
+        if t(5) >= t(4) - 0.02 && t(4) >= t(3) - 0.02 { "ok" } else { "??" },
+        100.0 * t(5),
+        100.0 * t(4),
+        100.0 * t(3)
+    );
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Fig. 6 / Figs. 13-14 reproduction: the effect of S_tanh on accuracy and
+//! on the distribution of encrypted weights. S_tanh is a *runtime scalar*
+//! input to the train HLO, so one artifact serves the whole sweep.
+//!
+//! Paper claims:
+//!   * large S_tanh clusters encrypted weights away from zero (bimodal);
+//!   * accuracy peaks at a moderate S_tanh (too small = loose clustering,
+//!     too large = can't fine-tune).
+//!
+//! ```bash
+//! cargo run --release --example fig6_stanh -- --hist
+//! ```
+
+use anyhow::Result;
+
+use flexor::coordinator::experiments::{print_table, run_all, scaled, RunSpec};
+use flexor::coordinator::{MetricsSink, Schedule, TrainSession};
+use flexor::data;
+use flexor::runtime::{Manifest, Runtime};
+use flexor::substrate::argparse::Args;
+
+fn main() -> Result<()> {
+    let a = Args::new("fig6_stanh", "Fig. 6: S_tanh sweep + weight distributions")
+        .flag("scale", "step-count scale factor", Some("1.0"))
+        .flag("steps", "base steps per run", Some("500"))
+        .flag("seeds", "seeds per point", Some("2"))
+        .switch("hist", "print encrypted-weight histograms (Figs. 13-14)")
+        .parse();
+    let steps = scaled(a.get_usize("steps"), a.get_f32("scale"));
+    let seeds: Vec<u64> = (0..a.get_usize("seeds") as u64).collect();
+
+    let rt = Runtime::cpu()?;
+    let man = Manifest::load(std::path::Path::new(flexor::ARTIFACTS_DIR))?;
+
+    let mut specs = Vec::new();
+    for s_tanh in [1.0f32, 10.0, 50.0, 100.0] {
+        let sched = Schedule {
+            s_tanh_start: s_tanh,
+            s_tanh_base: s_tanh,
+            s_tanh_decay_mult: 1.0,
+            ..Schedule::cifar(0.05, 0.5, vec![3.0, 4.0], 100)
+        };
+        specs.push(
+            RunSpec::new(&format!("S_tanh = {s_tanh}"), "fig5_flexor", "shapes32", steps)
+                .schedule(sched)
+                .seeds(seeds.clone())
+                .eval_every((steps / 8).max(1)),
+        );
+    }
+    let outs = run_all(&rt, &man, &specs)?;
+    print_table("Fig. 6 — S_tanh sweep (ResNet-8, 0.8 b/w)", &outs);
+
+    if a.get_bool("hist") {
+        // Figs. 13/14: end-of-training encrypted weight distributions per
+        // S_tanh — retrain one seed per point and histogram all w_enc.
+        println!("\n=== Figs. 13-14 — encrypted-weight distributions ===");
+        for s_tanh in [1.0f32, 10.0, 100.0] {
+            let sched = Schedule {
+                s_tanh_start: s_tanh,
+                s_tanh_base: s_tanh,
+                s_tanh_decay_mult: 1.0,
+                ..Schedule::cifar(0.05, 0.5, vec![3.0, 4.0], 100)
+            };
+            let mut session = TrainSession::new(&rt, &man, "fig5_flexor")?;
+            let ds = data::by_name("shapes32", 0)?;
+            let mut sink = MetricsSink::new();
+            session.train_loop(ds.as_ref(), &sched, steps, steps, 256, &mut sink)?;
+            let h = session.encrypted_weight_histogram(-0.5, 0.5, 21)?;
+            println!("\nS_tanh = {s_tanh}  (total {} weights):", h.total());
+            println!("{}", h.ascii(48));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Fig. 7 / Fig. 16 reproduction: test accuracy across q, N_in, N_out with
+//! the warmup recipe. Includes the paper's right-panel observation that
+//! 0.8 b/w via (q=1, N_in=8, N_out=10) and via (q=2, N_in=8, N_out=20)
+//! land at ≈ the same accuracy ("linear relationship between the number of
+//! encrypted weights and model accuracy").
+//!
+//! ```bash
+//! cargo run --release --example fig7_sweep -- --scale 0.5
+//! ```
+
+use anyhow::Result;
+
+use flexor::coordinator::experiments::{print_curves, print_table, run_all, scaled, RunSpec};
+use flexor::coordinator::Schedule;
+use flexor::runtime::{Manifest, Runtime};
+use flexor::substrate::argparse::Args;
+use flexor::substrate::stats::linreg;
+
+fn main() -> Result<()> {
+    let a = Args::new("fig7_sweep", "Fig. 7 / 16: q, N_in, N_out sweep")
+        .flag("scale", "step-count scale factor", Some("1.0"))
+        .flag("steps", "base steps per run", Some("500"))
+        .flag("seeds", "seeds per point (paper: 5 on the right panel)", Some("2"))
+        .parse();
+    let steps = scaled(a.get_usize("steps"), a.get_f32("scale"));
+    let seeds: Vec<u64> = (0..a.get_usize("seeds") as u64).collect();
+
+    // warmup recipe (paper §4 technique 4/5)
+    let sched = Schedule::cifar(0.05, 1.0, vec![3.5, 4.5], 100);
+    let mk = |label: &str, cfg: &str| {
+        RunSpec::new(label, cfg, "shapes32", steps)
+            .schedule(sched.clone())
+            .seeds(seeds.clone())
+            .eval_every((steps / 8).max(1))
+    };
+
+    let q1: Vec<RunSpec> = [4usize, 8, 12, 16, 20]
+        .iter()
+        .map(|ni| mk(&format!("q=1, N_in={ni}, N_out=20 ({:.1} b/w)", *ni as f64 / 20.0),
+                     &format!("sweep_q1_ni{ni}_no20")))
+        .collect();
+    let q2: Vec<RunSpec> = [4usize, 8, 12, 16, 20]
+        .iter()
+        .map(|ni| mk(&format!("q=2, N_in={ni}, N_out=20 ({:.1} b/w)", 2.0 * *ni as f64 / 20.0),
+                     &format!("sweep_q2_ni{ni}_no20")))
+        .collect();
+    // right panel: two routes to 0.8 b/w
+    let equiv = vec![
+        mk("0.8 b/w via q=1, N_in=8, N_out=10", "sweep_q1_ni8_no10"),
+        mk("0.8 b/w via q=2, N_in=8, N_out=20", "sweep_q2_ni8_no20"),
+    ];
+
+    let rt = Runtime::cpu()?;
+    let man = Manifest::load(std::path::Path::new(flexor::ARTIFACTS_DIR))?;
+
+    let o1 = run_all(&rt, &man, &q1)?;
+    print_table("Fig. 7 (left) — q=1, N_out=20", &o1);
+    print_curves("Fig. 7 q=1", &o1);
+
+    let o2 = run_all(&rt, &man, &q2)?;
+    print_table("Fig. 16 — q=2, N_out=20", &o2);
+
+    let oe = run_all(&rt, &man, &equiv)?;
+    print_table("Fig. 7 (right) — two routes to 0.8 b/w", &oe);
+
+    // accuracy should rise ~monotonically with rate; report the linear fit
+    let xs: Vec<f64> = o1.iter().map(|o| o.bits_per_weight).collect();
+    let ys: Vec<f64> = o1.iter().map(|o| o.top1_mean).collect();
+    let (_, slope, r2) = linreg(&xs, &ys);
+    println!("\nclaims:");
+    println!(
+        "  [{}] accuracy increases with rate (q=1 slope {slope:+.3}/bit, r²={r2:.2})",
+        if slope > 0.0 { "ok" } else { "??" }
+    );
+    let d = (oe[0].top1_mean - oe[1].top1_mean).abs();
+    println!(
+        "  [{}] the two 0.8 b/w routes agree ({:.1}% vs {:.1}%, Δ={:.1}pp)",
+        if d < 0.05 { "ok" } else { "??" },
+        100.0 * oe[0].top1_mean,
+        100.0 * oe[1].top1_mean,
+        100.0 * d
+    );
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Quickstart: train a FleXOR-quantized MLP (0.8 bit/weight) on the
+//! procedural digits dataset, export the encrypted deployment bundle, and
+//! run the pure-Rust decrypted inference path — the whole paper pipeline
+//! in one binary.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use flexor::coordinator::{export_bundle, MetricsSink, Schedule, TrainSession};
+use flexor::data::{self, Batcher, Split};
+use flexor::inference::InferenceModel;
+use flexor::runtime::{Manifest, Runtime};
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    // 1. load the AOT artifact (lowered once by `make artifacts`)
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(Path::new(flexor::ARTIFACTS_DIR))?;
+    let mut session = TrainSession::new(&rt, &manifest, "quickstart_mlp")?;
+    println!(
+        "artifact: {} | model {} | quantizer {} @ {:.2} bit/weight",
+        session.meta.name, session.meta.model, session.meta.quantizer_kind,
+        session.meta.bits_per_weight
+    );
+
+    // 2. train on procedural digits (MNIST substitute), Adam + constant
+    //    S_tanh=100 — the paper's §3 MNIST recipe
+    let ds = data::by_name("digits", 0)?;
+    let schedule = Schedule::mnist(1e-3, 100);
+    let mut sink = MetricsSink::new();
+    let ev = session.train_loop(ds.as_ref(), &schedule, steps, 50, 512, &mut sink)?;
+    println!("\nloss curve (every 25 steps):");
+    for row in sink.train.iter().step_by(25) {
+        println!("  step {:>5}  loss {:.4}  acc {:.3}", row.step, row.loss, row.acc);
+    }
+    println!(
+        "\nfinal eval: loss {:.4}  top1 {:.2}%  ({} examples)",
+        ev.loss, 100.0 * ev.top1, ev.examples
+    );
+
+    // 3. export the encrypted deployment bundle (.fxr + FP sidecar)
+    let out = Path::new("runs/quickstart");
+    export_bundle(&session, out, "quickstart_mlp")?;
+    let bundle_json =
+        std::fs::read_to_string(out.join("quickstart_mlp.bundle.json"))?;
+    println!("\nexported bundle:\n{bundle_json}");
+
+    // 4. deployment path: decrypt with word-parallel XOR gates, run the
+    //    pure-Rust forward, compare against the training-side eval accuracy
+    let model = InferenceModel::load(out, "quickstart_mlp")?;
+    let n = 256;
+    let (xs, ys) = Batcher::eval_set(ds.as_ref(), Split::Test, n);
+    let preds = model.predict(&xs, n)?;
+    let correct = preds.iter().zip(&ys).filter(|(p, y)| p == y).count();
+    println!(
+        "rust inference (decrypted bits): top1 {:.2}%  vs HLO eval {:.2}%",
+        100.0 * correct as f64 / n as f64,
+        100.0 * ev.top1
+    );
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Table 3 / Fig. 8 / Table 7 reproduction: the ImageNet-scale experiment
+//! on the shapes64 substitute (64×64×3, 20 classes) with the
+//! ResNet-18-style architecture (scaled: resnet10img).
+//!
+//! Reports top-1 / top-5 and the *storage saving* column computed exactly
+//! from the FXR container layout. `--q2` adds the appendix Table 7 rows.
+//!
+//! ```bash
+//! cargo run --release --example table3_imagenet -- --scale 0.5 [--q2]
+//! ```
+
+use anyhow::Result;
+
+use flexor::coordinator::experiments::{print_table, run_all, scaled, RunSpec};
+use flexor::coordinator::Schedule;
+use flexor::runtime::{Manifest, Runtime};
+use flexor::substrate::argparse::Args;
+
+fn main() -> Result<()> {
+    let a = Args::new("table3_imagenet", "Table 3 / Fig. 8: ImageNet-sub compression")
+        .flag("scale", "step-count scale factor", Some("1.0"))
+        .flag("steps", "base steps per run", Some("400"))
+        .flag("seeds", "seeds per point", Some("1"))
+        .switch("q2", "add Table 7 (q=2) rows")
+        .parse();
+    let steps = scaled(a.get_usize("steps"), a.get_f32("scale"));
+    let seeds: Vec<u64> = (0..a.get_usize("seeds") as u64).collect();
+
+    // paper §5 recipe: SGD momentum 0.9, warmup 10 epochs of 150ish; scaled
+    let sched = Schedule::cifar(0.05, 0.8, vec![2.5, 3.3, 4.0], 100);
+    let mk = |label: &str, cfg: &str, paper: Option<f64>| {
+        let mut s = RunSpec::new(label, cfg, "shapes64", steps)
+            .schedule(sched.clone())
+            .seeds(seeds.clone())
+            .eval_every((steps / 6).max(1));
+        if let Some(p) = paper {
+            s = s.paper(p);
+        }
+        s
+    };
+
+    let mut specs = vec![
+        mk("Full precision", "t3_img_fp", Some(69.6)),
+        mk("BWN (1 bit)", "t3_img_bwn", Some(60.8)),
+        mk("BinaryRelax (1 bit)", "t3_img_binaryrelax", Some(63.2)),
+        mk("FleXOR (0.8 bit)", "t3_img_f08", Some(63.8)),
+        mk("FleXOR (0.63 bit, mixed)", "t3_img_mixed", Some(63.3)),
+        mk("FleXOR (0.6 bit)", "t3_img_f06", Some(62.0)),
+    ];
+    if a.get_bool("q2") {
+        specs.push(mk("Ternary TWN-like", "t3_img_ternary", Some(61.8)));
+        specs.push(mk("FleXOR q=2 (1.6 bit)", "t3_img_q2_16", Some(66.2)));
+        specs.push(mk("FleXOR q=2 (0.8 bit)", "t3_img_q2_08", Some(63.8)));
+    }
+
+    let rt = Runtime::cpu()?;
+    let man = Manifest::load(std::path::Path::new(flexor::ARTIFACTS_DIR))?;
+    let outs = run_all(&rt, &man, &specs)?;
+    print_table("Table 3 — ResNet-10img on shapes64 (ImageNet substitute)", &outs);
+
+    println!("\n{:<30} {:>8} {:>8} {:>16}", "method", "top1", "top5", "storage saving");
+    for o in &outs {
+        let saving = 32.0 / o.bits_per_weight;
+        println!(
+            "{:<30} {:>7.2}% {:>7.2}% {:>14.1}×",
+            o.spec.label,
+            100.0 * o.top1_mean,
+            100.0 * o.top5_mean,
+            saving
+        );
+    }
+
+    let by = |l: &str| outs.iter().find(|o| o.spec.label.starts_with(l)).map(|o| o.top1_mean);
+    println!("\nclaims:");
+    if let (Some(f08), Some(bwn)) = (by("FleXOR (0.8"), by("BWN")) {
+        println!(
+            "  [{}] FleXOR 0.8 b/w ≥ BWN 1 b/w ({:.1}% vs {:.1}%) at 1.25× the saving",
+            if f08 >= bwn - 0.02 { "ok" } else { "??" },
+            100.0 * f08,
+            100.0 * bwn
+        );
+    }
+    if let (Some(f08), Some(f06)) = (by("FleXOR (0.8"), by("FleXOR (0.6 bit")) {
+        println!(
+            "  [{}] rate ordering 0.8 ≥ 0.6 ({:.1}% vs {:.1}%)",
+            if f08 >= f06 - 0.03 { "ok" } else { "??" },
+            100.0 * f08,
+            100.0 * f06
+        );
+    }
+    Ok(())
+}

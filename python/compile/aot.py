@@ -1,0 +1,328 @@
+"""AOT compiler: lower every experiment config to HLO text + metadata.
+
+For each config in configs.py this emits, under ``artifacts/<name>/``:
+
+  * ``train_step.hlo.txt`` — ONE HLO for loss+grads+optimizer update, with a
+    flat-leaf calling convention (see below),
+  * ``eval_step.hlo.txt``  — eval loss / top-1 / top-5 counts,
+  * ``init.bin``           — initial (params, opt_state, bn_state) leaves,
+  * ``meta.json``          — leaf layout, M⊕ matrices, storage accounting,
+
+plus a global ``artifacts/manifest.json`` the Rust runtime indexes.
+
+Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` crate binds) rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+
+Flat calling convention (what Rust marshals, in order):
+
+  train inputs : state leaves (params ++ opt ++ bn) ++ [x, y, lr, s_tanh, relax_lambda]
+  train outputs: state leaves' ++ [loss, correct]        (positional feedback)
+  eval inputs  : params ++ bn ++ [x, y, s_tanh, relax_lambda]
+  eval outputs : [loss, correct, top5_correct]
+
+Python runs only here, at build time.  ``make artifacts`` is incremental: a
+config is skipped when its meta.json already records the same config hash.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import struct
+import sys
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs as config_registry
+from . import quant, train
+from . import models as model_zoo
+
+MAGIC = b"FXIN"
+DTYPE_TAGS = {"float32": 0, "int32": 1}
+
+
+# ---------------------------------------------------------------------------
+# config -> Quantizer
+# ---------------------------------------------------------------------------
+
+def make_quantizer(qcfg: dict) -> quant.Quantizer:
+    kind = qcfg["kind"]
+    if kind != "flexor":
+        return quant.Quantizer(kind)
+    base = quant.FlexorSpec(
+        qcfg["q"], qcfg["n_in"], qcfg["n_out"], n_tap=qcfg.get("n_tap", 2),
+        seed=qcfg.get("seed", 7), mode=qcfg.get("mode", "flexor"),
+        grad=qcfg.get("grad", "approx"))
+    specs = {}
+    for gi, grp in enumerate(qcfg.get("groups", [])):
+        spec = quant.FlexorSpec(
+            qcfg["q"], grp["n_in"], grp.get("n_out", qcfg["n_out"]),
+            n_tap=qcfg.get("n_tap", 2), seed=qcfg.get("seed", 7) + 100 * (gi + 1),
+            mode=qcfg.get("mode", "flexor"), grad=qcfg.get("grad", "approx"))
+        for li in grp["layers"]:
+            specs[li] = spec
+    return quant.Quantizer("flexor", spec=base, specs=specs,
+                           use_pallas=qcfg.get("use_pallas", False))
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is ESSENTIAL: the default printer elides
+    # big array constants as `constant({...})`, which xla_extension 0.5.1's
+    # HLO parser silently zero-fills — baked M⊕ tables would decode as
+    # all-zeros (discovered the hard way; see EXPERIMENTS.md §Debugging).
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def flatten_fn(fn, example_args):
+    """Wrap fn so its signature is the flat leaf list of example_args."""
+    flat, tdef = jax.tree.flatten(example_args)
+
+    def wrapped(*leaves):
+        out = fn(*jax.tree.unflatten(tdef, list(leaves)))
+        return tuple(jax.tree.leaves(out))
+
+    return wrapped, flat
+
+
+def leaf_meta(tree, role: str):
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out.append({
+            "role": role,
+            "path": jax.tree_util.keystr(path),
+            "shape": list(leaf.shape),
+            "dtype": str(leaf.dtype),
+        })
+    return out
+
+
+def write_init_bin(path: Path, trees):
+    """Serialize the flat leaves of ``trees`` (a tuple of pytrees)."""
+    leaves = jax.tree.leaves(trees)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", 1, len(leaves)))
+        for leaf in leaves:
+            a = np.asarray(leaf)
+            tag = DTYPE_TAGS[str(a.dtype)]
+            f.write(struct.pack("<BBH", tag, a.ndim, 0))
+            f.write(struct.pack(f"<{a.ndim}I", *a.shape) if a.ndim else b"")
+            f.write(a.astype("<f4" if tag == 0 else "<i4").tobytes())
+
+
+# ---------------------------------------------------------------------------
+# storage accounting (Table 5's compression-ratio column)
+# ---------------------------------------------------------------------------
+
+def storage_report(cfg, qz, model, mk):
+    qshapes = model.quantized_layer_shapes(**mk) if hasattr(
+        model, "quantized_layer_shapes") else []
+    layers = []
+    enc_bits = 0
+    qweights = 0
+    alpha_bits = 0
+    for idx, shape in qshapes:
+        n = int(np.prod(shape))
+        bits = qz.storage_bits(n, layer_idx=idx)
+        layers.append({"idx": idx, "shape": list(shape), "weights": n,
+                       "stored_bits": bits,
+                       "bits_per_weight": bits / n})
+        enc_bits += bits
+        qweights += n
+        if qz.kind == "flexor":
+            alpha_bits += 32 * qz.spec_for(idx).q * shape[-1]
+    return {
+        "layers": layers,
+        "quantized_weights": qweights,
+        "encrypted_bits": enc_bits,
+        "alpha_bits": alpha_bits,
+        "bits_per_weight": enc_bits / qweights if qweights else 32.0,
+        "compression_ratio_weights_only":
+            (32.0 * qweights / enc_bits) if enc_bits else 1.0,
+        "compression_ratio_with_alpha":
+            (32.0 * qweights / (enc_bits + alpha_bits)) if enc_bits else 1.0,
+    }
+
+
+def mxor_report(cfg, qz, model, mk):
+    if qz.kind != "flexor":
+        return None
+    def spec_json(spec):
+        return {"q": spec.q, "n_in": spec.n_in, "n_out": spec.n_out,
+                "n_tap": spec.n_tap, "mode": spec.mode, "grad": spec.grad,
+                "bits_per_weight": spec.bits_per_weight,
+                "mxor": [[[int(v) for v in row] for row in m]
+                          for m in spec.mxor]}
+    rep = {"default": spec_json(qz.spec)}
+    groups = {}
+    for idx, spec in qz.specs.items():
+        groups[str(idx)] = spec_json(spec)
+    if groups:
+        rep["per_layer"] = groups
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# per-config build
+# ---------------------------------------------------------------------------
+
+def config_hash(cfg: dict) -> str:
+    return hashlib.sha256(
+        json.dumps(cfg, sort_keys=True).encode()).hexdigest()[:16]
+
+
+def build_config(cfg: dict, out_root: Path, force: bool = False) -> bool:
+    """Returns True if (re)built, False if up-to-date."""
+    name = cfg["name"]
+    cdir = out_root / name
+    meta_path = cdir / "meta.json"
+    h = config_hash(cfg)
+    if not force and meta_path.exists():
+        try:
+            if json.loads(meta_path.read_text()).get("config_hash") == h:
+                return False
+        except json.JSONDecodeError:
+            pass
+    cdir.mkdir(parents=True, exist_ok=True)
+
+    qz = make_quantizer(cfg["quantizer"])
+    mk = dict(cfg["model_kwargs"])
+    model = model_zoo.get(cfg["model"])
+    if cfg["model"].startswith("resnet"):
+        mk.setdefault("in_ch", cfg["in_ch"])
+    elif cfg["model"] == "lenet5":
+        mk.setdefault("in_hw", cfg["in_hw"])
+        mk.setdefault("in_ch", cfg["in_ch"])
+        mk.setdefault("num_classes", cfg["num_classes"])
+    elif cfg["model"] == "mlp":
+        mk.setdefault("num_classes", cfg["num_classes"])
+
+    init_fn, train_step, eval_step = train.build(
+        cfg["model"], qz, optimizer=cfg["optimizer"],
+        weight_decay=cfg["weight_decay"], model_kwargs=mk)
+
+    params, opt, bn = init_fn(cfg["seed"])
+    b = cfg["batch"]
+    x_spec = jax.ShapeDtypeStruct((b, cfg["in_hw"], cfg["in_hw"], cfg["in_ch"]),
+                                  jnp.float32)
+    if cfg["model"] == "mlp":
+        d_in = mk.get("d_in", 784)
+        x_spec = jax.ShapeDtypeStruct((b, d_in), jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((b,), jnp.int32)
+    s_spec = jax.ShapeDtypeStruct((), jnp.float32)
+
+    specs = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                         (params, opt, bn))
+
+    train_args = (*specs, x_spec, y_spec, s_spec, s_spec, s_spec)
+    train_flat, train_leaves = flatten_fn(train_step, train_args)
+    train_hlo = to_hlo_text(
+        jax.jit(train_flat, keep_unused=True).lower(*train_leaves))
+
+    eval_args = (specs[0], specs[2], x_spec, y_spec, s_spec, s_spec)
+    eval_flat, eval_leaves = flatten_fn(eval_step, eval_args)
+    eval_hlo = to_hlo_text(
+        jax.jit(eval_flat, keep_unused=True).lower(*eval_leaves))
+
+    (cdir / "train_step.hlo.txt").write_text(train_hlo)
+    (cdir / "eval_step.hlo.txt").write_text(eval_hlo)
+    write_init_bin(cdir / "init.bin", (params, opt, bn))
+
+    n_p = len(jax.tree.leaves(params))
+    n_o = len(jax.tree.leaves(opt))
+    n_b = len(jax.tree.leaves(bn))
+    meta = {
+        "config_hash": h,
+        "config": cfg,
+        "files": {"train": "train_step.hlo.txt", "eval": "eval_step.hlo.txt",
+                  "init": "init.bin"},
+        "batch": b,
+        "input": {"shape": list(x_spec.shape), "classes": cfg["num_classes"]},
+        "leaves": (leaf_meta(params, "params") + leaf_meta(opt, "opt")
+                   + leaf_meta(bn, "bn")),
+        "counts": {"params": n_p, "opt": n_o, "bn": n_b},
+        "train_io": {
+            "inputs": n_p + n_o + n_b + 5,
+            "outputs": n_p + n_o + n_b + 2,
+            "state_feedback": n_p + n_o + n_b,
+            "scalar_order": ["lr", "s_tanh", "relax_lambda"],
+        },
+        "eval_io": {"inputs": n_p + n_b + 4, "outputs": 3,
+                    "scalar_order": ["s_tanh", "relax_lambda"]},
+        "storage": storage_report(cfg, qz, model, mk),
+        "flexor": mxor_report(cfg, qz, model, mk),
+    }
+    meta_path.write_text(json.dumps(meta, indent=1))
+    return True
+
+
+def write_manifest(out_root: Path):
+    entries = {}
+    for meta_path in sorted(out_root.glob("*/meta.json")):
+        try:
+            meta = json.loads(meta_path.read_text())
+        except json.JSONDecodeError:
+            continue
+        entries[meta["config"]["name"]] = {
+            "dir": meta_path.parent.name,
+            "model": meta["config"]["model"],
+            "quantizer": meta["config"]["quantizer"]["kind"],
+            "bits_per_weight": meta["storage"]["bits_per_weight"],
+            "tags": meta["config"]["tags"],
+        }
+    (out_root / "manifest.json").write_text(
+        json.dumps({"version": 1, "configs": entries}, indent=1))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--set", dest="set_name", default="default",
+                    help="default | full | all | <tag>")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated config names")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    only = args.only.split(",") if args.only else None
+    cfgs = config_registry.select(args.set_name, only)
+    if args.list:
+        for c in cfgs:
+            print(f"{c['name']:36s} {c['model']:12s} "
+                  f"{c['quantizer']['kind']:12s} tags={','.join(c['tags'])}")
+        return 0
+
+    out_root = Path(args.out)
+    out_root.mkdir(parents=True, exist_ok=True)
+    built = skipped = 0
+    for c in cfgs:
+        if build_config(c, out_root, force=args.force):
+            built += 1
+            print(f"[aot] built {c['name']}")
+        else:
+            skipped += 1
+    write_manifest(out_root)
+    print(f"[aot] done: {built} built, {skipped} up-to-date "
+          f"-> {out_root / 'manifest.json'}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,181 @@
+"""Experiment configuration registry for the AOT compiler.
+
+Every (model × quantizer × shape) combination the Rust side can run must be
+lowered ahead of time; this module enumerates them.  Sets:
+
+  * ``default`` — what plain ``make artifacts`` builds: the quickstart, the
+    e2e driver and the small kernels-enabled config.  Fast to build.
+  * ``full``    — everything the table/figure runners need (Fig. 4-8,
+    Tables 1-7).  ``make artifacts SET=full``.
+
+S_tanh / learning rate / BinaryRelax λ are *runtime scalars* (HLO inputs),
+so schedule sweeps (Fig. 6, warmup ablations) reuse one artifact.  Only
+shape-changing knobs (q, N_in, N_out, model, batch) need separate configs.
+
+Dataset geometry convention (matches rust/src/data):
+  digits   — 28×28×1, 10 classes (MNIST substitute)
+  shapes32 — 32×32×3, 10 classes (CIFAR-10 substitute)
+  shapes64 — 64×64×3, 20 classes (ImageNet substitute)
+"""
+
+from __future__ import annotations
+
+
+def _flexor(q, n_in, n_out, *, n_tap=2, seed=7, mode="flexor", grad="approx",
+            use_pallas=False, groups=None):
+    d = {"kind": "flexor", "q": q, "n_in": n_in, "n_out": n_out,
+         "n_tap": n_tap, "seed": seed, "mode": mode, "grad": grad,
+         "use_pallas": use_pallas}
+    if groups:
+        d["groups"] = groups
+    return d
+
+
+def _cfg(name, model, quantizer, *, batch=64, optimizer="sgd",
+         weight_decay=1e-5, seed=0, in_hw=32, in_ch=3, num_classes=10,
+         model_kwargs=None, tags=()):
+    return {
+        "name": name, "model": model, "quantizer": quantizer,
+        "batch": batch, "optimizer": optimizer,
+        "weight_decay": weight_decay, "seed": seed,
+        "in_hw": in_hw, "in_ch": in_ch, "num_classes": num_classes,
+        "model_kwargs": model_kwargs or {}, "tags": list(tags),
+    }
+
+
+MNIST = dict(in_hw=28, in_ch=1, num_classes=10)
+C10 = dict(in_hw=32, in_ch=3, num_classes=10)
+IMG = dict(in_hw=64, in_ch=3, num_classes=20)
+
+
+def build_registry():
+    cfgs = []
+
+    # ---- default set ---------------------------------------------------------
+    cfgs += [
+        # quickstart: tiny MLP on digits, FleXOR 0.8 b/w
+        _cfg("quickstart_mlp", "mlp", _flexor(1, 8, 10), batch=64,
+             optimizer="adam", weight_decay=0.0,
+             model_kwargs={"d_in": 784, "hidden": [128, 64]},
+             tags=("default",), **MNIST),
+        # e2e driver: ResNet-14 (~170k params) on shapes32, FleXOR 0.8 b/w
+        _cfg("e2e_resnet14_f08", "resnet14", _flexor(1, 8, 10), batch=64,
+             tags=("default", "e2e"), **C10),
+        # pallas-kernel-enabled twin of the quickstart (L1 on the train path)
+        _cfg("quickstart_mlp_pallas", "mlp",
+             _flexor(1, 8, 10, use_pallas=True), batch=64,
+             optimizer="adam", weight_decay=0.0,
+             model_kwargs={"d_in": 784, "hidden": [128, 64]},
+             tags=("default",), **MNIST),
+        # FP reference for the e2e model
+        _cfg("e2e_resnet14_fp", "resnet14", {"kind": "fp"}, batch=64,
+             tags=("default", "e2e"), **C10),
+    ]
+
+    # ---- Fig. 4 / Fig. 12: LeNet-5 on digits, random vs N_tap=2 M⊕ -----------
+    for n_out, n_in in [(10, 4), (10, 6), (10, 8), (20, 8), (20, 12), (20, 16)]:
+        for tap_tag, n_tap in [("rand", None), ("tap2", 2)]:
+            bw = n_in / n_out
+            cfgs.append(_cfg(
+                f"fig4_lenet_{tap_tag}_ni{n_in}_no{n_out}", "lenet5",
+                _flexor(1, n_in, n_out, n_tap=n_tap), batch=50,
+                optimizer="adam", weight_decay=0.0,
+                model_kwargs={"width_mult": 0.25},
+                tags=("full", "fig4") + (("fig12",) if n_tap else ()),
+                **MNIST))
+
+    # ---- Fig. 5: XOR training method ablation (0.8 b/w, resnet8) --------------
+    for mode in ["flexor", "ste", "analog"]:
+        cfgs.append(_cfg(f"fig5_{mode}", "resnet8",
+                         _flexor(1, 8, 10, mode=mode), batch=64,
+                         tags=("full", "fig5"), **C10))
+    cfgs.append(_cfg("fig5_exactgrad", "resnet8",
+                     _flexor(1, 8, 10, grad="exact"), batch=64,
+                     tags=("full", "fig5"), **C10))
+
+    # ---- Fig. 6: S_tanh sweep reuses fig5_flexor (runtime scalar) -------------
+
+    # ---- Fig. 15 ablations: weight-decay off (LR/S_tanh are runtime scalars,
+    # weight decay is baked into the train graph, so it needs its own config)
+    cfgs.append(_cfg("fig15_nowd", "resnet8", _flexor(1, 8, 10),
+                     batch=64, weight_decay=0.0, tags=("full", "fig15"), **C10))
+
+    # ---- Fig. 7 / Table 1 / Table 5: q, N_in, N_out sweeps on resnet8/14 ------
+    for n_in in [4, 6, 8, 10, 12, 16, 20]:
+        if n_in <= 20:
+            cfgs.append(_cfg(f"sweep_q1_ni{n_in}_no20", "resnet8",
+                             _flexor(1, n_in, 20), batch=64,
+                             tags=("full", "fig7", "table1"), **C10))
+    for n_in in [5, 6, 7, 8, 9, 10]:
+        cfgs.append(_cfg(f"sweep_q1_ni{n_in}_no10", "resnet8",
+                         _flexor(1, n_in, 10), batch=64,
+                         tags=("full", "fig7", "table5"), **C10))
+    for n_in in [6, 7, 8, 9, 10]:      # Table 6 (q=2, N_out=10)
+        cfgs.append(_cfg(f"sweep_q2_ni{n_in}_no10", "resnet8",
+                         _flexor(2, n_in, 10), batch=64,
+                         tags=("full", "fig16", "table6"), **C10))
+    for n_in in [4, 8, 12, 16, 20]:    # Table 6 (q=2, N_out=20)
+        cfgs.append(_cfg(f"sweep_q2_ni{n_in}_no20", "resnet8",
+                         _flexor(2, n_in, 20), batch=64,
+                         tags=("full", "fig7", "fig16", "table6"), **C10))
+
+    # ---- Table 1 baselines on resnet8 + resnet14 -------------------------------
+    for model, mtag in [("resnet8", "r8"), ("resnet14", "r14")]:
+        for kind in ["fp", "bwn", "binaryrelax", "ternary", "dsq"]:
+            cfgs.append(_cfg(f"base_{mtag}_{kind}", model, {"kind": kind},
+                             batch=64, tags=("full", "table1", "table6"),
+                             **C10))
+        for bw_tag, (q, n_in, n_out) in [("10", (1, 10, 10)), ("08", (1, 8, 10)),
+                                         ("06", (1, 12, 20)), ("04", (1, 8, 20))]:
+            cfgs.append(_cfg(f"t1_{mtag}_f{bw_tag}", model,
+                             _flexor(q, n_in, n_out), batch=64,
+                             tags=("full", "table1"), **C10))
+
+    # ---- Table 2: mixed sub-1-bit N_in per layer group (resnet8: 3 stages) ----
+    # groups address quantized-layer indices; resnet8 has 7 quantized convs:
+    # stage1: 0-1, stage2: 2-4 (incl. downsample), stage3: 5-7
+    def groups3(ni1, ni2, ni3):
+        return [{"layers": list(range(0, 2)), "n_in": ni1},
+                {"layers": list(range(2, 5)), "n_in": ni2},
+                {"layers": list(range(5, 8)), "n_in": ni3}]
+    for tag, (a, b, c) in [("19_19_8", (19, 19, 8)), ("16_16_8", (16, 16, 8)),
+                           ("19_16_7", (19, 16, 7)), ("12_12_12", (12, 12, 12))]:
+        cfgs.append(_cfg(f"t2_mixed_{tag}", "resnet8",
+                         _flexor(1, 12, 20, groups=groups3(a, b, c)),
+                         batch=64, tags=("full", "table2"), **C10))
+
+    # ---- Fig. 8 / Table 3 / Table 7: ImageNet-sub on resnet10img ---------------
+    for tag, (q, n_in, n_out) in [("f08", (1, 16, 20)), ("f06", (1, 12, 20)),
+                                  ("q2_08", (2, 8, 20)), ("q2_16", (2, 16, 20))]:
+        cfgs.append(_cfg(f"t3_img_{tag}", "resnet10img",
+                         _flexor(q, n_in, n_out), batch=64,
+                         tags=("full", "fig8", "table3", "table7"), **IMG))
+    # mixed 0.63 b/w analogue: 4 stage groups with decreasing N_in
+    # resnet10img quantized convs: s1:0-1, s2:2-4, s3:5-7, s4:8-10
+    cfgs.append(_cfg("t3_img_mixed", "resnet10img",
+                     _flexor(1, 12, 20, groups=[
+                         {"layers": [0, 1], "n_in": 18},
+                         {"layers": [2, 3, 4], "n_in": 16},
+                         {"layers": [5, 6, 7], "n_in": 14},
+                         {"layers": [8, 9, 10], "n_in": 12}]),
+                     batch=64, tags=("full", "fig8", "table3"), **IMG))
+    for kind in ["fp", "bwn", "binaryrelax", "ternary"]:
+        cfgs.append(_cfg(f"t3_img_{kind}", "resnet10img", {"kind": kind},
+                         batch=64, tags=("full", "table3", "table7"), **IMG))
+
+    return {c["name"]: c for c in cfgs}
+
+
+REGISTRY = build_registry()
+
+
+def select(set_name: str = "default", only: list[str] | None = None):
+    if only:
+        missing = [n for n in only if n not in REGISTRY]
+        if missing:
+            raise KeyError(f"unknown configs: {missing}")
+        return [REGISTRY[n] for n in only]
+    if set_name == "all":
+        return list(REGISTRY.values())
+    return [c for c in REGISTRY.values() if set_name in c["tags"]
+            or (set_name == "full" and "default" in c["tags"])]

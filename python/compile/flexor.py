@@ -1,0 +1,292 @@
+"""FleXOR core math: XOR-gate networks (M⊕) and the trainable decrypt.
+
+Implements the paper's Section 2/3:
+
+  * ``make_mxor`` — the fixed binary matrix M⊕ ∈ {0,1}^{N_out×N_in}
+    describing the shared XOR-gate network (random fill, or exactly
+    ``N_tap`` ones per row as §4 recommends).
+  * ``decrypt_bits`` — Boolean decryption y = M⊕ x over GF(2), expressed in
+    the ±1 domain of Eq. (2)/(4): y_r = (-1)^{n_r-1} ∏_{j∈taps(r)} sign(x_j).
+  * ``flexor_decrypt`` — the *trainable* decrypt with the paper's custom
+    gradient (Eq. (6) by default; Eq. (5) exact-tanh, STE and the "analog"
+    relaxation of Fig. 5 as ablations).
+
+Shapes: encrypted weights live as ``(slices, N_in)`` real tensors; the
+decrypt produces ``(slices, N_out)`` quantized bits in {-1, +1}, which the
+quantizer reshapes into weight tensors (see quant.py).
+
+The ±1-domain identity used throughout (MXU-friendly — a {0,1} matmul plus a
+parity, instead of a gather-product):
+
+    y[s, r] = (-1)^(ntap_r - 1) * ∏_{j∈taps(r)} sign(x[s, j])
+            = 1 - 2 * ((negcount[s, r] + ntap_r - 1) mod 2)
+
+where negcount = 1[x<0] @ M⊕ᵀ counts selected negative inputs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "make_mxor",
+    "mxor_parity",
+    "hamming_distance_stats",
+    "decrypt_bits",
+    "flexor_decrypt",
+    "num_slices",
+    "bits_per_weight",
+]
+
+
+# ---------------------------------------------------------------------------
+# M⊕ construction (fixed before training; shared across all slices/layers)
+# ---------------------------------------------------------------------------
+
+def make_mxor(n_out: int, n_in: int, *, n_tap: int | None = None,
+              seed: int = 0) -> np.ndarray:
+    """Build the XOR-gate network matrix M⊕ ∈ {0,1}^{n_out × n_in}.
+
+    ``n_tap=None`` reproduces the paper's Fig. 4 setting (each entry iid
+    Bernoulli(1/2), rows forced non-zero); an integer ``n_tap`` places exactly
+    that many 1s per row (§4 technique 1, ``N_tap=2`` recommended).
+
+    The matrix is host-side data (numpy, int8): it is *fixed* and baked into
+    the lowered HLO as a constant, and serialized raw into FXR containers so
+    Rust decryption uses the identical network.
+    """
+    if n_out < n_in:
+        raise ValueError(f"n_out ({n_out}) must be >= n_in ({n_in}) for compression")
+    if n_tap is not None and not (1 <= n_tap <= n_in):
+        raise ValueError(f"n_tap ({n_tap}) must be in [1, n_in={n_in}]")
+    rng = np.random.default_rng(seed)
+    m = np.zeros((n_out, n_in), dtype=np.int8)
+    if n_tap is None:
+        for r in range(n_out):
+            row = rng.integers(0, 2, size=n_in)
+            while row.sum() == 0:  # an all-zero row decodes a constant bit
+                row = rng.integers(0, 2, size=n_in)
+            m[r] = row
+    else:
+        for r in range(n_out):
+            taps = rng.choice(n_in, size=n_tap, replace=False)
+            m[r, taps] = 1
+    return m
+
+
+def mxor_parity(m: np.ndarray) -> np.ndarray:
+    """(-1)^(ntap_r - 1) per row — the constant sign of Eq. (4)."""
+    ntap = m.sum(axis=1)
+    return np.where((ntap - 1) % 2 == 0, 1.0, -1.0).astype(np.float32)
+
+
+def hamming_distance_stats(m: np.ndarray) -> dict:
+    """Pairwise Hamming distances between the rows of M⊕ viewed as linear
+    Boolean functions (paper Eq. (1): d_H(f1,f2) = 2^{N_in-1} iff the tap
+    sets differ; more generally 2^{N_in-1} for any distinct pair, 0 for
+    identical rows — so the interesting statistic is how many row pairs are
+    *distinct*, plus tap-overlap structure)."""
+    n_out, n_in = m.shape
+    dists = []
+    overlaps = []
+    for i in range(n_out):
+        for j in range(i + 1, n_out):
+            diff = int(np.bitwise_xor(m[i], m[j]).sum())
+            # d_H between linear boolean functions f_i, f_j over {0,1}^n_in:
+            # 0 if identical tap sets, else 2^(n_in-1).
+            dists.append(0 if diff == 0 else 2 ** (n_in - 1))
+            overlaps.append(int((m[i] & m[j]).sum()))
+    return {
+        "n_out": n_out,
+        "n_in": n_in,
+        "mean_hamming": float(np.mean(dists)) if dists else 0.0,
+        "distinct_row_pairs": int(sum(1 for d in dists if d > 0)),
+        "total_row_pairs": len(dists),
+        "mean_tap_overlap": float(np.mean(overlaps)) if overlaps else 0.0,
+        "ntap_per_row": [int(x) for x in m.sum(axis=1)],
+    }
+
+
+def num_slices(n_weights: int, n_out: int) -> int:
+    """How many N_in-bit slices cover ``n_weights`` quantized bits."""
+    return -(-n_weights // n_out)  # ceil
+
+
+def bits_per_weight(q: int, n_in: int, n_out: int) -> float:
+    """Effective fractional rate: q * N_in / N_out bits per weight."""
+    return q * n_in / n_out
+
+
+# ---------------------------------------------------------------------------
+# Decryption — forward Boolean semantics
+# ---------------------------------------------------------------------------
+
+def decrypt_bits(x_sign: jnp.ndarray, m: np.ndarray) -> jnp.ndarray:
+    """Pure Boolean decrypt in the ±1 domain (Eq. (2)/(4) forward).
+
+    x_sign: (slices, N_in) in {-1, +1}.  Returns (slices, N_out) in {-1,+1}.
+    """
+    mf = jnp.asarray(m, dtype=x_sign.dtype)              # (N_out, N_in)
+    neg = (1.0 - x_sign) * 0.5                           # 1 where negative
+    negcount = neg @ mf.T                                # (slices, N_out)
+    ntap = mf.sum(axis=1)                                # (N_out,)
+    par = jnp.mod(negcount + ntap - 1.0, 2.0)
+    return 1.0 - 2.0 * par
+
+
+# ---------------------------------------------------------------------------
+# Trainable decrypt — custom VJPs (Eq. 6 default; Eq. 5 / STE / analog ablations)
+# ---------------------------------------------------------------------------
+
+def _fwd_sign(x: jnp.ndarray, m: np.ndarray) -> jnp.ndarray:
+    """Forward: y = (-1)^(n-1) ∏ sign(x) per row of M⊕ (Eq. 4)."""
+    return decrypt_bits(jnp.sign(jnp.where(x == 0, 1e-12, x)), m)
+
+
+def flexor_decrypt(x: jnp.ndarray, s_tanh: jnp.ndarray, m: np.ndarray,
+                   *, mode: str = "flexor", grad: str = "approx") -> jnp.ndarray:
+    """Trainable XOR decrypt of encrypted weights.
+
+    Args:
+      x:      (slices, N_in) real encrypted weights.
+      s_tanh: scalar S_tanh (traced — scheduled by the Rust coordinator).
+      m:      M⊕ as numpy {0,1}, baked as a constant.
+      mode:   'flexor' (paper: sign fwd, ∂tanh bwd), 'ste' (sign fwd,
+              identity bwd), 'analog' (tanh fwd+bwd, then STE binarize —
+              Fig. 5's middle column).
+      grad:   for mode='flexor': 'approx' = Eq. (6) (default, what the paper
+              trains with), 'exact' = Eq. (5) full tanh product.
+
+    Returns (slices, N_out) quantized bits; exactly ±1 for 'flexor'/'ste'.
+    """
+    mf = np.asarray(m, dtype=np.float32)
+    if mode == "flexor":
+        fn = _flexor_vjp_approx if grad == "approx" else _flexor_vjp_exact
+        return fn(x, s_tanh, mf)
+    if mode == "ste":
+        return _ste_vjp(x, s_tanh, mf)
+    if mode == "analog":
+        return _analog(x, s_tanh, mf)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+# --- mode='flexor', grad='approx' (Eq. 6) ----------------------------------
+#
+# ∂y_r/∂x_i = S (-1)^(n-1) (1 - tanh²(x_i S)) ∏_{j≠i} sign(x_j)
+#           = S (1 - tanh²(x_i S)) · y_r · sign(x_i)
+# so  dL/dx_i = S (1-tanh²(x_i S)) sign(x_i) · Σ_r M[r,i] g_r y_r
+# — a single (g*y) @ M⊕ matmul; no per-tap gathers.
+
+@jax.custom_vjp
+def _flexor_vjp_approx(x, s_tanh, m):
+    return _fwd_sign(x, m)
+
+
+def _flexor_approx_fwd(x, s_tanh, m):
+    y = _fwd_sign(x, m)
+    return y, (x, s_tanh, m, y)
+
+
+def _flexor_approx_bwd(res, g):
+    x, s_tanh, m, y = res
+    t = jnp.tanh(x * s_tanh)
+    sech2 = 1.0 - t * t
+    sgn = jnp.sign(jnp.where(x == 0, 1e-12, x))
+    gy = g * y                                   # (slices, N_out)
+    dx = (gy @ jnp.asarray(m)) * s_tanh * sech2 * sgn
+    return dx, jnp.zeros_like(s_tanh), None
+
+
+_flexor_vjp_approx.defvjp(_flexor_approx_fwd, _flexor_approx_bwd)
+
+
+# --- mode='flexor', grad='exact' (Eq. 5) ------------------------------------
+#
+# ∂y_r/∂x_i = S (-1)^(n-1) (1 - tanh²(x_i S)) ∏_{j∈taps, j≠i} tanh(x_j S)
+# Computed with a masked full product divided by tanh(x_i S) (guarded).
+
+@jax.custom_vjp
+def _flexor_vjp_exact(x, s_tanh, m):
+    return _fwd_sign(x, m)
+
+
+def _flexor_exact_fwd(x, s_tanh, m):
+    return _fwd_sign(x, m), (x, s_tanh, m)
+
+
+def _flexor_exact_bwd(res, g):
+    x, s_tanh, m = res
+    mj = jnp.asarray(m)                                    # (N_out, N_in)
+    t = jnp.tanh(x * s_tanh)                               # (slices, N_in)
+    t_safe = jnp.where(jnp.abs(t) < 1e-6, jnp.sign(t) * 1e-6 + 1e-12, t)
+    # full tanh product per row: ∏_{j∈taps(r)} t_j, via where(M,t,1)
+    tb = jnp.where(mj[None, :, :] > 0, t[:, None, :], 1.0)  # (s, N_out, N_in)
+    full = jnp.prod(tb, axis=2)                             # (s, N_out)
+    ntap = mj.sum(axis=1)
+    par = jnp.where(jnp.mod(ntap - 1, 2) == 0, 1.0, -1.0)   # (-1)^(n-1)
+    sech2 = 1.0 - t * t
+    # dL/dx_i = S par_r (1-tanh²(x_i)) * full_r / t_i summed over rows with M=1
+    contrib = (g * par[None, :] * full)                     # (s, N_out)
+    dx = s_tanh * sech2 / t_safe * (contrib @ mj)
+    return dx, jnp.zeros_like(s_tanh), None
+
+
+_flexor_vjp_exact.defvjp(_flexor_exact_fwd, _flexor_exact_bwd)
+
+
+# --- mode='ste' (Fig. 5 left column) ----------------------------------------
+#
+# Forward sign-product; backward treats each sign() as identity:
+# ∂y_r/∂x_i = (-1)^(n-1) ∏_{j≠i} sign(x_j) = y_r · sign(x_i)
+
+@jax.custom_vjp
+def _ste_vjp(x, s_tanh, m):
+    return _fwd_sign(x, m)
+
+
+def _ste_fwd(x, s_tanh, m):
+    y = _fwd_sign(x, m)
+    return y, (x, m, y)
+
+
+def _ste_bwd(res, g):
+    x, m, y = res
+    sgn = jnp.sign(jnp.where(x == 0, 1e-12, x))
+    dx = ((g * y) @ jnp.asarray(m)) * sgn
+    return dx, jnp.zeros(()), None
+
+
+_ste_vjp.defvjp(_ste_fwd, _ste_bwd)
+
+
+# --- mode='analog' (Fig. 5 middle column) ------------------------------------
+#
+# XOR modeled in ℝ: y = (-1)^(n-1) ∏ tanh(x_j S) for both fwd and bwd (plain
+# autodiff), then the real output is binarized through a standard STE.
+
+@jax.custom_vjp
+def _binarize_ste(y):
+    return jnp.sign(jnp.where(y == 0, 1e-12, y))
+
+
+def _binarize_fwd(y):
+    return _binarize_ste(y), None
+
+
+def _binarize_bwd(_, g):
+    return (g,)
+
+
+_binarize_ste.defvjp(_binarize_fwd, _binarize_bwd)
+
+
+def _analog(x, s_tanh, m):
+    mj = jnp.asarray(m)
+    t = jnp.tanh(x * s_tanh)
+    tb = jnp.where(mj[None, :, :] > 0, t[:, None, :], 1.0)
+    full = jnp.prod(tb, axis=2)
+    ntap = mj.sum(axis=1)
+    par = jnp.where(jnp.mod(ntap - 1, 2) == 0, 1.0, -1.0)
+    return _binarize_ste(par[None, :] * full)

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: binary-code GEMM  out = Σ_i α_i (A @ B_i).
+
+The paper's compute claim (Fig. 1): with q-bit binary codes the dot product
+needs q floating multiplies instead of v —  Σ_i α_i Σ_j a_j b_{i,j}.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): each ±1 bit-plane B_i is a
+dense matrix the MXU multiplies at full rate, so the kernel is q MXU matmuls
+per (row-tile × col-tile) grid cell, with the α_i scaling and plane
+accumulation fused in VPU registers before a single store — the TPU-native
+reading of "q multiplies instead of v", with no dequantized weight tensor
+ever materialized in HBM.
+
+Grid: (N/N_TILE, C/C_TILE); the V (reduction) axis stays resident in VMEM —
+our layer sizes put V·(N_TILE+C_TILE)·4B well under VMEM; larger V would add
+a third grid axis with an accumulator, noted in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_TILE = 128
+C_TILE = 128
+
+
+def _kernel(a_ref, bits_ref, alpha_ref, o_ref):
+    a = a_ref[...]                           # (N_TILE, V)
+    q = bits_ref.shape[0]
+    acc = jnp.zeros((a.shape[0], o_ref.shape[1]), jnp.float32)
+    for i in range(q):                       # q is static and small (1..3)
+        plane = jnp.dot(a, bits_ref[i], preferred_element_type=jnp.float32)
+        acc = acc + plane * alpha_ref[i]     # (N_TILE, C_TILE) * (1, C_TILE)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _run(a, bits, alpha):
+    n, v = a.shape
+    q, _, c = bits.shape
+    np_ = -(-n // N_TILE) * N_TILE
+    cp = -(-c // C_TILE) * C_TILE
+    ap = jnp.pad(a, ((0, np_ - n), (0, 0)))
+    bp = jnp.pad(bits, ((0, 0), (0, 0), (0, cp - c)))
+    alp = jnp.pad(alpha, ((0, 0), (0, cp - c))).reshape(q, 1, cp)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(np_ // N_TILE, cp // C_TILE),
+        in_specs=[
+            pl.BlockSpec((N_TILE, v), lambda i, j: (i, 0)),
+            pl.BlockSpec((q, v, C_TILE), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((q, 1, C_TILE), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((N_TILE, C_TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, cp), jnp.float32),
+        interpret=True,
+    )(ap, bp, alp)
+    return out[:n, :c]
+
+
+def binary_matmul(a: jnp.ndarray, bits: jnp.ndarray,
+                  alpha: jnp.ndarray) -> jnp.ndarray:
+    """out[n,c] = Σ_i alpha[i,c] Σ_v a[n,v] bits[i,v,c].
+
+    a: (N, V) f32;  bits: (q, V, C) ∈ {-1,+1} f32;  alpha: (q, C) f32.
+    """
+    return _run(a.astype(jnp.float32), bits.astype(jnp.float32),
+                alpha.astype(jnp.float32))

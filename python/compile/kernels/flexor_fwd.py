@@ -1,0 +1,132 @@
+"""L1 Pallas kernels: trainable FleXOR decrypt (forward + Eq. 6 backward).
+
+The training-path twin of xor_decrypt: forward takes *real* encrypted
+weights, signs them and decrypts (Eq. 2/4); backward applies the paper's
+simplified custom gradient (Eq. 6), which reduces to a single matmul against
+M⊕ plus elementwise tanh' scaling (derivation in flexor.py):
+
+    dL/dx[s,i] = S·(1-tanh²(x_i S))·sign(x_i) · Σ_r M[r,i]·g[s,r]·y[s,r]
+
+Both directions are Pallas kernels gridded over slice tiles; the contraction
+(g·y) @ M⊕ is MXU work, everything else VPU elementwise.  The pair is wired
+into jax.custom_vjp so the L2 model just calls ``decrypt_train`` and autodiff
+sees the paper's gradient.
+
+Ablation modes ('ste', 'analog', grad='exact') route to the jnp
+implementations in flexor.py — they exist for Fig. 5/appendix experiments,
+not the hot path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import flexor as _flexor
+from .xor_decrypt import S_TILE
+
+
+def _sgn(x):
+    return jnp.sign(jnp.where(x == 0, 1e-12, x))
+
+
+def _fwd_kernel(x_ref, mt_ref, ntap_ref, o_ref):
+    x = _sgn(x_ref[...])
+    neg = (1.0 - x) * 0.5
+    negcount = jnp.dot(neg, mt_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = 1.0 - 2.0 * jnp.mod(negcount + ntap_ref[...] - 1.0, 2.0)
+
+
+def _bwd_kernel(x_ref, y_ref, g_ref, m_ref, s_ref, o_ref):
+    x = x_ref[...]                       # (S_TILE, N_in)
+    s = s_ref[0, 0]
+    t = jnp.tanh(x * s)
+    gy = g_ref[...] * y_ref[...]         # (S_TILE, N_out)
+    acc = jnp.dot(gy, m_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = acc * s * (1.0 - t * t) * _sgn(x)
+
+
+def _pad(a, tile):
+    n = a.shape[0]
+    p = -(-n // tile) * tile
+    return jnp.pad(a, ((0, p - n), (0, 0))), n, p
+
+
+@functools.partial(jax.jit, static_argnames=("m_tuple",))
+def _fwd_run(x, m_tuple):
+    m = np.asarray(m_tuple, dtype=np.float32)
+    n_out, n_in = m.shape
+    xp, n, p = _pad(x, S_TILE)
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=(p // S_TILE,),
+        in_specs=[
+            pl.BlockSpec((S_TILE, n_in), lambda i: (i, 0)),
+            pl.BlockSpec((n_in, n_out), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_out), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((S_TILE, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, n_out), jnp.float32),
+        interpret=True,
+    )(xp, jnp.asarray(m.T), jnp.asarray(m.sum(axis=1, keepdims=True).T))
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("m_tuple",))
+def _bwd_run(x, y, g, s_tanh, m_tuple):
+    m = np.asarray(m_tuple, dtype=np.float32)
+    n_out, n_in = m.shape
+    xp, n, p = _pad(x, S_TILE)
+    yp, _, _ = _pad(y, S_TILE)
+    gp, _, _ = _pad(g, S_TILE)
+    s2d = jnp.reshape(s_tanh.astype(jnp.float32), (1, 1))
+    out = pl.pallas_call(
+        _bwd_kernel,
+        grid=(p // S_TILE,),
+        in_specs=[
+            pl.BlockSpec((S_TILE, n_in), lambda i: (i, 0)),
+            pl.BlockSpec((S_TILE, n_out), lambda i: (i, 0)),
+            pl.BlockSpec((S_TILE, n_out), lambda i: (i, 0)),
+            pl.BlockSpec((n_out, n_in), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((S_TILE, n_in), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, n_in), jnp.float32),
+        interpret=True,
+    )(xp, yp, gp, jnp.asarray(m), s2d)
+    return out[:n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _decrypt_pallas(x, s_tanh, m_tuple):
+    return _fwd_run(x, m_tuple)
+
+
+def _vjp_fwd(x, s_tanh, m_tuple):
+    y = _fwd_run(x, m_tuple)
+    return y, (x, s_tanh, y)
+
+
+def _vjp_bwd(m_tuple, res, g):
+    x, s_tanh, y = res
+    dx = _bwd_run(x, y, g, jnp.asarray(s_tanh), m_tuple)
+    return dx, jnp.zeros_like(s_tanh)
+
+
+_decrypt_pallas.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def decrypt_train(x: jnp.ndarray, s_tanh, m: np.ndarray, *,
+                  mode: str = "flexor", grad: str = "approx") -> jnp.ndarray:
+    """Trainable decrypt; Pallas hot path for the paper's (flexor, Eq. 6)
+    configuration, jnp fallbacks for the ablation modes."""
+    if mode == "flexor" and grad == "approx":
+        m8 = np.asarray(m, dtype=np.int8)
+        return _decrypt_pallas(x.astype(jnp.float32),
+                               jnp.asarray(s_tanh, dtype=jnp.float32),
+                               tuple(map(tuple, m8.tolist())))
+    return _flexor.flexor_decrypt(x, s_tanh, m, mode=mode, grad=grad)

@@ -1,0 +1,70 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest (python/tests/) sweeps shapes
+and dtypes with hypothesis and asserts the Pallas kernels (interpret=True)
+match these to tight tolerances.  They are also the jnp fallback path used
+by quant.flexor_weight when ``use_pallas=False``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def xor_decrypt_ref(x_sign: jnp.ndarray, m: np.ndarray) -> jnp.ndarray:
+    """Boolean GF(2) decrypt in the ±1 domain.
+
+    x_sign: (slices, N_in) ∈ {-1,+1};  m: (N_out, N_in) ∈ {0,1}.
+    Returns (slices, N_out) ∈ {-1,+1}:
+        y[s,r] = (-1)^(ntap_r-1) ∏_{j: m[r,j]=1} x_sign[s,j]
+    """
+    mf = jnp.asarray(m, dtype=x_sign.dtype)
+    neg = (1.0 - x_sign) * 0.5
+    negcount = neg @ mf.T
+    ntap = mf.sum(axis=1)
+    return 1.0 - 2.0 * jnp.mod(negcount + ntap - 1.0, 2.0)
+
+
+def flexor_fwd_ref(x: jnp.ndarray, m: np.ndarray) -> jnp.ndarray:
+    """Training-path decrypt forward: sign() then Boolean decrypt (Eq. 4)."""
+    return xor_decrypt_ref(jnp.sign(jnp.where(x == 0, 1e-12, x)), m)
+
+
+def flexor_bwd_ref(x: jnp.ndarray, s_tanh, m: np.ndarray,
+                   g: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (6) cotangent wrt encrypted weights x given output cotangent g.
+
+    dL/dx[s,i] = S (1-tanh²(x_i S)) sign(x_i) Σ_r m[r,i] g[s,r] y[s,r]
+    """
+    y = flexor_fwd_ref(x, m)
+    t = jnp.tanh(x * s_tanh)
+    sgn = jnp.sign(jnp.where(x == 0, 1e-12, x))
+    return ((g * y) @ jnp.asarray(m, x.dtype)) * s_tanh * (1.0 - t * t) * sgn
+
+
+def binary_matmul_ref(a: jnp.ndarray, bits: jnp.ndarray,
+                      alpha: jnp.ndarray) -> jnp.ndarray:
+    """Binary-code GEMM:  out[n,c] = Σ_i alpha[i,c] · Σ_v a[n,v] bits[i,v,c].
+
+    a: (N, V) activations;  bits: (q, V, C) ∈ {-1,+1};  alpha: (q, C).
+    """
+    planes = jnp.einsum("nv,qvc->qnc", a, bits)
+    return jnp.einsum("qnc,qc->nc", planes, alpha)
+
+
+def decrypt_matmul_ref(a: jnp.ndarray, x_sign: jnp.ndarray, m: np.ndarray,
+                       alpha: jnp.ndarray, v: int, c: int) -> jnp.ndarray:
+    """Fused inference path: decrypt q planes then binary-code GEMM.
+
+    x_sign: (q, slices, N_in) stored encrypted bits (±1).
+    Returns (N, c) = Σ_i alpha_i (a @ B_i) with B_i the decrypt of plane i
+    cropped/reshaped to (v, c).
+    """
+    q = x_sign.shape[0]
+    planes = []
+    for i in range(q):
+        bits = xor_decrypt_ref(x_sign[i], m).reshape(-1)[: v * c].reshape(v, c)
+        planes.append(bits)
+    bits = jnp.stack(planes)                      # (q, v, c)
+    return binary_matmul_ref(a, bits, alpha)

@@ -1,0 +1,33 @@
+"""Model zoo: every architecture the paper evaluates, quantizer-agnostic.
+
+Each model module exposes:
+
+    init(key, qz, **cfg)  -> (params, bn_state)
+    apply(params, bn_state, x, qz, ctx, train) -> (logits, new_bn_state)
+    quantized_layer_shapes(**cfg) -> [(layer_idx, shape), ...]
+
+``qz`` is a quant.Quantizer; ``ctx`` carries scheduled scalars
+({'s_tanh': f32, 'relax_lambda': f32}) that the Rust coordinator feeds as
+HLO inputs every step.  Quantized layers are indexed in definition order so
+mixed-precision specs (Table 2 / Table 3 footnote) can target layer groups.
+"""
+
+from . import mlp, lenet, resnet
+
+REGISTRY = {
+    "mlp": mlp,
+    "lenet5": lenet,
+    "resnet20": resnet.resnet20,
+    "resnet32": resnet.resnet32,
+    "resnet8": resnet.resnet8,
+    "resnet14": resnet.resnet14,
+    "resnet18img": resnet.resnet18img,
+    "resnet10img": resnet.resnet10img,
+}
+
+
+def get(name: str):
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown model {name!r}; have {sorted(REGISTRY)}")

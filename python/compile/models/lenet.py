@@ -1,0 +1,67 @@
+"""LeNet-5 as used in the paper's MNIST study (§3, Fig. 4/12/13).
+
+32C5 - MP2 - 64C5 - MP2 - 512FC - 10SoftMax; *every* layer carries an
+XOR-gate network ("each layer is accompanied by an XOR-gate network"), with
+per-output-channel scaling factors (the α of the 1-bit binary code) —
+initialised to 0.2 per the paper.  No dropout, no BN (faithful to the
+original LeNet recipe the paper uses; α carries the scale).
+
+``width_mult`` scales channel counts for CPU-budget runs (DESIGN.md §5):
+the default 1.0 is the paper's exact architecture.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+
+
+def _dims(width_mult: float, in_hw: int = 28):
+    c1 = max(4, int(32 * width_mult))
+    c2 = max(4, int(64 * width_mult))
+    fc = max(16, int(512 * width_mult))
+    flat = (in_hw // 4) * (in_hw // 4) * c2
+    return c1, c2, fc, flat
+
+
+def quantized_layer_shapes(width_mult: float = 1.0, num_classes: int = 10,
+                           in_hw: int = 28, in_ch: int = 1):
+    c1, c2, fc, flat = _dims(width_mult, in_hw)
+    return [
+        (0, (5, 5, in_ch, c1)),
+        (1, (5, 5, c1, c2)),
+        (2, (flat, fc)),
+        (3, (fc, num_classes)),
+    ]
+
+
+def init(key, qz, width_mult: float = 1.0, num_classes: int = 10,
+         in_hw: int = 28, in_ch: int = 1):
+    shapes = quantized_layer_shapes(width_mult, num_classes, in_hw, in_ch)
+    keys = jax.random.split(key, len(shapes))
+    params = {"layers": [qz.init(k, s, layer_idx=i)
+                         for k, (i, s) in zip(keys, shapes)],
+              "bias": [jnp.zeros((s[-1],)) for _, s in shapes]}
+    return params, {}
+
+
+def apply(params, state, x, qz, ctx, train: bool,
+          width_mult: float = 1.0, num_classes: int = 10,
+          in_hw: int = 28, in_ch: int = 1):
+    shapes = quantized_layer_shapes(width_mult, num_classes, in_hw, in_ch)
+    if x.ndim == 2:  # flat input -> NHWC
+        x = x.reshape(x.shape[0], in_hw, in_hw, in_ch)
+    w0 = qz(params["layers"][0], shapes[0][1], ctx, layer_idx=0)
+    h = nn.relu(nn.conv2d(x, w0) + params["bias"][0])
+    h = nn.max_pool(h)
+    w1 = qz(params["layers"][1], shapes[1][1], ctx, layer_idx=1)
+    h = nn.relu(nn.conv2d(h, w1) + params["bias"][1])
+    h = nn.max_pool(h)
+    h = h.reshape(h.shape[0], -1)
+    w2 = qz(params["layers"][2], shapes[2][1], ctx, layer_idx=2)
+    h = nn.relu(h @ w2 + params["bias"][2])
+    w3 = qz(params["layers"][3], shapes[3][1], ctx, layer_idx=3)
+    logits = h @ w3 + params["bias"][3]
+    return logits, {}

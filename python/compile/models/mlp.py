@@ -1,0 +1,54 @@
+"""MLP — the smallest end-to-end testbed (unit tests + quickstart).
+
+input (N, D) → [quantized dense → BN → relu] × len(hidden) → FP dense head.
+First hidden layer is quantized too (as in the paper's LeNet/MNIST setup
+where every layer carries an XOR network).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+
+
+def quantized_layer_shapes(d_in: int = 784, hidden=(256, 128),
+                           num_classes: int = 10):
+    shapes = []
+    d = d_in
+    for i, h in enumerate(hidden):
+        shapes.append((i, (d, h)))
+        d = h
+    return shapes
+
+
+def init(key, qz, d_in: int = 784, hidden=(256, 128), num_classes: int = 10):
+    keys = jax.random.split(key, len(hidden) + 1)
+    params = {"layers": [], "bn": []}
+    state = {"bn": []}
+    d = d_in
+    for i, h in enumerate(hidden):
+        params["layers"].append(qz.init(keys[i], (d, h), layer_idx=i))
+        bp, bs = nn.init_bn(h)
+        params["bn"].append(bp)
+        state["bn"].append(bs)
+        d = h
+    params["head"] = nn.init_dense_fp(keys[-1], d, num_classes)
+    return params, state
+
+
+def apply(params, state, x, qz, ctx, train: bool,
+          d_in: int = 784, hidden=(256, 128), num_classes: int = 10):
+    new_bn = []
+    h = x.reshape(x.shape[0], -1)
+    d = d_in
+    for i, width in enumerate(hidden):
+        w = qz(params["layers"][i], (d, width), ctx, layer_idx=i)
+        h = h @ w
+        h, bs = nn.batch_norm(params["bn"][i], state["bn"][i], h, train)
+        new_bn.append(bs)
+        h = nn.relu(h)
+        d = width
+    logits = nn.dense_fp(params["head"], h)
+    return logits, {"bn": new_bn}

@@ -1,0 +1,135 @@
+"""ResNet family: CIFAR-style ResNet-20/32 (§4) and ImageNet-style
+ResNet-18 (§5), plus width/depth-scaled variants for the CPU budget
+(DESIGN.md §5 — structure is faithful, widths/depths are config).
+
+CIFAR ResNet (He et al.): 3×3 stem → 3 stages × n BasicBlocks (depth 6n+2),
+widths (16,32,64), stride-2 at stage entry, global avg pool, FC head.
+ImageNet-style: stem → 4 stages × [2,2,2,2] BasicBlocks, widths w·(1,2,4,8).
+
+Quantization: every conv except the stem, and not the FC head (paper: "All
+layers, except the first and the last layers, are followed by FleXOR
+components").  Downsample 1×1 convs are quantized (Table 3 footnote assigns
+them their own bits/weight).  Quantized layers are indexed in definition
+order so Table 2's layer-group specs can address them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+
+
+class _ResNet:
+    def __init__(self, name: str, blocks_per_stage, widths, in_hw: int,
+                 num_classes: int = 10):
+        self.name = name
+        self.blocks = list(blocks_per_stage)
+        self.widths = list(widths)
+        self.in_hw = in_hw
+        self.num_classes = num_classes
+
+    # ---- static layer plan --------------------------------------------------
+
+    def _plan(self, in_ch: int = 3):
+        """[(kind, shape, stride)] for every conv in definition order.
+
+        kind ∈ {'stem','q','qds'} — qds is a quantized 1×1 downsample.
+        """
+        plan = [("stem", (3, 3, in_ch, self.widths[0]), 1)]
+        c_in = self.widths[0]
+        for si, (n, w) in enumerate(zip(self.blocks, self.widths)):
+            for bi in range(n):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                plan.append(("q", (3, 3, c_in, w), stride))
+                plan.append(("q", (3, 3, w, w), 1))
+                if stride != 1 or c_in != w:
+                    plan.append(("qds", (1, 1, c_in, w), stride))
+                c_in = w
+        return plan
+
+    def quantized_layer_shapes(self, in_ch: int = 3, **_):
+        out, qi = [], 0
+        for kind, shape, _s in self._plan(in_ch):
+            if kind != "stem":
+                out.append((qi, shape))
+                qi += 1
+        return out
+
+    # ---- init ----------------------------------------------------------------
+
+    def init(self, key, qz, in_ch: int = 3, **_):
+        plan = self._plan(in_ch)
+        keys = jax.random.split(key, len(plan) + 1)
+        params = {"convs": [], "bn": [], "head": None, "stem": None}
+        state = {"bn": []}
+        qi = 0
+        for k, (kind, shape, _s) in zip(keys, plan):
+            if kind == "stem":
+                params["stem"] = {"w": nn.he_normal(k, shape)}
+            else:
+                params["convs"].append(qz.init(k, shape, layer_idx=qi))
+                qi += 1
+            bp, bs = nn.init_bn(shape[-1])
+            params["bn"].append(bp)
+            state["bn"].append(bs)
+        params["head"] = nn.init_dense_fp(keys[-1], self.widths[-1],
+                                          self.num_classes)
+        return params, state
+
+    # ---- apply ---------------------------------------------------------------
+
+    def apply(self, params, state, x, qz, ctx, train: bool, in_ch: int = 3, **_):
+        plan = self._plan(in_ch)
+        new_bn = [None] * len(plan)
+        li = 0   # conv index (into plan/bn)
+        qi = 0   # quantized-conv index (into params['convs'])
+
+        def bn(h, i):
+            y, s = nn.batch_norm(params["bn"][i], state["bn"][i], h, train)
+            new_bn[i] = s
+            return y
+
+        def qconv(h, shape, stride):
+            nonlocal qi
+            w = qz(params["convs"][qi], shape, ctx, layer_idx=qi)
+            qi += 1
+            return nn.conv2d(h, w, stride=stride)
+
+        # stem
+        kind, shape, stride = plan[li]
+        h = nn.relu(bn(nn.conv2d(x, params["stem"]["w"], stride=stride), li))
+        li += 1
+
+        c_in = self.widths[0]
+        for si, (n, w) in enumerate(zip(self.blocks, self.widths)):
+            for bi in range(n):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                identity = h
+                _, s1, _ = plan[li]
+                out = nn.relu(bn(qconv(h, s1, stride), li)); li += 1
+                _, s2, _ = plan[li]
+                out = bn(qconv(out, s2, 1), li); li += 1
+                if stride != 1 or c_in != w:
+                    _, sd, _ = plan[li]
+                    identity = bn(qconv(h, sd, stride), li); li += 1
+                h = nn.relu(out + identity)
+                c_in = w
+
+        pooled = nn.avg_pool_global(h)
+        logits = nn.dense_fp(params["head"], pooled)
+        return logits, {"bn": new_bn}
+
+
+# Paper architectures
+resnet20 = _ResNet("resnet20", (3, 3, 3), (16, 32, 64), in_hw=32)
+resnet32 = _ResNet("resnet32", (5, 5, 5), (16, 32, 64), in_hw=32)
+resnet18img = _ResNet("resnet18img", (2, 2, 2, 2), (64, 128, 256, 512),
+                      in_hw=64, num_classes=20)
+
+# CPU-budget scaled variants (same structure, smaller)
+resnet8 = _ResNet("resnet8", (1, 1, 1), (8, 16, 32), in_hw=32)
+resnet14 = _ResNet("resnet14", (2, 2, 2), (16, 32, 64), in_hw=32)
+resnet10img = _ResNet("resnet10img", (1, 1, 1, 1), (16, 32, 64, 128),
+                      in_hw=64, num_classes=20)

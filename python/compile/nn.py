@@ -1,0 +1,86 @@
+"""Minimal functional NN substrate (pure JAX, no flax dependency).
+
+Everything is (params-pytree, state-pytree, apply-fn) so whole train steps
+lower into a single HLO.  Conventions:
+
+  * activations NHWC, conv weights HWIO (k, k, C_in, C_out), dense (in, out)
+  * BatchNorm keeps running stats in a separate `state` pytree threaded
+    through the train step (the Rust coordinator round-trips it like params)
+  * the Quantizer object (see quant.Quantizer) produces each quantized
+    layer's weight tensor from its quantizer-specific params
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["conv2d", "max_pool", "avg_pool_global", "init_bn", "batch_norm",
+           "init_dense_fp", "dense_fp", "relu", "he_normal"]
+
+BN_MOMENTUM = 0.9
+BN_EPS = 1e-5
+
+
+def he_normal(key, shape, gain: float = 1.0):
+    fan_in = int(np.prod(shape[:-1]))
+    return jax.random.normal(key, shape) * gain * (2.0 / fan_in) ** 0.5
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def conv2d(x, w, stride: int = 1, padding: str = "SAME"):
+    """NHWC conv with HWIO weights."""
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def max_pool(x, window: int = 2, stride: int = 2):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, window, window, 1), (1, stride, stride, 1),
+        "VALID")
+
+
+def avg_pool_global(x):
+    """NHWC → NC global average pool."""
+    return x.mean(axis=(1, 2))
+
+
+# --- BatchNorm ---------------------------------------------------------------
+
+def init_bn(c: int):
+    params = {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+    state = {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+    return params, state
+
+
+def batch_norm(p, s, x, train: bool):
+    """Returns (y, new_state).  x: (..., C)."""
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = x.mean(axis=axes)
+        var = x.var(axis=axes)
+        new_s = {
+            "mean": BN_MOMENTUM * s["mean"] + (1 - BN_MOMENTUM) * mean,
+            "var": BN_MOMENTUM * s["var"] + (1 - BN_MOMENTUM) * var,
+        }
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mean) * lax.rsqrt(var + BN_EPS) * p["scale"] + p["bias"]
+    return y, new_s
+
+
+# --- Full-precision dense (first/last layers stay FP, paper §4) ---------------
+
+def init_dense_fp(key, d_in: int, d_out: int):
+    return {"w": he_normal(key, (d_in, d_out)), "b": jnp.zeros((d_out,))}
+
+
+def dense_fp(p, x):
+    return x @ p["w"] + p["b"]

@@ -1,0 +1,315 @@
+"""Binary-code quantizers: FleXOR (fractional bits) and the paper's baselines.
+
+A binary-coding-based quantizer represents a weight tensor W as
+``Σ_{i=1}^q α_i · b_i`` with per-output-channel scaling factors α ∈ ℝ^{C_out}
+and bit-planes b_i ∈ {-1,+1} (paper §1).
+
+FleXOR stores, per bit-plane, a real *encrypted* tensor of shape
+``(slices, N_in)`` and recovers the plane's ±1 bits through the shared
+XOR-gate network M⊕ (flexor.flexor_decrypt).  Rate = q·N_in/N_out b/w.
+
+Baselines (Table 1 / 3 / 6 / 7 comparators) quantize latent full-precision
+weights directly:
+
+  * BWN          — b = sign(w), α = E|w| per out-channel, STE backward. [22]
+  * BinaryRelax  — relaxed mixture (λ·sign(w)+w)/(λ+1) with λ growing, so the
+                   projection anneals from identity to sign. [28]
+  * TWN/TTQ-like — ternary {-α,0,+α} with threshold 0.7·E|w|, STE. [18,30]
+  * DSQ-like     — soft tanh-cell quantizer with STE-corrected forward. [7]
+
+All quantizers share the interface
+
+    qw = quantize_<name>(params, ctx) -> weight tensor of `shape`
+
+so the model code is quantizer-agnostic (models/*.py call through a
+Quantizer spec), and each trains end-to-end inside the same lowered HLO.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import flexor
+
+__all__ = [
+    "FlexorSpec", "init_flexor_weight", "flexor_weight",
+    "init_bwn_weight", "bwn_weight",
+    "init_binaryrelax_weight", "binaryrelax_weight",
+    "init_ternary_weight", "ternary_weight",
+    "init_dsq_weight", "dsq_weight",
+    "init_fp_weight", "fp_weight",
+]
+
+
+# ---------------------------------------------------------------------------
+# FleXOR quantized weight
+# ---------------------------------------------------------------------------
+
+class FlexorSpec:
+    """Static (trace-time) description of one layer's FleXOR config.
+
+    One spec may be shared by many layers ("M⊕ is shared"); Table 2's
+    mixed-precision experiments give different specs to layer groups.
+    """
+
+    def __init__(self, q: int, n_in: int, n_out: int, *,
+                 n_tap: int | None = 2, seed: int = 7,
+                 mode: str = "flexor", grad: str = "approx"):
+        self.q = q
+        self.n_in = n_in
+        self.n_out = n_out
+        self.n_tap = n_tap
+        self.mode = mode
+        self.grad = grad
+        # one independent M⊕ per bit-plane (paper: "for q>1, different M⊕
+        # configurations are constructed and then shared across all layers")
+        self.mxor = [flexor.make_mxor(n_out, n_in, n_tap=n_tap, seed=seed + i)
+                     for i in range(q)]
+
+    @property
+    def bits_per_weight(self) -> float:
+        return flexor.bits_per_weight(self.q, self.n_in, self.n_out)
+
+    def storage_bits(self, n_weights: int) -> int:
+        """Encrypted bits stored for a tensor of n_weights (per Alg. 1)."""
+        return self.q * flexor.num_slices(n_weights, self.n_out) * self.n_in
+
+
+def init_flexor_weight(key, shape, spec: FlexorSpec, alpha_init: float = 0.2):
+    """Parameters for one FleXOR-quantized weight tensor.
+
+    Encrypted weights ~ N(0, 0.001²) (paper §3); α initialised to 0.2 per
+    output channel (paper §3/§4).  Output channel = last axis of `shape`
+    (weights are stored (k,k,Cin,Cout) / (in,out)).
+    """
+    n_weights = int(np.prod(shape))
+    c_out = shape[-1]
+    slices = flexor.num_slices(n_weights, spec.n_out)
+    w_enc = jax.random.normal(key, (spec.q, slices, spec.n_in)) * 1e-3
+    alpha = jnp.full((spec.q, c_out), alpha_init, dtype=jnp.float32)
+    return {"w_enc": w_enc, "alpha": alpha}
+
+
+def flexor_weight(p, shape, spec: FlexorSpec, s_tanh, *, use_pallas: bool = False):
+    """Reconstruct the quantized weight tensor from encrypted params.
+
+    Decrypt each plane through its M⊕ (trainable path), crop the padding,
+    reshape to `shape`, scale by per-out-channel α, and sum the q planes.
+    """
+    n_weights = int(np.prod(shape))
+    c_out = shape[-1]
+    planes = []
+    for i in range(spec.q):
+        if use_pallas:
+            from .kernels import flexor_fwd as _k
+            bits = _k.decrypt_train(p["w_enc"][i], s_tanh, spec.mxor[i],
+                                    mode=spec.mode, grad=spec.grad)
+        else:
+            bits = flexor.flexor_decrypt(p["w_enc"][i], s_tanh, spec.mxor[i],
+                                         mode=spec.mode, grad=spec.grad)
+        flat = bits.reshape(-1)[:n_weights]
+        wq = flat.reshape(shape)
+        planes.append(wq * p["alpha"][i].reshape((1,) * (len(shape) - 1) + (c_out,)))
+    return sum(planes)
+
+
+# ---------------------------------------------------------------------------
+# STE for baselines
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _ste_sign(w):
+    return jnp.sign(jnp.where(w == 0, 1e-12, w))
+
+
+def _ste_sign_fwd(w):
+    return _ste_sign(w), w
+
+
+def _ste_sign_bwd(w, g):
+    # BinaryConnect-style clipped STE: pass gradient where |w| <= 1
+    return (g * (jnp.abs(w) <= 1.0),)
+
+
+_ste_sign.defvjp(_ste_sign_fwd, _ste_sign_bwd)
+
+
+@jax.custom_vjp
+def _ste_through(target, w):
+    """Forward `target`, backward to `w` (identity)."""
+    return target
+
+
+def _ste_through_fwd(target, w):
+    return target, None
+
+
+def _ste_through_bwd(_, g):
+    return None, g
+
+
+_ste_through.defvjp(_ste_through_fwd, _ste_through_bwd)
+
+
+def _per_channel_mean_abs(w):
+    """E|w| per output channel (last axis), broadcastable to w."""
+    flat = jnp.abs(w).reshape(-1, w.shape[-1])
+    return flat.mean(axis=0).reshape((1,) * (w.ndim - 1) + (w.shape[-1],))
+
+
+# ---------------------------------------------------------------------------
+# Full precision (the FP rows of every table)
+# ---------------------------------------------------------------------------
+
+def init_fp_weight(key, shape, gain: float = 1.0):
+    fan_in = int(np.prod(shape[:-1]))
+    std = gain * (2.0 / fan_in) ** 0.5  # He init
+    return {"w": jax.random.normal(key, shape) * std}
+
+
+def fp_weight(p, shape=None, ctx=None):
+    return p["w"]
+
+
+# --- BWN [22] ----------------------------------------------------------------
+
+def init_bwn_weight(key, shape):
+    return init_fp_weight(key, shape)
+
+
+def bwn_weight(p, shape=None, ctx=None):
+    w = p["w"]
+    alpha = _per_channel_mean_abs(w)
+    return _ste_sign(w) * alpha
+
+
+# --- BinaryRelax [28] ---------------------------------------------------------
+# W_relaxed = (λ·α·sign(w) + w) / (λ + 1); λ = relax_lambda grows during
+# training (scheduled by the coordinator via a scalar input); λ→∞ recovers BWN.
+
+def init_binaryrelax_weight(key, shape):
+    return init_fp_weight(key, shape)
+
+
+def binaryrelax_weight(p, relax_lambda, shape=None, ctx=None):
+    w = p["w"]
+    alpha = _per_channel_mean_abs(w)
+    hard = jnp.sign(jnp.where(w == 0, 1e-12, w)) * alpha
+    return (relax_lambda * hard + w) / (relax_lambda + 1.0)
+
+
+# --- Ternary (TWN [18] threshold rule, trained scales like TTQ [30]) -----------
+
+def init_ternary_weight(key, shape):
+    p = init_fp_weight(key, shape)
+    p["wp"] = jnp.ones((shape[-1],)) * 0.2
+    p["wn"] = jnp.ones((shape[-1],)) * 0.2
+    return p
+
+
+def ternary_weight(p, shape=None, ctx=None):
+    w = p["w"]
+    thr = 0.7 * _per_channel_mean_abs(w)
+    pos = (w > thr).astype(w.dtype)
+    neg = (w < -thr).astype(w.dtype)
+    bshape = (1,) * (w.ndim - 1) + (w.shape[-1],)
+    tern = pos * p["wp"].reshape(bshape) - neg * p["wn"].reshape(bshape)
+    # additive STE: forward is `tern`; gradient flows identically to the
+    # latent w (TWN) while wp/wn keep their true multiplicative gradients
+    # (TTQ's trained scales).
+    return tern + w - jax.lax.stop_gradient(w)
+
+
+# --- DSQ-like [7] --------------------------------------------------------------
+# 1-bit differentiable soft quantization: soft cell φ(w) = tanh(w·k)/tanh(k)
+# with trainable steepness k, hard sign forwarded via STE on φ.
+
+def init_dsq_weight(key, shape):
+    p = init_fp_weight(key, shape)
+    p["k"] = jnp.asarray(2.0)
+    return p
+
+
+def dsq_weight(p, shape=None, ctx=None):
+    w = p["w"]
+    k = jnp.maximum(p["k"], 0.5)
+    alpha = _per_channel_mean_abs(w)
+    soft = jnp.tanh(w * k) / jnp.tanh(k)
+    hard = jnp.sign(jnp.where(soft == 0, 1e-12, soft))
+    return _ste_through(hard, soft) * alpha
+
+
+# ---------------------------------------------------------------------------
+# Quantizer dispatch — what models are parameterized over
+# ---------------------------------------------------------------------------
+
+class Quantizer:
+    """Uniform interface the models call for every *quantized* layer.
+
+    kind ∈ {'fp','flexor','bwn','binaryrelax','ternary','dsq'}.
+
+    For FleXOR, ``specs`` maps a layer index to its FlexorSpec (mixed
+    sub-1-bit precision, Table 2); ``spec`` is the shared default.  The
+    training context ``ctx`` carries the scheduled scalars (s_tanh,
+    relax_lambda) the Rust coordinator feeds to the HLO each step.
+    """
+
+    KINDS = ("fp", "flexor", "bwn", "binaryrelax", "ternary", "dsq")
+
+    def __init__(self, kind: str = "fp", spec: FlexorSpec | None = None,
+                 specs: dict | None = None, use_pallas: bool = False):
+        if kind not in self.KINDS:
+            raise ValueError(f"unknown quantizer kind {kind!r}")
+        if kind == "flexor" and spec is None and not specs:
+            raise ValueError("flexor quantizer needs a FlexorSpec")
+        self.kind = kind
+        self.spec = spec
+        self.specs = specs or {}
+        self.use_pallas = use_pallas
+
+    def spec_for(self, layer_idx: int) -> FlexorSpec:
+        return self.specs.get(layer_idx, self.spec)
+
+    def init(self, key, shape, layer_idx: int = 0):
+        if self.kind == "fp":
+            return init_fp_weight(key, shape)
+        if self.kind == "flexor":
+            return init_flexor_weight(key, shape, self.spec_for(layer_idx))
+        if self.kind == "bwn":
+            return init_bwn_weight(key, shape)
+        if self.kind == "binaryrelax":
+            return init_binaryrelax_weight(key, shape)
+        if self.kind == "ternary":
+            return init_ternary_weight(key, shape)
+        if self.kind == "dsq":
+            return init_dsq_weight(key, shape)
+        raise AssertionError(self.kind)
+
+    def __call__(self, p, shape, ctx, layer_idx: int = 0):
+        """Produce the layer's effective weight tensor."""
+        if self.kind == "fp":
+            return fp_weight(p)
+        if self.kind == "flexor":
+            return flexor_weight(p, shape, self.spec_for(layer_idx),
+                                 ctx["s_tanh"], use_pallas=self.use_pallas)
+        if self.kind == "bwn":
+            return bwn_weight(p)
+        if self.kind == "binaryrelax":
+            return binaryrelax_weight(p, ctx["relax_lambda"])
+        if self.kind == "ternary":
+            return ternary_weight(p)
+        if self.kind == "dsq":
+            return dsq_weight(p)
+        raise AssertionError(self.kind)
+
+    def storage_bits(self, n_weights: int, layer_idx: int = 0) -> int:
+        """Stored bits for a quantized tensor (excludes α / FP layers)."""
+        if self.kind == "fp":
+            return 32 * n_weights
+        if self.kind == "flexor":
+            return self.spec_for(layer_idx).storage_bits(n_weights)
+        if self.kind == "ternary":
+            return 2 * n_weights
+        return n_weights  # 1-bit codes

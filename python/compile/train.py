@@ -1,0 +1,136 @@
+"""L2 training graph: loss + grads + optimizer update as ONE jax function.
+
+The whole step lowers to a single HLO artifact; the Rust coordinator (L3)
+feeds parameters/optimizer-state/BN-state literals back in each step along
+with the batch and the *scheduled scalars* (lr, s_tanh, relax_lambda), so
+every schedule the paper uses (warmup, step decay, S_tanh doubling,
+BinaryRelax λ growth) lives in Rust without re-lowering.
+
+Optimizers are implemented here as pure pytree maps (SGD+momentum+weight
+decay — the paper's CIFAR/ImageNet recipe; Adam — the paper's MNIST recipe)
+so no external optimizer library is on the compile path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import models as model_zoo
+
+
+# --- losses -------------------------------------------------------------------
+
+def softmax_xent(logits, labels):
+    """labels: int32 (N,).  Mean cross-entropy."""
+    logz = jax.nn.log_softmax(logits)
+    ll = jnp.take_along_axis(logz, labels[:, None], axis=1)[:, 0]
+    return -ll.mean()
+
+
+def accuracy_count(logits, labels):
+    return (jnp.argmax(logits, axis=1) == labels).sum().astype(jnp.float32)
+
+
+def topk_count(logits, labels, k: int = 5):
+    # rank-based formulation: the label is in the top-k iff fewer than k
+    # logits are strictly greater. (jax.lax.top_k lowers to a `topk` op
+    # with a `largest=` attribute the xla_extension 0.5.1 HLO parser
+    # rejects; this form lowers to plain compares/reductions.)
+    k = min(k, logits.shape[1])
+    label_logit = jnp.take_along_axis(logits, labels[:, None], axis=1)
+    rank = (logits > label_logit).sum(axis=1)
+    return (rank < k).sum().astype(jnp.float32)
+
+
+# --- optimizers -----------------------------------------------------------------
+
+def sgd_init(params):
+    return {"mom": jax.tree.map(jnp.zeros_like, params)}
+
+
+def sgd_update(params, opt, grads, lr, momentum: float = 0.9,
+               weight_decay: float = 1e-5):
+    def upd(p, v, g):
+        v2 = momentum * v + g + weight_decay * p
+        return p - lr * v2, v2
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_v = tdef.flatten_up_to(opt["mom"])
+    flat_g = tdef.flatten_up_to(grads)
+    new = [upd(p, v, g) for p, v, g in zip(flat_p, flat_v, flat_g)]
+    return (tdef.unflatten([a for a, _ in new]),
+            {"mom": tdef.unflatten([b for _, b in new])})
+
+
+def adam_init(params):
+    return {"m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def adam_update(params, opt, grads, lr, b1: float = 0.9, b2: float = 0.999,
+                eps: float = 1e-8, weight_decay: float = 0.0):
+    t = opt["t"] + 1.0
+    def upd(p, m, v, g):
+        g = g + weight_decay * p
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mh = m2 / (1 - b1 ** t)
+        vh = v2 / (1 - b2 ** t)
+        return p - lr * mh / (jnp.sqrt(vh) + eps), m2, v2
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_m = tdef.flatten_up_to(opt["m"])
+    flat_v = tdef.flatten_up_to(opt["v"])
+    flat_g = tdef.flatten_up_to(grads)
+    new = [upd(p, m, v, g) for p, m, v, g in zip(flat_p, flat_m, flat_v, flat_g)]
+    return (tdef.unflatten([a for a, _, _ in new]),
+            {"m": tdef.unflatten([b for _, b, _ in new]),
+             "v": tdef.unflatten([c for _, _, c in new]),
+             "t": t})
+
+
+OPTIMIZERS = {
+    "sgd": (sgd_init, sgd_update),
+    "adam": (adam_init, adam_update),
+}
+
+
+# --- step builders ---------------------------------------------------------------
+
+def build(model_name: str, qz, optimizer: str = "sgd",
+          weight_decay: float = 1e-5, model_kwargs: dict | None = None):
+    """Returns (init_fn, train_step, eval_step) closures for one config.
+
+    init_fn(seed) -> (params, opt_state, bn_state)
+    train_step(params, opt, bn, x, y, lr, s_tanh, relax_lambda)
+        -> (params, opt, bn, loss, correct)
+    eval_step(params, bn, x, y, s_tanh, relax_lambda)
+        -> (loss, correct, top5_correct)
+    """
+    model = model_zoo.get(model_name)
+    mk = model_kwargs or {}
+    opt_init, opt_update = OPTIMIZERS[optimizer]
+
+    def init_fn(seed: int):
+        params, bn_state = model.init(jax.random.PRNGKey(seed), qz, **mk)
+        return params, opt_init(params), bn_state
+
+    def loss_fn(params, bn_state, x, y, ctx):
+        logits, new_bn = model.apply(params, bn_state, x, qz, ctx, True, **mk)
+        return softmax_xent(logits, y), (new_bn, logits)
+
+    def train_step(params, opt, bn, x, y, lr, s_tanh, relax_lambda):
+        ctx = {"s_tanh": s_tanh, "relax_lambda": relax_lambda}
+        (loss, (new_bn, logits)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, bn, x, y, ctx)
+        kw = {"weight_decay": weight_decay} if optimizer == "sgd" else {}
+        new_params, new_opt = opt_update(params, opt, grads, lr, **kw)
+        return new_params, new_opt, new_bn, loss, accuracy_count(logits, y)
+
+    def eval_step(params, bn, x, y, s_tanh, relax_lambda):
+        ctx = {"s_tanh": s_tanh, "relax_lambda": relax_lambda}
+        logits, _ = model.apply(params, bn, x, qz, ctx, False, **mk)
+        return (softmax_xent(logits, y), accuracy_count(logits, y),
+                topk_count(logits, y, k=5))
+
+    return init_fn, train_step, eval_step

@@ -1,0 +1,253 @@
+"""Core FleXOR math: M⊕ construction, Boolean decrypt semantics, and the
+paper's custom gradients (Eq. 5/6, STE, analog) — each checked against
+brute-force / analytic references."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import flexor
+
+
+# ---------------------------------------------------------------------------
+# M⊕ construction
+# ---------------------------------------------------------------------------
+
+def test_mxor_shape_and_binary():
+    m = flexor.make_mxor(20, 8, n_tap=2, seed=0)
+    assert m.shape == (20, 8)
+    assert set(np.unique(m)) <= {0, 1}
+
+
+def test_mxor_ntap_rows():
+    for n_tap in [1, 2, 3, 5]:
+        m = flexor.make_mxor(16, 8, n_tap=n_tap, seed=3)
+        assert (m.sum(axis=1) == n_tap).all()
+
+
+def test_mxor_random_rows_nonzero():
+    m = flexor.make_mxor(64, 4, n_tap=None, seed=1)
+    assert (m.sum(axis=1) >= 1).all()
+
+
+def test_mxor_deterministic_by_seed():
+    a = flexor.make_mxor(10, 8, n_tap=2, seed=42)
+    b = flexor.make_mxor(10, 8, n_tap=2, seed=42)
+    c = flexor.make_mxor(10, 8, n_tap=2, seed=43)
+    assert (a == b).all()
+    assert (a != c).any()
+
+
+def test_mxor_rejects_expansion():
+    with pytest.raises(ValueError):
+        flexor.make_mxor(4, 8)
+
+
+def test_mxor_rejects_bad_ntap():
+    with pytest.raises(ValueError):
+        flexor.make_mxor(10, 8, n_tap=9)
+    with pytest.raises(ValueError):
+        flexor.make_mxor(10, 8, n_tap=0)
+
+
+def test_bits_per_weight():
+    assert flexor.bits_per_weight(1, 8, 10) == pytest.approx(0.8)
+    assert flexor.bits_per_weight(2, 8, 20) == pytest.approx(0.8)
+    assert flexor.bits_per_weight(1, 8, 20) == pytest.approx(0.4)
+
+
+def test_num_slices_ceil():
+    assert flexor.num_slices(100, 10) == 10
+    assert flexor.num_slices(101, 10) == 11
+    assert flexor.num_slices(1, 10) == 1
+
+
+# ---------------------------------------------------------------------------
+# Boolean decrypt semantics vs bit-level brute force
+# ---------------------------------------------------------------------------
+
+def _bruteforce_decrypt(bits01, m):
+    """Literal GF(2) y = M⊕ x over {0,1}, then map to ±1 with 0→-1.
+
+    Paper's ±1 convention: stored bit b ∈ {0,1} maps to sign 2b-1, and the
+    XOR-of-bits result r maps to 2r-1.
+    """
+    y = (m @ bits01.T % 2).T          # (slices, N_out) in {0,1}
+    return 2.0 * y - 1.0
+
+
+@pytest.mark.parametrize("n_out,n_in,n_tap", [(10, 8, 2), (20, 8, None),
+                                              (10, 4, 3), (20, 16, 2)])
+def test_decrypt_matches_gf2_bruteforce(n_out, n_in, n_tap):
+    rng = np.random.default_rng(0)
+    m = flexor.make_mxor(n_out, n_in, n_tap=n_tap, seed=5)
+    bits01 = rng.integers(0, 2, size=(23, n_in)).astype(np.float32)
+    x_sign = 2.0 * bits01 - 1.0
+    got = np.asarray(flexor.decrypt_bits(jnp.asarray(x_sign), m))
+    want = _bruteforce_decrypt(bits01, m)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_decrypt_paper_appendix_example():
+    """Appendix A's 6×4 M⊕, checked row by row against XOR arithmetic."""
+    m = np.array([[1, 0, 1, 1],
+                  [1, 1, 0, 0],
+                  [1, 1, 1, 0],
+                  [0, 0, 1, 1],
+                  [0, 1, 0, 1],
+                  [0, 1, 1, 1]], dtype=np.int8)
+    for bits in range(16):
+        b01 = np.array([(bits >> i) & 1 for i in range(4)], dtype=np.float32)
+        x = (2 * b01 - 1)[None, :]
+        y = np.asarray(flexor.decrypt_bits(jnp.asarray(x), m))[0]
+        want01 = [
+            b01[0] != b01[2] if False else (b01[0] + b01[2] + b01[3]) % 2,
+            (b01[0] + b01[1]) % 2,
+            (b01[0] + b01[1] + b01[2]) % 2,
+            (b01[2] + b01[3]) % 2,
+            (b01[1] + b01[3]) % 2,
+            (b01[1] + b01[2] + b01[3]) % 2,
+        ]
+        np.testing.assert_array_equal(y, 2 * np.array(want01) - 1)
+
+
+def test_decrypt_outputs_are_exactly_pm1():
+    m = flexor.make_mxor(20, 12, n_tap=2, seed=9)
+    x = jax.random.normal(jax.random.PRNGKey(0), (41, 12))
+    y = np.asarray(flexor.flexor_decrypt(x, jnp.float32(10.0), m))
+    assert set(np.unique(y)) <= {-1.0, 1.0}
+
+
+def test_xor_truth_table_two_inputs():
+    """Table 4 of the paper: F⊕(x1,x2) = -sign(x1)sign(x2)."""
+    m = np.array([[1, 1]], dtype=np.int8)
+    for s1 in (-1.0, 1.0):
+        for s2 in (-1.0, 1.0):
+            y = float(flexor.decrypt_bits(jnp.asarray([[s1, s2]]), m)[0, 0])
+            assert y == -s1 * s2
+
+
+# ---------------------------------------------------------------------------
+# Hamming-distance analysis (paper §2)
+# ---------------------------------------------------------------------------
+
+def test_hamming_stats_distinct_rows():
+    m = np.array([[1, 1, 0], [1, 1, 0], [0, 1, 1]], dtype=np.int8)
+    st = flexor.hamming_distance_stats(m)
+    assert st["total_row_pairs"] == 3
+    assert st["distinct_row_pairs"] == 2
+    assert st["mean_hamming"] == pytest.approx((0 + 4 + 4) / 3)
+
+
+def test_hamming_stats_larger_nout_more_diversity():
+    m10 = flexor.make_mxor(10, 8, n_tap=None, seed=0)
+    m20 = flexor.make_mxor(20, 16, n_tap=None, seed=0)
+    s10 = flexor.hamming_distance_stats(m10)
+    s20 = flexor.hamming_distance_stats(m20)
+    # larger N_in ⇒ pairwise distance 2^{N_in-1} grows (paper's argument)
+    assert s20["mean_hamming"] > s10["mean_hamming"]
+
+
+# ---------------------------------------------------------------------------
+# Gradients
+# ---------------------------------------------------------------------------
+
+def _rand(n=17, n_in=8, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, n_in)) * 0.05
+    return x
+
+
+def test_eq6_gradient_analytic():
+    """Custom VJP must equal the hand-derived Eq. (6) formula."""
+    m = flexor.make_mxor(10, 8, n_tap=2, seed=1)
+    x = _rand()
+    s = jnp.float32(10.0)
+    g = jax.random.normal(jax.random.PRNGKey(1), (17, 10))
+    got = jax.grad(lambda xx: (flexor.flexor_decrypt(xx, s, m) * g).sum())(x)
+
+    y = np.asarray(flexor.flexor_decrypt(x, s, m))
+    t = np.tanh(np.asarray(x) * 10.0)
+    want = (np.asarray(g) * y) @ m.astype(np.float32) * 10.0 * (1 - t * t) \
+        * np.sign(np.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+
+
+def test_eq5_exact_gradient_matches_tanh_autodiff():
+    """Eq. (5) must equal autodiff through the pure tanh-product network."""
+    m = flexor.make_mxor(6, 4, n_tap=2, seed=2)
+    x = _rand(n=9, n_in=4, seed=3)
+    s = jnp.float32(3.0)
+    g = jax.random.normal(jax.random.PRNGKey(4), (9, 6))
+
+    got = jax.grad(lambda xx: (flexor.flexor_decrypt(
+        xx, s, m, grad="exact") * g).sum())(x)
+
+    def analog_net(xx):
+        t = jnp.tanh(xx * s)
+        tb = jnp.where(jnp.asarray(m)[None] > 0, t[:, None, :], 1.0)
+        full = jnp.prod(tb, axis=2)
+        ntap = m.sum(axis=1)
+        par = jnp.where((ntap - 1) % 2 == 0, 1.0, -1.0)
+        return (par[None, :] * full * g).sum()
+
+    want = jax.grad(analog_net)(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ste_gradient():
+    """STE mode: ∂y_r/∂x_i = y_r sign(x_i) summed through M⊕."""
+    m = flexor.make_mxor(10, 8, n_tap=2, seed=3)
+    x = _rand(seed=5)
+    g = jax.random.normal(jax.random.PRNGKey(6), (17, 10))
+    got = jax.grad(lambda xx: (flexor.flexor_decrypt(
+        xx, jnp.float32(10.0), m, mode="ste") * g).sum())(x)
+    y = np.asarray(flexor.flexor_decrypt(x, jnp.float32(10.0), m))
+    want = (np.asarray(g) * y) @ m.astype(np.float32) * np.sign(np.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+
+
+def test_analog_mode_forward_binary_and_grad_flows():
+    m = flexor.make_mxor(10, 8, n_tap=2, seed=4)
+    x = _rand(seed=7)
+    y = flexor.flexor_decrypt(x, jnp.float32(10.0), m, mode="analog")
+    assert set(np.unique(np.asarray(y))) <= {-1.0, 1.0}
+    g = jax.grad(lambda xx: flexor.flexor_decrypt(
+        xx, jnp.float32(10.0), m, mode="analog").sum())(x)
+    assert np.abs(np.asarray(g)).sum() > 0
+
+
+def test_s_tanh_scales_gradient_magnitude():
+    """Fig. 9: larger S_tanh ⇒ larger gradient for near-zero weights."""
+    m = flexor.make_mxor(10, 8, n_tap=2, seed=5)
+    x = _rand(seed=8) * 0.01
+    def gnorm(s):
+        g = jax.grad(lambda xx: flexor.flexor_decrypt(
+            xx, jnp.float32(s), m).sum())(x)
+        return float(jnp.abs(g).sum())
+    assert gnorm(100.0) > gnorm(10.0) > gnorm(1.0)
+
+
+def test_gradient_zero_for_saturated_weights():
+    """(1 - tanh²) kills gradients for |x·S| >> 1 — the paper's built-in
+    clipping ('eliminates the need for weight clipping')."""
+    m = flexor.make_mxor(10, 8, n_tap=2, seed=6)
+    x = jnp.ones((5, 8)) * 10.0
+    g = jax.grad(lambda xx: flexor.flexor_decrypt(
+        xx, jnp.float32(100.0), m).sum())(x)
+    assert float(jnp.abs(g).max()) < 1e-12
+
+
+def test_no_gradient_to_s_tanh():
+    m = flexor.make_mxor(10, 8, n_tap=2, seed=7)
+    x = _rand(seed=9)
+    g = jax.grad(lambda s: flexor.flexor_decrypt(x, s, m).sum())(jnp.float32(10.0))
+    assert float(g) == 0.0
+
+
+def test_mode_validation():
+    m = flexor.make_mxor(10, 8, n_tap=2, seed=8)
+    with pytest.raises(ValueError):
+        flexor.flexor_decrypt(jnp.zeros((2, 8)), jnp.float32(1.0), m,
+                              mode="nope")

@@ -1,0 +1,152 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes / M⊕ configurations / value distributions; every
+kernel must match ref to float32 tolerance.  Kernels run interpret=True
+(CPU PJRT cannot execute Mosaic custom-calls)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import flexor
+from compile.kernels import ref, xor_decrypt, flexor_fwd, binary_matmul
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _signs(key, shape):
+    return jnp.sign(jax.random.normal(key, shape) + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# xor_decrypt kernel
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(slices=st.integers(1, 1400), n_in=st.integers(2, 24),
+       extra=st.integers(0, 12), n_tap=st.one_of(st.none(), st.integers(1, 2)),
+       seed=st.integers(0, 2**31 - 1))
+def test_xor_decrypt_matches_ref(slices, n_in, extra, n_tap, seed):
+    n_out = n_in + extra
+    if n_tap is not None:
+        n_tap = min(n_tap, n_in)
+    m = flexor.make_mxor(n_out, n_in, n_tap=n_tap, seed=seed)
+    x = _signs(jax.random.PRNGKey(seed), (slices, n_in))
+    got = xor_decrypt.xor_decrypt(x, m)
+    want = ref.xor_decrypt_ref(x, m)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_xor_decrypt_nonmultiple_tile():
+    m = flexor.make_mxor(10, 8, n_tap=2, seed=0)
+    for slices in [1, 511, 512, 513, 1025]:
+        x = _signs(jax.random.PRNGKey(slices), (slices, 8))
+        got = xor_decrypt.xor_decrypt(x, m)
+        assert got.shape == (slices, 10)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref.xor_decrypt_ref(x, m)))
+
+
+# ---------------------------------------------------------------------------
+# flexor_fwd kernel (training decrypt, fwd + Eq.6 bwd)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(slices=st.integers(1, 900), n_in=st.integers(2, 20),
+       extra=st.integers(0, 8), seed=st.integers(0, 2**31 - 1),
+       s_tanh=st.floats(0.5, 100.0))
+def test_flexor_fwd_and_bwd_match_ref(slices, n_in, extra, seed, s_tanh):
+    n_out = n_in + extra
+    m = flexor.make_mxor(n_out, n_in, n_tap=min(2, n_in), seed=seed)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (slices, n_in)) * 0.05
+    g = jax.random.normal(jax.random.fold_in(key, 1), (slices, n_out))
+
+    y, vjp = jax.vjp(lambda xx: flexor_fwd.decrypt_train(xx, s_tanh, m), x)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(ref.flexor_fwd_ref(x, m)))
+    (dx,) = vjp(g)
+    want = ref.flexor_bwd_ref(x, jnp.float32(s_tanh), m, g)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_flexor_fwd_matches_jnp_custom_vjp_end_to_end():
+    """Pallas path and jnp path must produce identical losses & grads."""
+    m = flexor.make_mxor(10, 8, n_tap=2, seed=4)
+    x = jax.random.normal(jax.random.PRNGKey(0), (129, 8)) * 0.02
+
+    def loss_pallas(xx):
+        return (flexor_fwd.decrypt_train(xx, 10.0, m) ** 3).sum()
+
+    def loss_jnp(xx):
+        return (flexor.flexor_decrypt(xx, jnp.float32(10.0), m) ** 3).sum()
+
+    lp, gp = jax.value_and_grad(loss_pallas)(x)
+    lj, gj = jax.value_and_grad(loss_jnp)(x)
+    np.testing.assert_allclose(float(lp), float(lj), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(gj),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_flexor_fwd_ablation_modes_route_to_jnp():
+    m = flexor.make_mxor(10, 8, n_tap=2, seed=5)
+    x = jax.random.normal(jax.random.PRNGKey(1), (33, 8)) * 0.05
+    for mode, grad in [("ste", "approx"), ("analog", "approx"),
+                       ("flexor", "exact")]:
+        got = flexor_fwd.decrypt_train(x, 10.0, m, mode=mode, grad=grad)
+        want = flexor.flexor_decrypt(x, jnp.float32(10.0), m,
+                                     mode=mode, grad=grad)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# binary_matmul kernel
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 300), v=st.integers(1, 96), c=st.integers(1, 300),
+       q=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_binary_matmul_matches_ref(n, v, c, q, seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (n, v))
+    bits = _signs(jax.random.fold_in(key, 1), (q, v, c))
+    alpha = jax.random.uniform(jax.random.fold_in(key, 2), (q, c), minval=0.05)
+    got = binary_matmul.binary_matmul(a, bits, alpha)
+    want = ref.binary_matmul_ref(a, bits, alpha)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_binary_matmul_equals_scaled_dense():
+    """q=1: binary-code GEMM must equal a dense matmul with ±α weights."""
+    key = jax.random.PRNGKey(7)
+    a = jax.random.normal(key, (17, 31))
+    bits = _signs(jax.random.fold_in(key, 1), (1, 31, 13))
+    alpha = jax.random.uniform(jax.random.fold_in(key, 2), (1, 13), minval=0.1)
+    dense_w = bits[0] * alpha[0][None, :]
+    got = binary_matmul.binary_matmul(a, bits, alpha)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ dense_w),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused decrypt+matmul reference consistency
+# ---------------------------------------------------------------------------
+
+def test_decrypt_matmul_ref_composes():
+    m = flexor.make_mxor(10, 8, n_tap=2, seed=6)
+    v, c, q = 24, 7, 2
+    slices = flexor.num_slices(v * c, 10)
+    key = jax.random.PRNGKey(3)
+    xs = _signs(key, (q, slices, 8))
+    a = jax.random.normal(jax.random.fold_in(key, 1), (5, v))
+    alpha = jax.random.uniform(jax.random.fold_in(key, 2), (q, c), minval=0.1)
+    fused = ref.decrypt_matmul_ref(a, xs, m, alpha, v, c)
+    planes = [ref.xor_decrypt_ref(xs[i], m).reshape(-1)[: v * c].reshape(v, c)
+              for i in range(q)]
+    manual = sum(a @ planes[i] * alpha[i][None, :] for i in range(q))
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(manual),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,148 @@
+"""Model zoo: shapes, quantized-layer plans, BN state threading, and
+quantizer-agnosticism for every registered architecture."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import quant
+from compile import models as model_zoo
+
+KEY = jax.random.PRNGKey(0)
+CTX = {"s_tanh": jnp.float32(10.0), "relax_lambda": jnp.float32(1.0)}
+
+
+def _spec():
+    return quant.FlexorSpec(q=1, n_in=8, n_out=10, seed=1)
+
+
+def test_registry_contents():
+    for name in ["mlp", "lenet5", "resnet20", "resnet32", "resnet8",
+                 "resnet14", "resnet18img", "resnet10img"]:
+        assert model_zoo.get(name) is not None
+    with pytest.raises(KeyError):
+        model_zoo.get("vgg")
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def test_mlp_shapes_and_bn_state():
+    qz = quant.Quantizer("flexor", spec=_spec())
+    mk = dict(d_in=64, hidden=(32, 16), num_classes=5)
+    params, state = model_zoo.mlp.init(KEY, qz, **mk)
+    x = jax.random.normal(KEY, (7, 64))
+    logits, new_state = model_zoo.mlp.apply(params, state, x, qz, CTX, True, **mk)
+    assert logits.shape == (7, 5)
+    # training BN must move running stats
+    assert not np.allclose(np.asarray(new_state["bn"][0]["mean"]),
+                           np.asarray(state["bn"][0]["mean"]))
+    # eval mode must not
+    _, st2 = model_zoo.mlp.apply(params, state, x, qz, CTX, False, **mk)
+    np.testing.assert_array_equal(np.asarray(st2["bn"][0]["mean"]),
+                                  np.asarray(state["bn"][0]["mean"]))
+
+
+# ---------------------------------------------------------------------------
+# LeNet-5
+# ---------------------------------------------------------------------------
+
+def test_lenet_paper_architecture_shapes():
+    shapes = dict(model_zoo.lenet.quantized_layer_shapes())
+    assert shapes[0] == (5, 5, 1, 32)
+    assert shapes[1] == (5, 5, 32, 64)
+    assert shapes[2] == (7 * 7 * 64, 512)
+    assert shapes[3] == (512, 10)
+
+
+def test_lenet_forward():
+    qz = quant.Quantizer("flexor", spec=_spec())
+    mk = dict(width_mult=0.25)
+    params, state = model_zoo.lenet.init(KEY, qz, **mk)
+    x = jax.random.normal(KEY, (4, 28, 28, 1))
+    logits, _ = model_zoo.lenet.apply(params, state, x, qz, CTX, True, **mk)
+    assert logits.shape == (4, 10)
+    # accepts flat input too
+    logits2, _ = model_zoo.lenet.apply(params, state,
+                                       x.reshape(4, -1), qz, CTX, True, **mk)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits2),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ResNet family
+# ---------------------------------------------------------------------------
+
+def test_resnet20_depth():
+    """ResNet-20 = 6·3+2: 19 quantized convs + stem + head... specifically
+    3 stages × 3 blocks × 2 convs = 18 3×3 convs, + 2 quantized 1×1
+    downsamples = 20 quantized layers."""
+    shapes = model_zoo.resnet.resnet20.quantized_layer_shapes()
+    n3x3 = sum(1 for _, s in shapes if s[0] == 3)
+    n1x1 = sum(1 for _, s in shapes if s[0] == 1)
+    assert n3x3 == 18
+    assert n1x1 == 2
+
+
+def test_resnet32_depth():
+    shapes = model_zoo.resnet.resnet32.quantized_layer_shapes()
+    assert sum(1 for _, s in shapes if s[0] == 3) == 30
+
+
+def test_resnet18img_plan():
+    shapes = model_zoo.resnet.resnet18img.quantized_layer_shapes()
+    n3x3 = sum(1 for _, s in shapes if s[0] == 3)
+    n1x1 = sum(1 for _, s in shapes if s[0] == 1)
+    assert n3x3 == 16  # 4 stages × 2 blocks × 2 convs
+    assert n1x1 == 3   # downsample at stages 2,3,4
+
+
+@pytest.mark.parametrize("name,hw,nc", [("resnet8", 32, 10),
+                                        ("resnet10img", 64, 20)])
+def test_resnet_forward_shapes(name, hw, nc):
+    model = model_zoo.get(name)
+    qz = quant.Quantizer("flexor", spec=_spec())
+    params, state = model.init(KEY, qz)
+    x = jax.random.normal(KEY, (2, hw, hw, 3))
+    logits, new_state = model.apply(params, state, x, qz, CTX, True)
+    assert logits.shape == (2, nc)
+    assert len(new_state["bn"]) == len(state["bn"])
+    assert all(s is not None for s in new_state["bn"])
+
+
+@pytest.mark.parametrize("kind", ["fp", "bwn", "binaryrelax", "ternary", "dsq"])
+def test_resnet8_quantizer_agnostic(kind):
+    model = model_zoo.get("resnet8")
+    qz = quant.Quantizer(kind)
+    params, state = model.init(KEY, qz)
+    x = jax.random.normal(KEY, (2, 32, 32, 3))
+    logits, _ = model.apply(params, state, x, qz, CTX, True)
+    assert logits.shape == (2, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_resnet_downsample_spatial_reduction():
+    model = model_zoo.get("resnet8")
+    qz = quant.Quantizer("fp")
+    params, state = model.init(KEY, qz)
+    # 32x32 input, three stages with strides 1,2,2 → final maps are 8×8
+    x = jax.random.normal(KEY, (1, 32, 32, 3))
+    logits, _ = model.apply(params, state, x, qz, CTX, False)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_resnet_mixed_precision_specs_apply():
+    """Table 2 setup: different N_in per layer group changes param shapes."""
+    base = quant.FlexorSpec(q=1, n_in=12, n_out=20, seed=1)
+    narrow = quant.FlexorSpec(q=1, n_in=7, n_out=20, seed=2)
+    n_layers = len(model_zoo.resnet.resnet8.quantized_layer_shapes())
+    qz = quant.Quantizer("flexor", spec=base,
+                         specs={n_layers - 1: narrow})
+    params, state = model_zoo.resnet.resnet8.init(KEY, qz)
+    assert params["convs"][0]["w_enc"].shape[-1] == 12
+    assert params["convs"][-1]["w_enc"].shape[-1] == 7
+    x = jax.random.normal(KEY, (2, 32, 32, 3))
+    logits, _ = model_zoo.resnet.resnet8.apply(params, state, x, qz, CTX, True)
+    assert logits.shape == (2, 10)

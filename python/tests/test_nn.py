@@ -1,0 +1,90 @@
+"""nn.py substrate: BN math vs manual, conv/pool geometry, dense, init."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import nn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_he_normal_scale():
+    w = nn.he_normal(KEY, (5, 5, 16, 32))
+    std = float(jnp.std(w))
+    want = (2.0 / (5 * 5 * 16)) ** 0.5
+    assert abs(std - want) / want < 0.15
+
+
+def test_relu():
+    x = jnp.asarray([-1.0, 0.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(nn.relu(x)), [0.0, 0.0, 2.0])
+
+
+def test_conv2d_identity_and_shapes():
+    x = jax.random.normal(KEY, (2, 8, 8, 3))
+    w_id = jnp.zeros((1, 1, 3, 3)).at[0, 0].set(jnp.eye(3))
+    y = nn.conv2d(x, w_id)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)
+    w = jax.random.normal(KEY, (3, 3, 3, 7))
+    assert nn.conv2d(x, w, stride=2).shape == (2, 4, 4, 7)
+    assert nn.conv2d(x, w, stride=1).shape == (2, 8, 8, 7)
+
+
+def test_conv2d_same_padding_sums():
+    x = jnp.ones((1, 4, 4, 1))
+    w = jnp.ones((3, 3, 1, 1))
+    y = np.asarray(nn.conv2d(x, w))[0, :, :, 0]
+    assert y[0, 0] == 4.0   # corner sees 2x2
+    assert y[1, 1] == 9.0   # interior sees 3x3
+
+
+def test_max_pool():
+    x = jnp.asarray([[1.0, 5.0], [3.0, 2.0]]).reshape(1, 2, 2, 1)
+    y = nn.max_pool(x)
+    assert y.shape == (1, 1, 1, 1)
+    assert float(y[0, 0, 0, 0]) == 5.0
+
+
+def test_avg_pool_global():
+    x = jnp.arange(8, dtype=jnp.float32).reshape(1, 2, 2, 2)
+    y = np.asarray(nn.avg_pool_global(x))
+    np.testing.assert_allclose(y, [[(0 + 2 + 4 + 6) / 4, (1 + 3 + 5 + 7) / 4]])
+
+
+def test_batch_norm_train_math():
+    p, s = nn.init_bn(2)
+    x = jax.random.normal(KEY, (64, 2)) * 3.0 + 1.0
+    y, new_s = nn.batch_norm(p, s, x, train=True)
+    # normalized output: ~zero mean, ~unit var per channel
+    assert np.allclose(np.asarray(y).mean(axis=0), 0.0, atol=1e-4)
+    assert np.allclose(np.asarray(y).var(axis=0), 1.0, atol=1e-2)
+    # running stats moved toward batch stats with momentum 0.9
+    bm = np.asarray(x.mean(axis=0))
+    np.testing.assert_allclose(np.asarray(new_s["mean"]), 0.1 * bm, rtol=1e-5)
+
+
+def test_batch_norm_eval_uses_running_stats():
+    p, s = nn.init_bn(1)
+    s = {"mean": jnp.asarray([2.0]), "var": jnp.asarray([4.0])}
+    x = jnp.asarray([[4.0]])
+    y, new_s = nn.batch_norm(p, s, x, train=False)
+    assert float(y[0, 0]) == pytest.approx((4.0 - 2.0) / 2.0, rel=1e-3)
+    assert new_s is s  # eval must not touch state
+
+
+def test_batch_norm_scale_bias():
+    p, s = nn.init_bn(1)
+    p = {"scale": jnp.asarray([3.0]), "bias": jnp.asarray([-1.0])}
+    s = {"mean": jnp.asarray([0.0]), "var": jnp.asarray([1.0])}
+    y, _ = nn.batch_norm(p, s, jnp.asarray([[2.0]]), train=False)
+    assert float(y[0, 0]) == pytest.approx(2.0 * 3.0 - 1.0, rel=1e-3)
+
+
+def test_dense_fp():
+    p = nn.init_dense_fp(KEY, 3, 2)
+    assert p["w"].shape == (3, 2)
+    x = jnp.asarray([[1.0, 0.0, 0.0]])
+    y = nn.dense_fp(p, x)
+    np.testing.assert_allclose(np.asarray(y)[0], np.asarray(p["w"])[0], rtol=1e-6)

@@ -1,0 +1,192 @@
+"""Quantizers: FleXOR weight reconstruction, baselines (BWN / BinaryRelax /
+ternary / DSQ), Quantizer dispatch and storage accounting."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import flexor, quant
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# FlexorSpec / storage
+# ---------------------------------------------------------------------------
+
+def test_spec_bits_per_weight_and_storage():
+    spec = quant.FlexorSpec(q=1, n_in=8, n_out=10, seed=1)
+    assert spec.bits_per_weight == pytest.approx(0.8)
+    # 100 weights -> 10 slices of 8 encrypted bits
+    assert spec.storage_bits(100) == 80
+    # padding: 101 weights -> 11 slices
+    assert spec.storage_bits(101) == 88
+
+
+def test_spec_q2_doubles_planes_and_storage():
+    spec = quant.FlexorSpec(q=2, n_in=8, n_out=20, seed=1)
+    assert len(spec.mxor) == 2
+    assert (spec.mxor[0] != spec.mxor[1]).any()  # independent M⊕ per plane
+    assert spec.bits_per_weight == pytest.approx(0.8)
+    assert spec.storage_bits(100) == 2 * 5 * 8
+
+
+def test_flexor_weight_shape_and_values():
+    spec = quant.FlexorSpec(q=1, n_in=8, n_out=10, seed=2)
+    shape = (3, 3, 4, 8)
+    p = quant.init_flexor_weight(KEY, shape, spec)
+    assert p["w_enc"].shape == (1, flexor.num_slices(int(np.prod(shape)), 10), 8)
+    assert p["alpha"].shape == (1, 8)
+    w = quant.flexor_weight(p, shape, spec, jnp.float32(10.0))
+    assert w.shape == shape
+    # q=1: every weight is ±α of its output channel
+    alpha = np.asarray(p["alpha"][0])
+    got = np.asarray(w)
+    for oc in range(8):
+        vals = np.unique(np.abs(got[..., oc]))
+        np.testing.assert_allclose(vals, [alpha[oc]], rtol=1e-6)
+
+
+def test_flexor_weight_q2_is_sum_of_planes():
+    spec = quant.FlexorSpec(q=2, n_in=8, n_out=10, seed=3)
+    shape = (16, 6)
+    p = quant.init_flexor_weight(KEY, shape, spec)
+    w = np.asarray(quant.flexor_weight(p, shape, spec, jnp.float32(10.0)))
+    planes = []
+    for i in range(2):
+        bits = flexor.flexor_decrypt(p["w_enc"][i], jnp.float32(10.0),
+                                     spec.mxor[i])
+        flat = np.asarray(bits).reshape(-1)[:96].reshape(shape)
+        planes.append(flat * np.asarray(p["alpha"][i])[None, :])
+    np.testing.assert_allclose(w, planes[0] + planes[1], rtol=1e-6)
+
+
+def test_flexor_weight_gradients_flow_to_enc_and_alpha():
+    spec = quant.FlexorSpec(q=1, n_in=8, n_out=10, seed=4)
+    shape = (16, 4)
+    p = quant.init_flexor_weight(KEY, shape, spec)
+    g = jax.grad(lambda pp: (quant.flexor_weight(
+        pp, shape, spec, jnp.float32(10.0)) ** 2).sum())(p)
+    assert float(jnp.abs(g["w_enc"]).sum()) > 0
+    assert float(jnp.abs(g["alpha"]).sum()) > 0
+
+
+def test_flexor_pallas_path_matches_jnp_path():
+    spec = quant.FlexorSpec(q=1, n_in=8, n_out=10, seed=5)
+    shape = (40, 5)
+    p = quant.init_flexor_weight(KEY, shape, spec)
+    w_jnp = quant.flexor_weight(p, shape, spec, jnp.float32(10.0))
+    w_pal = quant.flexor_weight(p, shape, spec, jnp.float32(10.0),
+                                use_pallas=True)
+    np.testing.assert_allclose(np.asarray(w_jnp), np.asarray(w_pal),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+def test_bwn_weight_is_sign_times_channel_meanabs():
+    p = quant.init_bwn_weight(KEY, (3, 3, 2, 4))
+    w = np.asarray(p["w"])
+    got = np.asarray(quant.bwn_weight(p))
+    alpha = np.abs(w).reshape(-1, 4).mean(axis=0)
+    np.testing.assert_allclose(got, np.sign(w) * alpha[None, None, None, :],
+                               rtol=1e-6)
+
+
+def test_bwn_gradient_clipped_ste():
+    p = {"w": jnp.asarray([[0.5, -2.0], [0.9, 1.5]])}
+    g = jax.grad(lambda pp: quant.bwn_weight(pp).sum())(p)["w"]
+    # gradient through sign() is masked where |w| > 1 (clipped STE) but
+    # alpha = mean|w| still contributes everywhere
+    assert np.abs(np.asarray(g)).sum() > 0
+
+
+def test_binaryrelax_limits():
+    p = quant.init_binaryrelax_weight(KEY, (8, 3))
+    w = np.asarray(p["w"])
+    alpha = np.abs(w).mean(axis=0)
+    # λ=0 → identity
+    np.testing.assert_allclose(
+        np.asarray(quant.binaryrelax_weight(p, jnp.float32(0.0))), w,
+        rtol=1e-6)
+    # λ→∞ → BWN-style sign·α
+    got = np.asarray(quant.binaryrelax_weight(p, jnp.float32(1e9)))
+    np.testing.assert_allclose(got, np.sign(w) * alpha[None, :], rtol=1e-4)
+
+
+def test_ternary_zeros_small_weights_and_uses_trained_scales():
+    p = quant.init_ternary_weight(KEY, (64, 2))
+    w = np.asarray(p["w"])
+    thr = 0.7 * np.abs(w).mean(axis=0)
+    got = np.asarray(quant.ternary_weight(p))
+    wp, wn = np.asarray(p["wp"]), np.asarray(p["wn"])
+    for oc in range(2):
+        np.testing.assert_allclose(got[w[:, oc] > thr[oc], oc], wp[oc])
+        np.testing.assert_allclose(got[w[:, oc] < -thr[oc], oc], -wn[oc])
+        mask = np.abs(w[:, oc]) <= thr[oc]
+        np.testing.assert_allclose(got[mask, oc], 0.0)
+
+
+def test_ternary_gradients_flow_to_w_and_scales():
+    p = quant.init_ternary_weight(KEY, (64, 2))
+    g = jax.grad(lambda pp: (quant.ternary_weight(pp) ** 2).sum())(p)
+    assert float(jnp.abs(g["w"]).sum()) > 0
+    assert float(jnp.abs(g["wp"]).sum()) > 0
+
+
+def test_dsq_output_is_pm_alpha_and_trainable_k():
+    p = quant.init_dsq_weight(KEY, (32, 3))
+    got = np.asarray(quant.dsq_weight(p))
+    alpha = np.abs(np.asarray(p["w"])).reshape(-1, 3).mean(axis=0)
+    for oc in range(3):
+        np.testing.assert_allclose(np.unique(np.abs(got[:, oc])), [alpha[oc]],
+                                   rtol=1e-5)
+    g = jax.grad(lambda pp: (quant.dsq_weight(pp) * 2).sum())(p)
+    assert float(jnp.abs(g["w"]).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# Quantizer dispatch
+# ---------------------------------------------------------------------------
+
+def test_quantizer_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        quant.Quantizer("nope")
+
+
+def test_quantizer_flexor_requires_spec():
+    with pytest.raises(ValueError):
+        quant.Quantizer("flexor")
+
+
+@pytest.mark.parametrize("kind", ["fp", "bwn", "binaryrelax", "ternary", "dsq"])
+def test_quantizer_roundtrip_all_kinds(kind):
+    qz = quant.Quantizer(kind)
+    shape = (5, 5, 2, 6)
+    p = qz.init(KEY, shape)
+    ctx = {"s_tanh": jnp.float32(10.0), "relax_lambda": jnp.float32(2.0)}
+    w = qz(p, shape, ctx)
+    assert w.shape == shape
+
+
+def test_quantizer_mixed_specs_route_by_layer():
+    base = quant.FlexorSpec(q=1, n_in=12, n_out=20, seed=1)
+    narrow = quant.FlexorSpec(q=1, n_in=8, n_out=20, seed=2)
+    qz = quant.Quantizer("flexor", spec=base, specs={3: narrow})
+    assert qz.spec_for(0) is base
+    assert qz.spec_for(3) is narrow
+    # bits/weight differ per group (Table 2)
+    assert qz.storage_bits(1000, layer_idx=0) > qz.storage_bits(1000, layer_idx=3)
+
+
+def test_quantizer_storage_bits_kinds():
+    qz1 = quant.Quantizer("bwn")
+    assert qz1.storage_bits(1000) == 1000
+    assert quant.Quantizer("ternary").storage_bits(1000) == 2000
+    assert quant.Quantizer("fp").storage_bits(10) == 320
+    spec = quant.FlexorSpec(q=1, n_in=8, n_out=10, seed=1)
+    assert quant.Quantizer("flexor", spec=spec).storage_bits(1000) == 800

@@ -1,0 +1,130 @@
+"""Training graph: losses, optimizer update rules vs hand math, and
+loss-decreases smoke runs for FleXOR and every baseline quantizer."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import quant, train
+
+
+# ---------------------------------------------------------------------------
+# losses / metrics
+# ---------------------------------------------------------------------------
+
+def test_softmax_xent_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0, -1.0], [0.0, 1.0, 0.0]])
+    labels = jnp.asarray([0, 2], dtype=jnp.int32)
+    p = jax.nn.softmax(logits)
+    want = -(np.log(p[0, 0]) + np.log(p[1, 2])) / 2
+    got = float(train.softmax_xent(logits, labels))
+    assert got == pytest.approx(float(want), rel=1e-6)
+
+
+def test_accuracy_and_top5():
+    logits = jnp.asarray([[5.0, 1, 2, 3, 4, 0], [0, 1, 2, 3, 4, 5.0]])
+    labels = jnp.asarray([0, 0], dtype=jnp.int32)
+    assert float(train.accuracy_count(logits, labels)) == 1.0
+    # label 0 is in top-5 of row 0 (rank 1) and row 1 (rank 6 → no)
+    assert float(train.topk_count(logits, labels, k=5)) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# optimizer math
+# ---------------------------------------------------------------------------
+
+def test_sgd_momentum_weight_decay_math():
+    params = {"a": jnp.asarray([1.0, -2.0])}
+    opt = train.sgd_init(params)
+    grads = {"a": jnp.asarray([0.5, 0.5])}
+    lr, mom, wd = 0.1, 0.9, 0.01
+    p1, o1 = train.sgd_update(params, opt, grads, lr, momentum=mom,
+                              weight_decay=wd)
+    v1 = 0.0 * mom + np.asarray(grads["a"]) + wd * np.asarray(params["a"])
+    np.testing.assert_allclose(np.asarray(p1["a"]),
+                               np.asarray(params["a"]) - lr * v1, rtol=1e-6)
+    # second step accumulates momentum
+    p2, _ = train.sgd_update(p1, o1, grads, lr, momentum=mom, weight_decay=wd)
+    v2 = mom * v1 + np.asarray(grads["a"]) + wd * np.asarray(p1["a"])
+    np.testing.assert_allclose(np.asarray(p2["a"]),
+                               np.asarray(p1["a"]) - lr * v2, rtol=1e-6)
+
+
+def test_adam_first_step_math():
+    params = {"a": jnp.asarray([1.0])}
+    opt = train.adam_init(params)
+    grads = {"a": jnp.asarray([0.2])}
+    p1, o1 = train.adam_update(params, opt, grads, 0.01)
+    # bias-corrected first step ≈ -lr * sign(g)
+    np.testing.assert_allclose(np.asarray(p1["a"]), [1.0 - 0.01], rtol=1e-4)
+    assert float(o1["t"]) == 1.0
+
+
+def test_optimizer_registry():
+    assert set(train.OPTIMIZERS) == {"sgd", "adam"}
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: loss decreases on a separable synthetic task
+# ---------------------------------------------------------------------------
+
+def _toy_task(n=256, d=32, k=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, d))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, k))
+    y = jnp.argmax(x @ w, axis=1).astype(jnp.int32)
+    return x, y
+
+
+def _run(kind, steps=40, lr=0.05, optimizer="sgd", use_pallas=False):
+    spec = quant.FlexorSpec(q=1, n_in=8, n_out=10, seed=1)
+    qz = quant.Quantizer(kind, spec=spec if kind == "flexor" else None,
+                         use_pallas=use_pallas)
+    init_fn, step, eval_step = train.build(
+        "mlp", qz, optimizer=optimizer,
+        model_kwargs={"d_in": 32, "hidden": (24,), "num_classes": 4})
+    p, o, b = init_fn(0)
+    x, y = _toy_task()
+    jstep = jax.jit(step)
+    first = last = None
+    lam = 0.0
+    for i in range(steps):
+        lam = i / steps * 5.0  # BinaryRelax λ schedule
+        p, o, b, loss, acc = jstep(p, o, b, x, y, lr, 10.0, lam)
+        if first is None:
+            first = float(loss)
+        last = float(loss)
+    l, c, c5 = jax.jit(eval_step)(p, b, x, y, 10.0, lam)
+    return first, last, float(c) / x.shape[0]
+
+
+@pytest.mark.parametrize("kind", ["fp", "flexor", "bwn", "binaryrelax",
+                                  "ternary", "dsq"])
+def test_loss_decreases_all_quantizers(kind):
+    first, last, acc = _run(kind)
+    assert last < first * 0.9, f"{kind}: {first} -> {last}"
+    assert acc > 0.4
+
+
+def test_flexor_pallas_train_path():
+    first, last, acc = _run("flexor", steps=25, use_pallas=True)
+    assert last < first
+
+
+def test_adam_path():
+    first, last, acc = _run("fp", steps=30, lr=1e-2, optimizer="adam")
+    assert last < first * 0.8
+
+
+def test_eval_uses_running_bn_stats():
+    """eval_step must be deterministic given fixed params/bn (no batch stats)."""
+    spec = quant.FlexorSpec(q=1, n_in=8, n_out=10, seed=1)
+    qz = quant.Quantizer("flexor", spec=spec)
+    init_fn, step, eval_step = train.build(
+        "mlp", qz, model_kwargs={"d_in": 32, "hidden": (24,), "num_classes": 4})
+    p, o, b = init_fn(0)
+    x, y = _toy_task()
+    l1 = eval_step(p, b, x[:64], y[:64], 10.0, 0.0)[0]
+    l2 = eval_step(p, b, x[:64], y[:64], 10.0, 0.0)[0]
+    assert float(l1) == float(l2)

@@ -1,0 +1,134 @@
+//! Decryption-engine benchmarks — the paper's "negligible overhead" claim
+//! (Fig. 1-3, Algorithm 1) quantified on CPU:
+//!
+//!   * word-parallel vs scalar GF(2) decrypt across (N_in, N_out, N_tap);
+//!   * decrypted throughput in Gbit/s and in weights/s;
+//!   * FXR container encode/decode;
+//!   * binary-code matvec vs dense f32 matvec (the "q multiplies instead
+//!     of v" arithmetic).
+
+use flexor::flexor::binarycodes::BinaryCodeMatrix;
+use flexor::flexor::bitpack::ColumnBits;
+use flexor::flexor::fxr::{Container, Layer, Plane};
+use flexor::flexor::{Decryptor, MXor};
+use flexor::substrate::bench::{black_box, Bench};
+use flexor::substrate::json::Json;
+use flexor::substrate::prng::Pcg32;
+
+fn rand_enc(rng: &mut Pcg32, slices: usize, n_in: usize) -> ColumnBits {
+    let bits: Vec<u8> = (0..slices * n_in).map(|_| rng.bernoulli(0.5) as u8).collect();
+    ColumnBits::from_row_major(&bits, n_in).unwrap()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bench::quick() } else { Bench::new() };
+    let mut rng = Pcg32::seeded(42);
+
+    println!("# decrypt engine (per-call: 1M weights decoded unless noted)\n");
+
+    for (n_in, n_out, n_tap) in [(8usize, 10usize, Some(2usize)),
+                                 (8, 20, Some(2)),
+                                 (16, 20, Some(2)),
+                                 (8, 10, None)] {
+        let slices = 1_000_000 / n_out;
+        let mxor = match n_tap {
+            Some(t) => MXor::with_ntap(n_out, n_in, t, &mut rng).unwrap(),
+            None => MXor::random(n_out, n_in, &mut rng).unwrap(),
+        };
+        let d = Decryptor::new(mxor);
+        let enc = rand_enc(&mut rng, slices, n_in);
+        let out_bits = (slices * n_out) as f64;
+        let tap = n_tap.map(|t| t.to_string()).unwrap_or("rand".into());
+        b.run_with_throughput(
+            &format!("decrypt/word-parallel n_in={n_in} n_out={n_out} tap={tap}"),
+            Some(out_bits),
+            "bit",
+            || {
+                black_box(d.decrypt_columns(black_box(&enc)).unwrap());
+            },
+        );
+        // scalar engine on 1/10th of the data (it is much slower)
+        let enc_small = rand_enc(&mut rng, slices / 10, n_in);
+        b.run_with_throughput(
+            &format!("decrypt/scalar        n_in={n_in} n_out={n_out} tap={tap}"),
+            Some(out_bits / 10.0),
+            "bit",
+            || {
+                black_box(d.decrypt_scalar(black_box(&enc_small)).unwrap());
+            },
+        );
+    }
+
+    println!("\n# decrypt-to-signs (incl. ±1 materialization)\n");
+    let mxor = MXor::with_ntap(10, 8, 2, &mut rng).unwrap();
+    let d = Decryptor::new(mxor);
+    let slices = 100_000;
+    let enc = rand_enc(&mut rng, slices, 8);
+    b.run_with_throughput(
+        "decrypt_to_signs 1M weights",
+        Some((slices * 10) as f64),
+        "weight",
+        || {
+            black_box(d.decrypt_to_signs(black_box(&enc), slices * 10).unwrap());
+        },
+    );
+
+    println!("\n# FXR container\n");
+    let mk_layer = |rng: &mut Pcg32, n_weights: usize| {
+        let mxor = MXor::with_ntap(10, 8, 2, rng).unwrap();
+        let slices = n_weights.div_ceil(10);
+        Layer {
+            name: "l".into(),
+            n_weights,
+            c_out: 64,
+            planes: vec![Plane {
+                mxor,
+                alpha: (0..64).map(|_| rng.range_f32(0.1, 0.5)).collect(),
+                enc: rand_enc(rng, slices, 8),
+            }],
+        }
+    };
+    let mut c = Container::new(Json::Null);
+    c.push(mk_layer(&mut rng, 1_000_000)).unwrap();
+    let bytes = c.to_bytes();
+    println!("(container: 1M weights -> {} bytes stored)", bytes.len());
+    b.run_with_throughput("fxr/encode 1M weights", Some(1e6), "weight", || {
+        black_box(c.to_bytes());
+    });
+    b.run_with_throughput("fxr/decode 1M weights", Some(1e6), "weight", || {
+        black_box(Container::from_bytes(black_box(&bytes)).unwrap());
+    });
+
+    println!("\n# binary-code arithmetic (v=4096, c=256)\n");
+    let (v, cc) = (4096usize, 256usize);
+    let planes: Vec<Vec<f32>> = (0..1)
+        .map(|_| (0..v * cc).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect())
+        .collect();
+    let alpha = vec![(0..cc).map(|_| rng.range_f32(0.1, 0.5)).collect::<Vec<_>>()];
+    let bcm = BinaryCodeMatrix::from_planes(v, cc, &planes, &alpha).unwrap();
+    let a: Vec<f32> = (0..v).map(|_| rng.normal()).collect();
+    let dense: Vec<f32> = planes[0]
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| s * alpha[0][i % cc])
+        .collect();
+    b.run_with_throughput("matvec/binary-code q=1", Some((v * cc) as f64), "MAC", || {
+        black_box(bcm.matvec(black_box(&a)).unwrap());
+    });
+    b.run_with_throughput("matvec/dense f32 reference", Some((v * cc) as f64), "MAC", || {
+        let mut out = vec![0f32; cc];
+        for row in 0..v {
+            let av = a[row];
+            let dr = &dense[row * cc..(row + 1) * cc];
+            for (o, w) in out.iter_mut().zip(dr) {
+                *o += av * w;
+            }
+        }
+        black_box(out);
+    });
+
+    std::fs::create_dir_all("runs").ok();
+    std::fs::write("runs/bench_decrypt.json", b.to_json().to_string_pretty()).ok();
+    println!("\nwrote runs/bench_decrypt.json");
+}

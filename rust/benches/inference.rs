@@ -1,0 +1,61 @@
+//! Inference-engine benchmarks: bundle load (decrypt) time and forward-pass
+//! latency/throughput of the pure-Rust binary-code engine, per model.
+//!
+//! Needs `make artifacts` (default set). Trains a handful of steps only —
+//! the numbers of interest are systems-side, not accuracy.
+
+use std::path::Path;
+
+use flexor::coordinator::{export_bundle, MetricsSink, Schedule, TrainSession};
+use flexor::data::{self, Batcher, Split};
+use flexor::inference::InferenceModel;
+use flexor::runtime::{Manifest, Runtime};
+use flexor::substrate::bench::{black_box, Bench};
+
+fn main() {
+    let root = Path::new("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bench::quick() } else { Bench::new() };
+    let rt = Runtime::cpu().unwrap();
+    let man = Manifest::load(root).unwrap();
+
+    for (cfg, dataset) in [("quickstart_mlp", "digits"), ("e2e_resnet14_f08", "shapes32")] {
+        if !man.configs.contains_key(cfg) {
+            continue;
+        }
+        println!("\n# {cfg}\n");
+        let mut session = TrainSession::new(&rt, &man, cfg).unwrap();
+        let ds = data::by_name(dataset, 0).unwrap();
+        let sched = Schedule::mnist(1e-3, 50);
+        let mut sink = MetricsSink::new();
+        session.train_loop(ds.as_ref(), &sched, 5, 5, 64, &mut sink).unwrap();
+        let dir = std::env::temp_dir().join("flexor_bench_bundle");
+        export_bundle(&session, &dir, cfg).unwrap();
+
+        b.run(&format!("bundle-load+decrypt/{cfg}"), || {
+            black_box(InferenceModel::load(&dir, cfg).unwrap());
+        });
+
+        let model = InferenceModel::load(&dir, cfg).unwrap();
+        for batch in [1usize, 16, 64] {
+            let (xs, _) = Batcher::eval_set(ds.as_ref(), Split::Test, batch);
+            b.run_with_throughput(
+                &format!("forward/{cfg} batch={batch}"),
+                Some(batch as f64),
+                "example",
+                || {
+                    black_box(model.forward(black_box(&xs), batch).unwrap());
+                },
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    std::fs::create_dir_all("runs").ok();
+    std::fs::write("runs/bench_inference.json", b.to_json().to_string_pretty()).ok();
+    println!("\nwrote runs/bench_inference.json");
+}

@@ -1,0 +1,60 @@
+//! End-to-end table smoke bench: runs a micro version of each paper-table
+//! experiment (few training steps per point) to verify every artifact the
+//! runners need compiles + executes, and reports per-table wall time.
+//! The real reproductions live in examples/ (see DESIGN.md §4); this bench
+//! is the CI-sized canary for all of them.
+
+use std::path::Path;
+use std::time::Instant;
+
+use flexor::coordinator::experiments::{run_spec, RunSpec};
+use flexor::coordinator::Schedule;
+use flexor::runtime::{Manifest, Runtime};
+
+fn main() {
+    let root = Path::new("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let man = Manifest::load(root).unwrap();
+
+    // one representative point per table/figure
+    let points: Vec<(&str, &str, &str)> = vec![
+        ("fig4", "fig4_lenet_tap2_ni8_no10", "digits"),
+        ("fig5", "fig5_flexor", "shapes32"),
+        ("fig7", "sweep_q1_ni8_no20", "shapes32"),
+        ("table1", "t1_r8_f08", "shapes32"),
+        ("table2", "t2_mixed_19_16_7", "shapes32"),
+        ("table3/fig8", "t3_img_f08", "shapes64"),
+        ("table5", "sweep_q1_ni8_no10", "shapes32"),
+        ("table6/fig16", "sweep_q2_ni8_no10", "shapes32"),
+    ];
+
+    println!("{:<14} {:<26} {:>10} {:>10} {:>9}", "table", "artifact", "steps/s", "top1@20", "wall s");
+    for (table, artifact, dataset) in points {
+        if !man.configs.contains_key(artifact) {
+            println!("{table:<14} {artifact:<26} {:>10} (artifact missing — make artifacts SET=full)", "-");
+            continue;
+        }
+        let t0 = Instant::now();
+        let spec = RunSpec::new(table, artifact, dataset, 20)
+            .schedule(Schedule::cifar(0.05, 0.2, vec![], 100))
+            .eval_every(20);
+        match run_spec(&rt, &man, &spec) {
+            Ok(o) => {
+                let wall = t0.elapsed().as_secs_f64();
+                println!(
+                    "{:<14} {:<26} {:>10.2} {:>9.1}% {:>9.1}",
+                    table,
+                    artifact,
+                    20.0 / wall,
+                    100.0 * o.top1_mean,
+                    wall
+                );
+            }
+            Err(e) => println!("{table:<14} {artifact:<26} ERROR: {e:#}"),
+        }
+    }
+}

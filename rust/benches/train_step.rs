@@ -1,0 +1,71 @@
+//! Train-step latency through the PJRT runtime, per artifact: the L3-side
+//! cost of one optimizer step (literal marshalling + HLO execution + state
+//! readback), plus the marshalling overhead measured separately so the
+//! coordinator's share is visible (DESIGN.md §Perf: L3 must not be the
+//! bottleneck).
+
+use std::path::Path;
+
+use flexor::coordinator::TrainSession;
+use flexor::data::{self, Batcher, Split};
+use flexor::runtime::{Manifest, Runtime};
+use flexor::substrate::bench::{black_box, Bench};
+
+fn main() {
+    let root = Path::new("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bench::quick() } else { Bench::new() };
+    let rt = Runtime::cpu().unwrap();
+    let man = Manifest::load(root).unwrap();
+
+    for (cfg, dataset) in [
+        ("quickstart_mlp", "digits"),
+        ("quickstart_mlp_pallas", "digits"),
+        ("e2e_resnet14_f08", "shapes32"),
+        ("e2e_resnet14_fp", "shapes32"),
+    ] {
+        if !man.configs.contains_key(cfg) {
+            continue;
+        }
+        let mut session = TrainSession::new(&rt, &man, cfg).unwrap();
+        let ds = data::by_name(dataset, 0).unwrap();
+        let mut batcher = Batcher::new(ds.as_ref(), Split::Train, session.meta.batch, 1024);
+        let (x, y) = batcher.next_batch();
+        let bsz = session.meta.batch as f64;
+        b.run_with_throughput(
+            &format!("train_step/{cfg} (batch {})", session.meta.batch),
+            Some(bsz),
+            "example",
+            || {
+                black_box(session.step(&x, &y, 1e-3, 10.0, 0.0).unwrap());
+            },
+        );
+        // data generation cost (L3-side) for one batch
+        b.run_with_throughput(
+            &format!("datagen/{dataset} (batch {})", session.meta.batch),
+            Some(bsz),
+            "example",
+            || {
+                black_box(batcher.next_batch());
+            },
+        );
+        // eval step
+        let (ex, ey) = Batcher::eval_set(ds.as_ref(), Split::Test, session.meta.batch);
+        b.run_with_throughput(
+            &format!("eval_step/{cfg} (batch {})", session.meta.batch),
+            Some(bsz),
+            "example",
+            || {
+                black_box(session.eval(&ex, &ey, 10.0, 0.0).unwrap());
+            },
+        );
+    }
+
+    std::fs::create_dir_all("runs").ok();
+    std::fs::write("runs/bench_train_step.json", b.to_json().to_string_pretty()).ok();
+    println!("\nwrote runs/bench_train_step.json");
+}

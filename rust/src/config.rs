@@ -1,0 +1,132 @@
+//! Experiment configuration (the launcher's contract): a JSON file pairing
+//! an AOT artifact with a dataset, schedule and run length.
+//!
+//! ```json
+//! {
+//!   "artifact": "e2e_resnet14_f08",
+//!   "dataset": "shapes32",
+//!   "seed": 0,
+//!   "steps": 600,
+//!   "steps_per_epoch": 100,
+//!   "eval_every": 100,
+//!   "eval_examples": 512,
+//!   "schedule": {
+//!     "base_lr": 0.05, "warmup_epochs": 1.0,
+//!     "decay_epochs": [4.0, 5.0], "decay_factor": 0.5,
+//!     "s_tanh_start": 5.0, "s_tanh_base": 10.0, "s_tanh_decay_mult": 2.0
+//!   },
+//!   "out_dir": "runs/e2e"
+//! }
+//! ```
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Schedule;
+use crate::substrate::json::{self, Json};
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub artifact: String,
+    pub dataset: String,
+    pub seed: u64,
+    pub steps: usize,
+    pub steps_per_epoch: usize,
+    pub eval_every: usize,
+    pub eval_examples: usize,
+    pub schedule: Schedule,
+    pub out_dir: Option<String>,
+}
+
+impl ExperimentConfig {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let artifact = v
+            .get("artifact")
+            .as_str()
+            .context("config needs 'artifact'")?
+            .to_string();
+        let steps_per_epoch = v.get("steps_per_epoch").as_usize().unwrap_or(100);
+        let s = v.get("schedule");
+        let schedule = Schedule {
+            base_lr: s.get("base_lr").as_f64().unwrap_or(0.05) as f32,
+            warmup_epochs: s.get("warmup_epochs").as_f64().unwrap_or(0.0) as f32,
+            decay_epochs: s
+                .get("decay_epochs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|d| d.as_f64())
+                .map(|d| d as f32)
+                .collect(),
+            decay_factor: s.get("decay_factor").as_f64().unwrap_or(0.5) as f32,
+            s_tanh_start: s.get("s_tanh_start").as_f64().unwrap_or(5.0) as f32,
+            s_tanh_base: s.get("s_tanh_base").as_f64().unwrap_or(10.0) as f32,
+            s_tanh_decay_mult: s.get("s_tanh_decay_mult").as_f64().unwrap_or(2.0)
+                as f32,
+            relax_lambda0: s.get("relax_lambda0").as_f64().unwrap_or(1.0) as f32,
+            relax_growth: s.get("relax_growth").as_f64().unwrap_or(1.02) as f32,
+            steps_per_epoch,
+        };
+        Ok(ExperimentConfig {
+            artifact,
+            dataset: v.get("dataset").as_str().unwrap_or("shapes32").to_string(),
+            seed: v.get("seed").as_usize().unwrap_or(0) as u64,
+            steps: v.get("steps").as_usize().unwrap_or(300),
+            steps_per_epoch,
+            eval_every: v.get("eval_every").as_usize().unwrap_or(100),
+            eval_examples: v.get("eval_examples").as_usize().unwrap_or(256),
+            schedule,
+            out_dir: v.get("out_dir").as_str().map(str::to_string),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let v = json::parse(
+            r#"{
+              "artifact": "a", "dataset": "digits", "seed": 3,
+              "steps": 50, "steps_per_epoch": 10, "eval_every": 25,
+              "eval_examples": 128,
+              "schedule": {"base_lr": 0.1, "warmup_epochs": 1.0,
+                           "decay_epochs": [3.0], "decay_factor": 0.25},
+              "out_dir": "runs/x"
+            }"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(c.artifact, "a");
+        assert_eq!(c.dataset, "digits");
+        assert_eq!(c.steps, 50);
+        assert_eq!(c.schedule.decay_epochs, vec![3.0]);
+        assert_eq!(c.schedule.decay_factor, 0.25);
+        assert_eq!(c.schedule.steps_per_epoch, 10);
+        assert_eq!(c.out_dir.as_deref(), Some("runs/x"));
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let v = json::parse(r#"{"artifact": "a"}"#).unwrap();
+        let c = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(c.dataset, "shapes32");
+        assert_eq!(c.schedule.base_lr, 0.05);
+        assert!(c.out_dir.is_none());
+    }
+
+    #[test]
+    fn missing_artifact_rejected() {
+        let v = json::parse(r#"{"dataset": "digits"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+}

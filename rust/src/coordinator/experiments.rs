@@ -1,0 +1,241 @@
+//! Shared harness for the table/figure reproduction runners (examples/).
+//!
+//! Every runner enumerates [`RunSpec`]s (artifact × dataset × schedule ×
+//! seeds), trains them through the coordinator, and prints a paper-style
+//! table next to the paper's published rows. Reduced-scale policy is
+//! DESIGN.md §5: orderings and trends are the reproduction target, not
+//! absolute percentages (our substrate is procedural data on CPU).
+
+use anyhow::Result;
+
+use crate::data;
+use crate::runtime::{Manifest, Runtime};
+use crate::substrate::stats::Moments;
+
+use super::metrics::MetricsSink;
+use super::schedule::Schedule;
+use super::trainer::TrainSession;
+
+/// One experiment point (possibly multi-seed).
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    /// Display label (e.g. "FleXOR (0.8 bit)").
+    pub label: String,
+    pub artifact: String,
+    pub dataset: String,
+    pub schedule: Schedule,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_examples: usize,
+    pub seeds: Vec<u64>,
+    /// The paper's published number for this row, if any (for side-by-side).
+    pub paper: Option<f64>,
+}
+
+impl RunSpec {
+    pub fn new(label: &str, artifact: &str, dataset: &str, steps: usize) -> Self {
+        RunSpec {
+            label: label.to_string(),
+            artifact: artifact.to_string(),
+            dataset: dataset.to_string(),
+            schedule: Schedule::cifar(0.05, 1.0, vec![4.0, 5.0], 100),
+            steps,
+            eval_every: steps.max(1),
+            eval_examples: 512,
+            seeds: vec![0],
+            paper: None,
+        }
+    }
+
+    pub fn schedule(mut self, s: Schedule) -> Self {
+        self.schedule = s;
+        self
+    }
+
+    pub fn seeds(mut self, seeds: Vec<u64>) -> Self {
+        self.seeds = seeds;
+        self
+    }
+
+    pub fn paper(mut self, value: f64) -> Self {
+        self.paper = Some(value);
+        self
+    }
+
+    pub fn eval_every(mut self, n: usize) -> Self {
+        self.eval_every = n;
+        self
+    }
+}
+
+/// Aggregated outcome of one spec.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub spec: RunSpec,
+    pub bits_per_weight: f64,
+    pub top1_mean: f64,
+    pub top1_std: f64,
+    pub top5_mean: f64,
+    pub final_loss_mean: f64,
+    pub per_seed_top1: Vec<f64>,
+    /// Eval trajectory of the first seed (step, top1) for figure curves.
+    pub curve: Vec<(usize, f64)>,
+    pub wall_s: f64,
+}
+
+/// Train one spec across its seeds.
+pub fn run_spec(rt: &Runtime, man: &Manifest, spec: &RunSpec) -> Result<RunOutcome> {
+    let t0 = std::time::Instant::now();
+    let mut top1 = Moments::new();
+    let mut top5 = Moments::new();
+    let mut loss = Moments::new();
+    let mut per_seed = Vec::new();
+    let mut curve = Vec::new();
+    let mut bits = 32.0;
+    for (i, &seed) in spec.seeds.iter().enumerate() {
+        let mut session = TrainSession::new(rt, man, &spec.artifact)?;
+        bits = session.meta.bits_per_weight;
+        let ds = data::by_name(&spec.dataset, seed)?;
+        let mut sink = MetricsSink::new();
+        let ev = session.train_loop(ds.as_ref(), &spec.schedule, spec.steps,
+                                    spec.eval_every, spec.eval_examples,
+                                    &mut sink)?;
+        let best = sink.best_top1().unwrap_or(ev.top1) as f64;
+        top1.push(best);
+        top5.push(ev.top5 as f64);
+        loss.push(ev.loss as f64);
+        per_seed.push(best);
+        if i == 0 {
+            curve = sink
+                .eval
+                .iter()
+                .map(|e| (e.step, e.top1 as f64))
+                .collect();
+        }
+    }
+    Ok(RunOutcome {
+        spec: spec.clone(),
+        bits_per_weight: bits,
+        top1_mean: top1.mean(),
+        top1_std: top1.std(),
+        top5_mean: top5.mean(),
+        final_loss_mean: loss.mean(),
+        per_seed_top1: per_seed,
+        curve,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Run a list of specs, printing progress, returning outcomes.
+pub fn run_all(rt: &Runtime, man: &Manifest, specs: &[RunSpec]) -> Result<Vec<RunOutcome>> {
+    let mut out = Vec::with_capacity(specs.len());
+    for (i, spec) in specs.iter().enumerate() {
+        eprintln!(
+            "[{}/{}] {} ({} steps × {} seeds on {}) ...",
+            i + 1,
+            specs.len(),
+            spec.label,
+            spec.steps,
+            spec.seeds.len(),
+            spec.dataset
+        );
+        let o = run_spec(rt, man, spec)?;
+        eprintln!(
+            "        top1 {:.2}% ± {:.2} ({:.0}s)",
+            100.0 * o.top1_mean,
+            100.0 * o.top1_std,
+            o.wall_s
+        );
+        out.push(o);
+    }
+    Ok(out)
+}
+
+/// Print a paper-style comparison table.
+pub fn print_table(title: &str, outcomes: &[RunOutcome]) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<34} {:>6} {:>12} {:>8} {:>12}",
+        "method", "b/w", "top1 (ours)", "±std", "paper top1"
+    );
+    for o in outcomes {
+        let paper = o
+            .spec
+            .paper
+            .map(|p| format!("{p:>11.2}%"))
+            .unwrap_or_else(|| format!("{:>12}", "—"));
+        println!(
+            "{:<34} {:>6.2} {:>11.2}% {:>7.2}% {paper}",
+            o.spec.label,
+            o.bits_per_weight,
+            100.0 * o.top1_mean,
+            100.0 * o.top1_std,
+        );
+    }
+}
+
+/// Print accuracy-vs-step curves (figure reproduction as aligned columns).
+pub fn print_curves(title: &str, outcomes: &[RunOutcome]) {
+    println!("\n=== {title} (top1 vs step) ===");
+    print!("{:>8}", "step");
+    for o in outcomes {
+        print!(" {:>22}", truncate(&o.spec.label, 22));
+    }
+    println!();
+    let steps: Vec<usize> = outcomes
+        .first()
+        .map(|o| o.curve.iter().map(|c| c.0).collect())
+        .unwrap_or_default();
+    for (row, &s) in steps.iter().enumerate() {
+        print!("{s:>8}");
+        for o in outcomes {
+            match o.curve.get(row) {
+                Some((_, v)) => print!(" {:>21.2}%", 100.0 * v),
+                None => print!(" {:>22}", "-"),
+            }
+        }
+        println!();
+    }
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("{}…", &s[..n - 1])
+    }
+}
+
+/// Common CLI scale handling for the runners: `--scale 0.25` shrinks step
+/// counts (never below 40) so a full table can be smoke-run quickly.
+pub fn scaled(steps: usize, scale: f32) -> usize {
+    ((steps as f32 * scale) as usize).max(40)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_builder() {
+        let s = RunSpec::new("x", "a", "digits", 100)
+            .seeds(vec![1, 2])
+            .paper(91.2)
+            .eval_every(10);
+        assert_eq!(s.seeds, vec![1, 2]);
+        assert_eq!(s.paper, Some(91.2));
+        assert_eq!(s.eval_every, 10);
+    }
+
+    #[test]
+    fn scaled_floors() {
+        assert_eq!(scaled(400, 0.5), 200);
+        assert_eq!(scaled(400, 0.01), 40);
+    }
+
+    #[test]
+    fn truncate_labels() {
+        assert_eq!(truncate("short", 22), "short");
+        assert_eq!(truncate("a-very-long-label-exceeding", 10).chars().count(), 10);
+    }
+}

@@ -1,0 +1,152 @@
+//! Checkpoint export: trained state → `.fxr` encrypted container (the
+//! quantized payload the paper ships) + an FXIN "FP sidecar" holding the
+//! full-precision residue (stem/head/BN params + running stats) the
+//! inference engine needs.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::flexor::bitpack::ColumnBits;
+use crate::flexor::fxr::{Container, Layer, Plane};
+use crate::runtime::initbin::{self, Leaf, LeafType};
+use crate::substrate::json::Json;
+
+use super::trainer::TrainSession;
+
+/// Build the `.fxr` container from the session's current parameters.
+///
+/// Per quantized layer `i`: `sign(w_enc[plane])` is bit-packed per plane,
+/// with that layer's M⊕ (from the artifact metadata — identical to what the
+/// training HLO baked in) and trained α.
+pub fn export_fxr(session: &TrainSession) -> Result<Container> {
+    let meta = &session.meta;
+    ensure!(
+        meta.quantizer_kind == "flexor",
+        "export_fxr requires a flexor-quantized config (got {})",
+        meta.quantizer_kind
+    );
+    let qleaves = meta.quantized_param_leaves();
+    ensure!(!qleaves.is_empty(), "no quantized layers found in leaf paths");
+
+    let mut container = Container::new(Json::obj(vec![
+        ("config", Json::str(meta.name.clone())),
+        ("model", Json::str(meta.model.clone())),
+        ("bits_per_weight", Json::num(meta.bits_per_weight)),
+    ]));
+
+    for (layer_idx, (enc_leaf, alpha_leaf)) in &qleaves {
+        let spec = meta
+            .spec_for(*layer_idx)
+            .with_context(|| format!("no spec for layer {layer_idx}"))?;
+        let storage = meta
+            .storage_layers
+            .iter()
+            .find(|l| l.idx == *layer_idx)
+            .with_context(|| format!("no storage row for layer {layer_idx}"))?;
+        let enc_meta = &meta.leaves[*enc_leaf];
+        ensure!(
+            enc_meta.shape.len() == 3
+                && enc_meta.shape[0] == spec.q
+                && enc_meta.shape[2] == spec.n_in,
+            "layer {layer_idx}: w_enc shape {:?} inconsistent with spec q={} n_in={}",
+            enc_meta.shape,
+            spec.q,
+            spec.n_in
+        );
+        let slices = enc_meta.shape[1];
+        let c_out = *storage.shape.last().unwrap();
+
+        let enc = session.leaf_f32(*enc_leaf)?;
+        let alpha = session.leaf_f32(*alpha_leaf)?;
+        ensure!(alpha.len() == spec.q * c_out, "alpha length mismatch");
+        ensure!(spec.mxor.len() == spec.q, "M⊕ plane count != q");
+
+        let plane_len = slices * spec.n_in;
+        let planes = (0..spec.q)
+            .map(|p| -> Result<Plane> {
+                let signs = &enc[p * plane_len..(p + 1) * plane_len];
+                Ok(Plane {
+                    mxor: spec.mxor[p].clone(),
+                    alpha: alpha[p * c_out..(p + 1) * c_out].to_vec(),
+                    enc: ColumnBits::from_signs_row_major(signs, spec.n_in)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        container.push(Layer {
+            name: format!("q{layer_idx}"),
+            n_weights: storage.weights,
+            c_out,
+            planes,
+        })?;
+    }
+    Ok(container)
+}
+
+/// The FP sidecar: every params/bn leaf that is *not* encrypted payload
+/// (stem, head, biases, BN scale/bias, BN running stats), FXIN-serialized
+/// with a JSON index so the inference engine can address leaves by path.
+pub fn export_fp_sidecar(session: &TrainSession) -> Result<(Vec<u8>, Json)> {
+    let meta = &session.meta;
+    let mut leaves = Vec::new();
+    let mut index = Vec::new();
+    for (i, lm) in meta.leaves.iter().enumerate() {
+        let keep = (lm.role == "params"
+            && !lm.path.contains("'w_enc'")
+            && !lm.path.contains("'alpha'"))
+            || lm.role == "bn";
+        if !keep {
+            continue;
+        }
+        let data = session.leaf_f32(i)?;
+        leaves.push(Leaf {
+            dtype: LeafType::F32,
+            shape: lm.shape.clone(),
+            bytes: data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        });
+        index.push(Json::obj(vec![
+            ("role", Json::str(lm.role.clone())),
+            ("path", Json::str(lm.path.clone())),
+            ("shape", Json::arr(lm.shape.iter().map(|&d| Json::num(d as f64)))),
+        ]));
+    }
+    Ok((initbin::write_init_bin(&leaves), Json::arr(index)))
+}
+
+/// Write the deployment bundle: `<stem>.fxr`, `<stem>.fp.bin`,
+/// `<stem>.bundle.json`.
+pub fn export_bundle(session: &TrainSession, dir: &Path, stem: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let fxr = export_fxr(session)?;
+    fxr.save(&dir.join(format!("{stem}.fxr")))?;
+    let (fp_bytes, fp_index) = export_fp_sidecar(session)?;
+    std::fs::write(dir.join(format!("{stem}.fp.bin")), fp_bytes)?;
+    let stats = fxr.stats();
+    let layer_shapes = Json::arr(session.meta.storage_layers.iter().map(|l| {
+        Json::obj(vec![
+            ("name", Json::str(format!("q{}", l.idx))),
+            ("idx", Json::num(l.idx as f64)),
+            ("shape", Json::arr(l.shape.iter().map(|&d| Json::num(d as f64)))),
+        ])
+    }));
+    let bundle = Json::obj(vec![
+        ("config", Json::str(session.meta.name.clone())),
+        ("model", Json::str(session.meta.model.clone())),
+        ("steps", Json::num(session.steps_done as f64)),
+        ("input_shape",
+         Json::arr(session.meta.input_shape.iter().skip(1).map(|&d| Json::num(d as f64)))),
+        ("num_classes", Json::num(session.meta.num_classes as f64)),
+        ("quantized_layers", layer_shapes),
+        ("fp_index", fp_index),
+        ("encrypted_bits", Json::num(stats.encrypted_bits as f64)),
+        ("bits_per_weight", Json::num(stats.bits_per_weight)),
+        ("compression_ratio_weights_only",
+         Json::num(stats.compression_ratio_weights_only)),
+        ("compression_ratio_with_alpha",
+         Json::num(stats.compression_ratio_with_alpha)),
+    ]);
+    std::fs::write(dir.join(format!("{stem}.bundle.json")),
+                   bundle.to_string_pretty())?;
+    Ok(())
+}

@@ -1,0 +1,179 @@
+//! Metric sinks: in-memory rows + CSV/JSONL writers, loss-curve summaries
+//! and the encrypted-weight histograms of Figs. 6/13/14.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::substrate::json::Json;
+use crate::substrate::stats::Histogram;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainRow {
+    pub step: usize,
+    pub epoch: f32,
+    pub loss: f32,
+    pub acc: f32,
+    pub lr: f32,
+    pub s_tanh: f32,
+    pub wall_ms: f64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct EvalRow {
+    pub step: usize,
+    pub loss: f32,
+    pub top1: f32,
+    pub top5: f32,
+}
+
+/// Collects rows during a run; optionally streams JSONL to disk.
+#[derive(Debug, Default)]
+pub struct MetricsSink {
+    pub train: Vec<TrainRow>,
+    pub eval: Vec<EvalRow>,
+    pub histograms: Vec<(usize, Histogram)>,
+    jsonl: Option<std::fs::File>,
+}
+
+impl MetricsSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_jsonl(path: &Path) -> Result<Self> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(MetricsSink { jsonl: Some(f), ..Default::default() })
+    }
+
+    pub fn push_train(&mut self, row: TrainRow) {
+        if let Some(f) = &mut self.jsonl {
+            let j = Json::obj(vec![
+                ("kind", Json::str("train")),
+                ("step", Json::num(row.step as f64)),
+                ("epoch", Json::num(row.epoch as f64)),
+                ("loss", Json::num(row.loss as f64)),
+                ("acc", Json::num(row.acc as f64)),
+                ("lr", Json::num(row.lr as f64)),
+                ("s_tanh", Json::num(row.s_tanh as f64)),
+                ("wall_ms", Json::num(row.wall_ms)),
+            ]);
+            let _ = writeln!(f, "{j}");
+        }
+        self.train.push(row);
+    }
+
+    pub fn push_eval(&mut self, row: EvalRow) {
+        if let Some(f) = &mut self.jsonl {
+            let j = Json::obj(vec![
+                ("kind", Json::str("eval")),
+                ("step", Json::num(row.step as f64)),
+                ("loss", Json::num(row.loss as f64)),
+                ("top1", Json::num(row.top1 as f64)),
+                ("top5", Json::num(row.top5 as f64)),
+            ]);
+            let _ = writeln!(f, "{j}");
+        }
+        self.eval.push(row);
+    }
+
+    pub fn push_histogram(&mut self, step: usize, h: Histogram) {
+        self.histograms.push((step, h));
+    }
+
+    /// Best eval top-1 over the run (the number every table reports).
+    pub fn best_top1(&self) -> Option<f32> {
+        self.eval.iter().map(|e| e.top1).fold(None, |m, x| {
+            Some(match m {
+                None => x,
+                Some(m) => m.max(x),
+            })
+        })
+    }
+
+    pub fn final_top1(&self) -> Option<f32> {
+        self.eval.last().map(|e| e.top1)
+    }
+
+    /// Mean training loss over the last `k` rows (convergence check).
+    pub fn tail_loss(&self, k: usize) -> Option<f32> {
+        if self.train.is_empty() {
+            return None;
+        }
+        let tail = &self.train[self.train.len().saturating_sub(k)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
+    }
+
+    /// Write train rows as CSV.
+    pub fn write_train_csv(&self, path: &Path) -> Result<()> {
+        let mut s = String::from("step,epoch,loss,acc,lr,s_tanh,wall_ms\n");
+        for r in &self.train {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                r.step, r.epoch, r.loss, r.acc, r.lr, r.s_tanh, r.wall_ms
+            ));
+        }
+        std::fs::write(path, s).with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn write_eval_csv(&self, path: &Path) -> Result<()> {
+        let mut s = String::from("step,loss,top1,top5\n");
+        for r in &self.eval {
+            s.push_str(&format!("{},{},{},{}\n", r.step, r.loss, r.top1, r.top5));
+        }
+        std::fs::write(path, s).with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(step: usize, loss: f32) -> TrainRow {
+        TrainRow { step, epoch: step as f32 / 10.0, loss, acc: 0.5, lr: 0.1,
+                   s_tanh: 10.0, wall_ms: 1.0 }
+    }
+
+    #[test]
+    fn best_and_final_top1() {
+        let mut m = MetricsSink::new();
+        assert_eq!(m.best_top1(), None);
+        m.push_eval(EvalRow { step: 1, loss: 1.0, top1: 0.6, top5: 0.9 });
+        m.push_eval(EvalRow { step: 2, loss: 1.0, top1: 0.8, top5: 0.95 });
+        m.push_eval(EvalRow { step: 3, loss: 1.0, top1: 0.7, top5: 0.93 });
+        assert_eq!(m.best_top1(), Some(0.8));
+        assert_eq!(m.final_top1(), Some(0.7));
+    }
+
+    #[test]
+    fn tail_loss_window() {
+        let mut m = MetricsSink::new();
+        for i in 0..10 {
+            m.push_train(row(i, i as f32));
+        }
+        assert_eq!(m.tail_loss(2), Some(8.5));
+        assert_eq!(m.tail_loss(100), Some(4.5));
+    }
+
+    #[test]
+    fn csv_and_jsonl_outputs() {
+        let dir = std::env::temp_dir();
+        let jl = dir.join("flexor_metrics_test.jsonl");
+        let mut m = MetricsSink::with_jsonl(&jl).unwrap();
+        m.push_train(row(0, 2.0));
+        m.push_eval(EvalRow { step: 0, loss: 2.0, top1: 0.1, top5: 0.5 });
+        let csv = dir.join("flexor_metrics_test.csv");
+        m.write_train_csv(&csv).unwrap();
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.starts_with("step,epoch,loss"));
+        assert_eq!(csv_text.lines().count(), 2);
+        drop(m);
+        let jl_text = std::fs::read_to_string(&jl).unwrap();
+        assert_eq!(jl_text.lines().count(), 2);
+        assert!(jl_text.contains("\"kind\": \"train\"") || jl_text.contains("\"kind\":\"train\""));
+        std::fs::remove_file(jl).ok();
+        std::fs::remove_file(csv).ok();
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 training coordinator: owns the training loop the paper's recipes
+//! describe (§3 MNIST/Adam, §4 CIFAR/SGD with warmup + step decay + S_tanh
+//! doubling, §5 ImageNet), the metric sinks, and checkpoint export to the
+//! `.fxr` encrypted container.
+//!
+//! The compute graph never changes at runtime — schedules are *inputs* to
+//! the lowered HLO (`lr`, `s_tanh`, `relax_lambda` scalars per step).
+
+pub mod experiments;
+pub mod export;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use export::{export_bundle, export_fp_sidecar, export_fxr};
+pub use metrics::{EvalRow, MetricsSink, TrainRow};
+pub use schedule::Schedule;
+pub use trainer::{EvalResult, TrainSession};

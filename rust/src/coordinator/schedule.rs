@@ -1,0 +1,164 @@
+//! Training schedules (paper §4 technique 4 and §5):
+//!
+//! * learning rate: linear warmup from 0 to `base_lr` over `warmup_epochs`,
+//!   then multiplicative decay at `decay_epochs`;
+//! * `S_tanh`: linear warmup from `s_tanh_start` to `s_tanh_base` on the
+//!   same warmup window, then ×`s_tanh_decay_mult` at every LR decay point
+//!   ("as learning rate decays, S_tanh is empirically multiplied by 2");
+//! * BinaryRelax λ: multiplicative growth per epoch (λ→∞ anneals the
+//!   relaxation to a hard sign).
+
+/// All schedule state is derived from (epoch fraction) — pure functions of
+/// the step index, so runs are exactly resumable.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub base_lr: f32,
+    pub warmup_epochs: f32,
+    /// Epochs at which LR is multiplied by `decay_factor`.
+    pub decay_epochs: Vec<f32>,
+    pub decay_factor: f32,
+    pub s_tanh_start: f32,
+    pub s_tanh_base: f32,
+    pub s_tanh_decay_mult: f32,
+    /// λ(e) = relax_lambda0 · relax_growth^e (BinaryRelax baseline).
+    pub relax_lambda0: f32,
+    pub relax_growth: f32,
+    pub steps_per_epoch: usize,
+}
+
+impl Schedule {
+    /// The paper's CIFAR recipe shape (Fig. 7): warmup, decay ×0.5.
+    pub fn cifar(base_lr: f32, warmup_epochs: f32, decay_epochs: Vec<f32>,
+                 steps_per_epoch: usize) -> Self {
+        Schedule {
+            base_lr,
+            warmup_epochs,
+            decay_epochs,
+            decay_factor: 0.5,
+            s_tanh_start: 5.0,
+            s_tanh_base: 10.0,
+            s_tanh_decay_mult: 2.0,
+            relax_lambda0: 1.0,
+            relax_growth: 1.02,
+            steps_per_epoch: steps_per_epoch.max(1),
+        }
+    }
+
+    /// The MNIST recipe: constant Adam LR, constant high S_tanh (§3).
+    pub fn mnist(base_lr: f32, steps_per_epoch: usize) -> Self {
+        Schedule {
+            base_lr,
+            warmup_epochs: 0.0,
+            decay_epochs: vec![],
+            decay_factor: 1.0,
+            s_tanh_start: 100.0,
+            s_tanh_base: 100.0,
+            s_tanh_decay_mult: 1.0,
+            relax_lambda0: 1.0,
+            relax_growth: 1.02,
+            steps_per_epoch: steps_per_epoch.max(1),
+        }
+    }
+
+    pub fn epoch_of(&self, step: usize) -> f32 {
+        step as f32 / self.steps_per_epoch as f32
+    }
+
+    fn decays_done(&self, e: f32) -> usize {
+        self.decay_epochs.iter().filter(|&&d| e >= d).count()
+    }
+
+    pub fn lr(&self, step: usize) -> f32 {
+        let e = self.epoch_of(step);
+        let warm = if self.warmup_epochs > 0.0 && e < self.warmup_epochs {
+            e / self.warmup_epochs
+        } else {
+            1.0
+        };
+        self.base_lr * warm * self.decay_factor.powi(self.decays_done(e) as i32)
+    }
+
+    pub fn s_tanh(&self, step: usize) -> f32 {
+        let e = self.epoch_of(step);
+        let base = if self.warmup_epochs > 0.0 && e < self.warmup_epochs {
+            self.s_tanh_start
+                + (self.s_tanh_base - self.s_tanh_start) * (e / self.warmup_epochs)
+        } else {
+            self.s_tanh_base
+        };
+        base * self.s_tanh_decay_mult.powi(self.decays_done(e) as i32)
+    }
+
+    pub fn relax_lambda(&self, step: usize) -> f32 {
+        self.relax_lambda0 * self.relax_growth.powf(self.epoch_of(step))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::ptest::check_msg;
+
+    fn s() -> Schedule {
+        Schedule::cifar(0.1, 2.0, vec![6.0, 8.0], 100)
+    }
+
+    #[test]
+    fn lr_warmup_then_decay() {
+        let sch = s();
+        assert_eq!(sch.lr(0), 0.0);
+        assert!((sch.lr(100) - 0.05).abs() < 1e-6); // epoch 1 of 2 warmup
+        assert!((sch.lr(200) - 0.1).abs() < 1e-6); // warmup done
+        assert!((sch.lr(599) - 0.1).abs() < 1e-6);
+        assert!((sch.lr(600) - 0.05).abs() < 1e-6); // first decay at e6
+        assert!((sch.lr(800) - 0.025).abs() < 1e-6); // second decay at e8
+    }
+
+    #[test]
+    fn s_tanh_warmup_and_doubling() {
+        let sch = s();
+        assert_eq!(sch.s_tanh(0), 5.0);
+        assert!((sch.s_tanh(100) - 7.5).abs() < 1e-6);
+        assert_eq!(sch.s_tanh(200), 10.0);
+        assert_eq!(sch.s_tanh(600), 20.0); // doubled with first decay
+        assert_eq!(sch.s_tanh(800), 40.0);
+    }
+
+    #[test]
+    fn mnist_recipe_is_constant() {
+        let sch = Schedule::mnist(1e-4, 50);
+        for step in [0, 10, 1000, 50_000] {
+            assert_eq!(sch.lr(step), 1e-4);
+            assert_eq!(sch.s_tanh(step), 100.0);
+        }
+    }
+
+    #[test]
+    fn relax_lambda_grows() {
+        let sch = s();
+        assert!(sch.relax_lambda(0) < sch.relax_lambda(1000));
+    }
+
+    #[test]
+    fn lr_monotone_within_phases() {
+        check_msg("lr non-increasing after warmup", 30, |g| {
+            let spe = g.usize_in(10, 200);
+            let sch = Schedule::cifar(
+                g.f32_in(0.01, 0.5),
+                g.f32_in(0.0, 3.0),
+                vec![g.f32_in(3.0, 5.0), g.f32_in(5.0, 9.0)],
+                spe,
+            );
+            let warm_end = (sch.warmup_epochs * spe as f32).ceil() as usize + 1;
+            let mut prev = f32::INFINITY;
+            for step in warm_end..spe * 10 {
+                let lr = sch.lr(step);
+                if lr > prev + 1e-9 {
+                    return Err(format!("lr rose at step {step}"));
+                }
+                prev = lr;
+            }
+            Ok(())
+        });
+    }
+}

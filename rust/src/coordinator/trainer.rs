@@ -1,0 +1,247 @@
+//! The training session: executes the AOT train/eval HLO step by step,
+//! feeding back state literals and schedule scalars (no Python anywhere).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+use xla::Literal;
+
+use crate::data::{Batcher, Dataset, Split};
+use crate::runtime::client::{lit, Executable, Runtime};
+use crate::runtime::initbin;
+use crate::runtime::manifest::{ConfigMeta, Manifest};
+use crate::substrate::stats::Histogram;
+
+use super::metrics::{EvalRow, MetricsSink, TrainRow};
+use super::schedule::Schedule;
+
+/// Aggregated evaluation result over a fixed test set.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalResult {
+    pub loss: f32,
+    pub top1: f32,
+    pub top5: f32,
+    pub examples: usize,
+}
+
+/// One live training run of one lowered config.
+pub struct TrainSession {
+    pub meta: ConfigMeta,
+    train_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    /// Flat state literals: params ++ opt ++ bn (the HLO feedback set).
+    pub state: Vec<Literal>,
+    pub steps_done: usize,
+}
+
+impl TrainSession {
+    /// Load artifacts for `config_name`, compile, and initialize state.
+    pub fn new(rt: &Runtime, manifest: &Manifest, config_name: &str) -> Result<Self> {
+        let meta = manifest.config(config_name)?;
+        let train_exe = rt.load_hlo(&meta.train_hlo_path())?;
+        let eval_exe = rt.load_hlo(&meta.eval_hlo_path())?;
+        let leaves = initbin::load_init_bin(&meta.init_bin_path())?;
+        ensure!(
+            leaves.len() == meta.n_state(),
+            "init.bin has {} leaves, meta expects {}",
+            leaves.len(),
+            meta.n_state()
+        );
+        for (i, (leaf, lm)) in leaves.iter().zip(&meta.leaves).enumerate() {
+            ensure!(
+                leaf.shape == lm.shape,
+                "leaf {i} shape {:?} != meta {:?} ({})",
+                leaf.shape,
+                lm.shape,
+                lm.path
+            );
+        }
+        let state = leaves.iter().map(|l| l.to_literal()).collect();
+        Ok(TrainSession { meta, train_exe, eval_exe, state, steps_done: 0 })
+    }
+
+    /// Input tensor dims for one batch (batch-major NHWC or NC).
+    pub fn batch_dims(&self) -> Vec<usize> {
+        self.meta.input_shape.clone()
+    }
+
+    /// One optimizer step. `x` is the flat batch (matching input_shape),
+    /// `y` int labels. Returns (loss, batch accuracy).
+    pub fn step(&mut self, x: &[f32], y: &[i32], lr: f32, s_tanh: f32,
+                relax_lambda: f32) -> Result<(f32, f32)> {
+        let xs = lit::f32_tensor(x, &self.meta.input_shape)?;
+        let ys = lit::i32_vec(y);
+        let scalars = [
+            lit::f32_scalar(lr),
+            lit::f32_scalar(s_tanh),
+            lit::f32_scalar(relax_lambda),
+        ];
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(self.state.len() + 5);
+        inputs.extend(self.state.iter());
+        inputs.push(&xs);
+        inputs.push(&ys);
+        inputs.extend(scalars.iter());
+
+        let mut out = self.train_exe.run(&inputs)?;
+        let n_state = self.meta.n_state();
+        ensure!(
+            out.len() == n_state + 2,
+            "train_step returned {} outputs, expected {}",
+            out.len(),
+            n_state + 2
+        );
+        let correct = lit::scalar_f32(&out[n_state + 1])?;
+        let loss = lit::scalar_f32(&out[n_state])?;
+        out.truncate(n_state);
+        self.state = out;
+        self.steps_done += 1;
+        Ok((loss, correct / y.len() as f32))
+    }
+
+    /// Evaluate on a fixed set (len must be a multiple of the batch size;
+    /// callers round). Uses running BN statistics (eval-mode HLO).
+    pub fn eval(&self, xs: &[f32], ys: &[i32], s_tanh: f32,
+                relax_lambda: f32) -> Result<EvalResult> {
+        let b = self.meta.batch;
+        let fl: usize = self.meta.input_shape.iter().skip(1).product();
+        ensure!(!ys.is_empty() && ys.len() % b == 0,
+                "eval set size {} not a multiple of batch {}", ys.len(), b);
+        let n_chunks = ys.len() / b;
+        let (mut loss_sum, mut top1_sum, mut top5_sum) = (0f64, 0f64, 0f64);
+        for c in 0..n_chunks {
+            let xc = &xs[c * b * fl..(c + 1) * b * fl];
+            let yc = &ys[c * b..(c + 1) * b];
+            let xl = lit::f32_tensor(xc, &self.meta.input_shape)?;
+            let yl = lit::i32_vec(yc);
+            let s1 = lit::f32_scalar(s_tanh);
+            let s2 = lit::f32_scalar(relax_lambda);
+            let mut inputs: Vec<&Literal> =
+                Vec::with_capacity(self.meta.n_params + self.meta.n_bn + 4);
+            inputs.extend(self.state[..self.meta.n_params].iter());
+            inputs.extend(self.state[self.meta.n_params + self.meta.n_opt..].iter());
+            inputs.push(&xl);
+            inputs.push(&yl);
+            inputs.push(&s1);
+            inputs.push(&s2);
+            let out = self.eval_exe.run(&inputs)?;
+            ensure!(out.len() == 3, "eval returned {} outputs", out.len());
+            loss_sum += lit::scalar_f32(&out[0])? as f64;
+            top1_sum += lit::scalar_f32(&out[1])? as f64;
+            top5_sum += lit::scalar_f32(&out[2])? as f64;
+        }
+        let n = ys.len() as f64;
+        Ok(EvalResult {
+            loss: (loss_sum / n_chunks as f64) as f32,
+            top1: (top1_sum / n) as f32,
+            top5: (top5_sum / n) as f32,
+            examples: ys.len(),
+        })
+    }
+
+    /// Run `steps` training steps over `ds` with `schedule`, evaluating on a
+    /// fixed test set of `eval_n` examples every `eval_every` steps (and at
+    /// the end). Returns the final eval.
+    pub fn train_loop(&mut self, ds: &dyn Dataset, schedule: &Schedule,
+                      steps: usize, eval_every: usize, eval_n: usize,
+                      sink: &mut MetricsSink) -> Result<EvalResult> {
+        ensure!(ds.feature_len() == self.meta.input_shape.iter().skip(1).product::<usize>(),
+                "dataset geometry {:?} != artifact input {:?}",
+                ds.input_dims(), &self.meta.input_shape[1..]);
+        ensure!(ds.num_classes() >= 2);
+        let b = self.meta.batch;
+        let mut batcher = Batcher::new(ds, Split::Train, b,
+                                       (schedule.steps_per_epoch * b) as u64);
+        let eval_n = (eval_n / b).max(1) * b;
+        let (ex, ey) = Batcher::eval_set(ds, Split::Test, eval_n);
+
+        let mut last_eval = None;
+        for _ in 0..steps {
+            let step = self.steps_done;
+            let (x, y) = batcher.next_batch();
+            let t0 = Instant::now();
+            let (loss, acc) = self.step(
+                &x, &y,
+                schedule.lr(step),
+                schedule.s_tanh(step),
+                schedule.relax_lambda(step),
+            )?;
+            sink.push_train(TrainRow {
+                step,
+                epoch: schedule.epoch_of(step),
+                loss,
+                acc,
+                lr: schedule.lr(step),
+                s_tanh: schedule.s_tanh(step),
+                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            });
+            let done = self.steps_done;
+            if eval_every > 0 && done % eval_every == 0 || done == steps {
+                let ev = self.eval(&ex, &ey, schedule.s_tanh(done),
+                                   schedule.relax_lambda(done))?;
+                sink.push_eval(EvalRow {
+                    step: done,
+                    loss: ev.loss,
+                    top1: ev.top1,
+                    top5: ev.top5,
+                });
+                last_eval = Some(ev);
+            }
+        }
+        last_eval.context("no eval ran (steps == 0?)")
+    }
+
+    /// Host copy of one state leaf.
+    pub fn leaf_f32(&self, leaf_idx: usize) -> Result<Vec<f32>> {
+        ensure!(leaf_idx < self.state.len(), "leaf index out of range");
+        Ok(self.state[leaf_idx].to_vec::<f32>()?)
+    }
+
+    /// Histogram of all encrypted weights (Figs. 6/13/14).
+    pub fn encrypted_weight_histogram(&self, lo: f64, hi: f64, bins: usize)
+                                      -> Result<Histogram> {
+        let mut h = Histogram::new(lo, hi, bins);
+        for (i, lm) in self.meta.leaves.iter().enumerate() {
+            if lm.role == "params" && lm.path.contains("'w_enc'") {
+                for v in self.leaf_f32(i)? {
+                    h.push(v as f64);
+                }
+            }
+        }
+        Ok(h)
+    }
+
+    /// Serialize the full training state (FXIN) for resume.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        let leaves: Vec<initbin::Leaf> = self
+            .state
+            .iter()
+            .zip(&self.meta.leaves)
+            .map(|(l, lm)| -> Result<initbin::Leaf> {
+                let (dtype, bytes) = if lm.dtype == "int32" {
+                    let v = l.to_vec::<i32>()?;
+                    (initbin::LeafType::I32,
+                     v.iter().flat_map(|x| x.to_le_bytes()).collect())
+                } else {
+                    let v = l.to_vec::<f32>()?;
+                    (initbin::LeafType::F32,
+                     v.iter().flat_map(|x| x.to_le_bytes()).collect())
+                };
+                Ok(initbin::Leaf { dtype, shape: lm.shape.clone(), bytes })
+            })
+            .collect::<Result<_>>()?;
+        std::fs::write(path, initbin::write_init_bin(&leaves))
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Restore training state saved by [`save_checkpoint`].
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        let leaves = initbin::load_init_bin(path)?;
+        ensure!(leaves.len() == self.meta.n_state(), "checkpoint leaf count");
+        for (leaf, lm) in leaves.iter().zip(&self.meta.leaves) {
+            ensure!(leaf.shape == lm.shape, "checkpoint shape mismatch at {}", lm.path);
+        }
+        self.state = leaves.iter().map(|l| l.to_literal()).collect();
+        Ok(())
+    }
+}

@@ -1,0 +1,172 @@
+//! "digits" — the MNIST substitute: 28×28 grayscale stroke-rendered digit
+//! glyphs with nuisance factors (translation, scale, shear, stroke
+//! thickness, intensity jitter, pixel noise). Deterministic per
+//! (seed, split, index); non-trivially separable but learnable — the
+//! property the paper's MNIST experiments (Fig. 4/12/13) exercise.
+
+use super::{example_rng, Dataset, Split};
+
+pub const HW: usize = 28;
+
+/// 5×7 bitmap font, row-major, one byte-string per digit.
+const GLYPHS: [[u8; 35]; 10] = [
+    // 0
+    [0,1,1,1,0, 1,0,0,0,1, 1,0,0,1,1, 1,0,1,0,1, 1,1,0,0,1, 1,0,0,0,1, 0,1,1,1,0],
+    // 1
+    [0,0,1,0,0, 0,1,1,0,0, 0,0,1,0,0, 0,0,1,0,0, 0,0,1,0,0, 0,0,1,0,0, 0,1,1,1,0],
+    // 2
+    [0,1,1,1,0, 1,0,0,0,1, 0,0,0,0,1, 0,0,0,1,0, 0,0,1,0,0, 0,1,0,0,0, 1,1,1,1,1],
+    // 3
+    [1,1,1,1,1, 0,0,0,1,0, 0,0,1,0,0, 0,0,0,1,0, 0,0,0,0,1, 1,0,0,0,1, 0,1,1,1,0],
+    // 4
+    [0,0,0,1,0, 0,0,1,1,0, 0,1,0,1,0, 1,0,0,1,0, 1,1,1,1,1, 0,0,0,1,0, 0,0,0,1,0],
+    // 5
+    [1,1,1,1,1, 1,0,0,0,0, 1,1,1,1,0, 0,0,0,0,1, 0,0,0,0,1, 1,0,0,0,1, 0,1,1,1,0],
+    // 6
+    [0,0,1,1,0, 0,1,0,0,0, 1,0,0,0,0, 1,1,1,1,0, 1,0,0,0,1, 1,0,0,0,1, 0,1,1,1,0],
+    // 7
+    [1,1,1,1,1, 0,0,0,0,1, 0,0,0,1,0, 0,0,1,0,0, 0,1,0,0,0, 0,1,0,0,0, 0,1,0,0,0],
+    // 8
+    [0,1,1,1,0, 1,0,0,0,1, 1,0,0,0,1, 0,1,1,1,0, 1,0,0,0,1, 1,0,0,0,1, 0,1,1,1,0],
+    // 9
+    [0,1,1,1,0, 1,0,0,0,1, 1,0,0,0,1, 0,1,1,1,1, 0,0,0,0,1, 0,0,0,1,0, 0,1,1,0,0],
+];
+
+pub struct Digits {
+    seed: u64,
+    noise: f32,
+}
+
+impl Digits {
+    pub fn new(seed: u64) -> Self {
+        Digits { seed, noise: 0.15 }
+    }
+
+    pub fn with_noise(seed: u64, noise: f32) -> Self {
+        Digits { seed, noise }
+    }
+}
+
+impl Dataset for Digits {
+    fn feature_len(&self) -> usize {
+        HW * HW
+    }
+
+    fn input_dims(&self) -> Vec<usize> {
+        vec![HW, HW, 1]
+    }
+
+    fn num_classes(&self) -> usize {
+        10
+    }
+
+    fn example(&self, split: Split, index: u64, out: &mut [f32]) -> i32 {
+        debug_assert_eq!(out.len(), HW * HW);
+        let mut rng = example_rng(self.seed ^ 0xd161, split, index);
+        let label = rng.below(10) as usize;
+        let glyph = &GLYPHS[label];
+
+        // nuisance parameters
+        let scale = rng.range_f32(2.6, 3.6); // glyph cell → pixels
+        let dx = rng.range_f32(-3.0, 3.0) + (HW as f32 - 5.0 * scale) / 2.0;
+        let dy = rng.range_f32(-3.0, 3.0) + (HW as f32 - 7.0 * scale) / 2.0;
+        let shear = rng.range_f32(-0.15, 0.15);
+        let thick = rng.range_f32(0.55, 0.95); // coverage radius in cells
+        let gain = rng.range_f32(0.75, 1.0);
+
+        // render: for each output pixel, inverse-map into glyph space and
+        // take soft coverage against the nearest inked cell center.
+        for py in 0..HW {
+            for px in 0..HW {
+                let fy = (py as f32 - dy) / scale;
+                let fx = (px as f32 - dx) / scale - shear * (fy - 3.5);
+                let mut v: f32 = 0.0;
+                let cy = fy.floor() as i32;
+                let cx = fx.floor() as i32;
+                for gy in cy - 1..=cy + 1 {
+                    for gx in cx - 1..=cx + 1 {
+                        if (0..7).contains(&gy) && (0..5).contains(&gx) {
+                            if glyph[gy as usize * 5 + gx as usize] == 1 {
+                                let ddx = fx - (gx as f32 + 0.5);
+                                let ddy = fy - (gy as f32 + 0.5);
+                                let d = (ddx * ddx + ddy * ddy).sqrt();
+                                let cov = (1.0 - (d / thick)).clamp(0.0, 1.0);
+                                v = v.max(cov);
+                            }
+                        }
+                    }
+                }
+                let noisy = gain * v + self.noise * rng.normal();
+                out[py * HW + px] = noisy.clamp(0.0, 1.0);
+            }
+        }
+        label as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn render(label_want: Option<i32>, idx: u64) -> (Vec<f32>, i32) {
+        let ds = Digits::new(1);
+        let mut buf = vec![0.0f32; HW * HW];
+        let mut i = idx;
+        loop {
+            let y = ds.example(Split::Train, i, &mut buf);
+            if label_want.is_none() || Some(y) == label_want {
+                return (buf, y);
+            }
+            i += 1;
+        }
+    }
+
+    #[test]
+    fn values_in_range_and_nontrivial() {
+        let (img, _) = render(None, 0);
+        assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let ink: f32 = img.iter().sum();
+        assert!(ink > 10.0, "image nearly empty: {ink}");
+        assert!(ink < 500.0, "image nearly full: {ink}");
+    }
+
+    #[test]
+    fn deterministic_and_index_varied() {
+        let ds = Digits::new(1);
+        let mut a = vec![0.0; HW * HW];
+        let mut b = vec![0.0; HW * HW];
+        assert_eq!(
+            ds.example(Split::Train, 5, &mut a),
+            ds.example(Split::Train, 5, &mut b)
+        );
+        assert_eq!(a, b);
+        ds.example(Split::Train, 6, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn all_labels_reachable() {
+        let ds = Digits::new(2);
+        let mut seen = [false; 10];
+        let mut buf = vec![0.0; HW * HW];
+        for i in 0..200 {
+            seen[ds.example(Split::Train, i, &mut buf) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn same_class_examples_are_more_similar_than_cross_class() {
+        // template correlation: same-digit pairs should correlate more than
+        // different-digit pairs on average (i.e. the task is learnable).
+        let (a1, _) = render(Some(3), 0);
+        let (a2, _) = render(Some(3), 40);
+        let (b1, _) = render(Some(1), 0);
+        let dot = |x: &[f32], y: &[f32]| -> f32 {
+            let nx = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+            let ny = y.iter().map(|v| v * v).sum::<f32>().sqrt();
+            x.iter().zip(y).map(|(p, q)| p * q).sum::<f32>() / (nx * ny)
+        };
+        assert!(dot(&a1, &a2) > dot(&a1, &b1), "3-3 {} vs 3-1 {}", dot(&a1, &a2), dot(&a1, &b1));
+    }
+}

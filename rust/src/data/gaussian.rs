@@ -1,0 +1,111 @@
+//! K-class gaussian-mixture classification (the MLP unit-test workload):
+//! class means drawn on a scaled hypersphere, isotropic class noise.
+
+use super::{example_rng, Dataset, Split};
+use crate::substrate::prng::Pcg32;
+
+pub struct GaussianMixture {
+    seed: u64,
+    dim: usize,
+    k: usize,
+    noise: f32,
+    means: Vec<Vec<f32>>,
+}
+
+impl GaussianMixture {
+    pub fn new(seed: u64, dim: usize, k: usize, noise: f32) -> Self {
+        let mut rng = Pcg32::new(seed, 0x6a55);
+        let means = (0..k)
+            .map(|_| {
+                let v: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+                let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+                v.iter().map(|x| x / n * 2.0).collect()
+            })
+            .collect();
+        GaussianMixture { seed, dim, k, noise, means }
+    }
+}
+
+impl Dataset for GaussianMixture {
+    fn feature_len(&self) -> usize {
+        self.dim
+    }
+
+    fn input_dims(&self) -> Vec<usize> {
+        vec![self.dim]
+    }
+
+    fn num_classes(&self) -> usize {
+        self.k
+    }
+
+    fn example(&self, split: Split, index: u64, out: &mut [f32]) -> i32 {
+        debug_assert_eq!(out.len(), self.dim);
+        let mut rng = example_rng(self.seed, split, index);
+        let label = rng.below(self.k as u32) as usize;
+        for (o, m) in out.iter_mut().zip(&self.means[label]) {
+            *o = m + self.noise * rng.normal();
+        }
+        label as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn examples_cluster_around_means() {
+        let ds = GaussianMixture::new(3, 16, 4, 0.1);
+        let mut buf = vec![0.0f32; 16];
+        for i in 0..200 {
+            let y = ds.example(Split::Train, i, &mut buf) as usize;
+            let d2: f32 = buf
+                .iter()
+                .zip(&ds.means[y])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            // noise 0.1 in 16 dims: E d² = 16·0.01 = 0.16, allow slack
+            assert!(d2 < 1.0, "example {i} too far from its mean: {d2}");
+        }
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // nearest-mean classification must be near-perfect at low noise
+        let ds = GaussianMixture::new(5, 8, 3, 0.15);
+        let mut buf = vec![0.0f32; 8];
+        let mut correct = 0;
+        for i in 0..300 {
+            let y = ds.example(Split::Test, i, &mut buf);
+            let pred = (0..3)
+                .min_by(|&a, &b| {
+                    let da: f32 = buf
+                        .iter()
+                        .zip(&ds.means[a])
+                        .map(|(x, m)| (x - m) * (x - m))
+                        .sum();
+                    let db: f32 = buf
+                        .iter()
+                        .zip(&ds.means[b])
+                        .map(|(x, m)| (x - m) * (x - m))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap() as i32;
+            correct += (pred == y) as usize;
+        }
+        assert!(correct > 280, "nearest-mean acc {correct}/300");
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = GaussianMixture::new(9, 8, 3, 0.2);
+        let mut a = vec![0.0f32; 8];
+        let mut b = vec![0.0f32; 8];
+        let ya = ds.example(Split::Train, 42, &mut a);
+        let yb = ds.example(Split::Train, 42, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(ya, yb);
+    }
+}

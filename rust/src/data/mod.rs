@@ -1,0 +1,168 @@
+//! Synthetic dataset substrates (DESIGN.md §5: no network access, so the
+//! paper's MNIST / CIFAR-10 / ImageNet are substituted with deterministic
+//! procedural datasets of matching geometry):
+//!
+//! * [`digits`]   — 28×28×1, 10 classes: stroke-rendered digit glyphs with
+//!   random shift / scale / rotation-ish shear / noise (MNIST substitute);
+//! * [`shapes`]   — 32×32×3 ("shapes32", CIFAR-10 sub) and 64×64×3 with 20
+//!   classes ("shapes64", ImageNet sub): textured geometric shapes with
+//!   color/position/scale/noise nuisance factors;
+//! * [`gaussian`] — K-class gaussian mixtures for MLP unit tests;
+//! * [`Dataset`]  — the common batching/shuffling/split interface the
+//!   coordinator consumes.
+
+pub mod digits;
+pub mod gaussian;
+pub mod shapes;
+
+use crate::substrate::prng::Pcg32;
+
+/// A deterministic, generate-on-demand labeled dataset.
+pub trait Dataset: Send + Sync {
+    /// Flat feature length per example (e.g. 28·28 or 32·32·3).
+    fn feature_len(&self) -> usize;
+    /// Input tensor dims per example (without batch), e.g. [28, 28, 1].
+    fn input_dims(&self) -> Vec<usize>;
+    fn num_classes(&self) -> usize;
+    /// Generate example `index` of split `split` into `out` (len = feature_len).
+    /// Deterministic in (seed, split, index).
+    fn example(&self, split: Split, index: u64, out: &mut [f32]) -> i32;
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+impl Split {
+    fn stream(self) -> u64 {
+        match self {
+            Split::Train => 0x7121,
+            Split::Test => 0x7e57,
+        }
+    }
+}
+
+/// Batched iterator over a Dataset: fills contiguous NHWC buffers.
+pub struct Batcher<'a> {
+    ds: &'a dyn Dataset,
+    split: Split,
+    batch: usize,
+    /// Virtual epoch length (procedural data is infinite; this bounds an
+    /// "epoch" for schedule purposes).
+    epoch_len: u64,
+    cursor: u64,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(ds: &'a dyn Dataset, split: Split, batch: usize, epoch_len: u64) -> Self {
+        assert!(batch > 0 && epoch_len > 0);
+        Batcher { ds, split, batch, epoch_len, cursor: 0 }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn batches_per_epoch(&self) -> u64 {
+        self.epoch_len / self.batch as u64
+    }
+
+    /// Next batch: (features NHWC row-major, labels).
+    pub fn next_batch(&mut self) -> (Vec<f32>, Vec<i32>) {
+        let fl = self.ds.feature_len();
+        let mut xs = vec![0.0f32; self.batch * fl];
+        let mut ys = vec![0i32; self.batch];
+        for b in 0..self.batch {
+            let idx = self.cursor % self.epoch_len;
+            ys[b] = self
+                .ds
+                .example(self.split, idx, &mut xs[b * fl..(b + 1) * fl]);
+            self.cursor += 1;
+        }
+        (xs, ys)
+    }
+
+    /// Materialize a fixed evaluation set of `n` examples.
+    pub fn eval_set(ds: &dyn Dataset, split: Split, n: usize) -> (Vec<f32>, Vec<i32>) {
+        let fl = ds.feature_len();
+        let mut xs = vec![0.0f32; n * fl];
+        let mut ys = vec![0i32; n];
+        for i in 0..n {
+            ys[i] = ds.example(split, i as u64, &mut xs[i * fl..(i + 1) * fl]);
+        }
+        (xs, ys)
+    }
+}
+
+/// Per-example RNG: independent stream per (seed, split, index).
+pub(crate) fn example_rng(seed: u64, split: Split, index: u64) -> Pcg32 {
+    Pcg32::new(
+        seed ^ index.wrapping_mul(0x9E3779B97F4A7C15),
+        split.stream() ^ index,
+    )
+}
+
+/// Build a dataset by name (the config-file interface).
+pub fn by_name(name: &str, seed: u64) -> anyhow::Result<Box<dyn Dataset>> {
+    match name {
+        "digits" => Ok(Box::new(digits::Digits::new(seed))),
+        "shapes32" => Ok(Box::new(shapes::Shapes::cifar_like(seed))),
+        "shapes64" => Ok(Box::new(shapes::Shapes::imagenet_like(seed))),
+        "gaussian" => Ok(Box::new(gaussian::GaussianMixture::new(seed, 32, 10, 0.35))),
+        other => anyhow::bail!("unknown dataset '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batcher_shapes_and_determinism() {
+        let ds = gaussian::GaussianMixture::new(7, 8, 3, 0.3);
+        let mut b1 = Batcher::new(&ds, Split::Train, 4, 64);
+        let mut b2 = Batcher::new(&ds, Split::Train, 4, 64);
+        let (x1, y1) = b1.next_batch();
+        let (x2, y2) = b2.next_batch();
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+        assert_eq!(x1.len(), 4 * 8);
+        assert!(y1.iter().all(|&y| (0..3).contains(&y)));
+        // second batch differs
+        let (x3, _) = b1.next_batch();
+        assert_ne!(x1, x3);
+    }
+
+    #[test]
+    fn train_test_streams_differ() {
+        let ds = gaussian::GaussianMixture::new(7, 8, 3, 0.3);
+        let mut tr = Batcher::new(&ds, Split::Train, 4, 64);
+        let mut te = Batcher::new(&ds, Split::Test, 4, 64);
+        assert_ne!(tr.next_batch().0, te.next_batch().0);
+    }
+
+    #[test]
+    fn epoch_wraps() {
+        let ds = gaussian::GaussianMixture::new(1, 4, 2, 0.3);
+        let mut b = Batcher::new(&ds, Split::Train, 2, 4);
+        let (x1, _) = b.next_batch();
+        let _ = b.next_batch();
+        let (x3, _) = b.next_batch(); // cursor 4,5 → wraps to 0,1
+        assert_eq!(x1, x3);
+        assert_eq!(b.batches_per_epoch(), 2);
+    }
+
+    #[test]
+    fn by_name_registry() {
+        for n in ["digits", "shapes32", "shapes64", "gaussian"] {
+            let ds = by_name(n, 1).unwrap();
+            assert!(ds.feature_len() > 0);
+            assert!(ds.num_classes() >= 2);
+            let dims: usize = ds.input_dims().iter().product();
+            assert_eq!(dims, ds.feature_len());
+        }
+        assert!(by_name("nope", 1).is_err());
+    }
+}

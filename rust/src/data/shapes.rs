@@ -1,0 +1,227 @@
+//! "shapes32" / "shapes64" — the CIFAR-10 / ImageNet substitutes: RGB
+//! images of textured geometric shapes with heavy nuisance variation
+//! (position, scale, rotation, fg/bg color, texture phase, noise).
+//!
+//! shapes32: 32×32×3, 10 classes (one per shape family).
+//! shapes64: 64×64×3, 20 classes (shape family × texture family).
+
+use super::{example_rng, Dataset, Split};
+
+#[derive(Clone, Copy, Debug)]
+enum ShapeKind {
+    Disk,
+    Square,
+    Triangle,
+    Cross,
+    Ring,
+    HStripes,
+    VStripes,
+    Checker,
+    Diamond,
+    DotGrid,
+}
+
+const KINDS: [ShapeKind; 10] = [
+    ShapeKind::Disk,
+    ShapeKind::Square,
+    ShapeKind::Triangle,
+    ShapeKind::Cross,
+    ShapeKind::Ring,
+    ShapeKind::HStripes,
+    ShapeKind::VStripes,
+    ShapeKind::Checker,
+    ShapeKind::Diamond,
+    ShapeKind::DotGrid,
+];
+
+pub struct Shapes {
+    seed: u64,
+    hw: usize,
+    classes: usize,
+    noise: f32,
+}
+
+impl Shapes {
+    pub fn cifar_like(seed: u64) -> Self {
+        Shapes { seed, hw: 32, classes: 10, noise: 0.10 }
+    }
+
+    pub fn imagenet_like(seed: u64) -> Self {
+        Shapes { seed, hw: 64, classes: 20, noise: 0.10 }
+    }
+
+    pub fn custom(seed: u64, hw: usize, classes: usize, noise: f32) -> Self {
+        assert!(classes <= 20, "≤ 20 classes supported");
+        Shapes { seed, hw, classes, noise }
+    }
+
+    /// Shape mask value at normalized body coordinates (u, v) ∈ [-1, 1].
+    fn mask(kind: ShapeKind, u: f32, v: f32, phase: f32) -> f32 {
+        let r = (u * u + v * v).sqrt();
+        let inside = |b: bool| if b { 1.0 } else { 0.0 };
+        match kind {
+            ShapeKind::Disk => inside(r < 0.85),
+            ShapeKind::Square => inside(u.abs() < 0.75 && v.abs() < 0.75),
+            ShapeKind::Triangle => {
+                inside(v > -0.7 && v < 0.8 && u.abs() < (0.8 - v) * 0.66)
+            }
+            ShapeKind::Cross => {
+                inside((u.abs() < 0.3 && v.abs() < 0.9) || (v.abs() < 0.3 && u.abs() < 0.9))
+            }
+            ShapeKind::Ring => inside(r > 0.45 && r < 0.85),
+            ShapeKind::HStripes => {
+                inside(r < 0.95 && ((v * 3.0 + phase).sin() > 0.0))
+            }
+            ShapeKind::VStripes => {
+                inside(r < 0.95 && ((u * 3.0 + phase).sin() > 0.0))
+            }
+            ShapeKind::Checker => inside(
+                r < 0.95 && ((u * 2.5 + phase).sin() * (v * 2.5 + phase).sin() > 0.0),
+            ),
+            ShapeKind::Diamond => inside(u.abs() + v.abs() < 0.95),
+            ShapeKind::DotGrid => {
+                let fu = (u * 2.2 + phase).sin();
+                let fv = (v * 2.2 + phase).sin();
+                inside(r < 0.95 && fu * fu + fv * fv > 1.2)
+            }
+        }
+    }
+}
+
+impl Dataset for Shapes {
+    fn feature_len(&self) -> usize {
+        self.hw * self.hw * 3
+    }
+
+    fn input_dims(&self) -> Vec<usize> {
+        vec![self.hw, self.hw, 3]
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn example(&self, split: Split, index: u64, out: &mut [f32]) -> i32 {
+        let hw = self.hw;
+        debug_assert_eq!(out.len(), hw * hw * 3);
+        let mut rng = example_rng(self.seed ^ 0x5AE5, split, index);
+        let label = rng.below(self.classes as u32) as usize;
+        let kind = KINDS[label % 10];
+        // shapes64's second decade = same shapes, inverted-texture family
+        let family = label / 10;
+
+        let cx = rng.range_f32(0.35, 0.65) * hw as f32;
+        let cy = rng.range_f32(0.35, 0.65) * hw as f32;
+        let radius = rng.range_f32(0.25, 0.42) * hw as f32;
+        let rot = rng.range_f32(0.0, std::f32::consts::TAU);
+        let (sr, cr) = rot.sin_cos();
+        let phase = rng.range_f32(0.0, std::f32::consts::TAU);
+        let fg = [rng.range_f32(0.55, 1.0), rng.range_f32(0.55, 1.0), rng.range_f32(0.55, 1.0)];
+        let bg = [rng.range_f32(0.0, 0.35), rng.range_f32(0.0, 0.35), rng.range_f32(0.0, 0.35)];
+        // background gradient direction
+        let gdir = rng.range_f32(0.0, std::f32::consts::TAU);
+        let (gs, gc) = gdir.sin_cos();
+
+        for py in 0..hw {
+            for px in 0..hw {
+                let x = px as f32;
+                let y = py as f32;
+                // body coords with rotation
+                let du = (x - cx) / radius;
+                let dv = (y - cy) / radius;
+                let u = cr * du + sr * dv;
+                let v = -sr * du + cr * dv;
+                let mut m = Self::mask(kind, u, v, phase);
+                if family == 1 {
+                    // texture family 2: invert interior texture
+                    let rr = (u * u + v * v).sqrt();
+                    if rr < 0.95 {
+                        m = if m > 0.5 { 0.0 } else { 1.0 };
+                    }
+                }
+                let grad = 0.15 * ((x * gc + y * gs) / hw as f32);
+                for c in 0..3 {
+                    let base = bg[c] + grad;
+                    let val = base * (1.0 - m) + fg[c] * m + self.noise * rng.normal();
+                    out[(py * hw + px) * 3 + c] = val.clamp(0.0, 1.0);
+                }
+            }
+        }
+        label as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes32_geometry() {
+        let ds = Shapes::cifar_like(1);
+        assert_eq!(ds.feature_len(), 32 * 32 * 3);
+        assert_eq!(ds.num_classes(), 10);
+        let mut buf = vec![0.0f32; ds.feature_len()];
+        let y = ds.example(Split::Train, 0, &mut buf);
+        assert!((0..10).contains(&y));
+        assert!(buf.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn shapes64_has_20_classes() {
+        let ds = Shapes::imagenet_like(1);
+        assert_eq!(ds.num_classes(), 20);
+        let mut seen = vec![false; 20];
+        let mut buf = vec![0.0f32; ds.feature_len()];
+        for i in 0..400 {
+            seen[ds.example(Split::Train, i, &mut buf) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn foreground_differs_from_background() {
+        let ds = Shapes::cifar_like(3);
+        let mut buf = vec![0.0f32; ds.feature_len()];
+        // find a Disk example; its center should be brighter than corners
+        for i in 0..300 {
+            let y = ds.example(Split::Train, i, &mut buf);
+            if y == 0 {
+                let hw = 32;
+                let mean_px = |px: usize, py: usize| -> f32 {
+                    (0..3).map(|c| buf[(py * hw + px) * 3 + c]).sum::<f32>() / 3.0
+                };
+                // average around the image center region
+                let mut center = 0.0;
+                let mut n = 0;
+                for py in 12..20 {
+                    for px in 12..20 {
+                        center += mean_px(px, py);
+                        n += 1;
+                    }
+                }
+                center /= n as f32;
+                let corners = (mean_px(0, 0) + mean_px(31, 0) + mean_px(0, 31)
+                    + mean_px(31, 31))
+                    / 4.0;
+                // fg ∈ [.55,1], bg ∈ [0,.35(+grad)] — the disk covers the
+                // center for most draws; allow a miss but not many
+                if center > corners + 0.1 {
+                    return; // property observed
+                }
+            }
+        }
+        panic!("no disk example had bright center vs corners");
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = Shapes::cifar_like(5);
+        let mut a = vec![0.0f32; ds.feature_len()];
+        let mut b = vec![0.0f32; ds.feature_len()];
+        assert_eq!(
+            ds.example(Split::Test, 9, &mut a),
+            ds.example(Split::Test, 9, &mut b)
+        );
+        assert_eq!(a, b);
+    }
+}

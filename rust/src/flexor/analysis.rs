@@ -1,0 +1,251 @@
+//! Analysis backing the paper's §2 encryption-quality arguments and the
+//! "negligible overhead" claim: Hamming-distance statistics, output
+//! diversity of the XOR network, and the ASIC-style gate cost/latency model.
+
+use super::decrypt::Decryptor;
+use super::matrix::MXor;
+use crate::substrate::json::Json;
+
+/// Pairwise row statistics of `M⊕` (paper Eq. (1)).
+///
+/// For two *linear* Boolean functions f1, f2 over {0,1}^{N_in}, the Hamming
+/// distance is 0 when the tap sets are identical and 2^{N_in−1} otherwise —
+/// so the informative statistics are the fraction of distinct row pairs and
+/// the tap-overlap structure.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HammingStats {
+    pub n_out: usize,
+    pub n_in: usize,
+    pub total_pairs: usize,
+    pub distinct_pairs: usize,
+    pub mean_hamming: f64,
+    pub mean_tap_overlap: f64,
+    pub ntap_min: usize,
+    pub ntap_max: usize,
+}
+
+pub fn hamming_stats(m: &MXor) -> HammingStats {
+    let n_out = m.n_out();
+    let n_in = m.n_in();
+    let mut distinct = 0usize;
+    let mut total = 0usize;
+    let mut overlap_sum = 0usize;
+    let mut hamming_sum = 0f64;
+    let pair_dist = if n_in >= 1 { 2f64.powi(n_in as i32 - 1) } else { 0.0 };
+    for i in 0..n_out {
+        for j in i + 1..n_out {
+            total += 1;
+            let (a, b) = (m.row_mask(i), m.row_mask(j));
+            if a != b {
+                distinct += 1;
+                hamming_sum += pair_dist;
+            }
+            overlap_sum += (a & b).count_ones() as usize;
+        }
+    }
+    let ntaps: Vec<usize> = (0..n_out).map(|r| m.n_tap(r)).collect();
+    HammingStats {
+        n_out,
+        n_in,
+        total_pairs: total,
+        distinct_pairs: distinct,
+        mean_hamming: if total > 0 { hamming_sum / total as f64 } else { 0.0 },
+        mean_tap_overlap: if total > 0 {
+            overlap_sum as f64 / total as f64
+        } else {
+            0.0
+        },
+        ntap_min: ntaps.iter().copied().min().unwrap_or(0),
+        ntap_max: ntaps.iter().copied().max().unwrap_or(0),
+    }
+}
+
+/// Output-diversity profile: enumerate all 2^{N_in} inputs (N_in ≤ 20 in
+/// practice) and measure how the decrypted N_out-bit outputs spread through
+/// the 2^{N_out} space — the paper's "evenly distributed" design goal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DiversityStats {
+    pub inputs: usize,
+    /// Number of distinct decrypted outputs (≤ inputs; equality means the
+    /// map is injective — the encryption loses nothing).
+    pub distinct_outputs: usize,
+    /// Mean pairwise Hamming distance between decrypted outputs of
+    /// consecutive Gray-code inputs (sensitivity: how much one stored-bit
+    /// flip shuffles the quantized bits).
+    pub mean_flip_sensitivity: f64,
+    /// Per-output-bit bias |P(bit=1) − 0.5| averaged over bits.
+    pub mean_bit_bias: f64,
+}
+
+pub fn diversity_stats(m: &MXor) -> DiversityStats {
+    assert!(m.n_in() <= 20, "diversity enumeration limited to N_in ≤ 20");
+    let n = 1usize << m.n_in();
+    let mut seen = std::collections::HashSet::with_capacity(n);
+    let mut ones_per_bit = vec![0usize; m.n_out()];
+    let mut flip_sum = 0usize;
+    let mut prev: Option<u64> = None;
+    for g in 0..n {
+        // Gray code order: consecutive inputs differ by exactly one bit.
+        let x = (g ^ (g >> 1)) as u32;
+        let y = m.decrypt_slice(x);
+        seen.insert(y);
+        for (r, c) in ones_per_bit.iter_mut().enumerate() {
+            *c += ((y >> r) & 1) as usize;
+        }
+        if let Some(p) = prev {
+            flip_sum += (p ^ y).count_ones() as usize;
+        }
+        prev = Some(y);
+    }
+    let mean_bit_bias = ones_per_bit
+        .iter()
+        .map(|&c| (c as f64 / n as f64 - 0.5).abs())
+        .sum::<f64>()
+        / m.n_out() as f64;
+    DiversityStats {
+        inputs: n,
+        distinct_outputs: seen.len(),
+        mean_flip_sensitivity: if n > 1 {
+            flip_sum as f64 / (n - 1) as f64
+        } else {
+            0.0
+        },
+        mean_bit_bias,
+    }
+}
+
+/// ASIC-style overhead model for the shared XOR network (the paper cites
+/// VLSI-testing work for "negligible" area/latency; this quantifies it).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GateCost {
+    pub xor_gates: usize,
+    pub inverters: usize,
+    pub depth_levels: usize,
+    /// Gate count relative to decrypted bits per slice (gates/bit).
+    pub gates_per_output_bit: f64,
+}
+
+pub fn gate_cost(m: &MXor) -> GateCost {
+    let d = Decryptor::new(m.clone());
+    let (xor_gates, inverters) = d.gate_cost();
+    GateCost {
+        xor_gates,
+        inverters,
+        depth_levels: d.gate_depth(),
+        gates_per_output_bit: (xor_gates + inverters) as f64 / m.n_out() as f64,
+    }
+}
+
+/// JSON report combining all M⊕ analyses (used by `flexor analyze`).
+pub fn report(m: &MXor) -> Json {
+    let h = hamming_stats(m);
+    let g = gate_cost(m);
+    let mut o = Json::obj(vec![
+        ("n_out", Json::num(m.n_out() as f64)),
+        ("n_in", Json::num(m.n_in() as f64)),
+        ("expansion", Json::num(m.n_out() as f64 / m.n_in() as f64)),
+        ("distinct_row_pairs", Json::num(h.distinct_pairs as f64)),
+        ("total_row_pairs", Json::num(h.total_pairs as f64)),
+        ("mean_hamming", Json::num(h.mean_hamming)),
+        ("mean_tap_overlap", Json::num(h.mean_tap_overlap)),
+        ("ntap_min", Json::num(h.ntap_min as f64)),
+        ("ntap_max", Json::num(h.ntap_max as f64)),
+        ("xor_gates", Json::num(g.xor_gates as f64)),
+        ("inverters", Json::num(g.inverters as f64)),
+        ("depth_levels", Json::num(g.depth_levels as f64)),
+        ("gates_per_output_bit", Json::num(g.gates_per_output_bit)),
+    ]);
+    if m.n_in() <= 16 {
+        let d = diversity_stats(m);
+        o.set("enumerated_inputs", Json::num(d.inputs as f64));
+        o.set("distinct_outputs", Json::num(d.distinct_outputs as f64));
+        o.set("injective", Json::Bool(d.distinct_outputs == d.inputs));
+        o.set("mean_flip_sensitivity", Json::num(d.mean_flip_sensitivity));
+        o.set("mean_bit_bias", Json::num(d.mean_bit_bias));
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prng::Pcg32;
+
+    #[test]
+    fn hamming_identical_vs_distinct() {
+        let m = MXor::from_rows(&[vec![1, 1, 0], vec![1, 1, 0], vec![0, 1, 1]])
+            .unwrap();
+        let h = hamming_stats(&m);
+        assert_eq!(h.total_pairs, 3);
+        assert_eq!(h.distinct_pairs, 2);
+        assert!((h.mean_hamming - (0.0 + 4.0 + 4.0) / 3.0).abs() < 1e-12);
+        assert_eq!(h.ntap_min, 2);
+        assert_eq!(h.ntap_max, 2);
+    }
+
+    #[test]
+    fn diversity_full_rank_square_is_injective() {
+        // identity M⊕ (N_out = N_in) is trivially injective
+        let m = MXor::from_rows(&[
+            vec![1, 0, 0],
+            vec![0, 1, 0],
+            vec![0, 0, 1],
+        ])
+        .unwrap();
+        let d = diversity_stats(&m);
+        assert_eq!(d.inputs, 8);
+        assert_eq!(d.distinct_outputs, 8);
+        assert_eq!(d.mean_bit_bias, 0.0);
+        // one input flip flips exactly one output bit
+        assert!((d.mean_flip_sensitivity - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diversity_expansion_keeps_injectivity_with_good_rows() {
+        // Appendix A's matrix: first 4 rows... take rows forming identityish
+        let mut rng = Pcg32::seeded(1);
+        let m = MXor::random(12, 8, &mut rng).unwrap();
+        let d = diversity_stats(&m);
+        assert_eq!(d.inputs, 256);
+        assert!(d.distinct_outputs <= 256);
+        // random linear map over GF(2) with n_out > n_in is injective iff
+        // rank = n_in; with 12 random rows over 8 dims that is near-certain
+        assert_eq!(d.distinct_outputs, 256);
+        // a bit flip shuffles multiple output bits (N_tap ≈ N_in/2 taps hit)
+        assert!(d.mean_flip_sensitivity > 1.5);
+    }
+
+    #[test]
+    fn linearity_zero_maps_to_parity_constant() {
+        // GF(2) linearity: decrypt(0) = parity constants only.
+        let mut rng = Pcg32::seeded(2);
+        let m = MXor::with_ntap(10, 8, 2, &mut rng).unwrap();
+        let y0 = m.decrypt_slice(0);
+        for r in 0..10 {
+            assert_eq!((y0 >> r) & 1 == 1, m.parity_bit(r));
+        }
+    }
+
+    #[test]
+    fn gate_cost_ntap2() {
+        // N_tap=2 everywhere: 1 XOR per row, inverter on every row
+        // (2 taps ⇒ parity flip), depth 1.
+        let mut rng = Pcg32::seeded(3);
+        let m = MXor::with_ntap(20, 8, 2, &mut rng).unwrap();
+        let g = gate_cost(&m);
+        assert_eq!(g.xor_gates, 20);
+        assert_eq!(g.inverters, 20);
+        assert_eq!(g.depth_levels, 1);
+        assert!((g.gates_per_output_bit - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_includes_diversity_for_small_nin() {
+        let mut rng = Pcg32::seeded(4);
+        let m = MXor::with_ntap(10, 8, 2, &mut rng).unwrap();
+        let r = report(&m);
+        assert_eq!(r.get("n_out").as_i64(), Some(10));
+        assert!(!r.get("distinct_outputs").is_null());
+        assert!(!r.get("mean_hamming").is_null());
+    }
+}

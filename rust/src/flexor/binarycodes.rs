@@ -1,0 +1,236 @@
+//! Binary-code arithmetic: `W ≈ Σ_{i=1}^q α_i b_i` (paper §1, Fig. 1).
+//!
+//! Two compute paths, both used by the inference engine:
+//! * [`reconstruct_dense`] — materialize the f32 weight tensor once at
+//!   load time (what a CPU GEMM wants);
+//! * [`dot_binary`] / [`BinaryCodeMatrix`] — the paper's multiply-free
+//!   form: per bit-plane, the dot product is a signed accumulation
+//!   (add where bit=+1, subtract where −1), then `q` scalar multiplies by
+//!   α. This is what the decrypt bench measures to back Fig. 1's
+//!   "v multiplies → q multiplies" claim.
+
+use anyhow::{ensure, Result};
+
+use super::bitpack::BitVec;
+
+/// Reconstruct dense weights from q ±1 bit-planes and per-output-channel
+/// scales. `planes[i]` has `n` entries (row-major with the **last axis** =
+/// output channel, matching the Python layout), `alpha[i]` has `c_out`.
+pub fn reconstruct_dense(
+    planes: &[Vec<f32>],
+    alpha: &[Vec<f32>],
+    c_out: usize,
+) -> Result<Vec<f32>> {
+    ensure!(!planes.is_empty(), "no bit planes");
+    ensure!(planes.len() == alpha.len(), "planes/alpha count mismatch");
+    let n = planes[0].len();
+    ensure!(n % c_out == 0, "n {n} not divisible by c_out {c_out}");
+    ensure!(
+        planes.iter().all(|p| p.len() == n),
+        "ragged bit planes"
+    );
+    ensure!(alpha.iter().all(|a| a.len() == c_out), "alpha width mismatch");
+    let mut w = vec![0.0f32; n];
+    for (plane, al) in planes.iter().zip(alpha) {
+        for (i, &b) in plane.iter().enumerate() {
+            w[i] += b * al[i % c_out];
+        }
+    }
+    Ok(w)
+}
+
+/// Multiply-free binary dot product: `Σ_j a_j b_j` with `b` a packed ±1
+/// vector (bit 1 ⇔ −1). One pass of adds/subtracts — zero multiplies.
+pub fn dot_binary(a: &[f32], bits: &BitVec) -> f32 {
+    debug_assert_eq!(a.len(), bits.len());
+    // Σ a_j b_j = Σ a_j − 2 Σ_{bit=1} a_j.  The negative-lane sum is
+    // branchless (multiply by the extracted 0/1 bit) — with ~50% bit
+    // density this beats the popcount-style set-bit iteration by >2×
+    // (EXPERIMENTS.md §Perf) because there are no mispredicted branches
+    // and no random-index loads.
+    let total: f32 = a.iter().sum();
+    total - 2.0 * neg_lane_sum(a, bits)
+}
+
+/// Σ_{j: bit_j=1} a_j — the branchless inner kernel shared by dot_binary
+/// and the matvec (which hoists the Σa term out of its column loop).
+#[inline]
+fn neg_lane_sum(a: &[f32], bits: &BitVec) -> f32 {
+    let mut neg = 0.0f32;
+    for (w_idx, &word) in bits.words().iter().enumerate() {
+        let base = w_idx * 64;
+        let lane = &a[base..(base + 64).min(a.len())];
+        // index-based bit extraction: no loop-carried shift dependency, so
+        // the compiler can vectorize the multiply-accumulate
+        for (k, &v) in lane.iter().enumerate() {
+            neg += v * ((word >> k) & 1) as f32;
+        }
+    }
+    neg
+}
+
+/// A (v × c) weight matrix held as q packed bit-planes + scales — the
+/// paper's storage/compute format for a quantized FC layer.
+#[derive(Clone, Debug)]
+pub struct BinaryCodeMatrix {
+    pub v: usize,
+    pub c: usize,
+    /// planes[i][col] = packed column (length v) of bit-plane i.
+    planes: Vec<Vec<BitVec>>,
+    /// alpha[i][col]
+    alpha: Vec<Vec<f32>>,
+}
+
+impl BinaryCodeMatrix {
+    /// Build from row-major ±1 planes (`planes[i][row*c + col]`).
+    pub fn from_planes(
+        v: usize,
+        c: usize,
+        planes: &[Vec<f32>],
+        alpha: &[Vec<f32>],
+    ) -> Result<Self> {
+        ensure!(!planes.is_empty() && planes.len() == alpha.len());
+        ensure!(planes.iter().all(|p| p.len() == v * c), "plane size mismatch");
+        ensure!(alpha.iter().all(|a| a.len() == c), "alpha size mismatch");
+        let mut packed = Vec::with_capacity(planes.len());
+        for plane in planes {
+            let mut cols = Vec::with_capacity(c);
+            for col in 0..c {
+                let mut bv = BitVec::zeros(v);
+                for row in 0..v {
+                    if plane[row * c + col] < 0.0 {
+                        bv.set(row, true);
+                    }
+                }
+                cols.push(bv);
+            }
+            packed.push(cols);
+        }
+        Ok(BinaryCodeMatrix { v, c, planes: packed, alpha: alpha.to_vec() })
+    }
+
+    /// `out[col] = Σ_i α_i[col] · (a · b_i[col])` — Fig. 1's computation:
+    /// q multiplies per output instead of v.
+    pub fn matvec(&self, a: &[f32]) -> Result<Vec<f32>> {
+        ensure!(a.len() == self.v, "input length {} != v {}", a.len(), self.v);
+        let total: f32 = a.iter().sum(); // hoisted out of the column loop
+        let mut out = vec![0.0f32; self.c];
+        for (plane, al) in self.planes.iter().zip(&self.alpha) {
+            for (col, bits) in plane.iter().enumerate() {
+                out[col] += al[col] * (total - 2.0 * neg_lane_sum(a, bits));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn q(&self) -> usize {
+        self.planes.len()
+    }
+
+    /// Stored bits for the quantized planes (excludes α).
+    pub fn stored_bits(&self) -> usize {
+        self.q() * self.v * self.c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prng::Pcg32;
+    use crate::substrate::ptest::check_msg;
+
+    #[test]
+    fn reconstruct_q1() {
+        // 4 weights, 2 out channels, plane [+1,-1,-1,+1], alpha [2, 3]
+        let w = reconstruct_dense(
+            &[vec![1.0, -1.0, -1.0, 1.0]],
+            &[vec![2.0, 3.0]],
+            2,
+        )
+        .unwrap();
+        assert_eq!(w, vec![2.0, -3.0, -2.0, 3.0]);
+    }
+
+    #[test]
+    fn reconstruct_q2_sums_planes() {
+        let w = reconstruct_dense(
+            &[vec![1.0, 1.0], vec![-1.0, 1.0]],
+            &[vec![1.0], vec![0.25]],
+            1,
+        )
+        .unwrap();
+        assert_eq!(w, vec![0.75, 1.25]);
+    }
+
+    #[test]
+    fn reconstruct_validation() {
+        assert!(reconstruct_dense(&[], &[], 1).is_err());
+        assert!(reconstruct_dense(&[vec![1.0; 4]], &[vec![1.0; 3]], 3).is_err());
+        assert!(
+            reconstruct_dense(&[vec![1.0; 4], vec![1.0; 5]], &[vec![1.0], vec![1.0]], 1)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn dot_binary_matches_dense() {
+        check_msg("dot_binary == dense dot", 80, |g| {
+            let n = g.usize_in(1, 300);
+            let a: Vec<f32> = (0..n).map(|_| g.normal()).collect();
+            let signs: Vec<f32> =
+                (0..n).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+            let bits = BitVec::from_signs(&signs);
+            let want: f32 = a.iter().zip(&signs).map(|(x, s)| x * s).sum();
+            let got = dot_binary(&a, &bits);
+            if (got - want).abs() > 1e-3 * (1.0 + want.abs()) {
+                return Err(format!("{got} vs {want}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matvec_matches_dense_gemv() {
+        let mut rng = Pcg32::seeded(9);
+        let (v, c, q) = (37, 5, 2);
+        let planes: Vec<Vec<f32>> = (0..q)
+            .map(|_| (0..v * c).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect())
+            .collect();
+        let alpha: Vec<Vec<f32>> = (0..q)
+            .map(|_| (0..c).map(|_| rng.range_f32(0.1, 1.0)).collect())
+            .collect();
+        let a: Vec<f32> = (0..v).map(|_| rng.normal()).collect();
+
+        let m = BinaryCodeMatrix::from_planes(v, c, &planes, &alpha).unwrap();
+        let got = m.matvec(&a).unwrap();
+
+        // dense reference
+        let mut want = vec![0.0f32; c];
+        for i in 0..q {
+            for col in 0..c {
+                let mut acc = 0.0;
+                for row in 0..v {
+                    acc += a[row] * planes[i][row * c + col];
+                }
+                want[col] += alpha[i][col] * acc;
+            }
+        }
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+        }
+        assert_eq!(m.q(), 2);
+        assert_eq!(m.stored_bits(), 2 * v * c);
+    }
+
+    #[test]
+    fn matvec_validates_input_len() {
+        let m = BinaryCodeMatrix::from_planes(
+            4,
+            1,
+            &[vec![1.0, 1.0, 1.0, 1.0]],
+            &[vec![1.0]],
+        )
+        .unwrap();
+        assert!(m.matvec(&[1.0, 2.0]).is_err());
+    }
+}

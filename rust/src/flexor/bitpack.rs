@@ -1,0 +1,267 @@
+//! Packed bit vectors — the storage format of encrypted weights.
+//!
+//! Convention throughout the crate: **bit = 1 ⇔ the stored real value is
+//! negative** (sign −1); bit = 0 ⇔ sign +1. This matches the Python side's
+//! `neg = (1 − sign)/2` and makes GF(2) XOR equal to sign multiplication
+//! in the ±1 domain.
+
+use anyhow::{ensure, Result};
+
+/// A fixed-length bit vector packed into `u64` words (LSB-first).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitVec {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl BitVec {
+    pub fn zeros(len: usize) -> Self {
+        BitVec { len, words: vec![0; len.div_ceil(64)] }
+    }
+
+    /// Pack from sign values: negative → 1, non-negative → 0.
+    pub fn from_signs(signs: &[f32]) -> Self {
+        let mut bv = BitVec::zeros(signs.len());
+        for (i, &s) in signs.iter().enumerate() {
+            if s < 0.0 {
+                bv.set(i, true);
+            }
+        }
+        bv
+    }
+
+    /// Pack from 0/1 bytes.
+    pub fn from_bits(bits: &[u8]) -> Self {
+        let mut bv = BitVec::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b != 0 {
+                bv.set(i, true);
+            }
+        }
+        bv
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Unpack to ±1 signs (bit 1 → −1.0).
+    pub fn to_signs(&self) -> Vec<f32> {
+        (0..self.len).map(|i| if self.get(i) { -1.0 } else { 1.0 }).collect()
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Raw little-endian byte serialization (length NOT included).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.words.iter().flat_map(|w| w.to_le_bytes()).collect()
+    }
+
+    /// Rebuild from `to_bytes` output and an explicit bit length.
+    pub fn from_bytes(len: usize, bytes: &[u8]) -> Result<Self> {
+        let n_words = len.div_ceil(64);
+        ensure!(bytes.len() == n_words * 8, "bitvec byte length mismatch");
+        let words = bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect::<Vec<_>>();
+        // ensure padding bits are zero so equality/count work
+        if len % 64 != 0 {
+            if let Some(&last) = words.last() {
+                ensure!(
+                    last >> (len % 64) == 0,
+                    "nonzero padding bits in serialized bitvec"
+                );
+            }
+        }
+        Ok(BitVec { len, words })
+    }
+}
+
+/// A slice-major bit matrix: `slices` rows of `width` bits each, stored
+/// **column-major** (one BitVec of length `slices` per column). This is the
+/// layout the decryption engine wants: decrypting output bit `r` for 64
+/// slices is a handful of whole-word XORs over tap columns.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ColumnBits {
+    slices: usize,
+    columns: Vec<BitVec>,
+}
+
+impl ColumnBits {
+    pub fn zeros(slices: usize, width: usize) -> Self {
+        ColumnBits { slices, columns: vec![BitVec::zeros(slices); width] }
+    }
+
+    /// Build from row-major bits: `bits[s*width + j]` is slice `s`, col `j`.
+    pub fn from_row_major(bits: &[u8], width: usize) -> Result<Self> {
+        ensure!(width > 0, "zero width");
+        ensure!(bits.len() % width == 0, "bits not a multiple of width");
+        let slices = bits.len() / width;
+        let mut cb = ColumnBits::zeros(slices, width);
+        for s in 0..slices {
+            for j in 0..width {
+                if bits[s * width + j] != 0 {
+                    cb.columns[j].set(s, true);
+                }
+            }
+        }
+        Ok(cb)
+    }
+
+    /// Build from a row-major sign array (negative → bit 1).
+    pub fn from_signs_row_major(signs: &[f32], width: usize) -> Result<Self> {
+        let bits: Vec<u8> = signs.iter().map(|&s| (s < 0.0) as u8).collect();
+        Self::from_row_major(&bits, width)
+    }
+
+    pub fn slices(&self) -> usize {
+        self.slices
+    }
+
+    pub fn width(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn column(&self, j: usize) -> &BitVec {
+        &self.columns[j]
+    }
+
+    pub fn column_mut(&mut self, j: usize) -> &mut BitVec {
+        &mut self.columns[j]
+    }
+
+    pub fn get(&self, slice: usize, j: usize) -> bool {
+        self.columns[j].get(slice)
+    }
+
+    pub fn set(&mut self, slice: usize, j: usize, v: bool) {
+        self.columns[j].set(slice, v);
+    }
+
+    /// Flatten back to row-major 0/1 bytes.
+    pub fn to_row_major(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.slices * self.width()];
+        for (j, col) in self.columns.iter().enumerate() {
+            for s in 0..self.slices {
+                out[s * self.width() + j] = col.get(s) as u8;
+            }
+        }
+        out
+    }
+
+    /// Total stored bits (slices × width).
+    pub fn bit_count(&self) -> usize {
+        self.slices * self.width()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::ptest::{check, Gen};
+
+    #[test]
+    fn set_get_count() {
+        let mut bv = BitVec::zeros(130);
+        bv.set(0, true);
+        bv.set(64, true);
+        bv.set(129, true);
+        assert!(bv.get(0) && bv.get(64) && bv.get(129));
+        assert!(!bv.get(1));
+        assert_eq!(bv.count_ones(), 3);
+        bv.set(64, false);
+        assert_eq!(bv.count_ones(), 2);
+    }
+
+    #[test]
+    fn signs_roundtrip() {
+        let signs = vec![1.0, -1.0, -1.0, 1.0, -0.0, 1.0, -3.5];
+        let bv = BitVec::from_signs(&signs);
+        let back = bv.to_signs();
+        // -0.0 is not < 0, so it packs as +1
+        assert_eq!(back, vec![1.0, -1.0, -1.0, 1.0, 1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        check("bitvec bytes roundtrip", 50, |g: &mut Gen| {
+            let n = g.usize_in(1, 500);
+            let mut bv = BitVec::zeros(n);
+            for i in 0..n {
+                if g.bool() {
+                    bv.set(i, true);
+                }
+            }
+            BitVec::from_bytes(n, &bv.to_bytes()).unwrap() == bv
+        });
+    }
+
+    #[test]
+    fn bytes_rejects_bad_padding() {
+        let bv = BitVec::from_bits(&[1, 1, 1]);
+        let mut bytes = bv.to_bytes();
+        bytes[1] = 0xFF; // set bits beyond len
+        assert!(BitVec::from_bytes(3, &bytes).is_err());
+        assert!(BitVec::from_bytes(5, &bytes[..4]).is_err()); // wrong size
+    }
+
+    #[test]
+    fn column_bits_roundtrip() {
+        check("column bits row-major roundtrip", 50, |g: &mut Gen| {
+            let width = g.usize_in(1, 24);
+            let slices = g.usize_in(1, 200);
+            let bits: Vec<u8> = (0..width * slices).map(|_| g.bool() as u8).collect();
+            let cb = ColumnBits::from_row_major(&bits, width).unwrap();
+            cb.to_row_major() == bits && cb.slices() == slices && cb.width() == width
+        });
+    }
+
+    #[test]
+    fn column_bits_indexing() {
+        let bits = vec![1, 0, 0, 1, 1, 1]; // 3 slices × 2 cols
+        let cb = ColumnBits::from_row_major(&bits, 2).unwrap();
+        assert!(cb.get(0, 0) && !cb.get(0, 1));
+        assert!(!cb.get(1, 0) && cb.get(1, 1));
+        assert!(cb.get(2, 0) && cb.get(2, 1));
+        assert_eq!(cb.column(0).count_ones(), 2);
+        assert_eq!(cb.bit_count(), 6);
+    }
+
+    #[test]
+    fn column_bits_validation() {
+        assert!(ColumnBits::from_row_major(&[1, 0, 1], 2).is_err());
+        assert!(ColumnBits::from_row_major(&[], 0).is_err());
+    }
+}

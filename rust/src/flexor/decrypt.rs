@@ -1,0 +1,336 @@
+//! The bit-level XOR decryption engine (paper Fig. 3 / Algorithm 1).
+//!
+//! The paper decrypts each `N_in`-bit slice through a shared XOR-gate
+//! network — "best implemented by ASIC or FPGA". The CPU-native analogue
+//! is **word-parallel GF(2)**: encrypted bits are stored column-major
+//! ([`ColumnBits`]), so producing quantized output bit `r` for 64 slices at
+//! once is `N_tap` 64-bit XORs plus an optional complement (the Eq. 4
+//! `(-1)^{n-1}` parity) — exactly the parallel-gate structure, 64 gates per
+//! instruction.
+//!
+//! Two engines are provided:
+//! * [`Decryptor::decrypt_columns`] — the fast word-parallel path;
+//! * [`Decryptor::decrypt_scalar`] — a per-slice reference implementation
+//!   (mask + popcount), used for cross-checking and as the clarity-first
+//!   description of Algorithm 1.
+//!
+//! Both return "negative bits" (1 ⇔ quantized weight bit is −1), matching
+//! the Python `decrypt_bits` convention; `to_signs()` recovers ±1.
+
+use anyhow::{ensure, Result};
+
+use super::bitpack::ColumnBits;
+use super::matrix::MXor;
+
+/// A decryption engine bound to one XOR-gate network.
+#[derive(Clone, Debug)]
+pub struct Decryptor {
+    mxor: MXor,
+    /// Per-row parity (Eq. 4's (-1)^{n_tap−1} as a complement bit).
+    parity: Vec<bool>,
+}
+
+impl Decryptor {
+    pub fn new(mxor: MXor) -> Self {
+        let parity = (0..mxor.n_out()).map(|r| mxor.parity_bit(r)).collect();
+        Decryptor { mxor, parity }
+    }
+
+    pub fn mxor(&self) -> &MXor {
+        &self.mxor
+    }
+
+    /// Word-parallel decrypt: 64 slices per XOR instruction.
+    ///
+    /// `enc` must have width `N_in`; returns width-`N_out` columns over the
+    /// same slice count.
+    pub fn decrypt_columns(&self, enc: &ColumnBits) -> Result<ColumnBits> {
+        ensure!(
+            enc.width() == self.mxor.n_in(),
+            "encrypted width {} != N_in {}",
+            enc.width(),
+            self.mxor.n_in()
+        );
+        let slices = enc.slices();
+        let n_words = slices.div_ceil(64);
+        let mut out = ColumnBits::zeros(slices, self.mxor.n_out());
+        for r in 0..self.mxor.n_out() {
+            let mask = self.mxor.row_mask(r);
+            // XOR the tap columns word-by-word.
+            let out_col = out.column_mut(r);
+            {
+                let words = out_col.words_mut();
+                let mut taps = mask;
+                while taps != 0 {
+                    let j = taps.trailing_zeros() as usize;
+                    taps &= taps - 1;
+                    let src = enc.column(j).words();
+                    for w in 0..n_words {
+                        words[w] ^= src[w];
+                    }
+                }
+                if self.parity[r] {
+                    for w in words.iter_mut() {
+                        *w = !*w;
+                    }
+                    // clear padding bits past `slices`
+                    if slices % 64 != 0 {
+                        let keep = (1u64 << (slices % 64)) - 1;
+                        *words.last_mut().unwrap() &= keep;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Per-slice reference decrypt (Algorithm 1 as literal bit ops).
+    pub fn decrypt_scalar(&self, enc: &ColumnBits) -> Result<ColumnBits> {
+        ensure!(enc.width() == self.mxor.n_in(), "width mismatch");
+        let mut out = ColumnBits::zeros(enc.slices(), self.mxor.n_out());
+        for s in 0..enc.slices() {
+            let mut x = 0u32;
+            for j in 0..enc.width() {
+                if enc.get(s, j) {
+                    x |= 1 << j;
+                }
+            }
+            let y = self.mxor.decrypt_slice(x);
+            for r in 0..self.mxor.n_out() {
+                if (y >> r) & 1 == 1 {
+                    out.set(s, r, true);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decrypt and flatten to ±1 signs, cropped to `n_weights`
+    /// (slice-major: slice 0's N_out bits, then slice 1's, ... — the
+    /// "reshape" of Fig. 3).
+    pub fn decrypt_to_signs(&self, enc: &ColumnBits, n_weights: usize) -> Result<Vec<f32>> {
+        let cols = self.decrypt_columns(enc)?;
+        let n_out = self.mxor.n_out();
+        let slices = cols.slices();
+        ensure!(
+            n_weights <= slices * n_out,
+            "n_weights {} exceeds decrypted bits {}",
+            n_weights,
+            slices * n_out
+        );
+        // Block-transposed materialization (perf: see EXPERIMENTS.md §Perf):
+        // process 64 slices at a time, loading each output column's word
+        // once per block instead of doing a div/mod bit lookup per weight.
+        let mut signs = vec![1.0f32; n_weights];
+        let mut words = vec![0u64; n_out];
+        for blk in 0..slices.div_ceil(64) {
+            for (r, w) in words.iter_mut().enumerate() {
+                *w = cols.column(r).words()[blk];
+            }
+            let s_end = (blk * 64 + 64).min(slices);
+            for s in blk * 64..s_end {
+                let shift = (s % 64) as u32;
+                let base = s * n_out;
+                if base >= n_weights {
+                    break;
+                }
+                let r_end = n_out.min(n_weights - base);
+                for (r, &w) in words[..r_end].iter().enumerate() {
+                    // branchless ±1: 1 - 2*bit
+                    signs[base + r] = 1.0 - 2.0 * ((w >> shift) & 1) as f32;
+                }
+            }
+        }
+        Ok(signs)
+    }
+
+    /// Decrypted bits per stored bit — the decompression "gain".
+    pub fn expansion(&self) -> f64 {
+        self.mxor.n_out() as f64 / self.mxor.n_in() as f64
+    }
+
+    /// XOR 2-input gate count for one slice (ASIC cost model): each row
+    /// needs `n_tap − 1` two-input XOR gates, plus an inverter when the
+    /// parity bit is set. Returns (xor_gates, inverters).
+    pub fn gate_cost(&self) -> (usize, usize) {
+        let mut xors = 0;
+        let mut invs = 0;
+        for r in 0..self.mxor.n_out() {
+            xors += self.mxor.n_tap(r).saturating_sub(1);
+            invs += self.parity[r] as usize;
+        }
+        (xors, invs)
+    }
+
+    /// Critical-path depth in gate levels (balanced XOR tree per row).
+    pub fn gate_depth(&self) -> usize {
+        (0..self.mxor.n_out())
+            .map(|r| {
+                let t = self.mxor.n_tap(r);
+                if t <= 1 {
+                    0
+                } else {
+                    (usize::BITS - (t - 1).leading_zeros()) as usize
+                }
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Pack a row-major encrypted sign tensor `(slices × N_in)` for decryption.
+pub fn pack_encrypted(signs: &[f32], n_in: usize) -> Result<ColumnBits> {
+    ColumnBits::from_signs_row_major(signs, n_in)
+}
+
+/// One-call helper: decrypt encrypted signs straight to quantized ±1 bits.
+pub fn decrypt_signs(
+    mxor: &MXor,
+    enc_signs: &[f32],
+    n_weights: usize,
+) -> Result<Vec<f32>> {
+    let enc = pack_encrypted(enc_signs, mxor.n_in())?;
+    Decryptor::new(mxor.clone()).decrypt_to_signs(&enc, n_weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prng::Pcg32;
+    use crate::substrate::ptest::check_msg;
+
+    fn rand_enc(rng: &mut Pcg32, slices: usize, n_in: usize) -> ColumnBits {
+        let bits: Vec<u8> = (0..slices * n_in).map(|_| rng.bernoulli(0.5) as u8).collect();
+        ColumnBits::from_row_major(&bits, n_in).unwrap()
+    }
+
+    #[test]
+    fn word_parallel_matches_scalar() {
+        check_msg("decrypt_columns == decrypt_scalar", 60, |g| {
+            let n_in = g.usize_in(1, 25);
+            let n_out = n_in + g.usize_in(0, 13);
+            let slices = g.usize_in(1, 400);
+            let mxor = if g.bool() {
+                MXor::random(n_out, n_in, g.rng()).unwrap()
+            } else {
+                let t = 1 + g.usize_in(0, n_in.min(3));
+                MXor::with_ntap(n_out, n_in, t, g.rng()).unwrap()
+            };
+            let enc = rand_enc(g.rng(), slices, n_in);
+            let d = Decryptor::new(mxor);
+            let fast = d.decrypt_columns(&enc).map_err(|e| e.to_string())?;
+            let slow = d.decrypt_scalar(&enc).map_err(|e| e.to_string())?;
+            if fast != slow {
+                return Err("engines disagree".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matches_pm1_product_semantics() {
+        // Directly verify Eq. (4): y_r = (-1)^{n-1} ∏ sign(x_j).
+        let mut rng = Pcg32::seeded(3);
+        let mxor = MXor::random(10, 6, &mut rng).unwrap();
+        let enc = rand_enc(&mut rng, 77, 6);
+        let out = Decryptor::new(mxor.clone()).decrypt_columns(&enc).unwrap();
+        for s in 0..77 {
+            for r in 0..10 {
+                let mut prod = 1.0f32;
+                for j in 0..6 {
+                    if mxor.row_mask(r) >> j & 1 == 1 {
+                        prod *= if enc.get(s, j) { -1.0 } else { 1.0 };
+                    }
+                }
+                let want = if (mxor.n_tap(r) - 1) % 2 == 1 { -prod } else { prod };
+                let got = if out.get(s, r) { -1.0 } else { 1.0 };
+                assert_eq!(got, want, "slice {s} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn gf2_linearity_property() {
+        // In the bit domain (bit = sign<0), decrypt is affine over GF(2):
+        // D(x ⊕ y) = D(x) ⊕ D(y) ⊕ D(0)  (D(0) = the parity constants).
+        check_msg("decrypt is GF(2)-affine", 40, |g| {
+            let n_in = g.usize_in(1, 20);
+            let n_out = n_in + g.usize_in(0, 10);
+            let mxor = MXor::random(n_out, n_in, g.rng()).unwrap();
+            let x = g.u32(1 << n_in.min(31));
+            let y = g.u32(1 << n_in.min(31));
+            let dx = mxor.decrypt_slice(x);
+            let dy = mxor.decrypt_slice(y);
+            let d0 = mxor.decrypt_slice(0);
+            let dxy = mxor.decrypt_slice(x ^ y);
+            if dxy != dx ^ dy ^ d0 {
+                return Err(format!("affinity broken: x={x:b} y={y:b}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decrypt_to_signs_matches_per_bit_lookup() {
+        // the block-transposed fast path vs a literal per-bit materialization
+        check_msg("decrypt_to_signs == per-bit", 30, |g| {
+            let n_in = g.usize_in(1, 16);
+            let n_out = n_in + g.usize_in(0, 8);
+            let slices = g.usize_in(1, 300);
+            let mxor = MXor::with_ntap(n_out, n_in, 1 + g.usize_in(0, n_in.min(2)), g.rng()).unwrap();
+            let enc = rand_enc(g.rng(), slices, n_in);
+            let d = Decryptor::new(mxor);
+            let n_weights = g.usize_in(1, slices * n_out + 1).min(slices * n_out);
+            let fast = d.decrypt_to_signs(&enc, n_weights).map_err(|e| e.to_string())?;
+            let cols = d.decrypt_columns(&enc).map_err(|e| e.to_string())?;
+            for (i, &s) in fast.iter().enumerate() {
+                let want = if cols.get(i / n_out, i % n_out) { -1.0 } else { 1.0 };
+                if s != want {
+                    return Err(format!("weight {i}: {s} vs {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decrypt_to_signs_crops() {
+        let mut rng = Pcg32::seeded(5);
+        let mxor = MXor::with_ntap(10, 8, 2, &mut rng).unwrap();
+        let enc = rand_enc(&mut rng, 13, 8);
+        let d = Decryptor::new(mxor);
+        let signs = d.decrypt_to_signs(&enc, 95).unwrap();
+        assert_eq!(signs.len(), 95);
+        assert!(signs.iter().all(|&s| s == 1.0 || s == -1.0));
+        assert!(d.decrypt_to_signs(&enc, 131).is_err()); // 13*10 = 130 max
+    }
+
+    #[test]
+    fn width_mismatch_rejected() {
+        let mut rng = Pcg32::seeded(6);
+        let mxor = MXor::with_ntap(10, 8, 2, &mut rng).unwrap();
+        let enc = rand_enc(&mut rng, 4, 6);
+        assert!(Decryptor::new(mxor).decrypt_columns(&enc).is_err());
+    }
+
+    #[test]
+    fn gate_cost_model() {
+        let mxor = MXor::from_rows(&[
+            vec![1, 1, 0, 0], // 2 taps: 1 xor, parity → 1 inv
+            vec![1, 1, 1, 0], // 3 taps: 2 xors, no inv
+            vec![1, 0, 0, 0], // 1 tap: 0 xors, no inv
+        ])
+        .unwrap();
+        let d = Decryptor::new(mxor);
+        assert_eq!(d.gate_cost(), (3, 1));
+        // deepest row has 3 taps → balanced XOR tree depth ⌈log2 3⌉ = 2
+        assert_eq!(d.gate_depth(), 2);
+    }
+
+    #[test]
+    fn expansion_ratio() {
+        let mut rng = Pcg32::seeded(7);
+        let d = Decryptor::new(MXor::with_ntap(20, 8, 2, &mut rng).unwrap());
+        assert_eq!(d.expansion(), 2.5);
+    }
+}

@@ -1,0 +1,441 @@
+//! `.fxr` — the encrypted checkpoint container (the paper's deployment
+//! artifact: what actually ships to a device).
+//!
+//! Stores, per quantized layer: the XOR network `M⊕` per bit-plane, the
+//! per-output-channel scales α, and the **bit-packed encrypted weights**
+//! (`sign(w^e)`, column-major for the word-parallel decryptor). Integrity
+//! is a CRC32 trailer. All multi-byte values little-endian.
+//!
+//! ```text
+//! "FXR1" | u32 version | u32 n_layers | u32 meta_len | meta json
+//! layer*: u16 name_len | name | u8 q | u8 n_in | u8 n_out | u8 flags
+//!         u64 n_weights | u32 c_out
+//!         plane*: n_out×u32 row masks | c_out×f32 alpha
+//!                 n_in × ceil(slices/64) × u64 packed columns
+//! u32 crc32(payload after magic)
+//! ```
+//!
+//! The container's size IS the paper's storage claim; `Container::stats()`
+//! reproduces Table 5's compression-ratio accounting byte-exactly.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::bitpack::ColumnBits;
+use super::matrix::MXor;
+use super::num_slices;
+use crate::substrate::json::{self, Json};
+
+pub const MAGIC: &[u8; 4] = b"FXR1";
+pub const VERSION: u32 = 1;
+
+/// One quantized layer's encrypted payload.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub n_weights: usize,
+    pub c_out: usize,
+    /// One (M⊕, α, encrypted bits) triple per bit-plane (q = planes.len()).
+    pub planes: Vec<Plane>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Plane {
+    pub mxor: MXor,
+    pub alpha: Vec<f32>,
+    pub enc: ColumnBits,
+}
+
+impl Layer {
+    /// Validate internal consistency (slice counts, plane agreement).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.planes.is_empty(), "layer {} has no planes", self.name);
+        let n_in = self.planes[0].mxor.n_in();
+        let n_out = self.planes[0].mxor.n_out();
+        let slices = num_slices(self.n_weights, n_out);
+        for (i, p) in self.planes.iter().enumerate() {
+            ensure!(
+                p.mxor.n_in() == n_in && p.mxor.n_out() == n_out,
+                "layer {} plane {i}: M⊕ geometry differs across planes",
+                self.name
+            );
+            ensure!(
+                p.alpha.len() == self.c_out,
+                "layer {} plane {i}: alpha len {} != c_out {}",
+                self.name,
+                p.alpha.len(),
+                self.c_out
+            );
+            ensure!(
+                p.enc.width() == n_in && p.enc.slices() == slices,
+                "layer {} plane {i}: encrypted bits {}×{} != {}×{}",
+                self.name,
+                p.enc.slices(),
+                p.enc.width(),
+                slices,
+                n_in
+            );
+        }
+        Ok(())
+    }
+
+    pub fn q(&self) -> usize {
+        self.planes.len()
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.planes[0].mxor.n_in()
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.planes[0].mxor.n_out()
+    }
+
+    /// Stored encrypted bits (the paper's "bits" numerator).
+    pub fn stored_bits(&self) -> usize {
+        self.q() * num_slices(self.n_weights, self.n_out()) * self.n_in()
+    }
+
+    pub fn bits_per_weight(&self) -> f64 {
+        self.stored_bits() as f64 / self.n_weights as f64
+    }
+}
+
+/// A full encrypted checkpoint.
+#[derive(Clone, Debug)]
+pub struct Container {
+    pub meta: Json,
+    pub layers: Vec<Layer>,
+}
+
+/// Storage accounting for the container (Table 5's columns).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stats {
+    pub total_weights: usize,
+    pub encrypted_bits: usize,
+    pub alpha_bits: usize,
+    pub mxor_bits: usize,
+    pub bits_per_weight: f64,
+    pub compression_ratio_weights_only: f64,
+    pub compression_ratio_with_alpha: f64,
+}
+
+impl Container {
+    pub fn new(meta: Json) -> Self {
+        Container { meta, layers: Vec::new() }
+    }
+
+    pub fn push(&mut self, layer: Layer) -> Result<()> {
+        layer.validate()?;
+        ensure!(
+            !self.layers.iter().any(|l| l.name == layer.name),
+            "duplicate layer name {}",
+            layer.name
+        );
+        self.layers.push(layer);
+        Ok(())
+    }
+
+    pub fn stats(&self) -> Stats {
+        let total_weights: usize = self.layers.iter().map(|l| l.n_weights).sum();
+        let encrypted_bits: usize = self.layers.iter().map(|l| l.stored_bits()).sum();
+        let alpha_bits: usize =
+            self.layers.iter().map(|l| 32 * l.q() * l.c_out).sum();
+        let mxor_bits: usize = self
+            .layers
+            .iter()
+            .map(|l| l.q() * l.n_out() * l.n_in())
+            .sum();
+        Stats {
+            total_weights,
+            encrypted_bits,
+            alpha_bits,
+            mxor_bits,
+            bits_per_weight: encrypted_bits as f64 / total_weights.max(1) as f64,
+            compression_ratio_weights_only: 32.0 * total_weights as f64
+                / encrypted_bits.max(1) as f64,
+            compression_ratio_with_alpha: 32.0 * total_weights as f64
+                / (encrypted_bits + alpha_bits).max(1) as f64,
+        }
+    }
+
+    // ---- serialization ------------------------------------------------------
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b: Vec<u8> = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&VERSION.to_le_bytes());
+        b.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
+        let meta = self.meta.to_string();
+        b.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        b.extend_from_slice(meta.as_bytes());
+        for l in &self.layers {
+            b.extend_from_slice(&(l.name.len() as u16).to_le_bytes());
+            b.extend_from_slice(l.name.as_bytes());
+            b.push(l.q() as u8);
+            b.push(l.n_in() as u8);
+            b.push(l.n_out() as u8);
+            b.push(0); // flags
+            b.extend_from_slice(&(l.n_weights as u64).to_le_bytes());
+            b.extend_from_slice(&(l.c_out as u32).to_le_bytes());
+            for p in &l.planes {
+                for r in 0..p.mxor.n_out() {
+                    b.extend_from_slice(&p.mxor.row_mask(r).to_le_bytes());
+                }
+                for &a in &p.alpha {
+                    b.extend_from_slice(&a.to_le_bytes());
+                }
+                for j in 0..p.enc.width() {
+                    b.extend_from_slice(&p.enc.column(j).to_bytes());
+                }
+            }
+        }
+        let crc = crc32(&b[4..]);
+        b.extend_from_slice(&crc.to_le_bytes());
+        b
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        ensure!(bytes.len() >= 16, "truncated fxr");
+        ensure!(&bytes[..4] == MAGIC, "bad magic");
+        let crc_stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into()?);
+        let payload = &bytes[4..bytes.len() - 4];
+        ensure!(crc32(payload) == crc_stored, "crc mismatch (corrupt fxr)");
+
+        let mut r = Reader { b: payload, i: 0 };
+        let version = r.u32()?;
+        ensure!(version == VERSION, "unsupported fxr version {version}");
+        let n_layers = r.u32()? as usize;
+        let meta_len = r.u32()? as usize;
+        let meta_bytes = r.take(meta_len)?;
+        let meta = json::parse(std::str::from_utf8(meta_bytes)?)
+            .context("fxr meta json")?;
+
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let name_len = r.u16()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+            let q = r.u8()? as usize;
+            let n_in = r.u8()? as usize;
+            let n_out = r.u8()? as usize;
+            let _flags = r.u8()?;
+            let n_weights = r.u64()? as usize;
+            let c_out = r.u32()? as usize;
+            ensure!(q >= 1 && n_in >= 1 && n_out >= n_in, "bad layer header");
+            let slices = num_slices(n_weights, n_out);
+            let col_bytes = slices.div_ceil(64) * 8;
+            let mut planes = Vec::with_capacity(q);
+            for _ in 0..q {
+                let mut masks = Vec::with_capacity(n_out);
+                for _ in 0..n_out {
+                    masks.push(r.u32()?);
+                }
+                let mxor = MXor::from_masks(n_in, masks)?;
+                let mut alpha = Vec::with_capacity(c_out);
+                for _ in 0..c_out {
+                    alpha.push(f32::from_le_bytes(r.take(4)?.try_into()?));
+                }
+                let mut enc = ColumnBits::zeros(slices, n_in);
+                for j in 0..n_in {
+                    let col = super::bitpack::BitVec::from_bytes(
+                        slices,
+                        r.take(col_bytes)?,
+                    )?;
+                    *enc.column_mut(j) = col;
+                }
+                planes.push(Plane { mxor, alpha, enc });
+            }
+            let layer = Layer { name, n_weights, c_out, planes };
+            layer.validate()?;
+            layers.push(layer);
+        }
+        ensure!(r.i == payload.len(), "trailing bytes in fxr");
+        Ok(Container { meta, layers })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated fxr at offset {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into()?))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into()?))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into()?))
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected), table-driven.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 == 1 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = !0u32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prng::Pcg32;
+
+    fn sample_layer(rng: &mut Pcg32, name: &str, q: usize, n_weights: usize) -> Layer {
+        let (n_in, n_out, c_out) = (8, 10, 4);
+        let slices = num_slices(n_weights, n_out);
+        let planes = (0..q)
+            .map(|_| {
+                let mxor = MXor::with_ntap(n_out, n_in, 2, rng).unwrap();
+                let alpha = (0..c_out).map(|_| rng.range_f32(0.05, 0.5)).collect();
+                let bits: Vec<u8> =
+                    (0..slices * n_in).map(|_| rng.bernoulli(0.5) as u8).collect();
+                let enc = ColumnBits::from_row_major(&bits, n_in).unwrap();
+                Plane { mxor, alpha, enc }
+            })
+            .collect();
+        Layer { name: name.to_string(), n_weights, c_out, planes }
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg32::seeded(1);
+        let mut c = Container::new(Json::obj(vec![("model", Json::str("toy"))]));
+        c.push(sample_layer(&mut rng, "conv1", 1, 123)).unwrap();
+        c.push(sample_layer(&mut rng, "conv2", 2, 999)).unwrap();
+        let bytes = c.to_bytes();
+        let back = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(back.layers.len(), 2);
+        assert_eq!(back.meta.get("model").as_str(), Some("toy"));
+        for (a, b) in c.layers.iter().zip(&back.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.n_weights, b.n_weights);
+            assert_eq!(a.c_out, b.c_out);
+            assert_eq!(a.q(), b.q());
+            for (pa, pb) in a.planes.iter().zip(&b.planes) {
+                assert_eq!(pa.mxor, pb.mxor);
+                assert_eq!(pa.alpha, pb.alpha);
+                assert_eq!(pa.enc, pb.enc);
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut rng = Pcg32::seeded(2);
+        let mut c = Container::new(Json::Null);
+        c.push(sample_layer(&mut rng, "l", 1, 64)).unwrap();
+        let mut bytes = c.to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        let err = Container::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("crc"), "{err}");
+    }
+
+    #[test]
+    fn truncation_and_magic_detected() {
+        let mut rng = Pcg32::seeded(3);
+        let mut c = Container::new(Json::Null);
+        c.push(sample_layer(&mut rng, "l", 1, 64)).unwrap();
+        let bytes = c.to_bytes();
+        assert!(Container::from_bytes(&bytes[..bytes.len() - 9]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Container::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn duplicate_layer_rejected() {
+        let mut rng = Pcg32::seeded(4);
+        let mut c = Container::new(Json::Null);
+        c.push(sample_layer(&mut rng, "l", 1, 10)).unwrap();
+        assert!(c.push(sample_layer(&mut rng, "l", 1, 10)).is_err());
+    }
+
+    #[test]
+    fn stats_accounting() {
+        let mut rng = Pcg32::seeded(5);
+        let mut c = Container::new(Json::Null);
+        c.push(sample_layer(&mut rng, "a", 1, 100)).unwrap(); // 10 slices × 8 bits
+        c.push(sample_layer(&mut rng, "b", 2, 95)).unwrap(); // 2 × 10 × 8
+        let st = c.stats();
+        assert_eq!(st.total_weights, 195);
+        assert_eq!(st.encrypted_bits, 80 + 160);
+        assert_eq!(st.alpha_bits, 32 * (1 * 4 + 2 * 4));
+        assert!((st.bits_per_weight - 240.0 / 195.0).abs() < 1e-12);
+        assert!(
+            (st.compression_ratio_weights_only - 32.0 * 195.0 / 240.0).abs() < 1e-9
+        );
+        assert!(st.compression_ratio_with_alpha < st.compression_ratio_weights_only);
+    }
+
+    #[test]
+    fn layer_validate_rejects_mismatches() {
+        let mut rng = Pcg32::seeded(6);
+        let mut l = sample_layer(&mut rng, "x", 1, 100);
+        l.planes[0].alpha.pop();
+        assert!(l.validate().is_err());
+        let mut l2 = sample_layer(&mut rng, "y", 2, 100);
+        l2.planes[1].mxor = MXor::with_ntap(12, 8, 2, &mut rng).unwrap();
+        assert!(l2.validate().is_err());
+    }
+
+    #[test]
+    fn file_save_load() {
+        let mut rng = Pcg32::seeded(7);
+        let mut c = Container::new(Json::obj(vec![("k", Json::num(1))]));
+        c.push(sample_layer(&mut rng, "l", 1, 50)).unwrap();
+        let path = std::env::temp_dir().join("flexor_test_roundtrip.fxr");
+        c.save(&path).unwrap();
+        let back = Container::load(&path).unwrap();
+        assert_eq!(back.layers[0].n_weights, 50);
+        std::fs::remove_file(&path).ok();
+    }
+}

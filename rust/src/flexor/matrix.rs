@@ -1,0 +1,247 @@
+//! The XOR-gate network `M⊕ ∈ {0,1}^{N_out×N_in}` (paper §2).
+//!
+//! Rows are stored as `u32` tap masks (`N_in ≤ 32` everywhere in the paper;
+//! enforced), which makes the decryption engine's inner loop a handful of
+//! word ops. Matrices interop with the Python compile path through the
+//! row-list JSON in `artifacts/<cfg>/meta.json`, so training and Rust
+//! inference are guaranteed to use the identical network.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::substrate::json::Json;
+use crate::substrate::prng::Pcg32;
+
+/// Maximum supported `N_in` (paper uses ≤ 20).
+pub const MAX_N_IN: usize = 32;
+
+/// An XOR-gate network: `y = M⊕ x` over GF(2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MXor {
+    n_out: usize,
+    n_in: usize,
+    /// Tap mask per output row; bit `j` set ⇔ input `x_j` feeds this row.
+    rows: Vec<u32>,
+}
+
+impl MXor {
+    /// Build from explicit tap masks.
+    pub fn from_masks(n_in: usize, rows: Vec<u32>) -> Result<Self> {
+        ensure!(n_in >= 1 && n_in <= MAX_N_IN, "n_in {n_in} out of range");
+        ensure!(!rows.is_empty(), "M⊕ needs at least one row");
+        let valid = if n_in == 32 { u32::MAX } else { (1u32 << n_in) - 1 };
+        for (r, &m) in rows.iter().enumerate() {
+            ensure!(m & !valid == 0, "row {r} has taps beyond n_in");
+            ensure!(m != 0, "row {r} is all-zero (decodes a constant)");
+        }
+        Ok(MXor { n_out: rows.len(), n_in, rows })
+    }
+
+    /// Build from a dense 0/1 row-major matrix (the meta.json layout).
+    pub fn from_rows(rows01: &[Vec<u8>]) -> Result<Self> {
+        ensure!(!rows01.is_empty(), "empty M⊕");
+        let n_in = rows01[0].len();
+        let mut masks = Vec::with_capacity(rows01.len());
+        for (i, row) in rows01.iter().enumerate() {
+            ensure!(row.len() == n_in, "ragged row {i}");
+            let mut m = 0u32;
+            for (j, &v) in row.iter().enumerate() {
+                match v {
+                    0 => {}
+                    1 => m |= 1 << j,
+                    _ => bail!("row {i} has non-binary entry {v}"),
+                }
+            }
+            masks.push(m);
+        }
+        Self::from_masks(n_in, masks)
+    }
+
+    /// Parse the meta.json serialization: `[[0,1,...], ...]`.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let rows = v.as_arr().ok_or_else(|| anyhow::anyhow!("M⊕ not an array"))?;
+        let mut rows01 = Vec::with_capacity(rows.len());
+        for r in rows {
+            let row = r
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("M⊕ row not an array"))?
+                .iter()
+                .map(|x| x.as_i64().unwrap_or(-1) as u8)
+                .collect::<Vec<_>>();
+            rows01.push(row);
+        }
+        Self::from_rows(&rows01)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.rows.iter().map(|&m| {
+            Json::arr((0..self.n_in).map(|j| Json::num(((m >> j) & 1) as f64)))
+        }))
+    }
+
+    /// Random iid-Bernoulli(1/2) fill with non-zero rows (paper Fig. 4).
+    pub fn random(n_out: usize, n_in: usize, rng: &mut Pcg32) -> Result<Self> {
+        ensure!(n_in >= 1 && n_in <= MAX_N_IN);
+        let valid = if n_in == 32 { u32::MAX } else { (1u32 << n_in) - 1 };
+        let rows = (0..n_out)
+            .map(|_| loop {
+                let m = rng.next_u32() & valid;
+                if m != 0 {
+                    break m;
+                }
+            })
+            .collect();
+        Self::from_masks(n_in, rows)
+    }
+
+    /// Exactly `n_tap` taps per row (paper §4 technique 1, `N_tap=2`).
+    pub fn with_ntap(n_out: usize, n_in: usize, n_tap: usize, rng: &mut Pcg32) -> Result<Self> {
+        ensure!(n_tap >= 1 && n_tap <= n_in, "n_tap {n_tap} not in [1,{n_in}]");
+        let rows = (0..n_out)
+            .map(|_| {
+                rng.choose_k(n_in, n_tap)
+                    .into_iter()
+                    .fold(0u32, |m, j| m | (1 << j))
+            })
+            .collect();
+        Self::from_masks(n_in, rows)
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.n_out
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    pub fn row_mask(&self, r: usize) -> u32 {
+        self.rows[r]
+    }
+
+    pub fn rows(&self) -> &[u32] {
+        &self.rows
+    }
+
+    /// Taps (number of 1s) in row `r`.
+    pub fn n_tap(&self, r: usize) -> usize {
+        self.rows[r].count_ones() as usize
+    }
+
+    /// The constant `(-1)^(n_tap-1)` parity bit per row (1 = flip sign).
+    /// A row with even tap count has parity 1: XOR of its bits is negated
+    /// in the ±1 mapping (Eq. 4's `(-1)^{n-1}` factor).
+    pub fn parity_bit(&self, r: usize) -> bool {
+        (self.n_tap(r) - 1) % 2 == 1
+    }
+
+    /// Decrypt a single slice given input bits (bit j of `x` = 1 ⇔ the
+    /// stored sign is negative). Returns output "negative" bits.
+    /// Reference semantics for the fast engine in `decrypt.rs`.
+    pub fn decrypt_slice(&self, x: u32) -> u64 {
+        let mut out = 0u64;
+        for (r, &mask) in self.rows.iter().enumerate() {
+            let parity = (x & mask).count_ones() as usize + self.n_tap(r) - 1;
+            if parity % 2 == 1 {
+                out |= 1 << r;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_example() -> MXor {
+        // Appendix A's 6×4 example.
+        MXor::from_rows(&[
+            vec![1, 0, 1, 1],
+            vec![1, 1, 0, 0],
+            vec![1, 1, 1, 0],
+            vec![0, 0, 1, 1],
+            vec![0, 1, 0, 1],
+            vec![0, 1, 1, 1],
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn from_rows_masks() {
+        let m = paper_example();
+        assert_eq!(m.n_out(), 6);
+        assert_eq!(m.n_in(), 4);
+        assert_eq!(m.row_mask(0), 0b1101); // x1, x3, x4 (bit0 = x1)
+        assert_eq!(m.row_mask(1), 0b0011);
+        assert_eq!(m.n_tap(0), 3);
+        assert_eq!(m.n_tap(1), 2);
+    }
+
+    #[test]
+    fn parity_bits() {
+        let m = paper_example();
+        // 3 taps → (-1)^2 = +1 → no flip; 2 taps → (-1)^1 → flip.
+        assert!(!m.parity_bit(0));
+        assert!(m.parity_bit(1));
+    }
+
+    #[test]
+    fn decrypt_slice_appendix_a() {
+        // Appendix A states y = M⊕ x over GF(2) in the paper's bit
+        // convention (bit 1 ↔ sign +1, "0 is replaced with -1").
+        // `decrypt_slice` uses the crate's negative-bit convention
+        // (bit 1 ↔ sign −1), so convert: p = ¬x (within N_in / N_out).
+        let m = paper_example();
+        for p in 0u32..16 {
+            let x_neg = !p & 0xF;
+            let out_neg = m.decrypt_slice(x_neg);
+            for (r, taps) in [(0, [0, 2, 3].as_slice()), (1, &[0, 1]), (2, &[0, 1, 2]),
+                              (3, &[2, 3]), (4, &[1, 3]), (5, &[1, 2, 3])] {
+                let want_pos = taps.iter().fold(0u32, |acc, &j| acc ^ ((p >> j) & 1));
+                let got_pos = 1 - ((out_neg >> r) & 1);
+                assert_eq!(got_pos, want_pos as u64, "p={p:04b} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn decrypt_slice_flips_even_tap_rows() {
+        // Single row, 2 taps, input 0 ⇒ GF(2) XOR is 0 but the ±1-domain
+        // convention stores the "negative" bit: (-1)^(2-1)·(+1)(+1) = -1.
+        // decrypt_slice reports XOR-with-parity, i.e. bit set.
+        let m = MXor::from_masks(2, vec![0b11]).unwrap();
+        assert_eq!(m.decrypt_slice(0b00) & 1, 1);
+        assert_eq!(m.decrypt_slice(0b01) & 1, 0);
+        assert_eq!(m.decrypt_slice(0b11) & 1, 1);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(MXor::from_masks(4, vec![0]).is_err()); // zero row
+        assert!(MXor::from_masks(4, vec![0b10000]).is_err()); // tap ≥ n_in
+        assert!(MXor::from_masks(0, vec![1]).is_err());
+        assert!(MXor::from_masks(33, vec![1]).is_err());
+        assert!(MXor::from_rows(&[vec![0, 2]]).is_err()); // non-binary
+        assert!(MXor::from_rows(&[vec![1, 0], vec![1]]).is_err()); // ragged
+    }
+
+    #[test]
+    fn generation_shapes_and_determinism() {
+        let mut r1 = Pcg32::seeded(1);
+        let mut r2 = Pcg32::seeded(1);
+        let a = MXor::with_ntap(20, 8, 2, &mut r1).unwrap();
+        let b = MXor::with_ntap(20, 8, 2, &mut r2).unwrap();
+        assert_eq!(a, b);
+        assert!(a.rows().iter().all(|m| m.count_ones() == 2));
+        let c = MXor::random(20, 8, &mut r1).unwrap();
+        assert!(c.rows().iter().all(|&m| m != 0 && m < (1 << 8)));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = paper_example();
+        let j = m.to_json();
+        let back = MXor::from_json(&j).unwrap();
+        assert_eq!(m, back);
+    }
+}

@@ -1,0 +1,49 @@
+//! FleXOR core: the paper's encryption/decryption system in Rust.
+//!
+//! * [`matrix`] — the XOR-gate network `M⊕` (construction, Hamming
+//!   analysis, JSON interop with the Python compile path);
+//! * [`bitpack`] — packed bit vectors (the storage format of encrypted
+//!   weights);
+//! * [`decrypt`] — the bit-level decryption engine (word-parallel GF(2)
+//!   mat-vec: 64 slices per XOR op — the CPU analogue of the paper's
+//!   parallel XOR gates);
+//! * [`binarycodes`] — binary-code weight reconstruction `Σ α_i b_i` and
+//!   multiply-free dot products;
+//! * [`fxr`] — the `.fxr` encrypted checkpoint container;
+//! * [`analysis`] — output-diversity / compression / gate-cost models
+//!   backing the paper's §2 claims.
+
+pub mod matrix;
+pub mod search;
+pub mod bitpack;
+pub mod decrypt;
+pub mod binarycodes;
+pub mod fxr;
+pub mod analysis;
+
+pub use bitpack::BitVec;
+pub use decrypt::Decryptor;
+pub use matrix::MXor;
+
+/// Effective fractional rate: `q · N_in / N_out` bits per weight.
+pub fn bits_per_weight(q: usize, n_in: usize, n_out: usize) -> f64 {
+    q as f64 * n_in as f64 / n_out as f64
+}
+
+/// Number of `N_out`-bit slices covering `n_weights` quantized bits.
+pub fn num_slices(n_weights: usize, n_out: usize) -> usize {
+    n_weights.div_ceil(n_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_math() {
+        assert_eq!(bits_per_weight(1, 8, 10), 0.8);
+        assert_eq!(bits_per_weight(2, 8, 20), 0.8);
+        assert_eq!(num_slices(100, 10), 10);
+        assert_eq!(num_slices(101, 10), 11);
+    }
+}

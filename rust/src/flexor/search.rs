@@ -1,0 +1,315 @@
+//! Fractional-rate allocation search — the tool version of Table 2 (and of
+//! the paper's closing "exciting research topic": how many bits should each
+//! layer get when rates can be fractional?).
+//!
+//! Given layer groups (parameter counts) and a candidate `N_in` menu at
+//! fixed `N_out`, find the per-group assignment minimizing predicted
+//! accuracy loss subject to an average bits/weight budget — the fractional
+//! analogue of HAQ-style mixed-precision search, tractable exactly because
+//! the search space is (menu)^groups with small groups.
+//!
+//! The accuracy proxy is pluggable ([`Sensitivity`]): unit tests use a
+//! synthetic diminishing-returns model; the `rate_search` example measures
+//! real proxy losses with short trainings through the coordinator.
+
+use anyhow::{ensure, Result};
+
+/// One group of layers sharing an M⊕ configuration.
+#[derive(Clone, Debug)]
+pub struct Group {
+    pub name: String,
+    pub weights: usize,
+}
+
+/// Predicted accuracy penalty (lower is better) for giving `group` a rate
+/// of `bits_per_weight`. Implementations must be monotone non-increasing
+/// in the rate for the search's dominance pruning to be exact.
+pub trait Sensitivity {
+    fn penalty(&self, group: usize, bits_per_weight: f64) -> f64;
+}
+
+/// Diminishing-returns synthetic model: penalty = c_g · 2^(−rate/τ_g).
+/// Useful for tests and as a prior when no measurements exist; c_g defaults
+/// to 1/√weights (big layers are more redundant — the paper's Table 2
+/// observation).
+pub struct PriorModel {
+    pub c: Vec<f64>,
+    pub tau: f64,
+}
+
+impl PriorModel {
+    pub fn from_groups(groups: &[Group], tau: f64) -> Self {
+        let c = groups
+            .iter()
+            .map(|g| 1.0 / (g.weights as f64).sqrt().max(1.0))
+            .collect();
+        PriorModel { c, tau }
+    }
+}
+
+impl Sensitivity for PriorModel {
+    fn penalty(&self, group: usize, bits_per_weight: f64) -> f64 {
+        self.c[group] * (-bits_per_weight / self.tau).exp2()
+    }
+}
+
+/// A solved assignment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assignment {
+    /// Chosen N_in per group (same order as the input groups).
+    pub n_in: Vec<usize>,
+    pub avg_bits_per_weight: f64,
+    pub total_penalty: f64,
+}
+
+/// Exhaustive search (exact) — the menu and group counts of Table 2 are
+/// tiny (≤ 20 options, ≤ 8 groups ⇒ ≤ 2.6e10 worst case; we prune by
+/// bound). For larger instances use [`search_greedy`].
+pub fn search_exact(
+    groups: &[Group],
+    menu: &[usize],
+    n_out: usize,
+    q: usize,
+    budget_bpw: f64,
+    model: &dyn Sensitivity,
+) -> Result<Assignment> {
+    ensure!(!groups.is_empty() && !menu.is_empty());
+    ensure!(menu.iter().all(|&n| n >= 1 && n <= n_out));
+    let total_w: f64 = groups.iter().map(|g| g.weights as f64).sum();
+    let mut best: Option<Assignment> = None;
+    let mut chosen = vec![0usize; groups.len()];
+
+    fn rec(
+        g: usize,
+        groups: &[Group],
+        menu: &[usize],
+        n_out: usize,
+        q: usize,
+        budget_bits: f64,
+        bits_so_far: f64,
+        pen_so_far: f64,
+        chosen: &mut Vec<usize>,
+        model: &dyn Sensitivity,
+        total_w: f64,
+        best: &mut Option<Assignment>,
+    ) {
+        if let Some(b) = best {
+            if pen_so_far >= b.total_penalty {
+                return; // penalties only grow
+            }
+        }
+        if g == groups.len() {
+            if bits_so_far <= budget_bits + 1e-9 {
+                let a = Assignment {
+                    n_in: chosen.clone(),
+                    avg_bits_per_weight: bits_so_far / total_w,
+                    total_penalty: pen_so_far,
+                };
+                if best.as_ref().map_or(true, |b| a.total_penalty < b.total_penalty) {
+                    *best = Some(a);
+                }
+            }
+            return;
+        }
+        // cheapest possible completion (min menu) must fit the budget
+        let min_rate = *menu.iter().min().unwrap() as f64 * q as f64 / n_out as f64;
+        let min_rest: f64 = groups[g..]
+            .iter()
+            .map(|grp| min_rate * grp.weights as f64)
+            .sum();
+        if bits_so_far + min_rest > budget_bits + 1e-9 {
+            return;
+        }
+        for &n_in in menu {
+            let rate = n_in as f64 * q as f64 / n_out as f64;
+            let bits = bits_so_far + rate * groups[g].weights as f64;
+            chosen[g] = n_in;
+            rec(
+                g + 1,
+                groups,
+                menu,
+                n_out,
+                q,
+                budget_bits,
+                bits,
+                pen_so_far + model.penalty(g, rate),
+                chosen,
+                model,
+                total_w,
+                best,
+            );
+        }
+    }
+
+    rec(
+        0,
+        groups,
+        menu,
+        n_out,
+        q,
+        budget_bpw * total_w,
+        0.0,
+        0.0,
+        &mut chosen,
+        model,
+        total_w,
+        &mut best,
+    );
+    best.ok_or_else(|| anyhow::anyhow!("budget {budget_bpw} b/w infeasible with this menu"))
+}
+
+/// Greedy refinement: start every group at the max rate, repeatedly lower
+/// the group whose penalty-increase per bit saved is smallest until the
+/// budget holds. O(groups² · menu) — fine for hundreds of groups.
+pub fn search_greedy(
+    groups: &[Group],
+    menu: &[usize],
+    n_out: usize,
+    q: usize,
+    budget_bpw: f64,
+    model: &dyn Sensitivity,
+) -> Result<Assignment> {
+    ensure!(!groups.is_empty() && !menu.is_empty());
+    let mut sorted = menu.to_vec();
+    sorted.sort_unstable();
+    let total_w: f64 = groups.iter().map(|g| g.weights as f64).sum();
+    let rate = |n_in: usize| n_in as f64 * q as f64 / n_out as f64;
+
+    // index into `sorted` per group, start at max
+    let mut level = vec![sorted.len() - 1; groups.len()];
+    let bits = |levels: &[usize]| -> f64 {
+        levels
+            .iter()
+            .zip(groups)
+            .map(|(&l, g)| rate(sorted[l]) * g.weights as f64)
+            .sum()
+    };
+    let mut cur_bits = bits(&level);
+    let budget_bits = budget_bpw * total_w;
+    while cur_bits > budget_bits + 1e-9 {
+        // pick the best single-step reduction
+        let mut best: Option<(usize, f64)> = None;
+        for g in 0..groups.len() {
+            if level[g] == 0 {
+                continue;
+            }
+            let r_hi = rate(sorted[level[g]]);
+            let r_lo = rate(sorted[level[g] - 1]);
+            let dpen = model.penalty(g, r_lo) - model.penalty(g, r_hi);
+            let dbits = (r_hi - r_lo) * groups[g].weights as f64;
+            let score = dpen / dbits.max(1e-12);
+            if best.map_or(true, |(_, s)| score < s) {
+                best = Some((g, score));
+            }
+        }
+        let Some((g, _)) = best else {
+            anyhow::bail!("budget {budget_bpw} b/w infeasible with this menu");
+        };
+        cur_bits -= (rate(sorted[level[g]]) - rate(sorted[level[g] - 1]))
+            * groups[g].weights as f64;
+        level[g] -= 1;
+    }
+    let n_in: Vec<usize> = level.iter().map(|&l| sorted[l]).collect();
+    let total_penalty = n_in
+        .iter()
+        .enumerate()
+        .map(|(g, &n)| model.penalty(g, rate(n)))
+        .sum();
+    Ok(Assignment {
+        n_in,
+        avg_bits_per_weight: cur_bits / total_w,
+        total_penalty,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table2_groups() -> Vec<Group> {
+        // the paper's Table 2 layer groups (ResNet-20)
+        vec![
+            Group { name: "layer2-7".into(), weights: 13_500 },
+            Group { name: "layer8-13".into(), weights: 45_000 },
+            Group { name: "layer14-19".into(), weights: 180_000 },
+        ]
+    }
+
+    #[test]
+    fn exact_respects_budget_and_prefers_small_nin_for_big_groups() {
+        let groups = table2_groups();
+        let model = PriorModel::from_groups(&groups, 0.35);
+        let menu: Vec<usize> = (4..=20).collect();
+        let a = search_exact(&groups, &menu, 20, 1, 0.5, &model).unwrap();
+        assert!(a.avg_bits_per_weight <= 0.5 + 1e-9);
+        // Table 2's qualitative structure: the big third group gets the
+        // smallest N_in of the three
+        assert!(a.n_in[2] <= a.n_in[0]);
+        assert!(a.n_in[2] <= a.n_in[1]);
+    }
+
+    #[test]
+    fn exact_infeasible_budget_errors() {
+        let groups = table2_groups();
+        let model = PriorModel::from_groups(&groups, 0.35);
+        assert!(search_exact(&groups, &[8, 12], 20, 1, 0.1, &model).is_err());
+    }
+
+    #[test]
+    fn greedy_matches_exact_on_small_instances() {
+        let groups = table2_groups();
+        let model = PriorModel::from_groups(&groups, 0.35);
+        let menu = [4usize, 8, 12, 16, 20];
+        for budget in [0.4, 0.5, 0.6, 0.8] {
+            let e = search_exact(&groups, &menu, 20, 1, budget, &model).unwrap();
+            let g = search_greedy(&groups, &menu, 20, 1, budget, &model).unwrap();
+            assert!(g.avg_bits_per_weight <= budget + 1e-9);
+            // greedy is near-optimal on convex penalties; allow 5% slack
+            assert!(
+                g.total_penalty <= e.total_penalty * 1.05 + 1e-12,
+                "budget {budget}: greedy {} vs exact {}",
+                g.total_penalty,
+                e.total_penalty
+            );
+        }
+    }
+
+    #[test]
+    fn q2_budget_accounting() {
+        let groups = table2_groups();
+        let model = PriorModel::from_groups(&groups, 0.35);
+        let a = search_exact(&groups, &[4, 8, 12, 16, 20], 20, 2, 1.2, &model).unwrap();
+        // q=2 doubles the rate per N_in choice
+        let recompute: f64 = a
+            .n_in
+            .iter()
+            .zip(&groups)
+            .map(|(&n, g)| 2.0 * n as f64 / 20.0 * g.weights as f64)
+            .sum::<f64>()
+            / groups.iter().map(|g| g.weights as f64).sum::<f64>();
+        assert!((recompute - a.avg_bits_per_weight).abs() < 1e-9);
+        assert!(a.avg_bits_per_weight <= 1.2 + 1e-9);
+    }
+
+    #[test]
+    fn single_group_budget_binds_exactly() {
+        let groups = vec![Group { name: "g".into(), weights: 1000 }];
+        let model = PriorModel::from_groups(&groups, 0.3);
+        let a = search_exact(&groups, &(1..=20).collect::<Vec<_>>(), 20, 1, 0.75, &model)
+            .unwrap();
+        // best monotone choice = largest N_in within budget = 15 (0.75 b/w)
+        assert_eq!(a.n_in, vec![15]);
+    }
+
+    #[test]
+    fn greedy_large_instance_terminates() {
+        let groups: Vec<Group> = (0..64)
+            .map(|i| Group { name: format!("g{i}"), weights: 1000 * (i + 1) })
+            .collect();
+        let model = PriorModel::from_groups(&groups, 0.4);
+        let menu: Vec<usize> = (2..=20).collect();
+        let a = search_greedy(&groups, &menu, 20, 1, 0.5, &model).unwrap();
+        assert!(a.avg_bits_per_weight <= 0.5 + 1e-9);
+        assert_eq!(a.n_in.len(), 64);
+    }
+}

@@ -1,0 +1,14 @@
+//! Pure-Rust binary-code inference engine (the deployment path of Fig. 1:
+//! decrypt stored bits with XOR gates, then compute with binary codes —
+//! no Python, no XLA).
+//!
+//! * [`tensor`] — minimal NHWC f32 tensor ops (conv2d via im2col + blocked
+//!   GEMM, maxpool, global avgpool, batchnorm in eval mode, dense, relu);
+//! * [`model`]  — rebuilds the model graphs (mlp / lenet5 / resnet family)
+//!   from an exported bundle (`.fxr` + FP sidecar) and runs batched
+//!   forward passes whose logits match the AOT eval HLO.
+
+pub mod model;
+pub mod tensor;
+
+pub use model::InferenceModel;

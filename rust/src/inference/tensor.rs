@@ -1,0 +1,371 @@
+//! Minimal NHWC f32 tensor ops for the inference engine.
+//!
+//! Layout conventions match the Python side exactly: activations NHWC,
+//! conv weights HWIO, dense (in, out). Conv is im2col + a blocked GEMM
+//! (the hot path; see EXPERIMENTS.md §Perf).
+
+/// Dense row-major tensor with explicit dims.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(),
+                   "dims {dims:?} vs len {}", data.len());
+        Tensor { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Tensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+}
+
+/// `same`-padded stride-s conv: x (N,H,W,Ci) ⊛ w (kh,kw,Ci,Co) → (N,H',W',Co).
+pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
+    assert_eq!(x.rank(), 4, "conv input must be NHWC");
+    assert_eq!(w.rank(), 4, "conv weight must be HWIO");
+    let (n, h, wd, ci) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let (kh, kw, wci, co) = (w.dims[0], w.dims[1], w.dims[2], w.dims[3]);
+    assert_eq!(ci, wci, "channel mismatch");
+    // SAME padding (matches lax conv with padding="SAME")
+    let ho = h.div_ceil(stride);
+    let wo = wd.div_ceil(stride);
+    let pad_h = ((ho - 1) * stride + kh).saturating_sub(h);
+    let pad_w = ((wo - 1) * stride + kw).saturating_sub(wd);
+    let (pt, pl) = (pad_h / 2, pad_w / 2);
+
+    // im2col: (n*ho*wo, kh*kw*ci)
+    let k = kh * kw * ci;
+    let rows = n * ho * wo;
+    let mut col = vec![0.0f32; rows * k];
+    let mut r = 0usize;
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let base = r * k;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pt as isize;
+                    if iy < 0 || iy >= h as isize {
+                        r += 0; // stays zero
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pl as isize;
+                        if ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        let src = ((b * h + iy as usize) * wd + ix as usize) * ci;
+                        let dst = base + (ky * kw + kx) * ci;
+                        col[dst..dst + ci]
+                            .copy_from_slice(&x.data[src..src + ci]);
+                    }
+                }
+                r += 1;
+            }
+        }
+    }
+    // GEMM: (rows × k) · (k × co)
+    let out = gemm(&col, rows, k, &w.data, co);
+    Tensor::new(vec![n, ho, wo, co], out)
+}
+
+/// Blocked (cache-tiled) GEMM: a (m×k) row-major · b (k×n) row-major.
+pub fn gemm(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    const MB: usize = 32;
+    const KB: usize = 64;
+    for i0 in (0..m).step_by(MB) {
+        for k0 in (0..k).step_by(KB) {
+            let i1 = (i0 + MB).min(m);
+            let k1 = (k0 + KB).min(k);
+            for i in i0..i1 {
+                let crow = &mut c[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let av = a[i * k + kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// 2×2 stride-2 max pool (VALID), matching nn.max_pool defaults.
+pub fn max_pool2(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let (ho, wo) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(vec![n, ho, wo, c]);
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ch in 0..c {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let v = x.data
+                                [((b * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ch];
+                            m = m.max(v);
+                        }
+                    }
+                    out.data[((b * ho + oy) * wo + ox) * c + ch] = m;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool NHWC → (N, C).
+pub fn avg_pool_global(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let mut out = Tensor::zeros(vec![n, c]);
+    let scale = 1.0 / (h * w) as f32;
+    for b in 0..n {
+        for y in 0..h {
+            for xx in 0..w {
+                for ch in 0..c {
+                    out.data[b * c + ch] += x.data[((b * h + y) * w + xx) * c + ch];
+                }
+            }
+        }
+    }
+    for v in &mut out.data {
+        *v *= scale;
+    }
+    out
+}
+
+/// Eval-mode batch norm over the last axis.
+pub fn batch_norm_eval(x: &mut Tensor, scale: &[f32], bias: &[f32],
+                       mean: &[f32], var: &[f32], eps: f32) {
+    let c = *x.dims.last().unwrap();
+    assert!(scale.len() == c && bias.len() == c && mean.len() == c && var.len() == c);
+    // precompute a*x + b form
+    let a: Vec<f32> = (0..c).map(|i| scale[i] / (var[i] + eps).sqrt()).collect();
+    let b: Vec<f32> = (0..c).map(|i| bias[i] - mean[i] * a[i]).collect();
+    for (i, v) in x.data.iter_mut().enumerate() {
+        let ch = i % c;
+        *v = *v * a[ch] + b[ch];
+    }
+}
+
+pub fn relu(x: &mut Tensor) {
+    for v in &mut x.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Dense: x (N, In) · w (In, Out) + b.
+pub fn dense(x: &Tensor, w: &Tensor, bias: Option<&[f32]>) -> Tensor {
+    let (n, d_in) = (x.dims[0], x.dims[1]);
+    let (wi, wo) = (w.dims[0], w.dims[1]);
+    assert_eq!(d_in, wi);
+    let mut out = gemm(&x.data, n, d_in, &w.data, wo);
+    if let Some(b) = bias {
+        assert_eq!(b.len(), wo);
+        for r in 0..n {
+            for c in 0..wo {
+                out[r * wo + c] += b[c];
+            }
+        }
+    }
+    Tensor::new(vec![n, wo], out)
+}
+
+/// Elementwise add (residual connections).
+pub fn add_inplace(x: &mut Tensor, y: &Tensor) {
+    assert_eq!(x.dims, y.dims);
+    for (a, b) in x.data.iter_mut().zip(&y.data) {
+        *a += b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::ptest::check_msg;
+
+    /// Naive direct convolution (reference semantics for the property test).
+    fn conv2d_naive(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
+        let (n, h, wd, ci) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+        let (kh, kw, _, co) = (w.dims[0], w.dims[1], w.dims[2], w.dims[3]);
+        let ho = h.div_ceil(stride);
+        let wo = wd.div_ceil(stride);
+        let pad_h = ((ho - 1) * stride + kh).saturating_sub(h);
+        let pad_w = ((wo - 1) * stride + kw).saturating_sub(wd);
+        let (pt, pl) = (pad_h / 2, pad_w / 2);
+        let mut out = Tensor::zeros(vec![n, ho, wo, co]);
+        for b in 0..n {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    for oc in 0..co {
+                        let mut acc = 0.0f32;
+                        for ky in 0..kh {
+                            for kx in 0..kw {
+                                let iy = (oy * stride + ky) as isize - pt as isize;
+                                let ix = (ox * stride + kx) as isize - pl as isize;
+                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= wd as isize {
+                                    continue;
+                                }
+                                for ic in 0..ci {
+                                    acc += x.data[((b * h + iy as usize) * wd
+                                        + ix as usize) * ci + ic]
+                                        * w.data[((ky * kw + kx) * ci + ic) * co + oc];
+                                }
+                            }
+                        }
+                        out.data[((b * ho + oy) * wo + ox) * co + oc] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv2d_matches_naive_reference() {
+        check_msg("im2col conv == naive conv", 25, |g| {
+            let n = g.usize_in(1, 3);
+            let h = g.usize_in(2, 9);
+            let wd = g.usize_in(2, 9);
+            let ci = g.usize_in(1, 4);
+            let co = g.usize_in(1, 5);
+            let k = [1usize, 3, 5][g.usize_in(0, 3)];
+            let stride = 1 + g.usize_in(0, 2);
+            let x = Tensor::new(
+                vec![n, h, wd, ci],
+                (0..n * h * wd * ci).map(|_| g.normal()).collect(),
+            );
+            let w = Tensor::new(
+                vec![k, k, ci, co],
+                (0..k * k * ci * co).map(|_| g.normal()).collect(),
+            );
+            let fast = conv2d(&x, &w, stride);
+            let slow = conv2d_naive(&x, &w, stride);
+            if fast.dims != slow.dims {
+                return Err(format!("dims {:?} vs {:?}", fast.dims, slow.dims));
+            }
+            for (i, (a, b)) in fast.data.iter().zip(&slow.data).enumerate() {
+                if (a - b).abs() > 1e-3 * (1.0 + b.abs()) {
+                    return Err(format!("elem {i}: {a} vs {b} (k={k} s={stride})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        check_msg("blocked gemm == naive", 30, |g| {
+            let m = g.usize_in(1, 40);
+            let k = g.usize_in(1, 80);
+            let n = g.usize_in(1, 40);
+            let a: Vec<f32> = (0..m * k).map(|_| g.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| g.normal()).collect();
+            let fast = gemm(&a, m, k, &b, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f32 = (0..k).map(|kk| a[i * k + kk] * b[kk * n + j]).sum();
+                    let got = fast[i * n + j];
+                    if (got - want).abs() > 1e-3 * (1.0 + want.abs()) {
+                        return Err(format!("({i},{j}): {got} vs {want}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemm_small() {
+        // [1 2; 3 4] · [5 6; 7 8] = [19 22; 43 50]
+        let c = gemm(&[1.0, 2.0, 3.0, 4.0], 2, 2, &[5.0, 6.0, 7.0, 8.0], 2);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1×1 conv with identity weights = passthrough
+        let x = Tensor::new(vec![1, 2, 2, 2],
+                            vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let w = Tensor::new(vec![1, 1, 2, 2], vec![1., 0., 0., 1.]);
+        let y = conv2d(&x, &w, 1);
+        assert_eq!(y.dims, vec![1, 2, 2, 2]);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv_same_padding_sums() {
+        // 3×3 all-ones kernel over all-ones input: interior = 9, corner = 4
+        let x = Tensor::new(vec![1, 4, 4, 1], vec![1.0; 16]);
+        let w = Tensor::new(vec![3, 3, 1, 1], vec![1.0; 9]);
+        let y = conv2d(&x, &w, 1);
+        assert_eq!(y.dims, vec![1, 4, 4, 1]);
+        assert_eq!(y.data[0], 4.0); // corner
+        assert_eq!(y.data[5], 9.0); // interior
+    }
+
+    #[test]
+    fn conv_stride2_shape() {
+        let x = Tensor::zeros(vec![2, 8, 8, 3]);
+        let w = Tensor::zeros(vec![3, 3, 3, 5]);
+        let y = conv2d(&x, &w, 2);
+        assert_eq!(y.dims, vec![2, 4, 4, 5]);
+    }
+
+    #[test]
+    fn maxpool_and_avgpool() {
+        let x = Tensor::new(vec![1, 2, 2, 1], vec![1.0, 5.0, 3.0, 2.0]);
+        let m = max_pool2(&x);
+        assert_eq!(m.dims, vec![1, 1, 1, 1]);
+        assert_eq!(m.data, vec![5.0]);
+        let a = avg_pool_global(&x);
+        assert_eq!(a.dims, vec![1, 1]);
+        assert_eq!(a.data, vec![2.75]);
+    }
+
+    #[test]
+    fn batchnorm_eval_formula() {
+        let mut x = Tensor::new(vec![1, 1, 1, 2], vec![2.0, -1.0]);
+        batch_norm_eval(&mut x, &[1.0, 2.0], &[0.5, 0.0], &[1.0, -1.0],
+                        &[4.0, 1.0], 0.0);
+        // ch0: (2-1)/2*1 + 0.5 = 1.0 ; ch1: (-1 - -1)/1*2 + 0 = 0
+        assert!((x.data[0] - 1.0).abs() < 1e-6);
+        assert!((x.data[1] - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dense_with_bias() {
+        let x = Tensor::new(vec![1, 2], vec![1.0, 2.0]);
+        let w = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let y = dense(&x, &w, Some(&[10.0, 20.0]));
+        assert_eq!(y.data, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn relu_and_add() {
+        let mut x = Tensor::new(vec![2], vec![-1.0, 2.0]);
+        relu(&mut x);
+        assert_eq!(x.data, vec![0.0, 2.0]);
+        add_inplace(&mut x, &Tensor::new(vec![2], vec![1.0, 1.0]));
+        assert_eq!(x.data, vec![1.0, 3.0]);
+    }
+}

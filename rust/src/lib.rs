@@ -1,0 +1,39 @@
+//! # FleXOR: Trainable Fractional Quantization — full-system reproduction
+//!
+//! Rust coordinator (L3) of the three-layer stack reproducing
+//! *FleXOR: Trainable Fractional Quantization* (Lee et al., NeurIPS 2020).
+//!
+//! The paper compresses binary-coding-quantized DNN weights **below one bit
+//! per weight** by storing `N_in` "encrypted" bits per slice and
+//! reconstructing `N_out` quantized bits through a fixed random XOR-gate
+//! network `M⊕ ∈ {0,1}^{N_out×N_in}` — trained end-to-end with a
+//! tanh-derived custom gradient.
+//!
+//! Layer map (see `DESIGN.md`):
+//! * **L1/L2** (build-time Python, `python/compile/`): Pallas kernels + JAX
+//!   model/optimizer, lowered once to HLO text artifacts.
+//! * **L3** (this crate): training coordinator, schedules, synthetic data
+//!   substrates, the PJRT runtime that executes the artifacts, the
+//!   bit-level XOR **decryption engine**, the `.fxr` encrypted checkpoint
+//!   container, and a pure-Rust binary-code inference engine — i.e. the
+//!   paper's deployment story (Fig. 1–3, Algorithm 1) implemented with
+//!   word-parallel XOR/popcount.
+//!
+//! Quick start:
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+pub mod substrate;
+pub mod flexor;
+pub mod runtime;
+pub mod coordinator;
+pub mod data;
+pub mod inference;
+pub mod config;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default artifacts directory, relative to the repository root.
+pub const ARTIFACTS_DIR: &str = "artifacts";

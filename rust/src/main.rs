@@ -1,0 +1,176 @@
+//! `flexor` — the launcher. Subcommands:
+//!
+//! ```text
+//! flexor list                         show available artifacts
+//! flexor train <config.json|artifact> run a training experiment
+//! flexor analyze --n-out 20 --n-in 8  M⊕ encryption-quality report
+//! flexor infer <bundle-dir> <stem>    load a bundle, run a smoke batch
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use flexor::config::ExperimentConfig;
+use flexor::coordinator::{export_bundle, MetricsSink, TrainSession};
+use flexor::data;
+use flexor::flexor::{analysis, MXor};
+use flexor::runtime::{Manifest, Runtime};
+use flexor::substrate::argparse::Args;
+use flexor::substrate::prng::Pcg32;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("flexor {} — FleXOR trainable fractional quantization", flexor::VERSION);
+        println!("subcommands: list | train | analyze | infer  (--help per command)");
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    match cmd.as_str() {
+        "list" => cmd_list(argv),
+        "train" => cmd_train(argv),
+        "analyze" => cmd_analyze(argv),
+        "infer" => cmd_infer(argv),
+        other => bail!("unknown subcommand '{other}' (try: list, train, analyze, infer)"),
+    }
+}
+
+fn manifest(root: &str) -> Result<Manifest> {
+    Manifest::load(Path::new(root))
+}
+
+fn cmd_list(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("flexor list", "list AOT artifacts")
+        .flag("artifacts", "artifacts directory", Some(flexor::ARTIFACTS_DIR))
+        .parse_from(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let man = manifest(a.get("artifacts"))?;
+    for name in man.names() {
+        let meta = man.config(name)?;
+        println!(
+            "{name:36} {:12} {:12} {:5.2} b/w  batch {}",
+            meta.model, meta.quantizer_kind, meta.bits_per_weight, meta.batch
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("flexor train", "run a training experiment")
+        .positional("config", "experiment config JSON (or bare artifact name)")
+        .flag("artifacts", "artifacts directory", Some(flexor::ARTIFACTS_DIR))
+        .flag("steps", "override step count", None)
+        .flag("export", "export a deployment bundle to this dir", None)
+        .switch("quiet", "suppress per-eval logging")
+        .parse_from(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+
+    let spec = a.pos(0).unwrap();
+    let mut cfg = if spec.ends_with(".json") {
+        ExperimentConfig::load(Path::new(spec))?
+    } else {
+        // bare artifact name: sensible defaults
+        ExperimentConfig::from_json(&flexor::substrate::json::parse(&format!(
+            r#"{{"artifact": "{spec}"}}"#
+        ))?)?
+    };
+    if let Some(s) = a.get_opt("steps") {
+        cfg.steps = s.parse().context("--steps")?;
+    }
+
+    let rt = Runtime::cpu()?;
+    let man = manifest(a.get("artifacts"))?;
+    let mut session = TrainSession::new(&rt, &man, &cfg.artifact)?;
+    let ds = data::by_name(&cfg.dataset, cfg.seed)?;
+    let mut sink = match &cfg.out_dir {
+        Some(dir) => {
+            std::fs::create_dir_all(dir)?;
+            MetricsSink::with_jsonl(&Path::new(dir).join("metrics.jsonl"))?
+        }
+        None => MetricsSink::new(),
+    };
+
+    println!(
+        "training {} ({}, {:.2} b/w) on {} for {} steps",
+        cfg.artifact, session.meta.model, session.meta.bits_per_weight,
+        cfg.dataset, cfg.steps
+    );
+    let ev = session.train_loop(ds.as_ref(), &cfg.schedule, cfg.steps,
+                                cfg.eval_every, cfg.eval_examples, &mut sink)?;
+    println!(
+        "final: loss {:.4}  top1 {:.4}  top5 {:.4}  ({} examples)",
+        ev.loss, ev.top1, ev.top5, ev.examples
+    );
+    if !a.get_bool("quiet") {
+        for e in &sink.eval {
+            println!("  eval @ step {:>6}: loss {:.4} top1 {:.4}", e.step, e.loss, e.top1);
+        }
+    }
+    if let Some(dir) = &cfg.out_dir {
+        sink.write_train_csv(&Path::new(dir).join("train.csv"))?;
+        sink.write_eval_csv(&Path::new(dir).join("eval.csv"))?;
+    }
+    if let Some(dir) = a.get_opt("export") {
+        export_bundle(&session, Path::new(dir), &cfg.artifact)?;
+        println!("exported bundle to {dir}/{}.*", cfg.artifact);
+    }
+    Ok(())
+}
+
+fn cmd_analyze(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("flexor analyze", "M⊕ encryption-quality report (paper §2)")
+        .flag("n-out", "output bits per slice", Some("20"))
+        .flag("n-in", "stored bits per slice", Some("8"))
+        .flag("n-tap", "taps per row (0 = random fill)", Some("2"))
+        .flag("seed", "rng seed", Some("7"))
+        .parse_from(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let (n_out, n_in) = (a.get_usize("n-out"), a.get_usize("n-in"));
+    let n_tap = a.get_usize("n-tap");
+    let mut rng = Pcg32::seeded(a.get_u64("seed"));
+    let m = if n_tap == 0 {
+        MXor::random(n_out, n_in, &mut rng)?
+    } else {
+        MXor::with_ntap(n_out, n_in, n_tap, &mut rng)?
+    };
+    println!("{}", analysis::report(&m).to_string_pretty());
+    Ok(())
+}
+
+fn cmd_infer(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("flexor infer", "load a deployment bundle, run a smoke batch")
+        .positional("dir", "bundle directory")
+        .positional("stem", "bundle stem (config name)")
+        .flag("dataset", "dataset for the smoke batch", Some("shapes32"))
+        .flag("batch", "examples", Some("32"))
+        .parse_from(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let model = flexor::inference::InferenceModel::load(
+        Path::new(a.pos(0).unwrap()),
+        a.pos(1).unwrap(),
+    )?;
+    println!(
+        "loaded {} ({:.2} b/w, {:.1}× compression)",
+        model.model, model.bits_per_weight, model.compression_ratio
+    );
+    let ds = data::by_name(a.get("dataset"), 0)?;
+    let n = a.get_usize("batch");
+    let (xs, ys) = data::Batcher::eval_set(ds.as_ref(), data::Split::Test, n);
+    let t0 = std::time::Instant::now();
+    let preds = model.predict(&xs, n)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let correct = preds.iter().zip(&ys).filter(|(p, y)| p == y).count();
+    println!(
+        "top1 {}/{} ({:.1}%), {:.2} ms/example",
+        correct, n, 100.0 * correct as f64 / n as f64, dt * 1e3 / n as f64
+    );
+    Ok(())
+}

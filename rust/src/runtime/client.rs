@@ -1,0 +1,130 @@
+//! PJRT client wrapper: HLO text → compiled executable → typed execution.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Process-wide PJRT runtime (CPU). Compiled executables are cached by
+/// artifact path so table runners can reuse them across sweep points.
+pub struct Runtime {
+    client: PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact (cached).
+    pub fn load_hlo(&self, path: &Path) -> Result<std::sync::Arc<Executable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let exe = std::sync::Arc::new(Executable { exe, name: key.clone() });
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+}
+
+/// A compiled artifact with the flat tuple calling convention
+/// (aot.py lowers with `return_tuple=True`).
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let bufs = self
+            .exe
+            .execute::<&Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = bufs[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        out.to_tuple().context("untupling result")
+    }
+}
+
+/// Literal construction helpers (the marshalling layer between the Rust
+/// data substrates and the HLO calling convention).
+pub mod lit {
+    use super::*;
+
+    /// f32 tensor from a flat host vector + dims.
+    pub fn f32_tensor(data: &[f32], dims: &[usize]) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(n == data.len(), "shape {:?} != len {}", dims, data.len());
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(Literal::vec1(data).reshape(&dims_i64)?)
+    }
+
+    /// i32 vector (labels).
+    pub fn i32_vec(data: &[i32]) -> Literal {
+        Literal::vec1(data)
+    }
+
+    /// f32 scalar (schedule inputs).
+    pub fn f32_scalar(x: f32) -> Literal {
+        Literal::scalar(x)
+    }
+
+    /// Read back a scalar f32 from an output literal.
+    pub fn scalar_f32(l: &Literal) -> Result<f32> {
+        Ok(l.get_first_element::<f32>()?)
+    }
+
+    /// Read back a full f32 tensor.
+    pub fn to_f32_vec(l: &Literal) -> Result<Vec<f32>> {
+        Ok(l.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Runtime tests that need a PJRT client + artifacts live in
+    //! `rust/tests/` (integration) — creating multiple CPU clients inside
+    //! one test process is safe but slow. Here: literal marshalling only.
+    use super::lit;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = lit::f32_tensor(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(lit::to_f32_vec(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch() {
+        assert!(lit::f32_tensor(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let l = lit::f32_scalar(0.125);
+        assert_eq!(lit::scalar_f32(&l).unwrap(), 0.125);
+    }
+}

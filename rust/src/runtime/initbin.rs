@@ -1,0 +1,208 @@
+//! Parser for `init.bin` (FXIN): the initial (params, opt_state, bn_state)
+//! leaves serialized by aot.py. Layout (little-endian):
+//!
+//! ```text
+//! "FXIN" | u32 version | u32 n_leaves
+//! leaf*:  u8 dtype (0=f32, 1=i32) | u8 rank | u16 pad | rank×u32 dims | data
+//! ```
+
+use anyhow::{bail, ensure, Context, Result};
+use xla::{ElementType, Literal};
+
+pub const MAGIC: &[u8; 4] = b"FXIN";
+
+/// A parsed leaf: shape + raw host data, convertible to an xla Literal.
+#[derive(Clone, Debug)]
+pub struct Leaf {
+    pub dtype: LeafType,
+    pub shape: Vec<usize>,
+    pub bytes: Vec<u8>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeafType {
+    F32,
+    I32,
+}
+
+impl Leaf {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        ensure!(self.dtype == LeafType::F32, "leaf is not f32");
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn to_literal(&self) -> Literal {
+        let ty = match self.dtype {
+            LeafType::F32 => ElementType::F32,
+            LeafType::I32 => ElementType::S32,
+        };
+        Literal::create_from_shape_and_untyped_data(ty, &self.shape, &self.bytes)
+            .expect("leaf -> literal")
+    }
+}
+
+/// Parse the full file into leaves.
+pub fn read_init_bin(bytes: &[u8]) -> Result<Vec<Leaf>> {
+    ensure!(bytes.len() >= 12, "truncated init.bin");
+    ensure!(&bytes[..4] == MAGIC, "bad init.bin magic");
+    let version = u32::from_le_bytes(bytes[4..8].try_into()?);
+    ensure!(version == 1, "unsupported init.bin version {version}");
+    let n = u32::from_le_bytes(bytes[8..12].try_into()?) as usize;
+    let mut leaves = Vec::with_capacity(n);
+    let mut i = 12usize;
+    for li in 0..n {
+        ensure!(i + 4 <= bytes.len(), "truncated leaf header {li}");
+        let dtype = match bytes[i] {
+            0 => LeafType::F32,
+            1 => LeafType::I32,
+            t => bail!("leaf {li}: unknown dtype tag {t}"),
+        };
+        let rank = bytes[i + 1] as usize;
+        i += 4;
+        ensure!(i + 4 * rank <= bytes.len(), "truncated dims of leaf {li}");
+        let shape: Vec<usize> = (0..rank)
+            .map(|d| {
+                u32::from_le_bytes(bytes[i + 4 * d..i + 4 * d + 4].try_into().unwrap())
+                    as usize
+            })
+            .collect();
+        i += 4 * rank;
+        let count: usize = shape.iter().product::<usize>().max(1);
+        let nbytes = count * 4;
+        ensure!(i + nbytes <= bytes.len(), "truncated data of leaf {li}");
+        leaves.push(Leaf { dtype, shape, bytes: bytes[i..i + nbytes].to_vec() });
+        i += nbytes;
+    }
+    ensure!(i == bytes.len(), "trailing bytes in init.bin");
+    Ok(leaves)
+}
+
+/// Load and parse from a file path.
+pub fn load_init_bin(path: &std::path::Path) -> Result<Vec<Leaf>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    read_init_bin(&bytes)
+}
+
+/// Serialize leaves back to the FXIN format (checkpointing / FP sidecars).
+pub fn write_init_bin(leaves: &[Leaf]) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.extend_from_slice(MAGIC);
+    b.extend_from_slice(&1u32.to_le_bytes());
+    b.extend_from_slice(&(leaves.len() as u32).to_le_bytes());
+    for l in leaves {
+        b.push(match l.dtype {
+            LeafType::F32 => 0,
+            LeafType::I32 => 1,
+        });
+        b.push(l.shape.len() as u8);
+        b.extend_from_slice(&[0, 0]);
+        for &d in &l.shape {
+            b.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        b.extend_from_slice(&l.bytes);
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(leaves: &[(LeafType, Vec<u32>, Vec<u8>)]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&(leaves.len() as u32).to_le_bytes());
+        for (t, dims, data) in leaves {
+            b.push(match t {
+                LeafType::F32 => 0,
+                LeafType::I32 => 1,
+            });
+            b.push(dims.len() as u8);
+            b.extend_from_slice(&[0, 0]);
+            for d in dims {
+                b.extend_from_slice(&d.to_le_bytes());
+            }
+            b.extend_from_slice(data);
+        }
+        b
+    }
+
+    #[test]
+    fn roundtrip_two_leaves() {
+        let f: Vec<u8> = [1.5f32, -2.0, 0.25, 8.0]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        let s: Vec<u8> = 7f32.to_le_bytes().to_vec();
+        let bytes = encode(&[
+            (LeafType::F32, vec![2, 2], f),
+            (LeafType::F32, vec![], s),
+        ]);
+        let leaves = read_init_bin(&bytes).unwrap();
+        assert_eq!(leaves.len(), 2);
+        assert_eq!(leaves[0].shape, vec![2, 2]);
+        assert_eq!(leaves[0].as_f32().unwrap(), vec![1.5, -2.0, 0.25, 8.0]);
+        assert_eq!(leaves[1].shape, Vec::<usize>::new());
+        assert_eq!(leaves[1].element_count(), 1);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let f: Vec<u8> = 1f32.to_le_bytes().to_vec();
+        let good = encode(&[(LeafType::F32, vec![1], f)]);
+        assert!(read_init_bin(&good[..good.len() - 1]).is_err());
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert!(read_init_bin(&bad_magic).is_err());
+        let mut bad_tag = good.clone();
+        bad_tag[12] = 9;
+        assert!(read_init_bin(&bad_tag).is_err());
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(read_init_bin(&trailing).is_err());
+    }
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let leaves = vec![
+            Leaf {
+                dtype: LeafType::F32,
+                shape: vec![3],
+                bytes: [1f32, 2.0, 3.0].iter().flat_map(|x| x.to_le_bytes()).collect(),
+            },
+            Leaf {
+                dtype: LeafType::I32,
+                shape: vec![2, 1],
+                bytes: [7i32, -1].iter().flat_map(|x| x.to_le_bytes()).collect(),
+            },
+        ];
+        let bytes = write_init_bin(&leaves);
+        let back = read_init_bin(&bytes).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].as_f32().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(back[1].shape, vec![2, 1]);
+        assert_eq!(back[1].bytes, leaves[1].bytes);
+    }
+
+    #[test]
+    fn i32_leaf() {
+        let d: Vec<u8> = [1i32, -5, 100]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        let bytes = encode(&[(LeafType::I32, vec![3], d)]);
+        let leaves = read_init_bin(&bytes).unwrap();
+        assert_eq!(leaves[0].dtype, LeafType::I32);
+        assert!(leaves[0].as_f32().is_err());
+    }
+}

@@ -1,0 +1,404 @@
+//! Artifact manifest + per-config metadata (the contract with aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::flexor::MXor;
+use crate::substrate::json::{self, Json};
+
+/// One leaf of the flattened (params, opt, bn) state.
+#[derive(Clone, Debug)]
+pub struct LeafMeta {
+    pub role: String, // "params" | "opt" | "bn"
+    pub path: String, // jax keystr, e.g. "['convs'][0]['w_enc']"
+    pub shape: Vec<usize>,
+    pub dtype: String, // "float32" | "int32"
+}
+
+impl LeafMeta {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    /// Index into `path` brackets: returns the integer inside the first
+    /// `[<n>]` after `needle`, e.g. layer index of `['convs'][3]['w_enc']`.
+    pub fn index_after(&self, needle: &str) -> Option<usize> {
+        let pos = self.path.find(needle)? + needle.len();
+        let rest = &self.path[pos..];
+        let open = rest.find('[')?;
+        let close = rest[open..].find(']')? + open;
+        rest[open + 1..close].parse().ok()
+    }
+}
+
+/// One FleXOR spec (mirrors python's FlexorSpec serialization).
+#[derive(Clone, Debug)]
+pub struct SpecMeta {
+    pub q: usize,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub bits_per_weight: f64,
+    pub mxor: Vec<MXor>, // one per bit-plane
+}
+
+impl SpecMeta {
+    fn from_json(v: &Json) -> Result<Self> {
+        let mxor = v
+            .get("mxor")
+            .as_arr()
+            .context("spec mxor missing")?
+            .iter()
+            .map(MXor::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        ensure!(!mxor.is_empty(), "spec with no M⊕ planes");
+        Ok(SpecMeta {
+            q: v.get("q").as_usize().context("spec q")?,
+            n_in: v.get("n_in").as_usize().context("spec n_in")?,
+            n_out: v.get("n_out").as_usize().context("spec n_out")?,
+            bits_per_weight: v.get("bits_per_weight").as_f64().unwrap_or(0.0),
+            mxor,
+        })
+    }
+}
+
+/// Per-quantized-layer storage row (Table 5 bookkeeping).
+#[derive(Clone, Debug)]
+pub struct LayerStorage {
+    pub idx: usize,
+    pub shape: Vec<usize>,
+    pub weights: usize,
+    pub stored_bits: usize,
+}
+
+/// Parsed `meta.json` for one lowered config.
+#[derive(Clone, Debug)]
+pub struct ConfigMeta {
+    pub name: String,
+    pub dir: PathBuf,
+    pub model: String,
+    pub quantizer_kind: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub optimizer: String,
+    pub leaves: Vec<LeafMeta>,
+    pub n_params: usize,
+    pub n_opt: usize,
+    pub n_bn: usize,
+    pub train_scalar_order: Vec<String>,
+    pub eval_scalar_order: Vec<String>,
+    pub storage_layers: Vec<LayerStorage>,
+    pub bits_per_weight: f64,
+    pub flexor_default: Option<SpecMeta>,
+    pub flexor_per_layer: BTreeMap<usize, SpecMeta>,
+    pub raw: Json,
+}
+
+impl ConfigMeta {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let v = json::parse(&text).context("parsing meta.json")?;
+        Self::from_json(dir, &v)
+    }
+
+    pub fn from_json(dir: &Path, v: &Json) -> Result<Self> {
+        let cfg = v.get("config");
+        let counts = v.get("counts");
+        let leaves = v
+            .get("leaves")
+            .as_arr()
+            .context("meta leaves missing")?
+            .iter()
+            .map(|l| {
+                Ok(LeafMeta {
+                    role: l.get("role").as_str().context("leaf role")?.to_string(),
+                    path: l.get("path").as_str().context("leaf path")?.to_string(),
+                    shape: l
+                        .get("shape")
+                        .as_arr()
+                        .context("leaf shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim"))
+                        .collect::<Result<Vec<_>>>()?,
+                    dtype: l.get("dtype").as_str().unwrap_or("float32").to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let storage = v.get("storage");
+        let storage_layers = storage
+            .get("layers")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|l| {
+                Ok(LayerStorage {
+                    idx: l.get("idx").as_usize().context("layer idx")?,
+                    shape: l
+                        .get("shape")
+                        .as_arr()
+                        .context("layer shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim"))
+                        .collect::<Result<Vec<_>>>()?,
+                    weights: l.get("weights").as_usize().context("weights")?,
+                    stored_bits: l.get("stored_bits").as_usize().context("bits")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let fx = v.get("flexor");
+        let flexor_default = if fx.is_null() {
+            None
+        } else {
+            Some(SpecMeta::from_json(fx.get("default"))?)
+        };
+        let mut flexor_per_layer = BTreeMap::new();
+        if let Some(per) = fx.get("per_layer").as_obj() {
+            for (k, spec) in per {
+                let idx: usize = k.parse().context("per_layer key")?;
+                flexor_per_layer.insert(idx, SpecMeta::from_json(spec)?);
+            }
+        }
+
+        let scalar_vec = |io: &Json| -> Vec<String> {
+            io.get("scalar_order")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|s| s.as_str().map(str::to_string))
+                .collect()
+        };
+
+        let m = ConfigMeta {
+            name: cfg.get("name").as_str().context("config name")?.to_string(),
+            dir: dir.to_path_buf(),
+            model: cfg.get("model").as_str().context("model")?.to_string(),
+            quantizer_kind: cfg
+                .get("quantizer")
+                .get("kind")
+                .as_str()
+                .unwrap_or("fp")
+                .to_string(),
+            batch: v.get("batch").as_usize().context("batch")?,
+            input_shape: v
+                .get("input")
+                .get("shape")
+                .as_arr()
+                .context("input shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<Vec<_>>>()?,
+            num_classes: v.get("input").get("classes").as_usize().unwrap_or(10),
+            optimizer: cfg.get("optimizer").as_str().unwrap_or("sgd").to_string(),
+            leaves,
+            n_params: counts.get("params").as_usize().context("counts.params")?,
+            n_opt: counts.get("opt").as_usize().context("counts.opt")?,
+            n_bn: counts.get("bn").as_usize().context("counts.bn")?,
+            train_scalar_order: scalar_vec(v.get("train_io")),
+            eval_scalar_order: scalar_vec(v.get("eval_io")),
+            storage_layers,
+            bits_per_weight: storage.get("bits_per_weight").as_f64().unwrap_or(32.0),
+            flexor_default,
+            flexor_per_layer,
+            raw: v.clone(),
+        };
+        ensure!(
+            m.leaves.len() == m.n_params + m.n_opt + m.n_bn,
+            "leaf count {} != counts sum {}",
+            m.leaves.len(),
+            m.n_params + m.n_opt + m.n_bn
+        );
+        Ok(m)
+    }
+
+    pub fn train_hlo_path(&self) -> PathBuf {
+        self.dir.join("train_step.hlo.txt")
+    }
+
+    pub fn eval_hlo_path(&self) -> PathBuf {
+        self.dir.join("eval_step.hlo.txt")
+    }
+
+    pub fn init_bin_path(&self) -> PathBuf {
+        self.dir.join("init.bin")
+    }
+
+    /// Total state leaves fed back between train steps.
+    pub fn n_state(&self) -> usize {
+        self.n_params + self.n_opt + self.n_bn
+    }
+
+    /// FleXOR spec for a quantized layer index (per-layer override or default).
+    pub fn spec_for(&self, layer_idx: usize) -> Option<&SpecMeta> {
+        self.flexor_per_layer
+            .get(&layer_idx)
+            .or(self.flexor_default.as_ref())
+    }
+
+    /// Param-leaf indices (into `leaves`) for `w_enc`/`alpha` of each
+    /// quantized layer, keyed by layer index. Uses the path structure
+    /// `...[<idx>]['w_enc']`.
+    pub fn quantized_param_leaves(&self) -> BTreeMap<usize, (usize, usize)> {
+        let mut enc: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut alpha: BTreeMap<usize, usize> = BTreeMap::new();
+        for (i, l) in self.leaves.iter().enumerate() {
+            if l.role != "params" {
+                continue;
+            }
+            if l.path.contains("'w_enc'") {
+                if let Some(idx) = layer_index(&l.path) {
+                    enc.insert(idx, i);
+                }
+            } else if l.path.contains("'alpha'") {
+                if let Some(idx) = layer_index(&l.path) {
+                    alpha.insert(idx, i);
+                }
+            }
+        }
+        enc.into_iter()
+            .filter_map(|(k, e)| alpha.get(&k).map(|&a| (k, (e, a))))
+            .collect()
+    }
+}
+
+/// Extract the layer index from a keystr like `['convs'][3]['w_enc']` or
+/// `['layers'][0]['alpha']`: the last bare `[<int>]` before the field name.
+fn layer_index(path: &str) -> Option<usize> {
+    let mut last: Option<usize> = None;
+    let bytes = path.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'[' {
+            let close = path[i..].find(']')? + i;
+            let inner = &path[i + 1..close];
+            if let Ok(n) = inner.parse::<usize>() {
+                last = Some(n);
+            }
+            i = close + 1;
+        } else {
+            i += 1;
+        }
+    }
+    last
+}
+
+/// The `artifacts/manifest.json` index.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub configs: BTreeMap<String, String>, // name -> dir
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Self> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let v = json::parse(&text)?;
+        let mut configs = BTreeMap::new();
+        if let Some(obj) = v.get("configs").as_obj() {
+            for (name, e) in obj {
+                let dir = e.get("dir").as_str().unwrap_or(name).to_string();
+                configs.insert(name.clone(), dir);
+            }
+        }
+        Ok(Manifest { root: root.to_path_buf(), configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<ConfigMeta> {
+        let Some(dir) = self.configs.get(name) else {
+            bail!(
+                "config '{name}' not in manifest; available: {:?}\n\
+                 (build it with: cd python && python -m compile.aot --out ../artifacts --only {name})",
+                self.configs.keys().collect::<Vec<_>>()
+            );
+        };
+        ConfigMeta::load(&self.root.join(dir))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.configs.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_index_parses_keystrs() {
+        assert_eq!(layer_index("['convs'][3]['w_enc']"), Some(3));
+        assert_eq!(layer_index("['layers'][0]['alpha']"), Some(0));
+        assert_eq!(layer_index("['head']['w']"), None);
+        assert_eq!(layer_index("['bn'][12]['scale']"), Some(12));
+    }
+
+    #[test]
+    fn leaf_meta_helpers() {
+        let l = LeafMeta {
+            role: "params".into(),
+            path: "['convs'][5]['w_enc']".into(),
+            shape: vec![1, 20, 8],
+            dtype: "float32".into(),
+        };
+        assert_eq!(l.element_count(), 160);
+        assert_eq!(l.index_after("'convs'"), Some(5));
+    }
+
+    #[test]
+    fn config_meta_from_minimal_json() {
+        let text = r#"{
+          "config": {"name": "t", "model": "mlp", "optimizer": "adam",
+                     "quantizer": {"kind": "flexor"}},
+          "batch": 8,
+          "input": {"shape": [8, 16], "classes": 4},
+          "counts": {"params": 2, "opt": 1, "bn": 0},
+          "train_io": {"scalar_order": ["lr", "s_tanh", "relax_lambda"]},
+          "eval_io": {"scalar_order": ["s_tanh", "relax_lambda"]},
+          "leaves": [
+            {"role": "params", "path": "['layers'][0]['w_enc']", "shape": [1, 26, 4], "dtype": "float32"},
+            {"role": "params", "path": "['layers'][0]['alpha']", "shape": [1, 8], "dtype": "float32"},
+            {"role": "opt", "path": "['t']", "shape": [], "dtype": "float32"}
+          ],
+          "storage": {"bits_per_weight": 0.8125,
+            "layers": [{"idx": 0, "shape": [16, 8], "weights": 128, "stored_bits": 104}]},
+          "flexor": {"default": {"q": 1, "n_in": 4, "n_out": 5, "bits_per_weight": 0.8,
+            "mxor": [[[1,1,0,0],[0,1,1,0],[0,0,1,1],[1,0,0,1],[1,0,1,0]]]}}
+        }"#;
+        let v = json::parse(text).unwrap();
+        let m = ConfigMeta::from_json(Path::new("/tmp/x"), &v).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.n_state(), 3);
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.num_classes, 4);
+        let spec = m.spec_for(0).unwrap();
+        assert_eq!(spec.n_out, 5);
+        assert_eq!(spec.mxor[0].n_in(), 4);
+        let q = m.quantized_param_leaves();
+        assert_eq!(q.get(&0), Some(&(0, 1)));
+        assert_eq!(m.storage_layers[0].weights, 128);
+        assert_eq!(m.train_scalar_order, vec!["lr", "s_tanh", "relax_lambda"]);
+    }
+
+    #[test]
+    fn config_meta_rejects_count_mismatch() {
+        let text = r#"{
+          "config": {"name": "t", "model": "mlp", "quantizer": {"kind": "fp"}},
+          "batch": 8, "input": {"shape": [8, 16], "classes": 4},
+          "counts": {"params": 5, "opt": 0, "bn": 0},
+          "train_io": {}, "eval_io": {}, "leaves": [], "storage": {},
+          "flexor": null
+        }"#;
+        let v = json::parse(text).unwrap();
+        assert!(ConfigMeta::from_json(Path::new("/tmp"), &v).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the HLO-text artifacts emitted by `python/compile/aot.py`
+//! and executes them on the CPU PJRT client. Python never runs here.
+//!
+//! * [`manifest`] — artifact index + per-config `meta.json` (leaf layout,
+//!   calling convention, M⊕ matrices, storage accounting);
+//! * [`initbin`]  — the `init.bin` initial-state parser (FXIN format);
+//! * [`client`]   — `PjRtClient` wrapper: HLO text → compiled executable,
+//!   literal marshalling helpers, executable cache.
+
+pub mod client;
+pub mod initbin;
+pub mod manifest;
+
+pub use client::{Executable, Runtime};
+pub use initbin::read_init_bin;
+pub use manifest::{ConfigMeta, Manifest};

@@ -1,0 +1,300 @@
+//! CLI argument parsing substrate (clap is unavailable offline).
+//!
+//! Declarative flags with typed accessors, `--help` generation, positional
+//! arguments and subcommand support — what the `flexor` launcher and the
+//! example/bench binaries need.
+
+use std::collections::BTreeMap;
+
+/// One declared flag.
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    takes_value: bool,
+}
+
+/// Declarative argument parser.
+///
+/// ```
+/// use flexor::substrate::argparse::Args;
+/// let a = Args::new("demo", "demo tool")
+///     .flag("steps", "number of steps", Some("100"))
+///     .switch("verbose", "chatty output")
+///     .positional("config", "path to config")
+///     .parse_from(vec!["--steps".into(), "5".into(), "cfg.json".into()])
+///     .unwrap();
+/// assert_eq!(a.get_usize("steps"), 5);
+/// assert!(!a.get_bool("verbose"));
+/// assert_eq!(a.pos(0).unwrap(), "cfg.json");
+/// ```
+#[derive(Debug)]
+pub struct Args {
+    prog: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+    positionals: Vec<(String, String)>,
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    pos_values: Vec<String>,
+}
+
+impl Args {
+    pub fn new(prog: &str, about: &str) -> Self {
+        Args {
+            prog: prog.to_string(),
+            about: about.to_string(),
+            flags: Vec::new(),
+            positionals: Vec::new(),
+            values: BTreeMap::new(),
+            switches: BTreeMap::new(),
+            pos_values: Vec::new(),
+        }
+    }
+
+    /// A `--name value` flag with optional default.
+    pub fn flag(mut self, name: &str, help: &str, default: Option<&str>) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(str::to_string),
+            takes_value: true,
+        });
+        self
+    }
+
+    /// A boolean `--name` switch (defaults to false).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            takes_value: false,
+        });
+        self
+    }
+
+    /// A required positional argument.
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.prog, self.about, self.prog);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [FLAGS]\n\nFLAGS:\n");
+        for f in &self.flags {
+            let arg = if f.takes_value {
+                format!("--{} <v>", f.name)
+            } else {
+                format!("--{}", f.name)
+            };
+            let def = f
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {arg:24} {}{def}\n", f.help));
+        }
+        for (p, h) in &self.positionals {
+            s.push_str(&format!("  <{p}>{:20} {h}\n", ""));
+        }
+        s
+    }
+
+    /// Parse from an explicit vector (tests) — `--help` returns Err(usage).
+    pub fn parse_from(mut self, argv: Vec<String>) -> Result<Args, String> {
+        // seed defaults
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                self.values.insert(f.name.clone(), d.clone());
+            }
+            if !f.takes_value {
+                self.switches.insert(f.name.clone(), false);
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(name) = tok.strip_prefix("--") {
+                // --name=value form
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?
+                    .clone();
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("flag --{name} needs a value"))?,
+                    };
+                    self.values.insert(spec.name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("switch --{name} takes no value"));
+                    }
+                    self.switches.insert(spec.name, true);
+                }
+            } else {
+                self.pos_values.push(tok);
+            }
+        }
+        if self.pos_values.len() < self.positionals.len() {
+            return Err(format!(
+                "missing positional <{}>\n\n{}",
+                self.positionals[self.pos_values.len()].0,
+                self.usage()
+            ));
+        }
+        Ok(self)
+    }
+
+    /// Parse the process arguments; prints usage and exits on --help/error.
+    pub fn parse(self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(argv) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.contains("USAGE") { 0 } else { 2 });
+            }
+        }
+    }
+
+    // ---- typed accessors (panic on undeclared flags: programmer error) ------
+
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} has no value"))
+    }
+
+    pub fn get_opt(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        *self
+            .switches
+            .get(name)
+            .unwrap_or_else(|| panic!("switch --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_f32(&self, name: &str) -> f32 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a float"))
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.pos_values.get(i).map(String::as_str)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.pos_values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Args {
+        Args::new("t", "test")
+            .flag("steps", "steps", Some("10"))
+            .flag("name", "a name", None)
+            .switch("fast", "go fast")
+            .positional("input", "input file")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = demo().parse_from(sv(&["in.txt"])).unwrap();
+        assert_eq!(a.get_usize("steps"), 10);
+        assert!(!a.get_bool("fast"));
+        let a = demo()
+            .parse_from(sv(&["--steps", "42", "--fast", "in.txt"]))
+            .unwrap();
+        assert_eq!(a.get_usize("steps"), 42);
+        assert!(a.get_bool("fast"));
+        assert_eq!(a.pos(0), Some("in.txt"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = demo().parse_from(sv(&["--steps=7", "x"])).unwrap();
+        assert_eq!(a.get_usize("steps"), 7);
+    }
+
+    #[test]
+    fn optional_flag_absent() {
+        let a = demo().parse_from(sv(&["x"])).unwrap();
+        assert_eq!(a.get_opt("name"), None);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(demo().parse_from(sv(&["--nope", "x"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(demo().parse_from(sv(&["x", "--steps"])).is_err());
+    }
+
+    #[test]
+    fn missing_positional_rejected() {
+        let e = demo().parse_from(sv(&[])).unwrap_err();
+        assert!(e.contains("missing positional <input>"));
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let e = demo().parse_from(sv(&["--help"])).unwrap_err();
+        assert!(e.contains("USAGE"));
+        assert!(e.contains("--steps"));
+    }
+
+    #[test]
+    fn switch_with_value_rejected() {
+        assert!(demo().parse_from(sv(&["--fast=1", "x"])).is_err());
+    }
+
+    #[test]
+    fn f32_parsing() {
+        let a = Args::new("t", "")
+            .flag("lr", "", Some("0.1"))
+            .parse_from(vec![])
+            .unwrap();
+        assert_eq!(a.get_f32("lr"), 0.1);
+    }
+}

@@ -1,0 +1,246 @@
+//! Criterion-like micro/macro benchmark harness (criterion is unavailable
+//! offline). Warms up, auto-scales iteration counts to a target measurement
+//! time, reports mean / median / p05 / p95 and throughput, and can emit the
+//! results as JSON for EXPERIMENTS.md tooling.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::stats;
+
+/// One benchmark's results.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p05_s: f64,
+    pub p95_s: f64,
+    /// Optional units processed per iteration (bits, requests, ...)
+    pub throughput_units: Option<f64>,
+    pub unit_name: String,
+}
+
+impl BenchResult {
+    pub fn throughput_per_s(&self) -> Option<f64> {
+        self.throughput_units.map(|u| u / self.mean_s)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("mean_s", Json::num(self.mean_s)),
+            ("median_s", Json::num(self.median_s)),
+            ("p05_s", Json::num(self.p05_s)),
+            ("p95_s", Json::num(self.p95_s)),
+            ("samples", Json::num(self.samples.len() as f64)),
+        ]);
+        if let Some(t) = self.throughput_per_s() {
+            o.set("throughput_per_s", Json::num(t));
+            o.set("unit", Json::str(self.unit_name.clone()));
+        }
+        o
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:8.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:8.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:8.2} ms", s * 1e3)
+    } else {
+        format!("{s:8.3} s ")
+    }
+}
+
+fn fmt_rate(r: f64, unit: &str) -> String {
+    if r >= 1e9 {
+        format!("{:7.2} G{unit}/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:7.2} M{unit}/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:7.2} k{unit}/s", r / 1e3)
+    } else {
+        format!("{r:7.2} {unit}/s")
+    }
+}
+
+/// The harness. Collects results so a bench binary can print a summary
+/// table and dump JSON at the end.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            min_samples: 10,
+            max_samples: 2_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode harness for CI / smoke runs.
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(30),
+            measure: Duration::from_millis(200),
+            min_samples: 5,
+            max_samples: 200,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`; `black_box` the result inside the closure yourself if
+    /// needed (use [`black_box`]).
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.run_with_throughput(name, None, "", f)
+    }
+
+    /// Benchmark with a units-per-iteration throughput annotation.
+    pub fn run_with_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        units: Option<f64>,
+        unit_name: &str,
+        mut f: F,
+    ) -> &BenchResult {
+        // warmup + estimate per-iter cost
+        let wstart = Instant::now();
+        let mut iters: u64 = 0;
+        while wstart.elapsed() < self.warmup || iters == 0 {
+            f();
+            iters += 1;
+        }
+        let per_iter = wstart.elapsed().as_secs_f64() / iters as f64;
+        // choose batch size so one sample is ~ measure/min_samples but
+        // at least one iteration
+        let target_sample = self.measure.as_secs_f64() / self.min_samples as f64;
+        let batch = ((target_sample / per_iter).floor() as u64).clamp(1, 1 << 24);
+
+        let mut samples = Vec::new();
+        let mstart = Instant::now();
+        while (mstart.elapsed() < self.measure || samples.len() < self.min_samples)
+            && samples.len() < self.max_samples
+        {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / batch as f64);
+        }
+
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let res = BenchResult {
+            name: name.to_string(),
+            mean_s: samples.iter().sum::<f64>() / samples.len() as f64,
+            median_s: stats::percentile(&sorted, 50.0),
+            p05_s: stats::percentile(&sorted, 5.0),
+            p95_s: stats::percentile(&sorted, 95.0),
+            samples,
+            throughput_units: units,
+            unit_name: unit_name.to_string(),
+        };
+        let line = match res.throughput_per_s() {
+            Some(r) => format!(
+                "{:<44} {}  (p05 {} · p95 {})  {}",
+                res.name,
+                fmt_time(res.mean_s),
+                fmt_time(res.p05_s),
+                fmt_time(res.p95_s),
+                fmt_rate(r, &res.unit_name)
+            ),
+            None => format!(
+                "{:<44} {}  (p05 {} · p95 {})",
+                res.name,
+                fmt_time(res.mean_s),
+                fmt_time(res.p05_s),
+                fmt_time(res.p95_s)
+            ),
+        };
+        println!("{line}");
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// All results as a JSON array (for EXPERIMENTS.md §Perf bookkeeping).
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.results.iter().map(|r| r.to_json()))
+    }
+}
+
+/// Opaque value sink preventing the optimizer from deleting benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quickest() -> Bench {
+        Bench {
+            warmup: Duration::from_millis(2),
+            measure: Duration::from_millis(20),
+            min_samples: 3,
+            max_samples: 50,
+            results: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = quickest();
+        let mut acc = 0u64;
+        let r = b
+            .run("spin", || {
+                for i in 0..100u64 {
+                    acc = black_box(acc.wrapping_add(i));
+                }
+            })
+            .clone();
+        assert!(r.mean_s > 0.0);
+        assert!(r.p05_s <= r.median_s && r.median_s <= r.p95_s);
+        assert!(r.samples.len() >= 3);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut b = quickest();
+        let r = b
+            .run_with_throughput("t", Some(1000.0), "item", || {
+                black_box(0);
+            })
+            .clone();
+        let tp = r.throughput_per_s().unwrap();
+        assert!((tp - 1000.0 / r.mean_s).abs() / tp < 1e-9);
+    }
+
+    #[test]
+    fn json_output_shape() {
+        let mut b = quickest();
+        b.run("a", || {
+            black_box(1 + 1);
+        });
+        let j = b.to_json();
+        assert_eq!(j.at(0).get("name").as_str(), Some("a"));
+        assert!(j.at(0).get("mean_s").as_f64().unwrap() > 0.0);
+    }
+}

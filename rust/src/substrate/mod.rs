@@ -1,0 +1,10 @@
+//! Infrastructure substrates built in-repo (DESIGN.md §5: the offline build
+//! image vendors only `xla` + `anyhow`, so everything else a framework
+//! normally takes from crates.io is implemented here, with tests).
+
+pub mod prng;
+pub mod json;
+pub mod argparse;
+pub mod stats;
+pub mod bench;
+pub mod ptest;

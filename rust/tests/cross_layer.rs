@@ -1,0 +1,110 @@
+//! Cross-layer consistency: the Rust flexor core (matrix / decrypt / fxr)
+//! against the Python-emitted artifact metadata — the two sides must agree
+//! on M⊕, storage accounting and decrypt semantics or deployed models
+//! would silently decode garbage.
+
+use std::path::Path;
+
+use flexor::flexor::{bits_per_weight, num_slices};
+use flexor::runtime::{initbin, Manifest};
+
+fn manifest() -> Option<Manifest> {
+    let p = Path::new("artifacts");
+    if !p.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load(p).unwrap())
+}
+
+#[test]
+fn meta_mxor_parses_and_matches_spec() {
+    let Some(man) = manifest() else { return };
+    let meta = man.config("quickstart_mlp").unwrap();
+    let spec = meta.flexor_default.as_ref().expect("flexor spec");
+    assert_eq!(spec.q, 1);
+    assert_eq!(spec.n_in, 8);
+    assert_eq!(spec.n_out, 10);
+    assert_eq!(spec.mxor.len(), 1);
+    let m = &spec.mxor[0];
+    assert_eq!(m.n_out(), 10);
+    assert_eq!(m.n_in(), 8);
+    // config used n_tap=2
+    for r in 0..m.n_out() {
+        assert_eq!(m.n_tap(r), 2, "row {r}");
+    }
+    assert!((spec.bits_per_weight - bits_per_weight(1, 8, 10)).abs() < 1e-12);
+}
+
+#[test]
+fn meta_storage_rows_match_rust_accounting() {
+    let Some(man) = manifest() else { return };
+    let meta = man.config("quickstart_mlp").unwrap();
+    let spec = meta.flexor_default.as_ref().unwrap();
+    for layer in &meta.storage_layers {
+        let n: usize = layer.shape.iter().product();
+        assert_eq!(n, layer.weights);
+        let expect = spec.q * num_slices(n, spec.n_out) * spec.n_in;
+        assert_eq!(layer.stored_bits, expect, "layer {}", layer.idx);
+    }
+}
+
+#[test]
+fn init_bin_w_enc_shape_matches_slices() {
+    let Some(man) = manifest() else { return };
+    let meta = man.config("quickstart_mlp").unwrap();
+    let leaves = initbin::load_init_bin(&meta.init_bin_path()).unwrap();
+    let spec = meta.flexor_default.as_ref().unwrap();
+    for (layer_idx, (enc_leaf, alpha_leaf)) in meta.quantized_param_leaves() {
+        let enc = &leaves[enc_leaf];
+        let storage = meta
+            .storage_layers
+            .iter()
+            .find(|l| l.idx == layer_idx)
+            .unwrap();
+        assert_eq!(
+            enc.shape,
+            vec![spec.q, num_slices(storage.weights, spec.n_out), spec.n_in],
+            "layer {layer_idx} w_enc"
+        );
+        let alpha = &leaves[alpha_leaf];
+        assert_eq!(alpha.shape, vec![spec.q, *storage.shape.last().unwrap()]);
+        // encrypted weights init ~ N(0, 0.001²) (paper §3): tiny but nonzero
+        let vals = enc.as_f32().unwrap();
+        let maxabs = vals.iter().fold(0f32, |m, v| m.max(v.abs()));
+        assert!(maxabs > 0.0 && maxabs < 0.01, "w_enc init scale {maxabs}");
+    }
+}
+
+#[test]
+fn rust_decrypt_agrees_with_artifact_convention() {
+    // Decrypt init-state encrypted weights with the Rust engine and verify
+    // every output is ±1 with a roughly balanced bit distribution (the
+    // design goal of §2's Hamming-distance argument) — plus exact
+    // agreement between the word-parallel and scalar engines on real data.
+    let Some(man) = manifest() else { return };
+    let meta = man.config("quickstart_mlp").unwrap();
+    let leaves = initbin::load_init_bin(&meta.init_bin_path()).unwrap();
+    let spec = meta.flexor_default.as_ref().unwrap();
+    for (layer_idx, (enc_leaf, _)) in meta.quantized_param_leaves() {
+        let enc = leaves[enc_leaf].as_f32().unwrap();
+        let storage = meta
+            .storage_layers
+            .iter()
+            .find(|l| l.idx == layer_idx)
+            .unwrap();
+        let packed =
+            flexor::flexor::decrypt::pack_encrypted(&enc, spec.n_in).unwrap();
+        let d = flexor::flexor::Decryptor::new(spec.mxor[0].clone());
+        let fast = d.decrypt_columns(&packed).unwrap();
+        let slow = d.decrypt_scalar(&packed).unwrap();
+        assert_eq!(fast, slow, "engines disagree on layer {layer_idx}");
+        let signs = d.decrypt_to_signs(&packed, storage.weights).unwrap();
+        let pos = signs.iter().filter(|&&s| s > 0.0).count();
+        let frac = pos as f64 / signs.len() as f64;
+        assert!(
+            (0.30..=0.70).contains(&frac),
+            "layer {layer_idx}: decrypted bit balance {frac}"
+        );
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration tests over the full stack: AOT artifacts → PJRT runtime →
+//! coordinator → FXR export → pure-Rust decrypted inference.
+//!
+//! These need `make artifacts` (default set) to have run; they skip (pass
+//! vacuously with a note) when artifacts are absent so `cargo test` works
+//! on a fresh checkout.
+
+use std::path::Path;
+
+use flexor::coordinator::{export_bundle, export_fxr, MetricsSink, Schedule, TrainSession};
+use flexor::data::{self, Batcher, Split};
+use flexor::inference::InferenceModel;
+use flexor::runtime::{Manifest, Runtime};
+
+fn artifacts_root() -> Option<&'static Path> {
+    // tests run from the crate root
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        None
+    }
+}
+
+fn runtime() -> Runtime {
+    // PjRtClient is not Send/Sync (Rc internals) — one client per test.
+    Runtime::cpu().expect("pjrt cpu client")
+}
+
+#[test]
+fn quickstart_mlp_trains_and_learns() {
+    let Some(root) = artifacts_root() else { return };
+    let man = Manifest::load(root).unwrap();
+    let mut session = TrainSession::new(&runtime(), &man, "quickstart_mlp").unwrap();
+    assert_eq!(session.meta.model, "mlp");
+    assert!((session.meta.bits_per_weight - 0.8).abs() < 0.05);
+
+    let ds = data::by_name("digits", 0).unwrap();
+    let schedule = Schedule::mnist(1e-3, 50);
+    let mut sink = MetricsSink::new();
+    let ev = session
+        .train_loop(ds.as_ref(), &schedule, 120, 60, 256, &mut sink)
+        .unwrap();
+    // learning signal: late loss well below early loss, accuracy above chance
+    let early = sink.train[..10].iter().map(|r| r.loss).sum::<f32>() / 10.0;
+    let late = sink.tail_loss(10).unwrap();
+    assert!(late < early * 0.8, "no learning: {early} -> {late}");
+    assert!(ev.top1 > 0.2, "top1 {} not above chance", ev.top1);
+    assert!(ev.top5 >= ev.top1);
+    assert_eq!(session.steps_done, 120);
+}
+
+#[test]
+fn eval_is_deterministic_and_state_feedback_works() {
+    let Some(root) = artifacts_root() else { return };
+    let man = Manifest::load(root).unwrap();
+    let mut session = TrainSession::new(&runtime(), &man, "quickstart_mlp").unwrap();
+    let ds = data::by_name("digits", 1).unwrap();
+    let (xs, ys) = Batcher::eval_set(ds.as_ref(), Split::Test, 128);
+    let e1 = session.eval(&xs, &ys, 100.0, 0.0).unwrap();
+    let e2 = session.eval(&xs, &ys, 100.0, 0.0).unwrap();
+    assert_eq!(e1, e2, "eval must be deterministic");
+
+    // one train step must change the state (loss finite, params move)
+    let w_before = session.leaf_f32(0).unwrap();
+    let mut b = Batcher::new(ds.as_ref(), Split::Train, session.meta.batch, 512);
+    let (x, y) = b.next_batch();
+    let (loss, acc) = session.step(&x, &y, 1e-3, 100.0, 0.0).unwrap();
+    assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+    let w_after = session.leaf_f32(0).unwrap();
+    assert_ne!(w_before, w_after, "params did not update");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let Some(root) = artifacts_root() else { return };
+    let man = Manifest::load(root).unwrap();
+    let mut session = TrainSession::new(&runtime(), &man, "quickstart_mlp").unwrap();
+    let ds = data::by_name("digits", 2).unwrap();
+    let mut b = Batcher::new(ds.as_ref(), Split::Train, session.meta.batch, 512);
+    for _ in 0..5 {
+        let (x, y) = b.next_batch();
+        session.step(&x, &y, 1e-3, 100.0, 0.0).unwrap();
+    }
+    let (xs, ys) = Batcher::eval_set(ds.as_ref(), Split::Test, 128);
+    let before = session.eval(&xs, &ys, 100.0, 0.0).unwrap();
+
+    let ckpt = std::env::temp_dir().join("flexor_e2e_ckpt.bin");
+    session.save_checkpoint(&ckpt).unwrap();
+    // perturb by training more, then restore
+    for _ in 0..5 {
+        let (x, y) = b.next_batch();
+        session.step(&x, &y, 1e-2, 100.0, 0.0).unwrap();
+    }
+    let perturbed = session.eval(&xs, &ys, 100.0, 0.0).unwrap();
+    session.load_checkpoint(&ckpt).unwrap();
+    let restored = session.eval(&xs, &ys, 100.0, 0.0).unwrap();
+    assert_eq!(before, restored);
+    // (the perturbed eval usually differs; don't assert hard inequality)
+    let _ = perturbed;
+    std::fs::remove_file(ckpt).ok();
+}
+
+#[test]
+fn fxr_export_matches_training_state_and_rust_inference_agrees() {
+    let Some(root) = artifacts_root() else { return };
+    let man = Manifest::load(root).unwrap();
+    let mut session = TrainSession::new(&runtime(), &man, "quickstart_mlp").unwrap();
+    let ds = data::by_name("digits", 3).unwrap();
+    let schedule = Schedule::mnist(1e-3, 50);
+    let mut sink = MetricsSink::new();
+    let ev = session
+        .train_loop(ds.as_ref(), &schedule, 150, 150, 256, &mut sink)
+        .unwrap();
+
+    // container stats must reproduce the meta's storage accounting
+    let fxr = export_fxr(&session).unwrap();
+    let stats = fxr.stats();
+    assert!((stats.bits_per_weight - session.meta.bits_per_weight).abs() < 1e-9);
+
+    // FXR roundtrip through bytes
+    let bytes = fxr.to_bytes();
+    let back = flexor::flexor::fxr::Container::from_bytes(&bytes).unwrap();
+    assert_eq!(back.layers.len(), fxr.layers.len());
+
+    // full bundle + rust inference: accuracy must match the HLO eval closely
+    let dir = std::env::temp_dir().join("flexor_e2e_bundle");
+    export_bundle(&session, &dir, "qs").unwrap();
+    let model = InferenceModel::load(&dir, "qs").unwrap();
+    let n = 256;
+    let (xs, ys) = Batcher::eval_set(ds.as_ref(), Split::Test, n);
+    let preds = model.predict(&xs, n).unwrap();
+    let top1 = preds.iter().zip(&ys).filter(|(p, y)| p == y).count() as f32 / n as f32;
+    assert!(
+        (top1 - ev.top1).abs() < 0.05,
+        "rust inference top1 {top1} vs HLO eval {}",
+        ev.top1
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn pallas_artifact_matches_jnp_artifact() {
+    // The two quickstart configs differ only in use_pallas (L1 kernels on
+    // the train path); from identical init + identical data they must
+    // produce near-identical losses.
+    let Some(root) = artifacts_root() else { return };
+    let man = Manifest::load(root).unwrap();
+    if !man.configs.contains_key("quickstart_mlp_pallas") {
+        eprintln!("SKIP: quickstart_mlp_pallas not built");
+        return;
+    }
+    let mut a = TrainSession::new(&runtime(), &man, "quickstart_mlp").unwrap();
+    let mut b = TrainSession::new(&runtime(), &man, "quickstart_mlp_pallas").unwrap();
+    let ds = data::by_name("digits", 4).unwrap();
+    let mut batcher = Batcher::new(ds.as_ref(), Split::Train, a.meta.batch, 512);
+    for step in 0..5 {
+        let (x, y) = batcher.next_batch();
+        let (la, _) = a.step(&x, &y, 1e-3, 100.0, 0.0).unwrap();
+        let (lb, _) = b.step(&x, &y, 1e-3, 100.0, 0.0).unwrap();
+        assert!(
+            (la - lb).abs() < 1e-3 * (1.0 + la.abs()),
+            "step {step}: jnp loss {la} vs pallas loss {lb}"
+        );
+    }
+}
