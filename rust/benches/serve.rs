@@ -1,0 +1,84 @@
+//! Serving-path benchmarks — all against a synthetic encrypted bundle,
+//! so they run on a fresh checkout (no artifacts / PJRT needed):
+//!
+//! * admission-queue push + coalescing pop throughput,
+//! * batched forward amortization (examples/s at batch 1 / 8 / 32),
+//! * end-to-end HTTP predict round-trip on loopback.
+//!
+//! ```bash
+//! cargo bench --bench serve            # full
+//! cargo bench --bench serve -- --quick # CI smoke
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flexor::coordinator::export_synthetic_mlp_bundle;
+use flexor::inference::InferenceModel;
+use flexor::serve::{http, BatchQueue, Registry, ServeConfig, Server};
+use flexor::substrate::bench::{black_box, Bench};
+use flexor::substrate::json::Json;
+use flexor::substrate::prng::Pcg32;
+
+const D_IN: usize = 16;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bench::quick() } else { Bench::new() };
+
+    let dir = std::env::temp_dir().join(format!("flexor_serve_bench_{}", std::process::id()));
+    export_synthetic_mlp_bundle(&dir, "bench", 11, D_IN, &[64, 32], 10)
+        .expect("synthetic bundle");
+
+    // 1. queue: uncontended push + drain in coalesced pops
+    let q: Arc<BatchQueue<u64>> = Arc::new(BatchQueue::bounded(4096));
+    b.run_with_throughput("queue: push 1024 + pop_batch(32) drain", Some(1024.0), "req", || {
+        for i in 0..1024u64 {
+            q.try_push(i).unwrap();
+        }
+        let mut got = 0usize;
+        while got < 1024 {
+            got += q.pop_batch(32, Duration::ZERO).unwrap().len();
+        }
+        black_box(got);
+    });
+
+    // 2. forward amortization: the reason micro-batching exists
+    let model = InferenceModel::load(&dir, "bench").expect("bundle load");
+    let mut rng = Pcg32::seeded(5);
+    let xs: Vec<f32> = (0..32 * D_IN).map(|_| rng.normal()).collect();
+    for batch in [1usize, 8, 32] {
+        let x = &xs[..batch * D_IN];
+        b.run_with_throughput(
+            &format!("forward mlp batch={batch}"),
+            Some(batch as f64),
+            "ex",
+            || {
+                black_box(model.predict(x, batch).unwrap());
+            },
+        );
+    }
+
+    // 3. end-to-end HTTP round-trip (single sequential client: the
+    //    per-request floor; concurrency numbers live in the example)
+    let mut registry = Registry::new();
+    registry.load("bench", &dir, "bench").unwrap();
+    let cfg = ServeConfig { max_wait_us: 0, ..ServeConfig::default() };
+    let server = Server::start("127.0.0.1:0", registry, cfg).expect("server start");
+    let addr = server.local_addr();
+    let body = Json::obj(vec![
+        ("model", Json::str("bench")),
+        ("features", Json::arr(xs[..D_IN].iter().map(|&v| Json::num(v)))),
+    ])
+    .to_string();
+    b.run_with_throughput("http POST /predict round-trip", Some(1.0), "req", || {
+        let (status, resp) =
+            http::client::request(addr, "POST", "/predict", Some(&body)).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        black_box(resp);
+    });
+    server.shutdown();
+
+    println!("\n{}", b.to_json().to_string_pretty());
+    std::fs::remove_dir_all(&dir).ok();
+}

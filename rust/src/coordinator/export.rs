@@ -9,8 +9,11 @@ use anyhow::{ensure, Context, Result};
 
 use crate::flexor::bitpack::ColumnBits;
 use crate::flexor::fxr::{Container, Layer, Plane};
+use crate::flexor::matrix::MXor;
+use crate::flexor::num_slices;
 use crate::runtime::initbin::{self, Leaf, LeafType};
 use crate::substrate::json::Json;
+use crate::substrate::prng::Pcg32;
 
 use super::trainer::TrainSession;
 
@@ -112,6 +115,125 @@ pub fn export_fp_sidecar(session: &TrainSession) -> Result<(Vec<u8>, Json)> {
         ]));
     }
     Ok((initbin::write_init_bin(&leaves), Json::arr(index)))
+}
+
+/// Synthesize a small quantized-MLP deployment bundle — same file set as
+/// [`export_bundle`] (`<stem>.fxr` + `<stem>.fp.bin` + bundle index) but
+/// with seeded random encrypted bits / α / FP residue instead of a
+/// training session. Fixture for the serve subsystem's tests, benches and
+/// offline demos: the bundle exercises the full decrypt-at-load +
+/// binary-code forward path without artifacts or a PJRT runtime.
+pub fn export_synthetic_mlp_bundle(
+    dir: &Path,
+    stem: &str,
+    seed: u64,
+    d_in: usize,
+    hidden: &[usize],
+    num_classes: usize,
+) -> Result<()> {
+    ensure!(d_in > 0 && num_classes > 0, "degenerate geometry");
+    ensure!(!hidden.is_empty(), "synthetic mlp needs at least one hidden layer");
+    let mut rng = Pcg32::seeded(seed);
+    // the paper's quickstart rate: q=1, 8 encrypted bits → 10 quantized
+    let (q, n_in, n_out) = (1usize, 8usize, 10usize);
+
+    let mut widths = vec![d_in];
+    widths.extend_from_slice(hidden);
+
+    let mut container = Container::new(Json::obj(vec![
+        ("config", Json::str(format!("synthetic_mlp_seed{seed}"))),
+        ("model", Json::str("mlp")),
+    ]));
+    let mut layer_index = Vec::new();
+    for (i, pair) in widths.windows(2).enumerate() {
+        let (w_in, w_out) = (pair[0], pair[1]);
+        let n_weights = w_in * w_out;
+        let slices = num_slices(n_weights, n_out);
+        let planes = (0..q)
+            .map(|_| -> Result<Plane> {
+                let mxor = MXor::with_ntap(n_out, n_in, 2, &mut rng)?;
+                let alpha = (0..w_out).map(|_| rng.range_f32(0.05, 0.5)).collect();
+                let bits: Vec<u8> =
+                    (0..slices * n_in).map(|_| rng.bernoulli(0.5) as u8).collect();
+                Ok(Plane { mxor, alpha, enc: ColumnBits::from_row_major(&bits, n_in)? })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        container.push(Layer {
+            name: format!("q{i}"),
+            n_weights,
+            c_out: w_out,
+            planes,
+        })?;
+        layer_index.push(Json::obj(vec![
+            ("name", Json::str(format!("q{i}"))),
+            ("idx", Json::num(i as f64)),
+            ("shape", Json::arr([Json::num(w_in as f64), Json::num(w_out as f64)])),
+        ]));
+    }
+
+    // FP residue: one BN pack per quantized layer + the FP head — exactly
+    // the leaves `InferenceModel::forward_mlp` consumes.
+    let mut leaves = Vec::new();
+    let mut fp_index = Vec::new();
+    let push_leaf = |leaves: &mut Vec<Leaf>, fp_index: &mut Vec<Json>,
+                         role: &str, path: String, shape: Vec<usize>, data: Vec<f32>| {
+        leaves.push(Leaf {
+            dtype: LeafType::F32,
+            shape: shape.clone(),
+            bytes: data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        });
+        fp_index.push(Json::obj(vec![
+            ("role", Json::str(role)),
+            ("path", Json::str(path)),
+            ("shape", Json::arr(shape.iter().map(|&d| Json::num(d as f64)))),
+        ]));
+    };
+    for (i, &w) in hidden.iter().enumerate() {
+        let uniform = |rng: &mut Pcg32, lo: f32, hi: f32| -> Vec<f32> {
+            (0..w).map(|_| rng.range_f32(lo, hi)).collect()
+        };
+        let scale = uniform(&mut rng, 0.5, 1.5);
+        let bias: Vec<f32> = (0..w).map(|_| 0.1 * rng.normal()).collect();
+        let mean: Vec<f32> = (0..w).map(|_| 0.1 * rng.normal()).collect();
+        let var = uniform(&mut rng, 0.5, 1.5);
+        for (field, data) in
+            [("scale", scale), ("bias", bias), ("mean", mean), ("var", var)]
+        {
+            push_leaf(&mut leaves, &mut fp_index, "bn",
+                      format!("['bn'][{i}]['{field}']"), vec![w], data);
+        }
+    }
+    let last = *hidden.last().unwrap();
+    let head_w: Vec<f32> =
+        (0..last * num_classes).map(|_| 0.5 * rng.normal()).collect();
+    let head_b: Vec<f32> = (0..num_classes).map(|_| 0.1 * rng.normal()).collect();
+    push_leaf(&mut leaves, &mut fp_index, "params", "['head']['w']".to_string(),
+              vec![last, num_classes], head_w);
+    push_leaf(&mut leaves, &mut fp_index, "params", "['head']['b']".to_string(),
+              vec![num_classes], head_b);
+
+    std::fs::create_dir_all(dir)?;
+    container.save(&dir.join(format!("{stem}.fxr")))?;
+    std::fs::write(dir.join(format!("{stem}.fp.bin")), initbin::write_init_bin(&leaves))?;
+    let stats = container.stats();
+    let bundle = Json::obj(vec![
+        ("config", Json::str(format!("synthetic_mlp_seed{seed}"))),
+        ("model", Json::str("mlp")),
+        ("steps", Json::num(0.0)),
+        ("input_shape", Json::arr([Json::num(d_in as f64)])),
+        ("num_classes", Json::num(num_classes as f64)),
+        ("quantized_layers", Json::arr(layer_index)),
+        ("fp_index", Json::arr(fp_index)),
+        ("encrypted_bits", Json::num(stats.encrypted_bits as f64)),
+        ("bits_per_weight", Json::num(stats.bits_per_weight)),
+        ("compression_ratio_weights_only",
+         Json::num(stats.compression_ratio_weights_only)),
+        ("compression_ratio_with_alpha",
+         Json::num(stats.compression_ratio_with_alpha)),
+    ]);
+    std::fs::write(dir.join(format!("{stem}.bundle.json")),
+                   bundle.to_string_pretty())?;
+    Ok(())
 }
 
 /// Write the deployment bundle: `<stem>.fxr`, `<stem>.fp.bin`,

@@ -228,6 +228,49 @@ mod tests {
     }
 
     #[test]
+    fn parity_complement_padding_mask_at_partial_words() {
+        // The word-parallel engine complements whole 64-bit words for
+        // parity rows, then masks the bits past `slices` back to zero.
+        // Force that path: every even-tap row has the parity bit set, and
+        // slice counts are deliberately NOT multiples of 64 so the last
+        // word is partial. Cross-check against the scalar engine and
+        // assert the padding bits really are clear (equality of packed
+        // words would otherwise diverge even when visible bits agree).
+        check_msg("parity rows keep padding bits clear", 60, |g| {
+            let n_in = g.usize_in(2, 18);
+            let n_out = n_in + g.usize_in(1, 10);
+            let full_words = g.usize_in(0, 4);
+            let slices = full_words * 64 + g.usize_in(1, 64); // ≢ 0 (mod 64)
+            // n_tap = 2 ⇒ (-1)^{n_tap-1} = -1 on every row: all-parity M⊕
+            let mxor = MXor::with_ntap(n_out, n_in, 2, g.rng()).unwrap();
+            let d = Decryptor::new(mxor);
+            let enc = rand_enc(g.rng(), slices, n_in);
+
+            let fast = d.decrypt_columns(&enc).map_err(|e| e.to_string())?;
+            let slow = d.decrypt_scalar(&enc).map_err(|e| e.to_string())?;
+            if fast != slow {
+                return Err(format!(
+                    "engines disagree at slices={slices} n_in={n_in} n_out={n_out}"
+                ));
+            }
+            for r in 0..n_out {
+                let last = *fast.column(r).words().last().unwrap();
+                if last >> (slices % 64) != 0 {
+                    return Err(format!(
+                        "row {r}: nonzero padding bits above slice {slices}"
+                    ));
+                }
+            }
+            // the complemented columns must still round-trip through the
+            // byte serialization (which rejects dirty padding)
+            let col0 = fast.column(0);
+            crate::flexor::bitpack::BitVec::from_bytes(slices, &col0.to_bytes())
+                .map_err(|e| format!("serialization rejected column: {e}"))?;
+            Ok(())
+        });
+    }
+
+    #[test]
     fn matches_pm1_product_semantics() {
         // Directly verify Eq. (4): y_r = (-1)^{n-1} ∏ sign(x_j).
         let mut rng = Pcg32::seeded(3);

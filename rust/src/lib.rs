@@ -18,6 +18,10 @@
 //!   container, and a pure-Rust binary-code inference engine — i.e. the
 //!   paper's deployment story (Fig. 1–3, Algorithm 1) implemented with
 //!   word-parallel XOR/popcount.
+//! * **Serving** ([`serve`], DESIGN.md §6): a multi-threaded batched
+//!   inference server over the encrypted-bundle engine — model registry
+//!   (decrypt once at load), micro-batching admission queue, worker pool,
+//!   and an HTTP/1.1 front-end with latency/batching metrics.
 //!
 //! Quick start:
 //! ```bash
@@ -30,6 +34,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod data;
 pub mod inference;
+pub mod serve;
 pub mod config;
 
 /// Crate version (mirrors Cargo.toml).

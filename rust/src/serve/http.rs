@@ -1,0 +1,509 @@
+//! Minimal HTTP/1.1 front-end on `std::net::TcpListener`.
+//!
+//! Endpoints:
+//! * `POST /predict` — body `{"model": "<name>", "features": [f32...]}`
+//!   (`model` optional when exactly one model is registered). The request
+//!   is admitted to the batching queue and the handler blocks on its
+//!   one-shot channel; reply `{"model", "prediction", "batch_size",
+//!   "latency_ms"}`.
+//! * `GET /models`  — registry listing with storage stats.
+//! * `GET /metrics` — latency percentiles, queue depth, served-batch-size
+//!   histogram, throughput ([`ServeMetrics::snapshot`]).
+//! * `GET /healthz` — liveness.
+//!
+//! Overload degrades to fast `503`s (non-blocking admission); shutdown is
+//! graceful: stop accepting, drain the queue, join the workers.
+//!
+//! One thread per connection with keep-alive — plenty for the loopback /
+//! benchmark traffic this repo drives today; the accept loop is the
+//! obvious seam for a future acceptor/reactor upgrade.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::metrics::ServeMetrics;
+use super::queue::{BatchQueue, PushError};
+use super::registry::Registry;
+use super::worker::{Request, WorkerPool};
+use crate::substrate::json::{self, Json};
+
+/// Serving policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Worker threads draining the queue.
+    pub workers: usize,
+    /// Most requests coalesced into one forward pass.
+    pub max_batch: usize,
+    /// How long a worker lingers for a fuller batch after the first
+    /// request arrives (µs). The latency/throughput trade-off dial.
+    pub max_wait_us: u64,
+    /// Admission queue bound; beyond it requests get `503`.
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 2, max_batch: 16, max_wait_us: 2_000, queue_capacity: 1024 }
+    }
+}
+
+/// A running server: accept thread + worker pool over the shared registry.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    queue: Arc<BatchQueue<Request>>,
+    registry: Arc<Registry>,
+    metrics: Arc<ServeMetrics>,
+    accept_handle: thread::JoinHandle<()>,
+    workers: WorkerPool,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port), spawn the
+    /// worker pool and the accept loop, and return immediately.
+    pub fn start<A: ToSocketAddrs>(addr: A, registry: Registry, cfg: ServeConfig) -> Result<Server> {
+        anyhow::ensure!(!registry.is_empty(), "registry has no models to serve");
+        anyhow::ensure!(cfg.workers > 0 && cfg.max_batch > 0 && cfg.queue_capacity > 0,
+                        "serve config must be positive: {cfg:?}");
+        let listener = TcpListener::bind(addr).context("binding serve socket")?;
+        let local = listener.local_addr()?;
+
+        let registry = Arc::new(registry);
+        let metrics = Arc::new(ServeMetrics::new());
+        let queue = Arc::new(BatchQueue::bounded(cfg.queue_capacity));
+        let workers = WorkerPool::spawn(
+            cfg.workers,
+            queue.clone(),
+            metrics.clone(),
+            cfg.max_batch,
+            Duration::from_micros(cfg.max_wait_us),
+        );
+
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let accept_handle = {
+            let shutdown = shutdown.clone();
+            let registry = registry.clone();
+            let metrics = metrics.clone();
+            let queue = queue.clone();
+            thread::Builder::new()
+                .name("serve-accept".to_string())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = stream else { continue };
+                        let ctx = ConnCtx {
+                            registry: registry.clone(),
+                            metrics: metrics.clone(),
+                            queue: queue.clone(),
+                            shutdown: shutdown.clone(),
+                        };
+                        thread::Builder::new()
+                            .name("serve-conn".to_string())
+                            .spawn(move || handle_conn(stream, &ctx))
+                            .ok();
+                    }
+                })
+                .context("spawning accept thread")?
+        };
+
+        Ok(Server { addr: local, shutdown, queue, registry, metrics, accept_handle, workers })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Graceful shutdown: stop accepting, drain admitted requests, join
+    /// the workers.
+    pub fn shutdown(self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // unblock the accept loop with a wake-up connection
+        TcpStream::connect(self.addr).ok();
+        self.accept_handle.join().ok();
+        self.queue.close();
+        self.workers.join();
+    }
+}
+
+struct ConnCtx {
+    registry: Arc<Registry>,
+    metrics: Arc<ServeMetrics>,
+    queue: Arc<BatchQueue<Request>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+const MAX_BODY_BYTES: usize = 8 << 20;
+const MAX_HEADER_LINES: usize = 64;
+const MAX_LINE_BYTES: usize = 8 << 10;
+
+/// `read_line` with a hard length cap, so a newline-free stream cannot
+/// grow memory unboundedly. A line that fills the cap without a trailing
+/// newline was truncated — callers must treat that as malformed.
+fn read_line_capped<R: BufRead>(r: &mut R, line: &mut String) -> std::io::Result<usize> {
+    r.by_ref().take(MAX_LINE_BYTES as u64).read_line(line)
+}
+
+fn line_truncated(line: &str) -> bool {
+    line.len() >= MAX_LINE_BYTES && !line.ends_with('\n')
+}
+
+/// A parsed request head + body.
+struct HttpRequest {
+    method: String,
+    path: String,
+    keep_alive: bool,
+    body: String,
+}
+
+fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return, // clean EOF / idle timeout
+            Err(msg) => {
+                write_response(&mut writer, 400, &err_json(&msg), false).ok();
+                return;
+            }
+        };
+        let keep_alive = req.keep_alive && !ctx.shutdown.load(Ordering::SeqCst);
+        let (status, body) = route(&req, ctx);
+        if write_response(&mut writer, status, &body, keep_alive).is_err() || !keep_alive {
+            return;
+        }
+    }
+}
+
+/// Parse one request off the wire. `Ok(None)` = connection closed/idle.
+fn read_request<R: BufRead>(r: &mut R) -> std::result::Result<Option<HttpRequest>, String> {
+    let mut line = String::new();
+    match read_line_capped(r, &mut line) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(_) => return Ok(None), // timeout / reset: drop quietly
+    }
+    if line_truncated(&line) {
+        return Err(format!("request line exceeds {MAX_LINE_BYTES} bytes"));
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/") {
+        return Err(format!("malformed request line {:?}", line.trim_end()));
+    }
+
+    let mut content_length = 0usize;
+    let mut keep_alive = version != "HTTP/1.0";
+    for _ in 0..MAX_HEADER_LINES {
+        let mut h = String::new();
+        match read_line_capped(r, &mut h) {
+            Ok(0) => return Err("connection closed mid-headers".to_string()),
+            Ok(_) => {}
+            Err(e) => return Err(format!("reading headers: {e}")),
+        }
+        if line_truncated(&h) {
+            return Err(format!("header line exceeds {MAX_LINE_BYTES} bytes"));
+        }
+        let t = h.trim();
+        if t.is_empty() {
+            let body = if content_length > 0 {
+                if content_length > MAX_BODY_BYTES {
+                    return Err(format!("body too large ({content_length} bytes)"));
+                }
+                let mut buf = vec![0u8; content_length];
+                r.read_exact(&mut buf).map_err(|e| format!("reading body: {e}"))?;
+                String::from_utf8(buf).map_err(|_| "body is not utf-8".to_string())?
+            } else {
+                String::new()
+            };
+            return Ok(Some(HttpRequest { method, path, keep_alive, body }));
+        }
+        let lower = t.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            content_length = v
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad content-length {:?}", v.trim()))?;
+        } else if let Some(v) = lower.strip_prefix("connection:") {
+            match v.trim() {
+                "close" => keep_alive = false,
+                "keep-alive" => keep_alive = true,
+                _ => {}
+            }
+        }
+    }
+    Err("too many header lines".to_string())
+}
+
+fn route(req: &HttpRequest, ctx: &ConnCtx) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/predict") => handle_predict(&req.body, ctx),
+        ("GET", "/models") => (200, ctx.registry.to_json().to_string()),
+        ("GET", "/metrics") => (200, ctx.metrics.snapshot(ctx.queue.len()).to_string()),
+        ("GET", "/healthz") => (200, r#"{"status":"ok"}"#.to_string()),
+        ("POST", _) | ("GET", _) => (404, err_json(&format!("no route {}", req.path))),
+        _ => (405, err_json(&format!("method {} not allowed", req.method))),
+    }
+}
+
+fn handle_predict(body: &str, ctx: &ConnCtx) -> (u16, String) {
+    // rejections never reach a worker; count them so /metrics shows load
+    // shedding and client errors instead of a silent flat line
+    let reject = |status: u16, msg: &str| {
+        ctx.metrics.record_rejected();
+        (status, err_json(msg))
+    };
+    let parsed = match json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return reject(400, &format!("bad json body: {e}")),
+    };
+    let entry = {
+        let m = parsed.get("model");
+        if m.is_null() {
+            match ctx.registry.sole() {
+                Some(e) => e,
+                None => {
+                    return reject(
+                        400,
+                        "field 'model' is required when multiple models are registered",
+                    )
+                }
+            }
+        } else {
+            let Some(name) = m.as_str() else {
+                return reject(400, "field 'model' must be a string");
+            };
+            match ctx.registry.get(name) {
+                Some(e) => e,
+                None => return reject(404, &format!("unknown model '{name}'")),
+            }
+        }
+    };
+    let Some(features) = parsed.get("features").as_f32_vec() else {
+        return reject(400, "field 'features' must be an array of numbers");
+    };
+    if features.len() != entry.feature_len {
+        return reject(400, &format!(
+            "expected {} features for model '{}', got {}",
+            entry.feature_len,
+            entry.name,
+            features.len()
+        ));
+    }
+
+    let (tx, rx) = mpsc::channel();
+    let request = Request { entry, features, respond: tx, enqueued: Instant::now() };
+    if let Err((_, e)) = ctx.queue.try_push(request) {
+        let msg = match e {
+            PushError::Full => "admission queue full, retry later",
+            PushError::Closed => "server is shutting down",
+        };
+        return reject(503, msg);
+    }
+    match rx.recv_timeout(Duration::from_secs(30)) {
+        Ok(Ok(p)) => (
+            200,
+            Json::obj(vec![
+                ("model", Json::str(p.model)),
+                ("prediction", Json::num(p.class as f64)),
+                ("batch_size", Json::num(p.batch_size as f64)),
+                ("latency_ms", Json::num(p.latency_ms)),
+            ])
+            .to_string(),
+        ),
+        Ok(Err(msg)) => (500, err_json(&msg)),
+        Err(mpsc::RecvTimeoutError::Timeout) => (504, err_json("inference timed out")),
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            (500, err_json("worker dropped the request"))
+        }
+    }
+}
+
+fn err_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string()
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+fn write_response<W: Write>(w: &mut W, status: u16, body: &str, keep_alive: bool) -> std::io::Result<()> {
+    // one write_all per response: formatting straight into a NODELAY
+    // socket would issue a syscall (and possibly a packet) per fragment
+    let msg = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
+        status,
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+        body
+    );
+    w.write_all(msg.as_bytes())?;
+    w.flush()
+}
+
+/// One-shot HTTP/1.1 client — enough for the tests, benches and the
+/// `serve` example to drive the server without external crates.
+pub mod client {
+    use super::*;
+
+    /// Send `method path` with an optional JSON body; returns
+    /// `(status, body)`. Uses `Connection: close` (one request per call).
+    pub fn request(
+        addr: SocketAddr,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String)> {
+        let mut stream = TcpStream::connect(addr).context("connecting to server")?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+        let b = body.unwrap_or("");
+        let msg = format!(
+            "{method} {path} HTTP/1.1\r\nHost: flexor-serve\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{b}",
+            b.len()
+        );
+        stream.write_all(msg.as_bytes())?;
+        stream.flush()?;
+
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line)?;
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .with_context(|| format!("bad status line {status_line:?}"))?
+            .parse()
+            .context("non-numeric status code")?;
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            if reader.read_line(&mut h)? == 0 {
+                break;
+            }
+            let t = h.trim();
+            if t.is_empty() {
+                break;
+            }
+            let lower = t.to_ascii_lowercase();
+            if let Some(v) = lower.strip_prefix("content-length:") {
+                content_length = v.trim().parse().context("bad content-length")?;
+            }
+        }
+        let mut buf = vec![0u8; content_length];
+        reader.read_exact(&mut buf)?;
+        Ok((status, String::from_utf8(buf).context("non-utf8 response body")?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Wire-format units; full registry → queue → worker → HTTP round
+    //! trips live in `rust/tests/serve.rs` (they need a model bundle).
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse_str(s: &str) -> std::result::Result<Option<HttpRequest>, String> {
+        read_request(&mut Cursor::new(s.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse_str(
+            "POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: 11\r\n\r\nhello world",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/predict");
+        assert!(req.keep_alive); // HTTP/1.1 default
+        assert_eq!(req.body, "hello world");
+    }
+
+    #[test]
+    fn connection_header_controls_keep_alive() {
+        let req = parse_str("GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!req.keep_alive);
+        let req = parse_str("GET /metrics HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!req.keep_alive);
+        let req = parse_str("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_str("NOT-HTTP\r\n\r\n").is_err());
+        assert!(parse_str("GET /x HTTP/1.1\r\nContent-Length: zebra\r\n\r\n").is_err());
+        assert_eq!(parse_str("").unwrap().map(|r| r.path), None); // EOF
+    }
+
+    #[test]
+    fn oversized_lines_rejected_not_buffered() {
+        // newline-free / giant lines must be refused, not accumulated
+        let big_line = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(2 * MAX_LINE_BYTES));
+        assert!(parse_str(&big_line).is_err());
+        let big_header = format!(
+            "GET /x HTTP/1.1\r\nX-Pad: {}\r\n\r\n",
+            "b".repeat(2 * MAX_LINE_BYTES)
+        );
+        assert!(parse_str(&big_header).is_err());
+        let no_newline = "c".repeat(2 * MAX_LINE_BYTES);
+        assert!(parse_str(&no_newline).is_err());
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let mut out = Vec::new();
+        write_response(&mut out, 404, r#"{"error":"x"}"#, false).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 404 Not Found\r\n"));
+        assert!(s.contains("Content-Length: 13\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
+        assert!(s.ends_with(r#"{"error":"x"}"#));
+    }
+
+    #[test]
+    fn status_reasons() {
+        assert_eq!(reason(200), "OK");
+        assert_eq!(reason(503), "Service Unavailable");
+        assert_eq!(reason(599), "Unknown");
+    }
+}

@@ -1,0 +1,216 @@
+//! Serving metrics: request latency distribution, served-batch-size
+//! histogram, throughput and error counters — the numbers `GET /metrics`
+//! reports and the integration tests assert on (e.g. that the admission
+//! queue actually coalesced requests: mean served batch size > 1).
+//!
+//! Percentiles are computed over a sliding window of recent requests
+//! (bounded memory under sustained traffic); totals are exact counters.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::substrate::json::Json;
+use crate::substrate::stats::{percentiles, Moments};
+
+/// Latencies retained for percentile estimation.
+const LATENCY_WINDOW: usize = 8192;
+
+#[derive(Default)]
+struct Inner {
+    /// Sliding window of per-request latencies (ms), newest at the back.
+    lat_window: VecDeque<f64>,
+    /// Exact running moments over *all* request latencies.
+    lat_all: Moments,
+    /// Served (per-model forward) batch size → count.
+    batch_hist: BTreeMap<usize, u64>,
+    batches: u64,
+    examples: u64,
+    ok: u64,
+    errors: u64,
+    /// Requests refused at the HTTP layer (bad body, unknown model,
+    /// load-shed 503) — they never reached a worker, so they are counted
+    /// separately from served-request errors.
+    rejected: u64,
+}
+
+/// Shared, thread-safe serving metrics.
+pub struct ServeMetrics {
+    start: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        ServeMetrics { start: Instant::now(), inner: Mutex::new(Inner::default()) }
+    }
+
+    /// One forward pass served `n` coalesced requests.
+    pub fn record_batch(&self, n: usize) {
+        let mut m = self.inner.lock().unwrap();
+        *m.batch_hist.entry(n).or_insert(0) += 1;
+        m.batches += 1;
+        m.examples += n as u64;
+    }
+
+    /// One request completed (admission → response) in `latency_ms`.
+    pub fn record_request(&self, latency_ms: f64, ok: bool) {
+        let mut m = self.inner.lock().unwrap();
+        if m.lat_window.len() == LATENCY_WINDOW {
+            m.lat_window.pop_front();
+        }
+        m.lat_window.push_back(latency_ms);
+        m.lat_all.push(latency_ms);
+        if ok {
+            m.ok += 1;
+        } else {
+            m.errors += 1;
+        }
+    }
+
+    /// One request refused before admission (4xx/503 at the HTTP layer).
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Completed requests (ok + errors).
+    pub fn requests_total(&self) -> u64 {
+        let m = self.inner.lock().unwrap();
+        m.ok + m.errors
+    }
+
+    /// Examples served per forward pass, averaged — the coalescing factor.
+    pub fn mean_batch_size(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.batches == 0 {
+            0.0
+        } else {
+            m.examples as f64 / m.batches as f64
+        }
+    }
+
+    /// Full snapshot as JSON (the `GET /metrics` body). `queue_depth` is
+    /// sampled by the caller from the admission queue.
+    pub fn snapshot(&self, queue_depth: usize) -> Json {
+        let m = self.inner.lock().unwrap();
+        let uptime_s = self.start.elapsed().as_secs_f64();
+        let window: Vec<f64> = m.lat_window.iter().copied().collect();
+        let (p50, p95, p99) = if window.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            let p = percentiles(&window, &[50.0, 95.0, 99.0]);
+            (p[0], p[1], p[2])
+        };
+        let total = m.ok + m.errors;
+        let mean_batch = if m.batches == 0 {
+            0.0
+        } else {
+            m.examples as f64 / m.batches as f64
+        };
+        Json::obj(vec![
+            ("uptime_s", Json::num(uptime_s)),
+            ("requests_total", Json::num(total as f64)),
+            ("errors_total", Json::num(m.errors as f64)),
+            ("rejected_total", Json::num(m.rejected as f64)),
+            ("examples_total", Json::num(m.examples as f64)),
+            ("batches_total", Json::num(m.batches as f64)),
+            ("mean_batch_size", Json::num(mean_batch)),
+            ("batch_size_hist",
+             Json::arr(m.batch_hist.iter().map(|(&size, &count)| {
+                 Json::obj(vec![
+                     ("batch", Json::num(size as f64)),
+                     ("count", Json::num(count as f64)),
+                 ])
+             }))),
+            ("queue_depth", Json::num(queue_depth as f64)),
+            ("latency_ms",
+             Json::obj(vec![
+                 ("count", Json::num(m.lat_all.count() as f64)),
+                 ("mean", Json::num(if m.lat_all.count() == 0 { 0.0 } else { m.lat_all.mean() })),
+                 ("max", Json::num(if m.lat_all.count() == 0 { 0.0 } else { m.lat_all.max() })),
+                 ("p50", Json::num(p50)),
+                 ("p95", Json::num(p95)),
+                 ("p99", Json::num(p99)),
+             ])),
+            ("throughput_rps",
+             Json::num(if uptime_s > 0.0 { total as f64 / uptime_s } else { 0.0 })),
+        ])
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting() {
+        let m = ServeMetrics::new();
+        m.record_batch(1);
+        m.record_batch(4);
+        m.record_batch(4);
+        assert!((m.mean_batch_size() - 3.0).abs() < 1e-12);
+        let j = m.snapshot(2);
+        assert_eq!(j.get("batches_total").as_usize(), Some(3));
+        assert_eq!(j.get("examples_total").as_usize(), Some(9));
+        assert_eq!(j.get("queue_depth").as_usize(), Some(2));
+        // histogram: batch size 4 seen twice
+        let hist = j.get("batch_size_hist");
+        assert_eq!(hist.at(1).get("batch").as_usize(), Some(4));
+        assert_eq!(hist.at(1).get("count").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn request_latency_percentiles() {
+        let m = ServeMetrics::new();
+        for i in 1..=100 {
+            m.record_request(i as f64, i != 13);
+        }
+        let j = m.snapshot(0);
+        assert_eq!(j.get("requests_total").as_usize(), Some(100));
+        assert_eq!(j.get("errors_total").as_usize(), Some(1));
+        let lat = j.get("latency_ms");
+        assert_eq!(lat.get("count").as_usize(), Some(100));
+        let p50 = lat.get("p50").as_f64().unwrap();
+        assert!((p50 - 50.5).abs() < 1.0, "p50 {p50}");
+        assert!(lat.get("p99").as_f64().unwrap() >= p50);
+        assert_eq!(lat.get("max").as_f64(), Some(100.0));
+    }
+
+    #[test]
+    fn empty_snapshot_is_well_formed() {
+        let j = ServeMetrics::new().snapshot(0);
+        assert_eq!(j.get("requests_total").as_usize(), Some(0));
+        assert_eq!(j.get("rejected_total").as_usize(), Some(0));
+        assert_eq!(j.get("mean_batch_size").as_f64(), Some(0.0));
+        assert_eq!(j.get("latency_ms").get("p99").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn rejections_counted_separately() {
+        let m = ServeMetrics::new();
+        m.record_rejected();
+        m.record_rejected();
+        m.record_request(1.0, true);
+        let j = m.snapshot(0);
+        assert_eq!(j.get("rejected_total").as_usize(), Some(2));
+        assert_eq!(j.get("requests_total").as_usize(), Some(1));
+        assert_eq!(j.get("errors_total").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn window_is_bounded() {
+        let m = ServeMetrics::new();
+        for i in 0..(LATENCY_WINDOW + 10) {
+            m.record_request(i as f64, true);
+        }
+        let inner = m.inner.lock().unwrap();
+        assert_eq!(inner.lat_window.len(), LATENCY_WINDOW);
+        assert_eq!(inner.lat_all.count() as usize, LATENCY_WINDOW + 10);
+    }
+}

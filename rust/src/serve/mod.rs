@@ -1,0 +1,41 @@
+//! Model-serving subsystem: the paper's deployment story under traffic.
+//!
+//! FleXOR's pitch (Fig. 1–3, Algorithm 1) is that encrypted binary codes
+//! are cheap to serve: decrypt once at load through the XOR engine, then
+//! every request is binary-code arithmetic. This module turns the
+//! single-threaded `examples/serve.rs` loop into an actual server:
+//!
+//! ```text
+//!  POST /predict ──► http  ──► queue ───────► worker pool ──► forward
+//!  GET  /models        │     (bounded MPSC,   (decrypt-once   (batched,
+//!  GET  /metrics       │      micro-batch      shared model)   grouped
+//!                   registry   coalescing)          │          by model)
+//!                      ▲                            └──► per-request
+//!                      └── .fxr bundles                   response channels
+//! ```
+//!
+//! * [`registry`] — named `.fxr` bundle hosting, decrypt-once-at-load,
+//!   per-model storage stats;
+//! * [`queue`]    — bounded admission + micro-batch coalescing
+//!   (`max_batch` / `max_wait_us`) on `std::sync::{Mutex, Condvar}`;
+//! * [`worker`]   — thread pool draining the queue, one forward pass per
+//!   coalesced per-model group, results fanned back over one-shot
+//!   channels;
+//! * [`metrics`]  — latency percentiles, batch-size histogram, queue
+//!   depth, throughput;
+//! * [`http`]     — HTTP/1.1 front-end (`/predict`, `/models`,
+//!   `/metrics`, `/healthz`) plus a one-shot client for tests/benches.
+//!
+//! Everything is dependency-free `std` (DESIGN.md §5/§6).
+
+pub mod http;
+pub mod metrics;
+pub mod queue;
+pub mod registry;
+pub mod worker;
+
+pub use http::{ServeConfig, Server};
+pub use metrics::ServeMetrics;
+pub use queue::{BatchQueue, PushError};
+pub use registry::{ModelEntry, Registry};
+pub use worker::{Prediction, Request, Response, WorkerPool};

@@ -1,0 +1,243 @@
+//! Bounded MPSC admission queue with micro-batch coalescing.
+//!
+//! The serving front-end admits single-example requests; the forward pass
+//! is much cheaper per example when batched (one im2col/GEMM per layer
+//! instead of N). [`BatchQueue::pop_batch`] bridges the two: a consumer
+//! blocks for the first item, then *lingers* up to `max_wait` for more
+//! arrivals before returning up to `max_batch` items. Under concurrent
+//! load this converges to near-full batches; under light load it adds at
+//! most `max_wait` of latency.
+//!
+//! Built on `std::sync::{Mutex, Condvar}` only (no external channel
+//! crates — DESIGN.md §5). Admission is non-blocking ([`try_push`]) so an
+//! overloaded server degrades to fast 503s instead of unbounded memory or
+//! hung connections; [`push`] offers blocking backpressure for in-process
+//! producers.
+//!
+//! [`try_push`]: BatchQueue::try_push
+//! [`push`]: BatchQueue::push
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why an item was not admitted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushError {
+    /// At capacity — shed load.
+    Full,
+    /// [`BatchQueue::close`] was called — shutting down.
+    Closed,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded multi-producer queue whose consumer side pops *batches*.
+pub struct BatchQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> BatchQueue<T> {
+    /// A queue admitting at most `capacity` in-flight items.
+    pub fn bounded(capacity: usize) -> Self {
+        assert!(capacity > 0, "zero-capacity queue");
+        BatchQueue {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current depth (racy by nature; for metrics/monitoring).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Non-blocking admission; returns the item back on rejection.
+    pub fn try_push(&self, item: T) -> Result<(), (T, PushError)> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err((item, PushError::Closed));
+        }
+        if s.items.len() >= self.capacity {
+            return Err((item, PushError::Full));
+        }
+        s.items.push_back(item);
+        drop(s);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking admission: waits for space, fails only once closed.
+    pub fn push(&self, item: T) -> Result<(), (T, PushError)> {
+        let mut s = self.state.lock().unwrap();
+        while !s.closed && s.items.len() >= self.capacity {
+            s = self.not_full.wait(s).unwrap();
+        }
+        if s.closed {
+            return Err((item, PushError::Closed));
+        }
+        s.items.push_back(item);
+        drop(s);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Coalescing pop: block until at least one item is available, then
+    /// linger up to `max_wait` (or until `max_batch` items are ready) and
+    /// return the batch — always non-empty. Returns `None` once the queue
+    /// is closed *and* drained — the worker-thread exit signal.
+    pub fn pop_batch(&self, max_batch: usize, max_wait: Duration) -> Option<Vec<T>> {
+        assert!(max_batch > 0, "zero max_batch");
+        let mut s = self.state.lock().unwrap();
+        loop {
+            while s.items.is_empty() {
+                if s.closed {
+                    return None;
+                }
+                s = self.not_empty.wait(s).unwrap();
+            }
+            if s.items.len() < max_batch && !s.closed && !max_wait.is_zero() {
+                let deadline = Instant::now() + max_wait;
+                while s.items.len() < max_batch && !s.closed {
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        break;
+                    }
+                    s = self.not_empty.wait_timeout(s, remaining).unwrap().0;
+                }
+            }
+            let take = s.items.len().min(max_batch);
+            if take == 0 {
+                continue; // another consumer drained the linger window's items
+            }
+            let batch: Vec<T> = s.items.drain(..take).collect();
+            drop(s);
+            self.not_full.notify_all();
+            return Some(batch);
+        }
+    }
+
+    /// Stop admitting; wake all waiters. Already-queued items still drain
+    /// through `pop_batch` (graceful shutdown).
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        drop(s);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    const MS: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn fifo_and_batch_limits() {
+        let q = BatchQueue::bounded(16);
+        for i in 0..5u32 {
+            q.try_push(i).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        let b = q.pop_batch(3, Duration::ZERO).unwrap();
+        assert_eq!(b, vec![0, 1, 2]);
+        let b = q.pop_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(b, vec![3, 4]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn bounded_rejects_when_full() {
+        let q = BatchQueue::bounded(2);
+        q.try_push(1u32).unwrap();
+        q.try_push(2).unwrap();
+        let (item, e) = q.try_push(3).unwrap_err();
+        assert_eq!((item, e), (3, PushError::Full));
+        q.pop_batch(1, Duration::ZERO).unwrap();
+        q.try_push(3).unwrap();
+    }
+
+    #[test]
+    fn close_rejects_pushes_but_drains() {
+        let q = BatchQueue::bounded(4);
+        q.try_push(7u32).unwrap();
+        q.close();
+        assert_eq!(q.try_push(8).unwrap_err().1, PushError::Closed);
+        assert_eq!(q.push(9).unwrap_err().1, PushError::Closed);
+        assert_eq!(q.pop_batch(4, 5 * MS).unwrap(), vec![7]);
+        assert_eq!(q.pop_batch(4, 5 * MS), None);
+    }
+
+    #[test]
+    fn pop_blocks_until_item_or_close() {
+        let q = Arc::new(BatchQueue::bounded(4));
+        let q2 = q.clone();
+        let t = thread::spawn(move || q2.pop_batch(4, Duration::ZERO));
+        thread::sleep(5 * MS);
+        q.try_push(42u32).unwrap();
+        assert_eq!(t.join().unwrap(), Some(vec![42]));
+
+        let q2 = q.clone();
+        let t = thread::spawn(move || q2.pop_batch(4, Duration::ZERO));
+        thread::sleep(5 * MS);
+        q.close();
+        assert_eq!(t.join().unwrap(), None);
+    }
+
+    #[test]
+    fn linger_coalesces_concurrent_producers() {
+        let q = Arc::new(BatchQueue::bounded(64));
+        q.try_push(0u32).unwrap();
+        let producers: Vec<_> = (1..8u32)
+            .map(|i| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    thread::sleep(i * MS);
+                    q.push(i).unwrap();
+                })
+            })
+            .collect();
+        // the linger window (200ms) comfortably covers the staggered pushes
+        let b = q.pop_batch(8, Duration::from_millis(200)).unwrap();
+        for p in producers {
+            p.join().unwrap();
+        }
+        assert_eq!(b.len(), 8, "expected a fully coalesced batch, got {b:?}");
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let q = Arc::new(BatchQueue::bounded(1));
+        q.try_push(1u32).unwrap();
+        let q2 = q.clone();
+        let t = thread::spawn(move || q2.push(2).map_err(|(_, e)| e));
+        thread::sleep(5 * MS);
+        assert_eq!(q.pop_batch(1, Duration::ZERO).unwrap(), vec![1]);
+        t.join().unwrap().unwrap();
+        assert_eq!(q.pop_batch(1, Duration::ZERO).unwrap(), vec![2]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Model registry: named, decrypt-once-at-load model hosting.
+//!
+//! The paper's deployment story (Fig. 1, Algorithm 1) pays the XOR
+//! decryption cost **once**, when the encrypted `.fxr` bundle is loaded;
+//! after that the dense reconstructed weights serve every request. The
+//! registry owns that step for any number of bundles, keyed by name, and
+//! carries the per-model storage stats (`bits/weight`, compression ratio)
+//! that `GET /models` reports.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::inference::InferenceModel;
+use crate::substrate::json::Json;
+
+/// One hosted model plus its serving metadata.
+pub struct ModelEntry {
+    /// Registry key (what requests address the model by).
+    pub name: String,
+    pub model: InferenceModel,
+    /// Flat features per example (`input_dims` product) — requests in a
+    /// coalesced batch must all match this.
+    pub feature_len: usize,
+    /// Load + decrypt wall time (the one-time XOR cost).
+    pub load_ms: f64,
+}
+
+/// Name → model map shared between the HTTP front-end and the workers.
+pub struct Registry {
+    models: BTreeMap<String, Arc<ModelEntry>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry { models: BTreeMap::new() }
+    }
+
+    /// Load `<stem>.fxr` + sidecars from `dir` and register as `name`,
+    /// timing the decrypt-at-load step.
+    pub fn load(&mut self, name: &str, dir: &Path, stem: &str) -> Result<Arc<ModelEntry>> {
+        ensure!(!self.models.contains_key(name), "model '{name}' already registered");
+        let t0 = Instant::now();
+        let model = InferenceModel::load(dir, stem)?;
+        let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.register(name, model, load_ms)
+    }
+
+    /// Register an already-loaded model (tests, warm handoff).
+    pub fn register(
+        &mut self,
+        name: &str,
+        model: InferenceModel,
+        load_ms: f64,
+    ) -> Result<Arc<ModelEntry>> {
+        ensure!(!name.is_empty(), "empty model name");
+        ensure!(!self.models.contains_key(name), "model '{name}' already registered");
+        let feature_len = model.input_dims.iter().product::<usize>().max(1);
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            model,
+            feature_len,
+            load_ms,
+        });
+        self.models.insert(name.to_string(), entry.clone());
+        Ok(entry)
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.models.get(name).cloned()
+    }
+
+    /// The single registered model, if exactly one — the default target
+    /// for requests that omit the `model` field.
+    pub fn sole(&self) -> Option<Arc<ModelEntry>> {
+        if self.models.len() == 1 {
+            self.models.values().next().cloned()
+        } else {
+            None
+        }
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(String::as_str).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// The `GET /models` body.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "models",
+            Json::arr(self.models.values().map(|e| {
+                Json::obj(vec![
+                    ("name", Json::str(e.name.clone())),
+                    ("model", Json::str(e.model.model.clone())),
+                    ("num_classes", Json::num(e.model.num_classes as f64)),
+                    ("input_dims",
+                     Json::arr(e.model.input_dims.iter().map(|&d| Json::num(d as f64)))),
+                    ("feature_len", Json::num(e.feature_len as f64)),
+                    ("bits_per_weight", Json::num(e.model.bits_per_weight)),
+                    ("compression_ratio", Json::num(e.model.compression_ratio)),
+                    ("load_ms", Json::num(e.load_ms)),
+                ])
+            })),
+        )])
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Registry tests that need a real model go through a synthetic bundle
+    //! in `rust/tests/serve.rs` (InferenceModel is only constructible via
+    //! `load`). Here: empty-registry behavior.
+    use super::*;
+
+    #[test]
+    fn empty_registry() {
+        let r = Registry::new();
+        assert!(r.is_empty());
+        assert_eq!(r.len(), 0);
+        assert!(r.get("x").is_none());
+        assert!(r.sole().is_none());
+        assert!(r.names().is_empty());
+        assert_eq!(r.to_json().get("models").as_arr().map(|a| a.len()), Some(0));
+    }
+
+    #[test]
+    fn load_missing_bundle_fails() {
+        let mut r = Registry::new();
+        let err = r
+            .load("ghost", Path::new("/nonexistent/dir"), "nope")
+            .unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+}

@@ -1,0 +1,161 @@
+//! Worker-thread pool: drains the admission queue against the shared
+//! decrypted models and fans results back through per-request channels.
+//!
+//! Each worker loops on [`BatchQueue::pop_batch`], groups the coalesced
+//! requests by target model (a popped batch may interleave models), runs
+//! **one forward pass per group**, and answers every request on its own
+//! one-shot channel. Workers exit when the queue is closed and drained,
+//! so shutdown never drops an admitted request.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::metrics::ServeMetrics;
+use super::queue::BatchQueue;
+use super::registry::ModelEntry;
+
+/// A successfully served prediction.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    /// Registry name of the model that served the request.
+    pub model: String,
+    /// Argmax class index.
+    pub class: i32,
+    /// How many requests shared the forward pass (coalescing visibility).
+    pub batch_size: usize,
+    /// Admission → response latency in milliseconds.
+    pub latency_ms: f64,
+}
+
+/// What comes back on a request's response channel.
+pub type Response = std::result::Result<Prediction, String>;
+
+/// One admitted inference request.
+pub struct Request {
+    /// Resolved at admission so workers never need the registry lock.
+    pub entry: Arc<ModelEntry>,
+    /// Flat input features, length `entry.feature_len`.
+    pub features: Vec<f32>,
+    /// One-shot response channel back to the waiting connection handler.
+    pub respond: mpsc::Sender<Response>,
+    /// Admission timestamp (latency accounting).
+    pub enqueued: Instant,
+}
+
+/// Handle over the spawned worker threads.
+pub struct WorkerPool {
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers draining `queue` with the given batching policy.
+    pub fn spawn(
+        n: usize,
+        queue: Arc<BatchQueue<Request>>,
+        metrics: Arc<ServeMetrics>,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> WorkerPool {
+        assert!(n > 0, "worker pool needs at least one thread");
+        let handles = (0..n)
+            .map(|i| {
+                let queue = queue.clone();
+                let metrics = metrics.clone();
+                thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(&queue, &metrics, max_batch, max_wait))
+                    .expect("spawning serve worker")
+            })
+            .collect();
+        WorkerPool { handles }
+    }
+
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Wait for all workers to exit (close the queue first).
+    pub fn join(self) {
+        for h in self.handles {
+            h.join().ok();
+        }
+    }
+}
+
+fn worker_loop(
+    queue: &BatchQueue<Request>,
+    metrics: &ServeMetrics,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    while let Some(batch) = queue.pop_batch(max_batch, max_wait) {
+        // group by model, preserving arrival order within each group
+        let mut groups: BTreeMap<String, Vec<Request>> = BTreeMap::new();
+        for r in batch {
+            groups.entry(r.entry.name.clone()).or_default().push(r);
+        }
+        for (_, reqs) in groups {
+            serve_group(reqs, metrics);
+        }
+    }
+}
+
+/// Run one batched forward for requests that share a model.
+fn serve_group(reqs: Vec<Request>, metrics: &ServeMetrics) {
+    let entry = reqs[0].entry.clone();
+    let fl = entry.feature_len;
+
+    // admission validates lengths; anything inconsistent is answered
+    // individually instead of poisoning the whole batch
+    let mut batch = Vec::with_capacity(reqs.len());
+    let mut x = Vec::with_capacity(reqs.len() * fl);
+    for r in reqs {
+        if r.features.len() == fl {
+            x.extend_from_slice(&r.features);
+            batch.push(r);
+        } else {
+            let msg = format!(
+                "feature length {} != model feature_len {fl}",
+                r.features.len()
+            );
+            metrics.record_request(elapsed_ms(&r), false);
+            r.respond.send(Err(msg)).ok();
+        }
+    }
+    if batch.is_empty() {
+        return;
+    }
+
+    let n = batch.len();
+    metrics.record_batch(n);
+    match entry.model.predict(&x, n) {
+        Ok(preds) => {
+            for (r, &class) in batch.iter().zip(&preds) {
+                let latency_ms = elapsed_ms(r);
+                metrics.record_request(latency_ms, true);
+                r.respond
+                    .send(Ok(Prediction {
+                        model: entry.name.clone(),
+                        class,
+                        batch_size: n,
+                        latency_ms,
+                    }))
+                    .ok();
+            }
+        }
+        Err(e) => {
+            let msg = format!("forward pass failed: {e:#}");
+            for r in &batch {
+                metrics.record_request(elapsed_ms(r), false);
+                r.respond.send(Err(msg.clone())).ok();
+            }
+        }
+    }
+}
+
+fn elapsed_ms(r: &Request) -> f64 {
+    r.enqueued.elapsed().as_secs_f64() * 1e3
+}

@@ -65,6 +65,17 @@ impl Json {
         }
     }
 
+    /// Flat f32 vector from an array of numbers (the serve request
+    /// payload); `None` if not an array or any element is non-numeric.
+    pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
+        let arr = self.as_arr()?;
+        let mut out = Vec::with_capacity(arr.len());
+        for v in arr {
+            out.push(v.as_f64()? as f32);
+        }
+        Some(out)
+    }
+
     /// Object field lookup; `Json::Null` for missing keys / non-objects.
     pub fn get(&self, key: &str) -> &Json {
         static NULL: Json = Json::Null;
@@ -557,6 +568,22 @@ mod tests {
             parse(&v.to_string()) == Ok(v.clone())
                 && parse(&v.to_string_pretty()) == Ok(v)
         });
+    }
+
+    #[test]
+    fn f32_vec_accessor() {
+        let v = parse("[1, -2.5, 3e2]").unwrap();
+        assert_eq!(v.as_f32_vec(), Some(vec![1.0, -2.5, 300.0]));
+        assert_eq!(parse("[]").unwrap().as_f32_vec(), Some(vec![]));
+        assert_eq!(parse(r#"[1, "x"]"#).unwrap().as_f32_vec(), None);
+        assert_eq!(parse("3").unwrap().as_f32_vec(), None);
+        // f32 features survive the num → text → num round trip exactly
+        let x = 0.1234567f32;
+        let j = Json::num(x);
+        let back = parse(&j.to_string()).unwrap().as_f32_vec();
+        assert_eq!(back, None); // scalar, not array
+        let arr = Json::arr([j]);
+        assert_eq!(parse(&arr.to_string()).unwrap().as_f32_vec(), Some(vec![x]));
     }
 
     #[test]

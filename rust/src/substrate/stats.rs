@@ -70,10 +70,13 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
-/// Sort a sample then take several percentiles at once.
-pub fn percentiles(mut xs: Vec<f64>, ps: &[f64]) -> Vec<f64> {
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    ps.iter().map(|&p| percentile(&xs, p)).collect()
+/// Take several percentiles of a sample at once. Borrows the sample and
+/// sorts a local copy, so callers keep their data (no more `lat.clone()`
+/// at every call site).
+pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ps.iter().map(|&p| percentile(&sorted, p)).collect()
 }
 
 /// Fixed-range histogram (the encrypted-weight distribution plots).
@@ -171,8 +174,11 @@ mod tests {
 
     #[test]
     fn percentiles_unsorted_input() {
-        let got = percentiles(vec![5.0, 1.0, 3.0], &[0.0, 50.0, 100.0]);
+        let xs = [5.0, 1.0, 3.0];
+        let got = percentiles(&xs, &[0.0, 50.0, 100.0]);
         assert_eq!(got, vec![1.0, 3.0, 5.0]);
+        // the borrowed sample is left untouched
+        assert_eq!(xs, [5.0, 1.0, 3.0]);
     }
 
     #[test]

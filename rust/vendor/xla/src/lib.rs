@@ -1,0 +1,286 @@
+//! Offline stand-in for the `xla` PJRT bindings (DESIGN.md §5).
+//!
+//! The build image used for CI has no XLA toolchain, so this crate provides
+//! the API surface `runtime/` compiles against in two tiers:
+//!
+//! * **Host-side literals** ([`Literal`], [`ElementType`]) are fully
+//!   functional — shape/dtype-checked byte buffers with the constructors
+//!   and accessors the marshalling layer uses. Everything that only moves
+//!   data (initbin parsing, checkpoint export, the serve subsystem) works.
+//! * **PJRT execution** ([`PjRtClient`], compilation, `execute`) returns a
+//!   descriptive [`Error`]: training/eval need the real `xla_extension`
+//!   runtime. Integration tests and examples detect missing artifacts and
+//!   skip before ever constructing a client, so `cargo test` passes on a
+//!   fresh checkout.
+
+use std::fmt;
+
+/// Error type for all stubbed/validated operations.
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: &str) -> Result<T> {
+    Err(Error(msg.to_string()))
+}
+
+const NO_RUNTIME: &str = "PJRT runtime unavailable: built against the vendored xla stub \
+     (rust/vendor/xla). The pure-Rust decrypt/inference/serve paths work; \
+     training and HLO execution need the real xla_extension toolchain";
+
+/// Element dtypes the crate marshals (f32 tensors, i32 labels).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Rust scalar types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn to_le(self) -> [u8; 4];
+    fn from_le(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// A host-side typed, shaped byte buffer (array literal) or a tuple of
+/// literals (the flat output convention of the AOT executables).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        let mut bytes = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            bytes.extend_from_slice(&x.to_le());
+        }
+        Literal { ty: T::TY, dims: vec![v.len()], bytes, tuple: None }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal { ty: T::TY, dims: vec![], bytes: x.to_le().to_vec(), tuple: None }
+    }
+
+    /// Typed literal from raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product::<usize>().max(1);
+        if data.len() != n * 4 {
+            return err(&format!(
+                "untyped data is {} bytes, shape {dims:?} needs {}",
+                data.len(),
+                n * 4
+            ));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), bytes: data.to_vec(), tuple: None })
+    }
+
+    /// Wrap literals into a tuple literal.
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { ty: ElementType::F32, dims: vec![], bytes: Vec::new(), tuple: Some(elems) }
+    }
+
+    /// Same bytes, new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if self.tuple.is_some() {
+            return err("reshape of a tuple literal");
+        }
+        let new: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        let n_old: usize = self.dims.iter().product::<usize>().max(1);
+        let n_new: usize = new.iter().product::<usize>().max(1);
+        if n_old != n_new {
+            return err(&format!("cannot reshape {:?} to {new:?}", self.dims));
+        }
+        Ok(Literal { ty: self.ty, dims: new, bytes: self.bytes.clone(), tuple: None })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Full host copy, dtype-checked.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return err("to_vec of a tuple literal");
+        }
+        if self.ty != T::TY {
+            return err(&format!("dtype mismatch: literal is {:?}", self.ty));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le(c.try_into().expect("4-byte chunk")))
+            .collect())
+    }
+
+    /// First element (scalar readback).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        let v = self.to_vec::<T>()?;
+        match v.first() {
+            Some(&x) => Ok(x),
+            None => err("empty literal"),
+        }
+    }
+
+    /// Flatten a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.tuple {
+            Some(elems) => Ok(elems),
+            None => err("not a tuple literal"),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: parsing needs the real toolchain).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        err(NO_RUNTIME)
+    }
+}
+
+/// Computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client (stub: construction reports the missing runtime).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        err(NO_RUNTIME)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        err(NO_RUNTIME)
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err(NO_RUNTIME)
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        err(NO_RUNTIME)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_reshape_to_vec_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.dims(), &[6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_dtype_checks() {
+        let s = Literal::scalar(0.5f32);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 0.5);
+        assert!(s.to_vec::<i32>().is_err());
+        let i = Literal::vec1(&[7i32, -1]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, -1]);
+        assert_eq!(i.element_type(), ElementType::S32);
+    }
+
+    #[test]
+    fn untyped_data_validated() {
+        let ok = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2],
+            &[0u8; 8],
+        );
+        assert!(ok.is_ok());
+        let bad = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2],
+            &[0u8; 7],
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn tuple_roundtrip() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::scalar(2i32)]);
+        let elems = t.to_tuple().unwrap();
+        assert_eq!(elems.len(), 2);
+        assert!(Literal::scalar(0i32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn runtime_is_stubbed() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
