@@ -31,6 +31,7 @@ fn main() -> Result<()> {
         .flag("requests", "total single-example requests", Some("256"))
         .flag("clients", "concurrent client threads", Some("8"))
         .flag("workers", "server worker threads", Some("2"))
+        .flag("intra-threads", "GEMM threads per forward (0 = auto)", Some("0"))
         .flag("max-batch", "max coalesced batch size", Some("16"))
         .flag("max-wait-us", "batching linger window (µs)", Some("2000"))
         .flag("artifact", "config to train/export", Some("quickstart_mlp"))
@@ -84,6 +85,7 @@ fn main() -> Result<()> {
     // 3. start the server on an ephemeral loopback port
     let cfg = ServeConfig {
         workers: a.get_usize("workers"),
+        intra_threads: a.get_usize("intra-threads"),
         max_batch: a.get_usize("max-batch"),
         max_wait_us: a.get_u64("max-wait-us"),
         ..ServeConfig::default()
@@ -91,8 +93,11 @@ fn main() -> Result<()> {
     let server = Server::start("127.0.0.1:0", registry, cfg)?;
     let addr = server.local_addr();
     println!(
-        "serving on http://{addr}  ({} workers, max_batch {}, max_wait {} µs)",
-        cfg.workers, cfg.max_batch, cfg.max_wait_us
+        "serving on http://{addr}  ({} workers × {} GEMM threads, max_batch {}, max_wait {} µs)",
+        cfg.workers,
+        flexor::substrate::pool::global().threads(),
+        cfg.max_batch,
+        cfg.max_wait_us
     );
 
     // 4. concurrent clients fire single-example POST /predict requests

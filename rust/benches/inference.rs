@@ -1,25 +1,144 @@
-//! Inference-engine benchmarks: bundle load (decrypt) time and forward-pass
-//! latency/throughput of the pure-Rust binary-code engine, per model.
+//! Inference-engine benchmarks.
 //!
-//! Needs `make artifacts` (default set). Trains a handful of steps only —
-//! the numbers of interest are systems-side, not accuracy.
+//! The headline section needs **no artifacts**: it synthesizes a
+//! resnet20 encrypted bundle and measures the packed parallel fused
+//! engine (`InferenceModel::forward`) against the pre-engine scalar
+//! separate-pass composition (`forward_reference`), plus raw packed-GEMM
+//! thread scaling. Results — op, shape, ns/iter, threads, throughput and
+//! the headline speedup — are merged into `BENCH_infer.json` so the perf
+//! trajectory is tracked across PRs (`--quick` for the CI smoke mode).
+//!
+//! With `make artifacts` present, the original trained-bundle section
+//! (bundle load/decrypt time + per-model forward latency) also runs.
 
 use std::path::Path;
 
-use flexor::coordinator::{export_bundle, MetricsSink, Schedule, TrainSession};
+use flexor::coordinator::{
+    export_bundle, export_synthetic_resnet_bundle, MetricsSink, Schedule, TrainSession,
+};
 use flexor::data::{self, Batcher, Split};
+use flexor::inference::gemm::{gemm_packed_into, Epilogue, PackedB};
 use flexor::inference::InferenceModel;
 use flexor::runtime::{Manifest, Runtime};
-use flexor::substrate::bench::{black_box, Bench};
+use flexor::substrate::bench::{black_box, merge_bench_json, Bench, CaseMeta};
+use flexor::substrate::json::Json;
+use flexor::substrate::pool::{self, ThreadPool};
+use flexor::substrate::prng::Pcg32;
+
+/// Intra-op budget for the headline forward numbers (the acceptance
+/// configuration: batch 8, 4 threads).
+const THREADS: usize = 4;
 
 fn main() {
-    let root = Path::new("artifacts");
-    if !root.join("manifest.json").exists() {
-        eprintln!("SKIP: run `make artifacts` first");
-        return;
-    }
     let quick = std::env::args().any(|a| a == "--quick");
     let mut b = if quick { Bench::quick() } else { Bench::new() };
+    pool::configure_global(THREADS);
+
+    // ---- packed engine vs scalar reference (synthetic resnet20) ----------
+    let dir = std::env::temp_dir().join(format!("flexor_infer_bench_{}", std::process::id()));
+    let hw = 16usize;
+    let batch = 8usize;
+    export_synthetic_resnet_bundle(&dir, "rn20", 17, "resnet20", hw, 10)
+        .expect("synthetic resnet20 bundle");
+    let model = InferenceModel::load(&dir, "rn20").expect("bundle load");
+    let mut rng = Pcg32::seeded(7);
+    let feat = hw * hw * 3;
+    let xs: Vec<f32> = (0..batch * feat).map(|_| rng.normal()).collect();
+    let shape = format!("{batch}x{hw}x{hw}x3");
+
+    println!("# resnet20 synthetic bundle (input {hw}x{hw}x3)\n");
+    let slow = b
+        .run_case(
+            &format!("forward scalar-reference/resnet20 batch={batch}"),
+            Some(CaseMeta::new("forward_reference_scalar", &shape, 1)),
+            Some(batch as f64),
+            "ex",
+            || {
+                black_box(model.forward_reference(black_box(&xs), batch).unwrap());
+            },
+        )
+        .mean_s;
+    let threads = pool::global().threads();
+    let fast = b
+        .run_case(
+            &format!("forward packed-fused/resnet20 batch={batch} threads={threads}"),
+            Some(CaseMeta::new("forward_packed_fused", &shape, threads)),
+            Some(batch as f64),
+            "ex",
+            || {
+                black_box(model.forward(black_box(&xs), batch).unwrap());
+            },
+        )
+        .mean_s;
+    let single = format!("1x{hw}x{hw}x3");
+    b.run_case(
+        &format!("forward packed-fused/resnet20 batch=1 threads={threads}"),
+        Some(CaseMeta::new("forward_packed_fused", &single, threads)),
+        Some(1.0),
+        "ex",
+        || {
+            black_box(model.forward(black_box(&xs[..feat]), 1).unwrap());
+        },
+    );
+    let speedup = slow / fast;
+    println!("\nspeedup packed-fused vs scalar-reference (batch {batch}): {speedup:.2}x");
+
+    // ---- raw packed-GEMM thread scaling (conv-shaped problem) -------------
+    println!("\n# packed GEMM thread scaling\n");
+    let (m, k, n) = (1024usize, 288usize, 32usize);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let wmat: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    let packed = PackedB::pack(&wmat, k, n);
+    let gemm_shape = format!("{m}x{k}x{n}");
+    b.run_case(
+        &format!("gemm scalar-blocked {gemm_shape}"),
+        Some(CaseMeta::new("gemm_scalar", &gemm_shape, 1)),
+        Some((m * k * n) as f64),
+        "mac",
+        || {
+            black_box(flexor::inference::tensor::gemm(&a, m, k, &wmat, n));
+        },
+    );
+    let mut c = vec![0.0f32; m * n];
+    for threads in [1usize, 2, 4] {
+        let p = ThreadPool::new(threads);
+        b.run_case(
+            &format!("gemm packed {gemm_shape} threads={threads}"),
+            Some(CaseMeta::new("gemm_packed", &gemm_shape, threads)),
+            Some((m * k * n) as f64),
+            "mac",
+            || {
+                gemm_packed_into(&p, &a, m, k, &packed, Epilogue::None, &mut c);
+                black_box(&c);
+            },
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    // ---- trained-bundle section (needs `make artifacts`) ------------------
+    let root = Path::new("artifacts");
+    if root.join("manifest.json").exists() {
+        bench_trained_bundles(&mut b, root);
+    } else {
+        println!("\nSKIP trained-bundle section: run `make artifacts` first");
+    }
+
+    // machine-readable trajectory: BENCH_infer.json (merged by source)
+    let all = b.to_json();
+    let mut records: Vec<Json> = all.as_arr().unwrap_or(&[]).to_vec();
+    records.push(Json::obj(vec![
+        ("name", Json::str("speedup packed-fused vs scalar-reference")),
+        ("op", Json::str("speedup_forward_resnet20")),
+        ("shape", Json::str(shape.clone())),
+        ("threads", Json::num(threads as f64)),
+        ("speedup", Json::num(speedup)),
+    ]));
+    merge_bench_json(Path::new("BENCH_infer.json"), "inference", Json::arr(records))
+        .expect("writing BENCH_infer.json");
+    println!("\nwrote BENCH_infer.json (source=inference)");
+}
+
+fn bench_trained_bundles(b: &mut Bench, root: &Path) {
     let rt = Runtime::cpu().unwrap();
     let man = Manifest::load(root).unwrap();
 
@@ -41,10 +160,12 @@ fn main() {
         });
 
         let model = InferenceModel::load(&dir, cfg).unwrap();
+        let threads = pool::global().threads();
         for batch in [1usize, 16, 64] {
             let (xs, _) = Batcher::eval_set(ds.as_ref(), Split::Test, batch);
-            b.run_with_throughput(
+            b.run_case(
                 &format!("forward/{cfg} batch={batch}"),
+                Some(CaseMeta::new("forward_packed_fused", &format!("{cfg} batch={batch}"), threads)),
                 Some(batch as f64),
                 "example",
                 || {
@@ -54,8 +175,4 @@ fn main() {
         }
         std::fs::remove_dir_all(&dir).ok();
     }
-
-    std::fs::create_dir_all("runs").ok();
-    std::fs::write("runs/bench_inference.json", b.to_json().to_string_pretty()).ok();
-    println!("\nwrote runs/bench_inference.json");
 }

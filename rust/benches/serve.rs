@@ -16,8 +16,9 @@ use std::time::Duration;
 use flexor::coordinator::export_synthetic_mlp_bundle;
 use flexor::inference::InferenceModel;
 use flexor::serve::{http, BatchQueue, Registry, ServeConfig, Server};
-use flexor::substrate::bench::{black_box, Bench};
+use flexor::substrate::bench::{black_box, merge_bench_json, Bench, CaseMeta};
 use flexor::substrate::json::Json;
+use flexor::substrate::pool;
 use flexor::substrate::prng::Pcg32;
 
 const D_IN: usize = 16;
@@ -45,12 +46,14 @@ fn main() {
 
     // 2. forward amortization: the reason micro-batching exists
     let model = InferenceModel::load(&dir, "bench").expect("bundle load");
+    let threads = pool::global().threads();
     let mut rng = Pcg32::seeded(5);
     let xs: Vec<f32> = (0..32 * D_IN).map(|_| rng.normal()).collect();
     for batch in [1usize, 8, 32] {
         let x = &xs[..batch * D_IN];
-        b.run_with_throughput(
+        b.run_case(
             &format!("forward mlp batch={batch}"),
+            Some(CaseMeta::new("predict_mlp", &format!("{batch}x{D_IN}"), threads)),
             Some(batch as f64),
             "ex",
             || {
@@ -71,14 +74,23 @@ fn main() {
         ("features", Json::arr(xs[..D_IN].iter().map(|&v| Json::num(v)))),
     ])
     .to_string();
-    b.run_with_throughput("http POST /predict round-trip", Some(1.0), "req", || {
-        let (status, resp) =
-            http::client::request(addr, "POST", "/predict", Some(&body)).unwrap();
-        assert_eq!(status, 200, "{resp}");
-        black_box(resp);
-    });
+    b.run_case(
+        "http POST /predict round-trip",
+        Some(CaseMeta::new("http_predict_roundtrip", &format!("1x{D_IN}"), threads)),
+        Some(1.0),
+        "req",
+        || {
+            let (status, resp) =
+                http::client::request(addr, "POST", "/predict", Some(&body)).unwrap();
+            assert_eq!(status, 200, "{resp}");
+            black_box(resp);
+        },
+    );
     server.shutdown();
 
     println!("\n{}", b.to_json().to_string_pretty());
+    merge_bench_json(std::path::Path::new("BENCH_infer.json"), "serve", b.to_json())
+        .expect("writing BENCH_infer.json");
+    println!("wrote BENCH_infer.json (source=serve)");
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -117,6 +117,75 @@ pub fn export_fp_sidecar(session: &TrainSession) -> Result<(Vec<u8>, Json)> {
     Ok((initbin::write_init_bin(&leaves), Json::arr(index)))
 }
 
+/// One synthetic quantized layer: seeded random M⊕ / α / encrypted bits
+/// for a weight of the given shape, with α drawn from `[alpha_lo, alpha_hi)`
+/// (callers scale by fan-in to keep deep forwards numerically tame).
+fn synth_qlayer(
+    rng: &mut Pcg32,
+    idx: usize,
+    shape: &[usize],
+    (q, n_in, n_out): (usize, usize, usize),
+    (alpha_lo, alpha_hi): (f32, f32),
+) -> Result<(Layer, Json)> {
+    let n_weights: usize = shape.iter().product();
+    let c_out = *shape.last().unwrap();
+    let slices = num_slices(n_weights, n_out);
+    let planes = (0..q)
+        .map(|_| -> Result<Plane> {
+            let mxor = MXor::with_ntap(n_out, n_in, 2, rng)?;
+            let alpha = (0..c_out).map(|_| rng.range_f32(alpha_lo, alpha_hi)).collect();
+            let bits: Vec<u8> =
+                (0..slices * n_in).map(|_| rng.bernoulli(0.5) as u8).collect();
+            Ok(Plane { mxor, alpha, enc: ColumnBits::from_row_major(&bits, n_in)? })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let layer = Layer { name: format!("q{idx}"), n_weights, c_out, planes };
+    let index = Json::obj(vec![
+        ("name", Json::str(format!("q{idx}"))),
+        ("idx", Json::num(idx as f64)),
+        ("shape", Json::arr(shape.iter().map(|&d| Json::num(d as f64)))),
+    ]);
+    Ok((layer, index))
+}
+
+fn push_fp_leaf(
+    leaves: &mut Vec<Leaf>,
+    fp_index: &mut Vec<Json>,
+    role: &str,
+    path: String,
+    shape: Vec<usize>,
+    data: Vec<f32>,
+) {
+    leaves.push(Leaf {
+        dtype: LeafType::F32,
+        shape: shape.clone(),
+        bytes: data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+    });
+    fp_index.push(Json::obj(vec![
+        ("role", Json::str(role)),
+        ("path", Json::str(path)),
+        ("shape", Json::arr(shape.iter().map(|&d| Json::num(d as f64)))),
+    ]));
+}
+
+/// Seeded random BN pack (`scale`/`bias`/`mean`/`var`) for site `i`.
+fn synth_bn_site(
+    rng: &mut Pcg32,
+    i: usize,
+    w: usize,
+    leaves: &mut Vec<Leaf>,
+    fp_index: &mut Vec<Json>,
+) {
+    let scale: Vec<f32> = (0..w).map(|_| rng.range_f32(0.5, 1.5)).collect();
+    let bias: Vec<f32> = (0..w).map(|_| 0.1 * rng.normal()).collect();
+    let mean: Vec<f32> = (0..w).map(|_| 0.1 * rng.normal()).collect();
+    let var: Vec<f32> = (0..w).map(|_| rng.range_f32(0.5, 1.5)).collect();
+    for (field, data) in [("scale", scale), ("bias", bias), ("mean", mean), ("var", var)] {
+        push_fp_leaf(leaves, fp_index, "bn", format!("['bn'][{i}]['{field}']"),
+                     vec![w], data);
+    }
+}
+
 /// Synthesize a small quantized-MLP deployment bundle — same file set as
 /// [`export_bundle`] (`<stem>.fxr` + `<stem>.fp.bin` + bundle index) but
 /// with seeded random encrypted bits / α / FP residue instead of a
@@ -146,71 +215,27 @@ pub fn export_synthetic_mlp_bundle(
     ]));
     let mut layer_index = Vec::new();
     for (i, pair) in widths.windows(2).enumerate() {
-        let (w_in, w_out) = (pair[0], pair[1]);
-        let n_weights = w_in * w_out;
-        let slices = num_slices(n_weights, n_out);
-        let planes = (0..q)
-            .map(|_| -> Result<Plane> {
-                let mxor = MXor::with_ntap(n_out, n_in, 2, &mut rng)?;
-                let alpha = (0..w_out).map(|_| rng.range_f32(0.05, 0.5)).collect();
-                let bits: Vec<u8> =
-                    (0..slices * n_in).map(|_| rng.bernoulli(0.5) as u8).collect();
-                Ok(Plane { mxor, alpha, enc: ColumnBits::from_row_major(&bits, n_in)? })
-            })
-            .collect::<Result<Vec<_>>>()?;
-        container.push(Layer {
-            name: format!("q{i}"),
-            n_weights,
-            c_out: w_out,
-            planes,
-        })?;
-        layer_index.push(Json::obj(vec![
-            ("name", Json::str(format!("q{i}"))),
-            ("idx", Json::num(i as f64)),
-            ("shape", Json::arr([Json::num(w_in as f64), Json::num(w_out as f64)])),
-        ]));
+        let (layer, index) = synth_qlayer(&mut rng, i, &[pair[0], pair[1]],
+                                          (q, n_in, n_out), (0.05, 0.5))?;
+        container.push(layer)?;
+        layer_index.push(index);
     }
 
     // FP residue: one BN pack per quantized layer + the FP head — exactly
     // the leaves `InferenceModel::forward_mlp` consumes.
     let mut leaves = Vec::new();
     let mut fp_index = Vec::new();
-    let push_leaf = |leaves: &mut Vec<Leaf>, fp_index: &mut Vec<Json>,
-                         role: &str, path: String, shape: Vec<usize>, data: Vec<f32>| {
-        leaves.push(Leaf {
-            dtype: LeafType::F32,
-            shape: shape.clone(),
-            bytes: data.iter().flat_map(|x| x.to_le_bytes()).collect(),
-        });
-        fp_index.push(Json::obj(vec![
-            ("role", Json::str(role)),
-            ("path", Json::str(path)),
-            ("shape", Json::arr(shape.iter().map(|&d| Json::num(d as f64)))),
-        ]));
-    };
     for (i, &w) in hidden.iter().enumerate() {
-        let uniform = |rng: &mut Pcg32, lo: f32, hi: f32| -> Vec<f32> {
-            (0..w).map(|_| rng.range_f32(lo, hi)).collect()
-        };
-        let scale = uniform(&mut rng, 0.5, 1.5);
-        let bias: Vec<f32> = (0..w).map(|_| 0.1 * rng.normal()).collect();
-        let mean: Vec<f32> = (0..w).map(|_| 0.1 * rng.normal()).collect();
-        let var = uniform(&mut rng, 0.5, 1.5);
-        for (field, data) in
-            [("scale", scale), ("bias", bias), ("mean", mean), ("var", var)]
-        {
-            push_leaf(&mut leaves, &mut fp_index, "bn",
-                      format!("['bn'][{i}]['{field}']"), vec![w], data);
-        }
+        synth_bn_site(&mut rng, i, w, &mut leaves, &mut fp_index);
     }
     let last = *hidden.last().unwrap();
     let head_w: Vec<f32> =
         (0..last * num_classes).map(|_| 0.5 * rng.normal()).collect();
     let head_b: Vec<f32> = (0..num_classes).map(|_| 0.1 * rng.normal()).collect();
-    push_leaf(&mut leaves, &mut fp_index, "params", "['head']['w']".to_string(),
-              vec![last, num_classes], head_w);
-    push_leaf(&mut leaves, &mut fp_index, "params", "['head']['b']".to_string(),
-              vec![num_classes], head_b);
+    push_fp_leaf(&mut leaves, &mut fp_index, "params", "['head']['w']".to_string(),
+                 vec![last, num_classes], head_w);
+    push_fp_leaf(&mut leaves, &mut fp_index, "params", "['head']['b']".to_string(),
+                 vec![num_classes], head_b);
 
     std::fs::create_dir_all(dir)?;
     container.save(&dir.join(format!("{stem}.fxr")))?;
@@ -221,6 +246,110 @@ pub fn export_synthetic_mlp_bundle(
         ("model", Json::str("mlp")),
         ("steps", Json::num(0.0)),
         ("input_shape", Json::arr([Json::num(d_in as f64)])),
+        ("num_classes", Json::num(num_classes as f64)),
+        ("quantized_layers", Json::arr(layer_index)),
+        ("fp_index", Json::arr(fp_index)),
+        ("encrypted_bits", Json::num(stats.encrypted_bits as f64)),
+        ("bits_per_weight", Json::num(stats.bits_per_weight)),
+        ("compression_ratio_weights_only",
+         Json::num(stats.compression_ratio_weights_only)),
+        ("compression_ratio_with_alpha",
+         Json::num(stats.compression_ratio_with_alpha)),
+    ]);
+    std::fs::write(dir.join(format!("{stem}.bundle.json")),
+                   bundle.to_string_pretty())?;
+    Ok(())
+}
+
+/// Synthesize a quantized-resnet deployment bundle (`resnet8` …
+/// `resnet32`) with seeded random encrypted bits / α / FP residue — the
+/// conv-heavy fixture the compute-engine benchmarks and equivalence tests
+/// run on without artifacts or a PJRT runtime. Walks the same block
+/// geometry as `InferenceModel::forward_resnet` (stem → [conv1, conv2,
+/// optional downsample shortcut] per block → head), emitting quantized
+/// conv layers in consumption order and BN packs in conv-site order.
+/// α is scaled by `1/√fan_in` so the ~20-conv forward stays finite.
+pub fn export_synthetic_resnet_bundle(
+    dir: &Path,
+    stem: &str,
+    seed: u64,
+    model: &str,
+    input_hw: usize,
+    num_classes: usize,
+) -> Result<()> {
+    ensure!(input_hw >= 4 && num_classes > 0, "degenerate geometry");
+    let (blocks, widths) = crate::inference::model::resnet_geometry(model)?;
+    let mut rng = Pcg32::seeded(seed);
+    let (q, n_in, n_out) = (1usize, 8usize, 10usize);
+    let ci = 3usize;
+
+    // walk the block structure: quantized conv shapes in consumption
+    // order, BN widths in site order (stem first)
+    let mut qshapes: Vec<Vec<usize>> = Vec::new();
+    let mut bn_widths: Vec<usize> = vec![widths[0]];
+    let mut c_in = widths[0];
+    for (si, (&nb, &wd)) in blocks.iter().zip(&widths).enumerate() {
+        for bi in 0..nb {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            qshapes.push(vec![3, 3, c_in, wd]);
+            bn_widths.push(wd);
+            qshapes.push(vec![3, 3, wd, wd]);
+            bn_widths.push(wd);
+            if stride != 1 || c_in != wd {
+                qshapes.push(vec![1, 1, c_in, wd]);
+                bn_widths.push(wd);
+            }
+            c_in = wd;
+        }
+    }
+
+    let mut container = Container::new(Json::obj(vec![
+        ("config", Json::str(format!("synthetic_{model}_seed{seed}"))),
+        ("model", Json::str(model)),
+    ]));
+    let mut layer_index = Vec::new();
+    for (i, shape) in qshapes.iter().enumerate() {
+        let fan_in: usize = shape.iter().take(shape.len() - 1).product();
+        let s = 1.0 / (fan_in as f32).sqrt();
+        let (layer, index) = synth_qlayer(&mut rng, i, shape,
+                                          (q, n_in, n_out), (0.8 * s, 1.6 * s))?;
+        container.push(layer)?;
+        layer_index.push(index);
+    }
+
+    let mut leaves = Vec::new();
+    let mut fp_index = Vec::new();
+    let stem_shape = vec![3, 3, ci, widths[0]];
+    let stem_fan = (9 * ci) as f32;
+    let stem_w: Vec<f32> = (0..9 * ci * widths[0])
+        .map(|_| rng.normal() / stem_fan.sqrt())
+        .collect();
+    push_fp_leaf(&mut leaves, &mut fp_index, "params", "['stem']['w']".to_string(),
+                 stem_shape, stem_w);
+    for (i, &w) in bn_widths.iter().enumerate() {
+        synth_bn_site(&mut rng, i, w, &mut leaves, &mut fp_index);
+    }
+    let last = *widths.last().unwrap();
+    let head_w: Vec<f32> = (0..last * num_classes)
+        .map(|_| rng.normal() / (last as f32).sqrt())
+        .collect();
+    let head_b: Vec<f32> = (0..num_classes).map(|_| 0.1 * rng.normal()).collect();
+    push_fp_leaf(&mut leaves, &mut fp_index, "params", "['head']['w']".to_string(),
+                 vec![last, num_classes], head_w);
+    push_fp_leaf(&mut leaves, &mut fp_index, "params", "['head']['b']".to_string(),
+                 vec![num_classes], head_b);
+
+    std::fs::create_dir_all(dir)?;
+    container.save(&dir.join(format!("{stem}.fxr")))?;
+    std::fs::write(dir.join(format!("{stem}.fp.bin")), initbin::write_init_bin(&leaves))?;
+    let stats = container.stats();
+    let bundle = Json::obj(vec![
+        ("config", Json::str(format!("synthetic_{model}_seed{seed}"))),
+        ("model", Json::str(model)),
+        ("steps", Json::num(0.0)),
+        ("input_shape",
+         Json::arr([Json::num(input_hw as f64), Json::num(input_hw as f64),
+                    Json::num(ci as f64)])),
         ("num_classes", Json::num(num_classes as f64)),
         ("quantized_layers", Json::arr(layer_index)),
         ("fp_index", Json::arr(fp_index)),

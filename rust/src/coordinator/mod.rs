@@ -12,7 +12,8 @@ pub mod metrics;
 pub mod schedule;
 pub mod trainer;
 
-pub use export::{export_bundle, export_fp_sidecar, export_fxr, export_synthetic_mlp_bundle};
+pub use export::{export_bundle, export_fp_sidecar, export_fxr,
+                 export_synthetic_mlp_bundle, export_synthetic_resnet_bundle};
 pub use metrics::{EvalRow, MetricsSink, TrainRow};
 pub use schedule::Schedule;
 pub use trainer::{EvalResult, TrainSession};

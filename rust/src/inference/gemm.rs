@@ -1,0 +1,549 @@
+//! Packed-panel parallel GEMM with fused epilogues — the inference hot
+//! path (DESIGN.md §7).
+//!
+//! The right-hand side of every inference GEMM is a weight matrix that
+//! never changes after bundle load, so it is packed **once** into
+//! cache-aligned column panels ([`PackedB`]). The forward pass then runs a
+//! register-blocked MR×NR microkernel over row blocks of the activation
+//! matrix, sharded across the [`substrate::pool`] thread pool, and applies
+//! the layer epilogue (bias / eval-mode batch-norm in `a·x+b` form / ReLU /
+//! residual add) inside the output tile while it is still hot in registers
+//! — `conv2d → bn → relu` is one kernel invocation instead of three
+//! full-tensor passes.
+//!
+//! Determinism: every output element is produced by exactly one shard with
+//! a fixed k-ascending accumulation order, so results are bit-identical
+//! across thread counts — serve responses byte-match direct inference no
+//! matter the thread budget.
+
+use crate::substrate::pool::ThreadPool;
+
+use super::tensor::{self, Tensor};
+
+/// Microkernel row block (rows of A per tile). Kept at 4 so the NR-wide
+/// accumulator rows fit the baseline x86-64 SSE register file without
+/// spills; bump alongside NR when building with wider SIMD.
+pub const MR: usize = 4;
+/// Microkernel column block (columns of B per panel).
+pub const NR: usize = 8;
+
+/// Rows of C per pool shard (a multiple of MR keeps tiles unsplit).
+const ROWS_PER_SHARD: usize = 64;
+
+/// 64-byte-aligned storage block so panel rows start on cache-line
+/// boundaries regardless of allocator mood.
+#[repr(align(64))]
+#[derive(Clone, Copy)]
+struct AlignedBlock([f32; 16]);
+
+/// A (k × n) row-major matrix re-laid-out as `ceil(n/NR)` contiguous
+/// panels: panel `p` holds columns `[p·NR, p·NR+NR)` as `k` rows of NR
+/// consecutive floats (zero-padded past `n`). Packed once at model load.
+pub struct PackedB {
+    k: usize,
+    n: usize,
+    buf: Vec<AlignedBlock>,
+}
+
+impl PackedB {
+    /// Pack row-major `b` (k × n).
+    pub fn pack(b: &[f32], k: usize, n: usize) -> PackedB {
+        assert_eq!(b.len(), k * n, "PackedB: {k}x{n} vs len {}", b.len());
+        let panels = n.div_ceil(NR);
+        let floats = panels * k * NR;
+        let mut buf = vec![AlignedBlock([0.0; 16]); floats.div_ceil(16).max(1)];
+        {
+            let dst = floats_mut(&mut buf);
+            for p in 0..panels {
+                let j0 = p * NR;
+                let jw = (n - j0).min(NR);
+                let panel = &mut dst[p * k * NR..(p + 1) * k * NR];
+                for kk in 0..k {
+                    for jr in 0..jw {
+                        panel[kk * NR + jr] = b[kk * n + j0 + jr];
+                    }
+                }
+            }
+        }
+        PackedB { k, n, buf }
+    }
+
+    /// Pack a weight tensor: conv HWIO collapses to (kh·kw·ci, co), dense
+    /// (in, out) is already the GEMM layout.
+    pub fn from_tensor(w: &Tensor) -> PackedB {
+        let n = *w.dims.last().expect("weight tensor needs dims");
+        let k = w.data.len() / n;
+        PackedB::pack(&w.data, k, n)
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    fn panels(&self) -> usize {
+        self.n.div_ceil(NR)
+    }
+
+    fn panel(&self, p: usize) -> &[f32] {
+        &floats(&self.buf)[p * self.k * NR..(p + 1) * self.k * NR]
+    }
+}
+
+fn floats(buf: &[AlignedBlock]) -> &[f32] {
+    // Safety: AlignedBlock is exactly 16 f32s with stricter alignment.
+    unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const f32, buf.len() * 16) }
+}
+
+fn floats_mut(buf: &mut [AlignedBlock]) -> &mut [f32] {
+    unsafe {
+        std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut f32, buf.len() * 16)
+    }
+}
+
+/// What happens to an output tile before it is stored — the fusion
+/// contract (DESIGN.md §7). Column index selects the per-channel
+/// parameter; `residual` shares C's row-major (m × n) layout.
+#[derive(Clone, Copy)]
+pub enum Epilogue<'a> {
+    /// Store raw accumulators.
+    None,
+    /// `y = x + bias[col]`, then optional ReLU.
+    Bias { bias: &'a [f32], relu: bool },
+    /// Eval-mode batch norm folded to `y = x·a[col] + b[col]`, optional ReLU.
+    Affine { a: &'a [f32], b: &'a [f32], relu: bool },
+    /// Residual block tail: `y = x·a[col] + b[col] + residual[row,col]`,
+    /// optional ReLU.
+    AffineAdd { a: &'a [f32], b: &'a [f32], residual: &'a [f32], relu: bool },
+}
+
+/// `C = epilogue(A · B)` into caller storage. `a` is (m × k) row-major,
+/// `c` is (m × n) fully overwritten. Row blocks are sharded across `pool`.
+pub fn gemm_packed_into(
+    pool: &ThreadPool,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &PackedB,
+    epi: Epilogue<'_>,
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "A is {m}x{k}");
+    assert_eq!(b.k, k, "B expects k={}, got {k}", b.k);
+    assert_eq!(c.len(), m * b.n, "C is {m}x{}", b.n);
+    // validate per-channel epilogue parameters up front (the reference
+    // path's batch_norm_eval asserts the same) so a malformed bundle
+    // fails with a clear message, not an index panic inside a shard
+    match epi {
+        Epilogue::None => {}
+        Epilogue::Bias { bias, .. } => {
+            assert_eq!(bias.len(), b.n, "bias length must match n={}", b.n);
+        }
+        Epilogue::Affine { a: ea, b: eb, .. } => {
+            assert!(ea.len() == b.n && eb.len() == b.n,
+                    "affine params must match n={}", b.n);
+        }
+        Epilogue::AffineAdd { a: ea, b: eb, residual, .. } => {
+            assert!(ea.len() == b.n && eb.len() == b.n,
+                    "affine params must match n={}", b.n);
+            assert_eq!(residual.len(), c.len(), "residual must match C");
+        }
+    }
+    let n = b.n;
+    pool.run_chunks_mut(c, ROWS_PER_SHARD * n, |_shard, start, c_part| {
+        let i0 = start / n;
+        let rows = c_part.len() / n;
+        scratch::with(|arena| {
+            let mut apack = arena.take(MR * k);
+            for t0 in (0..rows).step_by(MR) {
+                let mh = (rows - t0).min(MR);
+                pack_a_tile(a, k, i0 + t0, mh, &mut apack);
+                for p in 0..b.panels() {
+                    let mut acc = [[0.0f32; NR]; MR];
+                    kernel(&apack, b.panel(p), k, &mut acc);
+                    store_tile(&acc, c_part, t0, i0, mh, p * NR, n, &epi);
+                }
+            }
+            arena.give(apack);
+        });
+    });
+}
+
+/// `epilogue(A · B)` into a scratch-arena buffer.
+pub fn gemm_packed(
+    pool: &ThreadPool,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &PackedB,
+    epi: Epilogue<'_>,
+) -> Vec<f32> {
+    let mut c = scratch::take(m * b.n);
+    gemm_packed_into(pool, a, m, k, b, epi, &mut c);
+    c
+}
+
+/// Transpose `mh` rows of A (starting at `row0`) into the MR-interleaved
+/// tile layout `apack[kk·MR + r]`; rows past `mh` are zeroed so the
+/// microkernel always runs a full MR block.
+fn pack_a_tile(a: &[f32], k: usize, row0: usize, mh: usize, apack: &mut [f32]) {
+    for r in 0..MR {
+        if r < mh {
+            let row = &a[(row0 + r) * k..(row0 + r + 1) * k];
+            for (kk, &v) in row.iter().enumerate() {
+                apack[kk * MR + r] = v;
+            }
+        } else {
+            for kk in 0..k {
+                apack[kk * MR + r] = 0.0;
+            }
+        }
+    }
+}
+
+/// The register-blocked MR×NR microkernel: a rank-1 update per k step over
+/// fixed-size arrays, written so LLVM auto-vectorizes the NR-wide rows.
+#[inline]
+fn kernel(apack: &[f32], panel: &[f32], k: usize, acc: &mut [[f32; NR]; MR]) {
+    for kk in 0..k {
+        let arow: &[f32; MR] = apack[kk * MR..kk * MR + MR].try_into().unwrap();
+        let brow: &[f32; NR] = panel[kk * NR..kk * NR + NR].try_into().unwrap();
+        for r in 0..MR {
+            let av = arow[r];
+            for j in 0..NR {
+                acc[r][j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Apply the epilogue to one tile and store its live `mh × jw` region.
+/// `t0` is the tile's first row inside `c_part`; `i0` the part's first
+/// absolute row (for residual addressing).
+#[inline]
+fn store_tile(
+    acc: &[[f32; NR]; MR],
+    c_part: &mut [f32],
+    t0: usize,
+    i0: usize,
+    mh: usize,
+    j0: usize,
+    n: usize,
+    epi: &Epilogue<'_>,
+) {
+    let jw = (n - j0).min(NR);
+    for r in 0..mh {
+        let out = &mut c_part[(t0 + r) * n + j0..(t0 + r) * n + j0 + jw];
+        match *epi {
+            Epilogue::None => out.copy_from_slice(&acc[r][..jw]),
+            Epilogue::Bias { bias, relu } => {
+                for j in 0..jw {
+                    let v = acc[r][j] + bias[j0 + j];
+                    out[j] = if relu && v < 0.0 { 0.0 } else { v };
+                }
+            }
+            Epilogue::Affine { a, b, relu } => {
+                for j in 0..jw {
+                    let v = acc[r][j] * a[j0 + j] + b[j0 + j];
+                    out[j] = if relu && v < 0.0 { 0.0 } else { v };
+                }
+            }
+            Epilogue::AffineAdd { a, b, residual, relu } => {
+                let res = &residual[(i0 + t0 + r) * n + j0..][..jw];
+                for j in 0..jw {
+                    let v = acc[r][j] * a[j0 + j] + b[j0 + j] + res[j];
+                    out[j] = if relu && v < 0.0 { 0.0 } else { v };
+                }
+            }
+        }
+    }
+}
+
+// ---- fused layer ops --------------------------------------------------------
+
+/// Fused `conv2d → epilogue` over a pre-packed HWIO weight: im2col into a
+/// recycled scratch buffer (sharded across the pool by disjoint row
+/// ranges), one packed GEMM, epilogue applied in-tile.
+/// `(kh, kw, ci)` is the kernel geometry the packed weight was built from.
+pub fn conv2d_fused(
+    pool: &ThreadPool,
+    x: &Tensor,
+    w: &PackedB,
+    (kh, kw, ci): (usize, usize, usize),
+    stride: usize,
+    epi: Epilogue<'_>,
+) -> Tensor {
+    assert_eq!(x.rank(), 4, "conv input must be NHWC");
+    assert_eq!(x.dims[3], ci, "channel mismatch");
+    assert_eq!(w.k(), kh * kw * ci, "packed weight geometry mismatch");
+    let n = x.dims[0];
+    let dims = (n, x.dims[1], x.dims[2], ci);
+    let (ho, wo, _, _) = tensor::conv_out_geometry((x.dims[1], x.dims[2]), (kh, kw), stride);
+    let k = kh * kw * ci;
+    let rows = n * ho * wo;
+    let mut col = scratch::take(rows * k);
+    pool.run_chunks_mut(&mut col, ROWS_PER_SHARD * k, |_shard, start, part| {
+        tensor::im2col_rows(&x.data, dims, (kh, kw), stride, start / k, part);
+    });
+    let out = gemm_packed(pool, &col, rows, k, w, epi);
+    scratch::give(col);
+    Tensor::new(vec![n, ho, wo, w.n()], out)
+}
+
+/// Fused `dense → epilogue`: x (N, In) · packed (In, Out).
+pub fn dense_fused(
+    pool: &ThreadPool,
+    x: &Tensor,
+    w: &PackedB,
+    epi: Epilogue<'_>,
+) -> Tensor {
+    assert_eq!(x.rank(), 2, "dense input must be (N, In)");
+    assert_eq!(x.dims[1], w.k(), "dense in-features mismatch");
+    let out = gemm_packed(pool, &x.data, x.dims[0], x.dims[1], w, epi);
+    Tensor::new(vec![x.dims[0], w.n()], out)
+}
+
+// ---- per-thread scratch arena -----------------------------------------------
+
+/// Per-thread buffer recycling so im2col columns, activations and logits
+/// are not reallocated on every request. Buffers come back via [`give`];
+/// contents of a taken buffer are unspecified (callers fully overwrite).
+pub mod scratch {
+    use std::cell::RefCell;
+
+    /// Free buffers retained per thread (bounds idle memory).
+    const MAX_FREE: usize = 16;
+
+    pub struct Arena {
+        free: Vec<Vec<f32>>,
+    }
+
+    impl Arena {
+        /// A buffer of exactly `len` floats with unspecified contents.
+        pub fn take(&mut self, len: usize) -> Vec<f32> {
+            // best-fit: the smallest free buffer whose capacity suffices,
+            // else the largest (it will grow the least)
+            let pick = self
+                .free
+                .iter()
+                .enumerate()
+                .filter(|(_, v)| v.capacity() >= len)
+                .min_by_key(|(_, v)| v.capacity())
+                .map(|(i, _)| i)
+                .or_else(|| {
+                    self.free
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|(_, v)| v.capacity())
+                        .map(|(i, _)| i)
+                });
+            let mut v = match pick {
+                Some(i) => self.free.swap_remove(i),
+                None => Vec::new(),
+            };
+            if v.len() > len {
+                v.truncate(len);
+            } else {
+                v.resize(len, 0.0);
+            }
+            v
+        }
+
+        /// Return a buffer for reuse by later takes on this thread.
+        pub fn give(&mut self, v: Vec<f32>) {
+            if self.free.len() < MAX_FREE && v.capacity() > 0 {
+                self.free.push(v);
+            }
+        }
+    }
+
+    thread_local! {
+        static ARENA: RefCell<Arena> = const { RefCell::new(Arena { free: Vec::new() }) };
+    }
+
+    /// Run `f` with this thread's arena.
+    pub fn with<R>(f: impl FnOnce(&mut Arena) -> R) -> R {
+        ARENA.with(|a| f(&mut a.borrow_mut()))
+    }
+
+    /// [`Arena::take`] on the current thread's arena.
+    pub fn take(len: usize) -> Vec<f32> {
+        with(|a| a.take(len))
+    }
+
+    /// [`Arena::give`] on the current thread's arena.
+    pub fn give(v: Vec<f32>) {
+        with(|a| a.give(v));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::ptest::check_msg;
+
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() <= 1e-3 * (1.0 + b.abs())
+    }
+
+    /// Satellite property: packed parallel GEMM ≡ naive GEMM across
+    /// thread counts and ragged m/k/n.
+    #[test]
+    fn packed_gemm_matches_naive_across_threads() {
+        let pools = [ThreadPool::new(1), ThreadPool::new(2), ThreadPool::new(4)];
+        check_msg("packed parallel gemm == naive", 30, |g| {
+            let m = g.usize_in(1, 70);
+            let k = g.usize_in(1, 90);
+            let n = g.usize_in(1, 70);
+            let a: Vec<f32> = (0..m * k).map(|_| g.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| g.normal()).collect();
+            let want = tensor::gemm(&a, m, k, &b, n);
+            let packed = PackedB::pack(&b, k, n);
+            for pool in &pools {
+                let got = gemm_packed(pool, &a, m, k, &packed, Epilogue::None);
+                for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+                    if !close(*x, *y) {
+                        return Err(format!(
+                            "threads={} ({m}x{k}x{n}) elem {i}: {x} vs {y}",
+                            pool.threads()
+                        ));
+                    }
+                }
+                scratch::give(got);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_gemm_deterministic_across_thread_counts() {
+        let a: Vec<f32> = (0..57 * 33).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..33 * 29).map(|i| (i as f32 * 0.11).cos()).collect();
+        let packed = PackedB::pack(&b, 33, 29);
+        let one = gemm_packed(&ThreadPool::new(1), &a, 57, 33, &packed, Epilogue::None);
+        let four = gemm_packed(&ThreadPool::new(4), &a, 57, 33, &packed, Epilogue::None);
+        assert_eq!(one, four, "thread count changed the bits");
+    }
+
+    /// Satellite property: fused conv+bn+relu ≡ the separate-pass
+    /// composition (`conv2d` → `batch_norm_eval` → `relu`).
+    #[test]
+    fn fused_conv_bn_relu_matches_separate_passes() {
+        let pool = ThreadPool::new(2);
+        check_msg("fused conv+bn+relu == separate passes", 20, |g| {
+            let n = g.usize_in(1, 3);
+            let h = g.usize_in(2, 8);
+            let wd = g.usize_in(2, 8);
+            let ci = g.usize_in(1, 4);
+            let co = g.usize_in(1, 9);
+            let kk = [1usize, 3][g.usize_in(0, 2)];
+            let stride = 1 + g.usize_in(0, 2);
+            let x = Tensor::new(
+                vec![n, h, wd, ci],
+                (0..n * h * wd * ci).map(|_| g.normal()).collect(),
+            );
+            let w = Tensor::new(
+                vec![kk, kk, ci, co],
+                (0..kk * kk * ci * co).map(|_| g.normal()).collect(),
+            );
+            let scale: Vec<f32> = (0..co).map(|_| g.f32_in(0.5, 1.5)).collect();
+            let bias: Vec<f32> = (0..co).map(|_| g.normal()).collect();
+            let mean: Vec<f32> = (0..co).map(|_| 0.3 * g.normal()).collect();
+            let var: Vec<f32> = (0..co).map(|_| g.f32_in(0.5, 1.5)).collect();
+
+            // reference: three separate full-tensor passes
+            let mut want = tensor::conv2d(&x, &w, stride);
+            tensor::batch_norm_eval(&mut want, &scale, &bias, &mean, &var, 1e-5);
+            tensor::relu(&mut want);
+
+            // fused: one kernel invocation over the same folded params
+            let (a, b) = tensor::bn_fold(&scale, &bias, &mean, &var, 1e-5);
+            let packed = PackedB::from_tensor(&w);
+            let got = conv2d_fused(
+                &pool,
+                &x,
+                &packed,
+                (kk, kk, ci),
+                stride,
+                Epilogue::Affine { a: &a, b: &b, relu: true },
+            );
+            if got.dims != want.dims {
+                return Err(format!("dims {:?} vs {:?}", got.dims, want.dims));
+            }
+            for (i, (x, y)) in got.data.iter().zip(&want.data).enumerate() {
+                if !close(*x, *y) {
+                    return Err(format!("elem {i}: {x} vs {y} (k={kk} s={stride})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bias_and_residual_epilogues() {
+        let pool = ThreadPool::new(2);
+        // 2x3 · 3x2 with bias+relu
+        let a = [1.0f32, 0.0, -1.0, 2.0, 1.0, 0.5];
+        let b = [1.0f32, 2.0, 0.0, 1.0, 1.0, -1.0];
+        let packed = PackedB::pack(&b, 3, 2);
+        let got = gemm_packed(
+            &pool,
+            &a,
+            2,
+            3,
+            &packed,
+            Epilogue::Bias { bias: &[0.5, -10.0], relu: true },
+        );
+        // raw: [0,3],[2.5,4.5]; +bias: [0.5,-7],[3,-5.5]; relu clamps col 1
+        assert_eq!(got, vec![0.5, 0.0, 3.0, 0.0]);
+
+        // affine+residual (no relu): y = x*a + b + res
+        let res = [10.0f32, 20.0, 30.0, 40.0];
+        let got = gemm_packed(
+            &pool,
+            &a,
+            2,
+            3,
+            &packed,
+            Epilogue::AffineAdd {
+                a: &[2.0, 1.0],
+                b: &[1.0, 0.0],
+                residual: &res,
+                relu: false,
+            },
+        );
+        assert_eq!(got, vec![11.0, 23.0, 36.0, 44.5]);
+    }
+
+    #[test]
+    fn dense_fused_matches_dense() {
+        let pool = ThreadPool::new(2);
+        let x = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.5, 2.0]);
+        let w = Tensor::new(vec![3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let bias = [0.25f32, -0.25];
+        let want = tensor::dense(&x, &w, Some(&bias));
+        let packed = PackedB::from_tensor(&w);
+        let got = dense_fused(
+            &pool,
+            &x,
+            &packed,
+            Epilogue::Bias { bias: &bias, relu: false },
+        );
+        assert_eq!(got.dims, want.dims);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn scratch_arena_recycles() {
+        let v = scratch::take(128);
+        let p = v.as_ptr();
+        scratch::give(v);
+        let v2 = scratch::take(64);
+        assert_eq!(v2.as_ptr(), p, "arena should reuse the freed buffer");
+        assert_eq!(v2.len(), 64);
+        scratch::give(v2);
+    }
+}

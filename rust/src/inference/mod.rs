@@ -2,12 +2,19 @@
 //! decrypt stored bits with XOR gates, then compute with binary codes —
 //! no Python, no XLA).
 //!
-//! * [`tensor`] — minimal NHWC f32 tensor ops (conv2d via im2col + blocked
-//!   GEMM, maxpool, global avgpool, batchnorm in eval mode, dense, relu);
+//! * [`tensor`] — minimal NHWC f32 tensor ops (reference conv2d via
+//!   im2col + blocked GEMM, maxpool, global avgpool, batchnorm in eval
+//!   mode, dense, relu);
+//! * [`gemm`]   — the hot-path compute engine (DESIGN.md §7): weights
+//!   packed once at load into cache-aligned panels, a register-blocked
+//!   microkernel sharded row-parallel across the substrate thread pool,
+//!   epilogues (bias / BN / ReLU / residual) fused into the output tile,
+//!   and a per-thread scratch arena for im2col/activation buffers;
 //! * [`model`]  — rebuilds the model graphs (mlp / lenet5 / resnet family)
 //!   from an exported bundle (`.fxr` + FP sidecar) and runs batched
 //!   forward passes whose logits match the AOT eval HLO.
 
+pub mod gemm;
 pub mod model;
 pub mod tensor;
 

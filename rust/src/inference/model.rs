@@ -7,6 +7,16 @@
 //! engine, reconstructs dense weights with `Σ α_i b_i`, rebuilds the
 //! architecture, and runs forward passes whose logits match the AOT eval
 //! HLO (verified in `rust/tests/e2e_train.rs`).
+//!
+//! Forward passes run on the packed compute engine (DESIGN.md §7): every
+//! GEMM right-hand side — quantized layers, stem, head — is packed once
+//! at load into [`gemm::PackedB`] panels, conv/dense layers execute as
+//! one fused kernel invocation (`conv → bn → relu`, residual tails
+//! included) sharded across the substrate thread pool, and activations
+//! cycle through the per-thread scratch arena instead of being
+//! reallocated per request. [`InferenceModel::forward_reference`] keeps
+//! the original separate-pass scalar composition as the equivalence
+//! oracle for property tests and the baseline for `benches/inference.rs`.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -18,10 +28,27 @@ use crate::flexor::fxr::Container;
 use crate::flexor::Decryptor;
 use crate::runtime::initbin;
 use crate::substrate::json::{self, Json};
+use crate::substrate::pool::{self, ThreadPool};
 
+use super::gemm::{self, conv2d_fused, dense_fused, Epilogue, PackedB};
 use super::tensor::{self, Tensor};
 
 const BN_EPS: f32 = 1e-5;
+
+/// (blocks per stage, stage widths) for every resnet variant this engine
+/// rebuilds — mirrors `python/compile/models/resnet.py`. Public so bundle
+/// generators (synthetic fixtures) can walk the same geometry.
+pub fn resnet_geometry(model: &str) -> Result<(Vec<usize>, Vec<usize>)> {
+    Ok(match model {
+        "resnet8" => (vec![1, 1, 1], vec![8, 16, 32]),
+        "resnet14" => (vec![2, 2, 2], vec![16, 32, 64]),
+        "resnet20" => (vec![3, 3, 3], vec![16, 32, 64]),
+        "resnet32" => (vec![5, 5, 5], vec![16, 32, 64]),
+        "resnet10img" => (vec![1, 1, 1, 1], vec![16, 32, 64, 128]),
+        "resnet18img" => (vec![2, 2, 2, 2], vec![64, 128, 256, 512]),
+        other => bail!("unknown resnet variant {other}"),
+    })
+}
 
 /// FP leaf store addressed by jax keystr path.
 struct FpStore {
@@ -61,19 +88,48 @@ impl FpStore {
     }
 }
 
-/// BN parameter pack for one normalization site.
+/// BN parameter pack for one normalization site: raw leaves for the
+/// reference path plus the eval-mode `a·x + b` fold the fused epilogue
+/// consumes (precomputed once at load, not per forward).
 struct Bn {
     scale: Vec<f32>,
     bias: Vec<f32>,
     mean: Vec<f32>,
     var: Vec<f32>,
+    a: Vec<f32>,
+    b: Vec<f32>,
 }
 
 impl Bn {
+    fn new(scale: Vec<f32>, bias: Vec<f32>, mean: Vec<f32>, var: Vec<f32>) -> Bn {
+        let (a, b) = tensor::bn_fold(&scale, &bias, &mean, &var, BN_EPS);
+        Bn { scale, bias, mean, var, a, b }
+    }
+
     fn apply(&self, x: &mut Tensor) {
         tensor::batch_norm_eval(x, &self.scale, &self.bias, &self.mean,
                                 &self.var, BN_EPS);
     }
+
+    /// The fused epilogue for this site.
+    fn affine(&self, relu: bool) -> Epilogue<'_> {
+        Epilogue::Affine { a: &self.a, b: &self.b, relu }
+    }
+}
+
+/// Load-time materialization for the packed engine: every GEMM-side
+/// weight packed once, every FP leaf the forward needs cached — the
+/// per-request `FpStore` clones are gone.
+#[derive(Default)]
+struct Engine {
+    qpacked: BTreeMap<usize, PackedB>,
+    stem: Option<Tensor>,
+    stem_packed: Option<PackedB>,
+    head_w: Option<Tensor>,
+    head_packed: Option<PackedB>,
+    head_b: Option<Vec<f32>>,
+    /// LeNet conv/dense biases by site index (`['bias'][i]`).
+    biases: Vec<Vec<f32>>,
 }
 
 /// A fully materialized inference model.
@@ -84,8 +140,8 @@ pub struct InferenceModel {
     /// Dense weights of quantized layers, by layer index, reconstructed
     /// from the encrypted container (decrypt + Σ α_i b_i).
     qweights: BTreeMap<usize, Tensor>,
-    fp: FpStore,
     bns: Vec<Bn>,
+    engine: Engine,
     /// Paper-format storage stats, carried for reporting.
     pub bits_per_weight: f64,
     pub compression_ratio: f64,
@@ -146,12 +202,39 @@ impl InferenceModel {
             if !fp.has(&p("scale")) {
                 break;
             }
-            bns.push(Bn {
-                scale: fp.vec(&p("scale"))?,
-                bias: fp.vec(&p("bias"))?,
-                mean: fp.vec(&p("mean"))?,
-                var: fp.vec(&p("var"))?,
-            });
+            bns.push(Bn::new(
+                fp.vec(&p("scale"))?,
+                fp.vec(&p("bias"))?,
+                fp.vec(&p("mean"))?,
+                fp.vec(&p("var"))?,
+            ));
+        }
+
+        // pack every GEMM right-hand side once; cache the FP leaves the
+        // forwards consume
+        let mut engine = Engine::default();
+        for (idx, w) in &qweights {
+            engine.qpacked.insert(*idx, PackedB::from_tensor(w));
+        }
+        if fp.has("['stem']['w']") {
+            let t = fp.tensor("['stem']['w']")?;
+            engine.stem_packed = Some(PackedB::from_tensor(&t));
+            engine.stem = Some(t);
+        }
+        if fp.has("['head']['w']") {
+            let t = fp.tensor("['head']['w']")?;
+            engine.head_packed = Some(PackedB::from_tensor(&t));
+            engine.head_w = Some(t);
+        }
+        if fp.has("['head']['b']") {
+            engine.head_b = Some(fp.vec("['head']['b']")?);
+        }
+        for i in 0.. {
+            let p = format!("['bias'][{i}]");
+            if !fp.has(&p) {
+                break;
+            }
+            engine.biases.push(fp.vec(&p)?);
         }
 
         let stats = fxr.stats();
@@ -166,8 +249,8 @@ impl InferenceModel {
                 .filter_map(|d| d.as_usize())
                 .collect(),
             qweights,
-            fp,
             bns,
+            engine,
             bits_per_weight: stats.bits_per_weight,
             compression_ratio: stats.compression_ratio_with_alpha,
         })
@@ -179,51 +262,200 @@ impl InferenceModel {
             .with_context(|| format!("missing quantized layer {idx}"))
     }
 
-    /// Batched forward: x flat NHWC (or NC for mlp), returns (N, classes).
+    /// Packed panels + (kh, kw, ci) conv geometry of quantized layer `idx`.
+    fn qpacked(&self, idx: usize) -> Result<(&PackedB, (usize, usize, usize))> {
+        let p = self
+            .engine
+            .qpacked
+            .get(&idx)
+            .with_context(|| format!("missing packed layer {idx}"))?;
+        let dims = &self.qweight(idx)?.dims;
+        let geom = if dims.len() == 4 { (dims[0], dims[1], dims[2]) } else { (0, 0, 0) };
+        Ok((p, geom))
+    }
+
+    fn bn(&self, idx: usize) -> Result<&Bn> {
+        self.bns.get(idx).context("ran out of BN packs")
+    }
+
+    fn lenet_bias(&self, i: usize) -> Result<&[f32]> {
+        self.engine
+            .biases
+            .get(i)
+            .map(Vec::as_slice)
+            .with_context(|| format!("missing bias {i}"))
+    }
+
+    /// Batched forward on the packed parallel engine: x flat NHWC (or NC
+    /// for mlp), returns (N, classes) logits in a scratch-arena buffer
+    /// (callers may `gemm::scratch::give` it back, as `predict` does).
     pub fn forward(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        let pool = pool::global();
         match self.model.as_str() {
-            m if m.starts_with("resnet") => self.forward_resnet(x, n),
-            "lenet5" => self.forward_lenet(x, n),
-            "mlp" => self.forward_mlp(x, n),
+            m if m.starts_with("resnet") => self.forward_resnet(x, n, pool),
+            "lenet5" => self.forward_lenet(x, n, pool),
+            "mlp" => self.forward_mlp(x, n, pool),
             other => bail!("unknown model {other}"),
         }
     }
 
-    /// argmax over forward logits.
+    /// The pre-engine separate-pass composition (scalar blocked GEMM, one
+    /// full-tensor pass per op). Semantically ≡ [`forward`]; kept as the
+    /// property-test oracle and the `benches/inference.rs` baseline.
+    pub fn forward_reference(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        match self.model.as_str() {
+            m if m.starts_with("resnet") => self.forward_resnet_ref(x, n),
+            "lenet5" => self.forward_lenet_ref(x, n),
+            "mlp" => self.forward_mlp_ref(x, n),
+            other => bail!("unknown model {other}"),
+        }
+    }
+
+    /// argmax over forward logits. NaN-tolerant: NaN logits are skipped
+    /// (never selected), an all-NaN row deterministically maps to class 0
+    /// instead of panicking the serving worker.
     pub fn predict(&self, x: &[f32], n: usize) -> Result<Vec<i32>> {
         let logits = self.forward(x, n)?;
         let c = self.num_classes;
-        Ok((0..n)
-            .map(|i| {
-                let row = &logits[i * c..(i + 1) * c];
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0 as i32
-            })
-            .collect())
+        let out = (0..n)
+            .map(|i| argmax_row(&logits[i * c..(i + 1) * c]) as i32)
+            .collect();
+        gemm::scratch::give(logits);
+        Ok(out)
     }
 
-    // ---- architectures -------------------------------------------------------
+    // ---- packed-engine architectures ----------------------------------------
 
-    fn resnet_geometry(&self) -> Result<(Vec<usize>, Vec<usize>)> {
-        // (blocks per stage, widths) — mirrors python/compile/models/resnet.py
-        Ok(match self.model.as_str() {
-            "resnet8" => (vec![1, 1, 1], vec![8, 16, 32]),
-            "resnet14" => (vec![2, 2, 2], vec![16, 32, 64]),
-            "resnet20" => (vec![3, 3, 3], vec![16, 32, 64]),
-            "resnet32" => (vec![5, 5, 5], vec![16, 32, 64]),
-            "resnet10img" => (vec![1, 1, 1, 1], vec![16, 32, 64, 128]),
-            "resnet18img" => (vec![2, 2, 2, 2], vec![64, 128, 256, 512]),
-            other => bail!("unknown resnet variant {other}"),
-        })
+    fn input_hwc(&self) -> Result<(usize, usize, usize)> {
+        ensure!(self.input_dims.len() == 3, "expected HWC input dims");
+        Ok((self.input_dims[0], self.input_dims[1], self.input_dims[2]))
     }
 
-    fn forward_resnet(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
-        let (blocks, widths) = self.resnet_geometry()?;
-        ensure!(self.input_dims.len() == 3, "resnet expects HWC input dims");
-        let (h, w, ci) = (self.input_dims[0], self.input_dims[1], self.input_dims[2]);
+    fn take_input(&self, x: &[f32], dims: Vec<usize>) -> Result<Tensor> {
+        ensure!(x.len() == dims.iter().product::<usize>(), "input length mismatch");
+        let mut data = gemm::scratch::take(x.len());
+        data.copy_from_slice(x);
+        Ok(Tensor::new(dims, data))
+    }
+
+    fn head_fused(&self, pooled: Tensor, pool: &ThreadPool) -> Result<Vec<f32>> {
+        let head = self.engine.head_packed.as_ref().context("missing FP head")?;
+        let head_b = self.engine.head_b.as_ref().context("missing head bias")?;
+        let logits =
+            dense_fused(pool, &pooled, head, Epilogue::Bias { bias: head_b, relu: false });
+        gemm::scratch::give(pooled.data);
+        Ok(logits.data)
+    }
+
+    fn forward_resnet(&self, x: &[f32], n: usize, pool: &ThreadPool) -> Result<Vec<f32>> {
+        let (blocks, widths) = resnet_geometry(&self.model)?;
+        let (h, w, ci) = self.input_hwc()?;
+        let xin = self.take_input(x, vec![n, h, w, ci])?;
+
+        // stem (FP): conv → bn → relu, one invocation
+        let stem = self.engine.stem_packed.as_ref().context("missing FP stem")?;
+        let sd = &self.engine.stem.as_ref().unwrap().dims;
+        let mut bn_i = 0usize;
+        let mut q_i = 0usize;
+        let mut cur = conv2d_fused(pool, &xin, stem, (sd[0], sd[1], sd[2]), 1,
+                                   self.bn(bn_i)?.affine(true));
+        bn_i += 1;
+        gemm::scratch::give(xin.data);
+
+        let mut c_in = widths[0];
+        for (si, (&nb, &wd)) in blocks.iter().zip(&widths).enumerate() {
+            for bi in 0..nb {
+                let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+                let downsample = stride != 1 || c_in != wd;
+
+                let (w1, g1) = self.qpacked(q_i)?;
+                let bn1 = self.bn(bn_i)?;
+                let (w2, g2) = self.qpacked(q_i + 1)?;
+                let bn2 = self.bn(bn_i + 1)?;
+                q_i += 2;
+                bn_i += 2;
+
+                // conv1 → bn → relu fused
+                let out1 = conv2d_fused(pool, &cur, w1, g1, stride, bn1.affine(true));
+
+                // shortcut first, so conv2's epilogue can fuse the
+                // residual add (+ final relu) into its output tile
+                let short = if downsample {
+                    let (ws, gs) = self.qpacked(q_i)?;
+                    let bns = self.bn(bn_i)?;
+                    q_i += 1;
+                    bn_i += 1;
+                    Some(conv2d_fused(pool, &cur, ws, gs, stride, bns.affine(false)))
+                } else {
+                    None
+                };
+                let residual = short.as_ref().map_or(&cur.data[..], |s| &s.data[..]);
+                let out = conv2d_fused(
+                    pool,
+                    &out1,
+                    w2,
+                    g2,
+                    1,
+                    Epilogue::AffineAdd { a: &bn2.a, b: &bn2.b, residual, relu: true },
+                );
+
+                gemm::scratch::give(out1.data);
+                if let Some(s) = short {
+                    gemm::scratch::give(s.data);
+                }
+                gemm::scratch::give(std::mem::replace(&mut cur, out).data);
+                c_in = wd;
+            }
+        }
+        let pooled = tensor::avg_pool_global(&cur);
+        gemm::scratch::give(cur.data);
+        self.head_fused(pooled, pool)
+    }
+
+    fn forward_lenet(&self, x: &[f32], n: usize, pool: &ThreadPool) -> Result<Vec<f32>> {
+        let (h, w, ci) = self.input_hwc()?;
+        let mut t = self.take_input(x, vec![n, h, w, ci])?;
+
+        for i in 0..2 {
+            let (wp, g) = self.qpacked(i)?;
+            let conv = conv2d_fused(pool, &t, wp, g, 1,
+                                    Epilogue::Bias { bias: self.lenet_bias(i)?, relu: true });
+            gemm::scratch::give(std::mem::replace(&mut t, conv).data);
+            let pooled = tensor::max_pool2(&t);
+            gemm::scratch::give(std::mem::replace(&mut t, pooled).data);
+        }
+
+        let flat_len: usize = t.dims[1] * t.dims[2] * t.dims[3];
+        let flat = Tensor::new(vec![n, flat_len], t.data);
+
+        let (w2, _) = self.qpacked(2)?;
+        let fc = dense_fused(pool, &flat, w2,
+                             Epilogue::Bias { bias: self.lenet_bias(2)?, relu: true });
+        gemm::scratch::give(flat.data);
+        let (w3, _) = self.qpacked(3)?;
+        let out = dense_fused(pool, &fc, w3,
+                              Epilogue::Bias { bias: self.lenet_bias(3)?, relu: false });
+        gemm::scratch::give(fc.data);
+        Ok(out.data)
+    }
+
+    fn forward_mlp(&self, x: &[f32], n: usize, pool: &ThreadPool) -> Result<Vec<f32>> {
+        let d_in = x.len() / n;
+        let mut t = self.take_input(x, vec![n, d_in])?;
+        for i in 0.. {
+            let Some(w) = self.engine.qpacked.get(&i) else { break };
+            let bn = self.bns.get(i).context("missing BN pack for mlp layer")?;
+            let next = dense_fused(pool, &t, w, bn.affine(true));
+            gemm::scratch::give(std::mem::replace(&mut t, next).data);
+        }
+        self.head_fused(t, pool)
+    }
+
+    // ---- reference architectures (separate passes, scalar GEMM) -------------
+
+    fn forward_resnet_ref(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        let (blocks, widths) = resnet_geometry(&self.model)?;
+        let (h, w, ci) = self.input_hwc()?;
         ensure!(x.len() == n * h * w * ci, "input length mismatch");
 
         let mut bn_i = 0usize;
@@ -236,10 +468,10 @@ impl InferenceModel {
         };
 
         // stem (FP)
-        let stem = self.fp.tensor("['stem']['w']")?;
+        let stem = self.engine.stem.as_ref().context("missing FP stem")?;
         let mut hmap = tensor::conv2d(
             &Tensor::new(vec![n, h, w, ci], x.to_vec()),
-            &stem,
+            stem,
             1,
         );
         bn(&mut hmap, &self.bns)?;
@@ -275,26 +507,24 @@ impl InferenceModel {
             }
         }
         let pooled = tensor::avg_pool_global(&hmap);
-        let head_w = self.fp.tensor("['head']['w']")?;
-        let head_b = self.fp.vec("['head']['b']")?;
-        Ok(tensor::dense(&pooled, &head_w, Some(&head_b)).data)
+        let head_w = self.engine.head_w.as_ref().context("missing FP head")?;
+        let head_b = self.engine.head_b.as_ref().context("missing head bias")?;
+        Ok(tensor::dense(&pooled, head_w, Some(head_b)).data)
     }
 
-    fn forward_lenet(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
-        ensure!(self.input_dims.len() == 3);
-        let (h, w, ci) = (self.input_dims[0], self.input_dims[1], self.input_dims[2]);
-        let bias = |i: usize| self.fp.vec(&format!("['bias'][{i}]"));
+    fn forward_lenet_ref(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        let (h, w, ci) = self.input_hwc()?;
         let mut t = Tensor::new(vec![n, h, w, ci], x.to_vec());
 
         let w0 = self.qweight(0)?;
         t = tensor::conv2d(&t, w0, 1);
-        add_bias_nhwc(&mut t, &bias(0)?);
+        add_bias_nhwc(&mut t, self.lenet_bias(0)?);
         tensor::relu(&mut t);
         t = tensor::max_pool2(&t);
 
         let w1 = self.qweight(1)?;
         t = tensor::conv2d(&t, w1, 1);
-        add_bias_nhwc(&mut t, &bias(1)?);
+        add_bias_nhwc(&mut t, self.lenet_bias(1)?);
         tensor::relu(&mut t);
         t = tensor::max_pool2(&t);
 
@@ -302,13 +532,13 @@ impl InferenceModel {
         let flat = Tensor::new(vec![n, flat_len], t.data);
 
         let w2 = self.qweight(2)?;
-        let mut fc = tensor::dense(&flat, w2, Some(&bias(2)?));
+        let mut fc = tensor::dense(&flat, w2, Some(self.lenet_bias(2)?));
         tensor::relu(&mut fc);
         let w3 = self.qweight(3)?;
-        Ok(tensor::dense(&fc, w3, Some(&bias(3)?)).data)
+        Ok(tensor::dense(&fc, w3, Some(self.lenet_bias(3)?)).data)
     }
 
-    fn forward_mlp(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+    fn forward_mlp_ref(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
         let d_in = x.len() / n;
         let mut t = Tensor::new(vec![n, d_in], x.to_vec());
         for i in 0.. {
@@ -320,10 +550,23 @@ impl InferenceModel {
                 .apply(&mut t);
             tensor::relu(&mut t);
         }
-        let head_w = self.fp.tensor("['head']['w']")?;
-        let head_b = self.fp.vec("['head']['b']")?;
-        Ok(tensor::dense(&t, &head_w, Some(&head_b)).data)
+        let head_w = self.engine.head_w.as_ref().context("missing FP head")?;
+        let head_b = self.engine.head_b.as_ref().context("missing head bias")?;
+        Ok(tensor::dense(&t, head_w, Some(head_b)).data)
     }
+}
+
+/// NaN-tolerant argmax: strict `>` skips NaNs, all-NaN rows map to 0.
+fn argmax_row(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
 }
 
 fn add_bias_nhwc(t: &mut Tensor, bias: &[f32]) {
@@ -337,7 +580,10 @@ fn add_bias_nhwc(t: &mut Tensor, bias: &[f32]) {
 #[cfg(test)]
 mod tests {
     //! Full-bundle tests live in rust/tests/e2e_train.rs (they need
-    //! artifacts + a trained session). Here: geometry table only.
+    //! artifacts + a trained session) and rust/tests/cross_layer.rs; the
+    //! packed-engine ≡ reference equivalence over whole synthetic bundles
+    //! lives in rust/tests/serve.rs. Here: geometry table + argmax edge
+    //! cases.
     use super::*;
 
     fn dummy(model: &str) -> InferenceModel {
@@ -346,8 +592,8 @@ mod tests {
             num_classes: 10,
             input_dims: vec![32, 32, 3],
             qweights: BTreeMap::new(),
-            fp: FpStore { by_path: BTreeMap::new() },
             bns: vec![],
+            engine: Engine::default(),
             bits_per_weight: 0.8,
             compression_ratio: 35.0,
         }
@@ -355,14 +601,25 @@ mod tests {
 
     #[test]
     fn resnet_geometry_table() {
-        assert_eq!(dummy("resnet20").resnet_geometry().unwrap().0, vec![3, 3, 3]);
-        assert_eq!(dummy("resnet10img").resnet_geometry().unwrap().1,
+        assert_eq!(resnet_geometry("resnet20").unwrap().0, vec![3, 3, 3]);
+        assert_eq!(resnet_geometry("resnet10img").unwrap().1,
                    vec![16, 32, 64, 128]);
-        assert!(dummy("resnet99").resnet_geometry().is_err());
+        assert!(resnet_geometry("resnet99").is_err());
     }
 
     #[test]
     fn unknown_model_rejected() {
         assert!(dummy("vgg").forward(&[0.0; 10], 1).is_err());
+        assert!(dummy("vgg").forward_reference(&[0.0; 10], 1).is_err());
+    }
+
+    #[test]
+    fn argmax_is_nan_tolerant_and_deterministic() {
+        assert_eq!(argmax_row(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax_row(&[f32::NAN, 0.2, 0.5]), 2);
+        assert_eq!(argmax_row(&[0.5, f32::NAN, 0.2]), 0);
+        assert_eq!(argmax_row(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax_row(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
+        assert_eq!(argmax_row(&[-1.0, f32::INFINITY, f32::NAN]), 1);
     }
 }

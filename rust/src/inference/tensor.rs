@@ -35,46 +35,103 @@ pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
     let (n, h, wd, ci) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
     let (kh, kw, wci, co) = (w.dims[0], w.dims[1], w.dims[2], w.dims[3]);
     assert_eq!(ci, wci, "channel mismatch");
-    // SAME padding (matches lax conv with padding="SAME")
+    let mut col = Vec::new();
+    let (rows, k, ho, wo) = im2col_into(&x.data, (n, h, wd, ci), (kh, kw), stride, &mut col);
+    // GEMM: (rows × k) · (k × co)
+    let out = gemm(&col, rows, k, &w.data, co);
+    Tensor::new(vec![n, ho, wo, co], out)
+}
+
+/// SAME-padding output geometry shared by all im2col entry points:
+/// `(ho, wo, pt, pl)` (matches lax conv with padding="SAME").
+pub fn conv_out_geometry(
+    (h, wd): (usize, usize),
+    (kh, kw): (usize, usize),
+    stride: usize,
+) -> (usize, usize, usize, usize) {
     let ho = h.div_ceil(stride);
     let wo = wd.div_ceil(stride);
     let pad_h = ((ho - 1) * stride + kh).saturating_sub(h);
     let pad_w = ((wo - 1) * stride + kw).saturating_sub(wd);
-    let (pt, pl) = (pad_h / 2, pad_w / 2);
+    (ho, wo, pad_h / 2, pad_w / 2)
+}
 
-    // im2col: (n*ho*wo, kh*kw*ci)
-    let k = kh * kw * ci;
+/// SAME-padded im2col (matches lax conv with padding="SAME") into a
+/// caller-owned buffer so the hot path reuses allocations across requests.
+/// `col` is resized to `(n·ho·wo) × (kh·kw·ci)`; its previous contents are
+/// irrelevant (padding regions are zero-filled explicitly, everything else
+/// is overwritten). Returns `(rows, k, ho, wo)`.
+pub fn im2col_into(
+    x: &[f32],
+    dims: (usize, usize, usize, usize),
+    kernel: (usize, usize),
+    stride: usize,
+    col: &mut Vec<f32>,
+) -> (usize, usize, usize, usize) {
+    let (n, h, wd, ci) = dims;
+    let (ho, wo, _, _) = conv_out_geometry((h, wd), kernel, stride);
+    let k = kernel.0 * kernel.1 * ci;
     let rows = n * ho * wo;
-    let mut col = vec![0.0f32; rows * k];
-    let mut r = 0usize;
-    for b in 0..n {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let base = r * k;
-                for ky in 0..kh {
-                    let iy = (oy * stride + ky) as isize - pt as isize;
-                    if iy < 0 || iy >= h as isize {
-                        r += 0; // stays zero
-                        continue;
-                    }
-                    for kx in 0..kw {
-                        let ix = (ox * stride + kx) as isize - pl as isize;
-                        if ix < 0 || ix >= wd as isize {
-                            continue;
-                        }
-                        let src = ((b * h + iy as usize) * wd + ix as usize) * ci;
-                        let dst = base + (ky * kw + kx) * ci;
-                        col[dst..dst + ci]
-                            .copy_from_slice(&x.data[src..src + ci]);
+    col.resize(rows * k, 0.0);
+    im2col_rows(x, dims, kernel, stride, 0, col);
+    (rows, k, ho, wo)
+}
+
+/// Fill `out.len() / k` consecutive im2col rows starting at global output
+/// row `r0` — the shardable core of im2col, so the fused conv path can
+/// split one column buffer across the thread pool (disjoint row ranges).
+/// Interior patch rows are single contiguous `kw·ci` copies; the
+/// in-bounds checks only run on the image border; padding regions are
+/// zero-filled explicitly (the buffer need not arrive zeroed).
+pub fn im2col_rows(
+    x: &[f32],
+    (n, h, wd, ci): (usize, usize, usize, usize),
+    (kh, kw): (usize, usize),
+    stride: usize,
+    r0: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), n * h * wd * ci, "input length mismatch");
+    let (ho, wo, pt, pl) = conv_out_geometry((h, wd), (kh, kw), stride);
+    let k = kh * kw * ci;
+    debug_assert_eq!(out.len() % k, 0);
+    let count = out.len() / k;
+    assert!(r0 + count <= n * ho * wo, "row range out of bounds");
+    for t in 0..count {
+        let r = r0 + t;
+        let b = r / (ho * wo);
+        let rem = r % (ho * wo);
+        let (oy, ox) = (rem / wo, rem % wo);
+        let base = t * k;
+        let ix0 = (ox * stride) as isize - pl as isize;
+        let interior_x = ix0 >= 0 && ix0 + kw as isize <= wd as isize;
+        for ky in 0..kh {
+            let iy = (oy * stride + ky) as isize - pt as isize;
+            let dst = base + ky * kw * ci;
+            if iy < 0 || iy >= h as isize {
+                // whole padded patch row: one bulk zero-fill
+                out[dst..dst + kw * ci].fill(0.0);
+                continue;
+            }
+            let row0 = ((b * h + iy as usize) * wd) as isize;
+            if interior_x {
+                // fast path: the kw·ci run is contiguous in x
+                let src = ((row0 + ix0) as usize) * ci;
+                out[dst..dst + kw * ci].copy_from_slice(&x[src..src + kw * ci]);
+            } else {
+                for kx in 0..kw {
+                    let ix = ix0 + kx as isize;
+                    let d = dst + kx * ci;
+                    if ix < 0 || ix >= wd as isize {
+                        out[d..d + ci].fill(0.0);
+                    } else {
+                        let src = ((row0 + ix) as usize) * ci;
+                        out[d..d + ci].copy_from_slice(&x[src..src + ci]);
                     }
                 }
-                r += 1;
             }
         }
     }
-    // GEMM: (rows × k) · (k × co)
-    let out = gemm(&col, rows, k, &w.data, co);
-    Tensor::new(vec![n, ho, wo, co], out)
 }
 
 /// Blocked (cache-tiled) GEMM: a (m×k) row-major · b (k×n) row-major.
@@ -151,14 +208,25 @@ pub fn avg_pool_global(x: &Tensor) -> Tensor {
     out
 }
 
+/// Fold eval-mode batch-norm parameters into `y = a·x + b` form — the
+/// single definition shared by the separate-pass [`batch_norm_eval`] and
+/// the fused-epilogue path (`model::Bn`), so the two can never diverge.
+pub fn bn_fold(scale: &[f32], bias: &[f32], mean: &[f32], var: &[f32],
+               eps: f32) -> (Vec<f32>, Vec<f32>) {
+    let c = scale.len();
+    assert!(bias.len() == c && mean.len() == c && var.len() == c,
+            "BN parameter lengths must agree");
+    let a: Vec<f32> = (0..c).map(|i| scale[i] / (var[i] + eps).sqrt()).collect();
+    let b: Vec<f32> = (0..c).map(|i| bias[i] - mean[i] * a[i]).collect();
+    (a, b)
+}
+
 /// Eval-mode batch norm over the last axis.
 pub fn batch_norm_eval(x: &mut Tensor, scale: &[f32], bias: &[f32],
                        mean: &[f32], var: &[f32], eps: f32) {
     let c = *x.dims.last().unwrap();
     assert!(scale.len() == c && bias.len() == c && mean.len() == c && var.len() == c);
-    // precompute a*x + b form
-    let a: Vec<f32> = (0..c).map(|i| scale[i] / (var[i] + eps).sqrt()).collect();
-    let b: Vec<f32> = (0..c).map(|i| bias[i] - mean[i] * a[i]).collect();
+    let (a, b) = bn_fold(scale, bias, mean, var, eps);
     for (i, v) in x.data.iter_mut().enumerate() {
         let ch = i % c;
         *v = *v * a[ch] + b[ch];
@@ -266,6 +334,35 @@ mod tests {
             for (i, (a, b)) in fast.data.iter().zip(&slow.data).enumerate() {
                 if (a - b).abs() > 1e-3 * (1.0 + b.abs()) {
                     return Err(format!("elem {i}: {a} vs {b} (k={k} s={stride})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn im2col_reused_dirty_buffer_matches_fresh() {
+        // padding zero-fill must not depend on the buffer arriving zeroed
+        check_msg("im2col into dirty buffer == fresh", 20, |g| {
+            let n = g.usize_in(1, 3);
+            let h = g.usize_in(2, 7);
+            let wd = g.usize_in(2, 7);
+            let ci = g.usize_in(1, 3);
+            let kk = [1usize, 3, 5][g.usize_in(0, 3)];
+            let stride = 1 + g.usize_in(0, 2);
+            let x: Vec<f32> = (0..n * h * wd * ci).map(|_| g.normal()).collect();
+            let mut fresh = Vec::new();
+            let fresh_meta =
+                im2col_into(&x, (n, h, wd, ci), (kk, kk), stride, &mut fresh);
+            let mut dirty = vec![f32::NAN; fresh.len() + 13];
+            let dirty_meta =
+                im2col_into(&x, (n, h, wd, ci), (kk, kk), stride, &mut dirty);
+            if fresh_meta != dirty_meta {
+                return Err(format!("meta {fresh_meta:?} vs {dirty_meta:?}"));
+            }
+            for (i, (a, b)) in fresh.iter().zip(&dirty).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("elem {i}: {a} vs {b}"));
                 }
             }
             Ok(())

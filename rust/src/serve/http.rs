@@ -32,6 +32,7 @@ use super::queue::{BatchQueue, PushError};
 use super::registry::Registry;
 use super::worker::{Request, WorkerPool};
 use crate::substrate::json::{self, Json};
+use crate::substrate::pool;
 
 /// Serving policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -45,11 +46,22 @@ pub struct ServeConfig {
     pub max_wait_us: u64,
     /// Admission queue bound; beyond it requests get `503`.
     pub queue_capacity: usize,
+    /// Intra-op threads each forward pass shards its GEMMs across
+    /// (the substrate compute pool, DESIGN.md §7). `0` = auto:
+    /// `available_parallelism / workers`, so worker-level and GEMM-level
+    /// parallelism compose instead of oversubscribing the machine.
+    pub intra_threads: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 2, max_batch: 16, max_wait_us: 2_000, queue_capacity: 1024 }
+        ServeConfig {
+            workers: 2,
+            max_batch: 16,
+            max_wait_us: 2_000,
+            queue_capacity: 1024,
+            intra_threads: 0,
+        }
     }
 }
 
@@ -71,6 +83,22 @@ impl Server {
         anyhow::ensure!(!registry.is_empty(), "registry has no models to serve");
         anyhow::ensure!(cfg.workers > 0 && cfg.max_batch > 0 && cfg.queue_capacity > 0,
                         "serve config must be positive: {cfg:?}");
+        // size the intra-op compute pool before the first forward builds
+        // it: explicit budget, or cores split evenly across the workers
+        let intra = if cfg.intra_threads > 0 {
+            cfg.intra_threads
+        } else {
+            let cores = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            (cores / cfg.workers).max(1)
+        };
+        if !pool::configure_global(intra) && pool::global().threads() != intra {
+            // the pool is built once per process; a budget requested after
+            // that cannot apply, so say so instead of silently ignoring it
+            eprintln!(
+                "serve: intra-op pool already sized to {} threads; requested {intra} ignored",
+                pool::global().threads()
+            );
+        }
         let listener = TcpListener::bind(addr).context("binding serve socket")?;
         let local = listener.local_addr()?;
 

@@ -26,6 +26,12 @@
 //! * [`http`]     — HTTP/1.1 front-end (`/predict`, `/models`,
 //!   `/metrics`, `/healthz`) plus a one-shot client for tests/benches.
 //!
+//! Forward passes inside the workers run on the packed parallel compute
+//! engine (`inference::gemm`, DESIGN.md §7); `ServeConfig::intra_threads`
+//! sizes that intra-op pool so per-request parallelism composes with the
+//! worker pool (`workers × intra_threads ≈ cores`) instead of
+//! oversubscribing the machine.
+//!
 //! Everything is dependency-free `std` (DESIGN.md §5/§6).
 
 pub mod http;

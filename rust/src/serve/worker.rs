@@ -6,6 +6,13 @@
 //! **one forward pass per group**, and answers every request on its own
 //! one-shot channel. Workers exit when the queue is closed and drained,
 //! so shutdown never drops an admitted request.
+//!
+//! Thread budget: each forward shards its GEMMs across the shared
+//! intra-op pool (`substrate::pool`, sized by `ServeConfig::intra_threads`
+//! at server start). Concurrent workers submit jobs to the same pool —
+//! jobs queue FIFO and every worker always advances its own job, so
+//! worker-level and GEMM-level parallelism compose without deadlock or
+//! oversubscription (DESIGN.md §7).
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;

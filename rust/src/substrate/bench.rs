@@ -8,6 +8,22 @@ use std::time::{Duration, Instant};
 use super::json::Json;
 use super::stats;
 
+/// Machine-readable identity of a benchmark case for the cross-PR perf
+/// trajectory (`BENCH_infer.json`): which op, on what shape, with how
+/// many compute threads.
+#[derive(Clone, Debug, Default)]
+pub struct CaseMeta {
+    pub op: String,
+    pub shape: String,
+    pub threads: usize,
+}
+
+impl CaseMeta {
+    pub fn new(op: &str, shape: &str, threads: usize) -> CaseMeta {
+        CaseMeta { op: op.to_string(), shape: shape.to_string(), threads }
+    }
+}
+
 /// One benchmark's results.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -20,6 +36,8 @@ pub struct BenchResult {
     /// Optional units processed per iteration (bits, requests, ...)
     pub throughput_units: Option<f64>,
     pub unit_name: String,
+    /// Optional machine-readable case identity (op/shape/threads).
+    pub meta: Option<CaseMeta>,
 }
 
 impl BenchResult {
@@ -39,6 +57,12 @@ impl BenchResult {
         if let Some(t) = self.throughput_per_s() {
             o.set("throughput_per_s", Json::num(t));
             o.set("unit", Json::str(self.unit_name.clone()));
+        }
+        if let Some(m) = &self.meta {
+            o.set("op", Json::str(m.op.clone()));
+            o.set("shape", Json::str(m.shape.clone()));
+            o.set("threads", Json::num(m.threads as f64));
+            o.set("ns_per_iter", Json::num(self.mean_s * 1e9));
         }
         o
     }
@@ -118,6 +142,19 @@ impl Bench {
         name: &str,
         units: Option<f64>,
         unit_name: &str,
+        f: F,
+    ) -> &BenchResult {
+        self.run_case(name, None, units, unit_name, f)
+    }
+
+    /// Benchmark with full case metadata (op/shape/threads) for the
+    /// machine-readable `BENCH_infer.json` trajectory.
+    pub fn run_case<F: FnMut()>(
+        &mut self,
+        name: &str,
+        meta: Option<CaseMeta>,
+        units: Option<f64>,
+        unit_name: &str,
         mut f: F,
     ) -> &BenchResult {
         // warmup + estimate per-iter cost
@@ -156,6 +193,7 @@ impl Bench {
             samples,
             throughput_units: units,
             unit_name: unit_name.to_string(),
+            meta,
         };
         let line = match res.throughput_per_s() {
             Some(r) => format!(
@@ -183,6 +221,34 @@ impl Bench {
     pub fn to_json(&self) -> Json {
         Json::arr(self.results.iter().map(|r| r.to_json()))
     }
+}
+
+/// Merge `records` into the machine-readable bench trajectory file at
+/// `path` (`BENCH_infer.json`): existing records from other `source`s are
+/// kept, records previously written by this `source` are replaced, and
+/// every new record is stamped with `"source": source`. Benches from
+/// different binaries therefore compose into one file across runs.
+pub fn merge_bench_json(path: &std::path::Path, source: &str, records: Json) -> std::io::Result<()> {
+    let mut kept: Vec<Json> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(existing) = super::json::parse(&text) {
+            if let Some(arr) = existing.as_arr() {
+                kept.extend(
+                    arr.iter()
+                        .filter(|r| r.get("source").as_str() != Some(source))
+                        .cloned(),
+                );
+            }
+        }
+    }
+    if let Some(arr) = records.as_arr() {
+        for r in arr {
+            let mut r = r.clone();
+            r.set("source", Json::str(source));
+            kept.push(r);
+        }
+    }
+    std::fs::write(path, Json::arr(kept).to_string_pretty())
 }
 
 /// Opaque value sink preventing the optimizer from deleting benchmarked work.
@@ -242,5 +308,38 @@ mod tests {
         let j = b.to_json();
         assert_eq!(j.at(0).get("name").as_str(), Some("a"));
         assert!(j.at(0).get("mean_s").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn case_meta_lands_in_json() {
+        let mut b = quickest();
+        b.run_case("m", Some(CaseMeta::new("gemm", "8x8x8", 4)), Some(512.0), "mac", || {
+            black_box(1 + 1);
+        });
+        let j = b.to_json();
+        assert_eq!(j.at(0).get("op").as_str(), Some("gemm"));
+        assert_eq!(j.at(0).get("shape").as_str(), Some("8x8x8"));
+        assert_eq!(j.at(0).get("threads").as_usize(), Some(4));
+        assert!(j.at(0).get("ns_per_iter").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn merge_bench_json_replaces_same_source_only() {
+        let path = std::env::temp_dir()
+            .join(format!("flexor_bench_merge_{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        let rec = |name: &str| Json::arr([Json::obj(vec![("name", Json::str(name))])]);
+        merge_bench_json(&path, "alpha", rec("a1")).unwrap();
+        merge_bench_json(&path, "beta", rec("b1")).unwrap();
+        // overwrite alpha; beta must survive
+        merge_bench_json(&path, "alpha", rec("a2")).unwrap();
+        let all = super::super::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let arr = all.as_arr().unwrap();
+        let names: Vec<_> = arr.iter().filter_map(|r| r.get("name").as_str()).collect();
+        assert!(names.contains(&"a2") && names.contains(&"b1") && !names.contains(&"a1"),
+                "{names:?}");
+        let sources: Vec<_> = arr.iter().filter_map(|r| r.get("source").as_str()).collect();
+        assert_eq!(sources.len(), 2);
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -7,4 +7,5 @@ pub mod json;
 pub mod argparse;
 pub mod stats;
 pub mod bench;
+pub mod pool;
 pub mod ptest;

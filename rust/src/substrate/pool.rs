@@ -1,0 +1,346 @@
+//! Persistent intra-op thread pool for data-parallel kernels.
+//!
+//! A job is a shard counter over `len` indices: every participating thread
+//! (the pool workers *and* the caller) grabs the next shard with a single
+//! `fetch_add` until the counter is exhausted — no work stealing, no
+//! per-shard allocation, no channel traffic. Callers block until every
+//! shard has finished, so shard closures may borrow stack data; the
+//! lifetime is erased internally and re-guaranteed by the completion wait.
+//!
+//! The pool composes with the serve worker pool (DESIGN.md §7): multiple
+//! callers may submit jobs concurrently — jobs queue FIFO and idle workers
+//! drain whichever job is at the front, while each caller always makes
+//! progress on its own job. A forward pass therefore never deadlocks even
+//! when every worker is busy elsewhere.
+//!
+//! Thread budget: `configure_global` (plumbed from `ServeConfig`) or the
+//! `FLEXOR_THREADS` env var, falling back to `available_parallelism`.
+
+use std::any::Any;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+/// One data-parallel job: `len` independent shards over an erased closure.
+struct Job {
+    /// Type-erased `&(dyn Fn(usize) + Sync)` borrowed from the caller's
+    /// stack. Valid until `completed == len`: `run` does not return before
+    /// that, and no thread dereferences `f` after its `fetch_add` on
+    /// `next` returns an index `>= len`.
+    f: *const (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    len: usize,
+    completed: AtomicUsize,
+    panicked: AtomicBool,
+    /// First shard panic's payload, re-raised on the caller so the real
+    /// message (assert text, index info) survives the pool boundary.
+    payload: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct Shared {
+    queue: Mutex<Vec<Arc<Job>>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// The pool. One instance per process is the normal mode ([`global`]);
+/// tests build private pools to pin exact thread counts.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total compute threads (the caller counts as
+    /// one, so `threads - 1` workers are spawned; `threads == 1` runs
+    /// everything inline).
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                thread::Builder::new()
+                    .name(format!("flexor-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        ThreadPool { shared, handles, threads }
+    }
+
+    /// Total compute threads a job can shard across (workers + caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0), f(1), …, f(len-1)` across the pool and the calling
+    /// thread; returns when every index has completed. Panics (after all
+    /// shards settle) if any shard panicked.
+    pub fn run(&self, len: usize, f: &(dyn Fn(usize) + Sync)) {
+        if len == 0 {
+            return;
+        }
+        if self.threads == 1 || len == 1 {
+            for i in 0..len {
+                f(i);
+            }
+            return;
+        }
+        // Erase the closure's lifetime; see the safety note on `Job::f`.
+        let f_static: *const (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f) };
+        let job = Arc::new(Job {
+            f: f_static,
+            next: AtomicUsize::new(0),
+            len,
+            completed: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            payload: Mutex::new(None),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        self.shared.queue.lock().unwrap().push(job.clone());
+        self.shared.work_cv.notify_all();
+
+        run_shards(&job);
+        let mut done = job.done.lock().unwrap();
+        while !*done {
+            done = job.done_cv.wait(done).unwrap();
+        }
+        drop(done);
+        if job.panicked.load(Ordering::Acquire) {
+            match job.payload.lock().unwrap().take() {
+                Some(p) => std::panic::resume_unwind(p),
+                None => panic!("thread-pool shard panicked"),
+            }
+        }
+    }
+
+    /// Split `data` into `chunk` -sized runs and process them in parallel:
+    /// `f(chunk_index, start_offset, chunk_slice)`. The disjointness of the
+    /// chunks is what makes handing `&mut` slices to concurrent shards
+    /// sound.
+    pub fn run_chunks_mut<T, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        assert!(chunk > 0, "chunk size must be positive");
+        let len = data.len();
+        let n_chunks = len.div_ceil(chunk);
+        let base = SendPtr(data.as_mut_ptr());
+        self.run(n_chunks, &|ci| {
+            let start = ci * chunk;
+            let end = (start + chunk).min(len);
+            // Safety: chunks [start, end) are pairwise disjoint across ci.
+            let part = unsafe {
+                std::slice::from_raw_parts_mut(base.0.add(start), end - start)
+            };
+            f(ci, start, part);
+        });
+    }
+}
+
+/// Raw-pointer wrapper so disjoint-chunk dispatch can cross the `Sync`
+/// boundary of the shard closure.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                // drop fully-dispatched jobs; their remaining shards are
+                // finishing on the threads that claimed them
+                q.retain(|j| j.next.load(Ordering::Relaxed) < j.len);
+                if let Some(j) = q.first() {
+                    break j.clone();
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        run_shards(&job);
+    }
+}
+
+/// Claim and run shards of `job` until its counter is exhausted.
+fn run_shards(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.len {
+            return;
+        }
+        // Safety: i < len, so the caller is still inside `run`.
+        let f = unsafe { &*job.f };
+        if let Err(p) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))) {
+            let mut slot = job.payload.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+            drop(slot);
+            job.panicked.store(true, Ordering::Release);
+        }
+        if job.completed.fetch_add(1, Ordering::AcqRel) + 1 == job.len {
+            let mut done = job.done.lock().unwrap();
+            *done = true;
+            job.done_cv.notify_all();
+        }
+    }
+}
+
+// ---- global pool ------------------------------------------------------------
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+/// Thread count requested before the global pool is first used (0 = unset).
+static REQUESTED: AtomicUsize = AtomicUsize::new(0);
+
+/// Request a size for the process-wide pool. Takes effect only if the
+/// pool has not been built yet (first `global()` call wins); returns
+/// whether the request can still apply. `0` clears back to auto.
+pub fn configure_global(threads: usize) -> bool {
+    REQUESTED.store(threads, Ordering::SeqCst);
+    GLOBAL.get().is_none()
+}
+
+/// Default thread budget: an explicit `configure_global` request wins,
+/// else the `FLEXOR_THREADS` env var (standalone binaries), else
+/// `available_parallelism`.
+pub fn default_threads() -> usize {
+    let req = REQUESTED.load(Ordering::SeqCst);
+    if req > 0 {
+        return req;
+    }
+    if let Ok(v) = std::env::var("FLEXOR_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The process-wide pool, built on first use with [`default_threads`].
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        for threads in [1, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for len in [0usize, 1, 2, 7, 64, 1000] {
+                let hits: Vec<AtomicUsize> =
+                    (0..len).map(|_| AtomicUsize::new(0)).collect();
+                pool.run(len, &|i| {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                    "threads={threads} len={len}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let acc = AtomicU64::new(0);
+        pool.run(500, &|i| {
+            acc.fetch_add(i as u64 * i as u64, Ordering::SeqCst);
+        });
+        let want: u64 = (0..500u64).map(|i| i * i).sum();
+        assert_eq!(acc.load(Ordering::SeqCst), want);
+    }
+
+    #[test]
+    fn chunked_mut_covers_disjointly() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0u32; 103];
+        pool.run_chunks_mut(&mut data, 10, |ci, start, part| {
+            assert_eq!(start, ci * 10);
+            for (o, v) in part.iter_mut().enumerate() {
+                *v = (start + o) as u32;
+            }
+        });
+        assert!(data.iter().enumerate().all(|(i, &v)| v == i as u32));
+    }
+
+    #[test]
+    fn pool_is_reusable_and_concurrent_jobs_complete() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = pool.clone();
+                thread::spawn(move || {
+                    for _ in 0..20 {
+                        let acc = AtomicUsize::new(0);
+                        pool.run(37, &|_| {
+                            acc.fetch_add(1, Ordering::SeqCst);
+                        });
+                        assert_eq!(acc.load(Ordering::SeqCst), 37);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn shard_panic_propagates_to_caller() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // the pool survives a panicked job
+        let acc = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            acc.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(acc.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn global_pool_exists() {
+        assert!(global().threads() >= 1);
+    }
+}

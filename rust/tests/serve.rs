@@ -8,7 +8,7 @@ use std::net::SocketAddr;
 use std::path::PathBuf;
 use std::thread;
 
-use flexor::coordinator::export_synthetic_mlp_bundle;
+use flexor::coordinator::{export_synthetic_mlp_bundle, export_synthetic_resnet_bundle};
 use flexor::inference::InferenceModel;
 use flexor::serve::{http, Registry, ServeConfig, Server};
 use flexor::substrate::json::{self, Json};
@@ -55,6 +55,7 @@ fn concurrent_predictions_match_direct_inference_and_coalesce() {
         max_batch: 32,
         max_wait_us: 10_000,
         queue_capacity: 256,
+        intra_threads: 2,
     };
     let (server, dir) = start_server("e2e", cfg);
     let addr = server.local_addr();
@@ -115,6 +116,48 @@ fn concurrent_predictions_match_direct_inference_and_coalesce() {
     assert!(mj.get("latency_ms").get("p99").as_f64().unwrap() > 0.0);
 
     server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Whole-bundle engine equivalence: the packed parallel fused forward
+/// must agree with the pre-engine separate-pass reference composition on
+/// both synthetic bundle families (mlp and the conv-heavy resnet).
+#[test]
+fn packed_engine_matches_reference_forward_on_bundles() {
+    let mut rng = Pcg32::seeded(1234);
+
+    let dir = bundle_dir("engine_mlp");
+    export_synthetic_mlp_bundle(&dir, "m", 21, D_IN, &[40, 24], 10).unwrap();
+    let mlp = InferenceModel::load(&dir, "m").unwrap();
+    let x: Vec<f32> = (0..6 * D_IN).map(|_| rng.normal()).collect();
+    let fused = mlp.forward(&x, 6).unwrap();
+    let reference = mlp.forward_reference(&x, 6).unwrap();
+    assert_eq!(fused.len(), reference.len());
+    for (i, (a, b)) in fused.iter().zip(&reference).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+            "mlp logit {i}: fused {a} vs reference {b}"
+        );
+    }
+    assert_eq!(mlp.predict(&x, 6).unwrap().len(), 6);
+    std::fs::remove_dir_all(&dir).ok();
+
+    let dir = bundle_dir("engine_resnet");
+    export_synthetic_resnet_bundle(&dir, "r", 22, "resnet8", 8, 10).unwrap();
+    let resnet = InferenceModel::load(&dir, "r").unwrap();
+    let feat = 8 * 8 * 3;
+    let x: Vec<f32> = (0..3 * feat).map(|_| rng.normal()).collect();
+    let fused = resnet.forward(&x, 3).unwrap();
+    let reference = resnet.forward_reference(&x, 3).unwrap();
+    assert_eq!(fused.len(), 3 * 10);
+    assert_eq!(reference.len(), 3 * 10);
+    for (i, (a, b)) in fused.iter().zip(&reference).enumerate() {
+        assert!(a.is_finite(), "resnet fused logit {i} not finite: {a}");
+        assert!(
+            (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+            "resnet logit {i}: fused {a} vs reference {b}"
+        );
+    }
     std::fs::remove_dir_all(&dir).ok();
 }
 
