@@ -19,6 +19,7 @@ use flexor::coordinator::{
     export_bundle, export_synthetic_mlp_bundle, MetricsSink, Schedule, TrainSession,
 };
 use flexor::data::{self, Batcher, Split};
+use flexor::inference::ComputeMode;
 use flexor::runtime::{Manifest, Runtime};
 use flexor::serve::{http, Registry, ServeConfig, Server};
 use flexor::substrate::argparse::Args;
@@ -34,9 +35,26 @@ fn main() -> Result<()> {
         .flag("intra-threads", "GEMM threads per forward (0 = auto)", Some("0"))
         .flag("max-batch", "max coalesced batch size", Some("16"))
         .flag("max-wait-us", "batching linger window (µs)", Some("2000"))
+        .flag("compute-mode",
+              "dense | bitplane | bitplane:<m> (default: FLEXOR_COMPUTE env, else dense)",
+              Some(""))
         .flag("artifact", "config to train/export", Some("quickstart_mlp"))
         .flag("dataset", "request generator", Some("digits"))
         .parse();
+
+    // serving policy, including the compute engine bundles load onto:
+    // explicit flag wins, else the FLEXOR_COMPUTE env var, else dense
+    let cfg = ServeConfig {
+        workers: a.get_usize("workers"),
+        intra_threads: a.get_usize("intra-threads"),
+        max_batch: a.get_usize("max-batch"),
+        max_wait_us: a.get_u64("max-wait-us"),
+        compute_mode: match a.get("compute-mode") {
+            "" => ComputeMode::default_from_env()?,
+            s => ComputeMode::parse(s)?,
+        },
+        ..ServeConfig::default()
+    };
 
     let dir = Path::new("runs/serve");
     let ds = data::by_name(a.get("dataset"), 0)?;
@@ -74,22 +92,23 @@ fn main() -> Result<()> {
                                     ds.num_classes())?;
     }
 
-    // 2. load into the registry: XOR decryption happens once, here
-    let mut registry = Registry::new();
+    // 2. load into the registry: XOR decryption happens once, here. In
+    //    bitplane mode the quantized layers stay packed bit-planes for
+    //    their whole serving lifetime (DESIGN.md §8).
+    let mut registry = Registry::with_default_mode(cfg.compute_mode);
     let entry = registry.load("served", dir, "served")?;
     println!(
         "loaded + decrypted in {:.1} ms  ({:.2} b/w, {:.1}× compression)",
         entry.load_ms, entry.model.bits_per_weight, entry.model.compression_ratio
     );
+    println!(
+        "compute mode {}: {} quantized weight bytes resident (+{} FP residue)",
+        entry.model.compute_mode().label(),
+        entry.model.quantized_resident_bytes(),
+        entry.model.fp_resident_bytes()
+    );
 
     // 3. start the server on an ephemeral loopback port
-    let cfg = ServeConfig {
-        workers: a.get_usize("workers"),
-        intra_threads: a.get_usize("intra-threads"),
-        max_batch: a.get_usize("max-batch"),
-        max_wait_us: a.get_u64("max-wait-us"),
-        ..ServeConfig::default()
-    };
     let server = Server::start("127.0.0.1:0", registry, cfg)?;
     let addr = server.local_addr();
     println!(

@@ -17,8 +17,9 @@ use flexor::coordinator::{
     export_bundle, export_synthetic_resnet_bundle, MetricsSink, Schedule, TrainSession,
 };
 use flexor::data::{self, Batcher, Split};
+use flexor::inference::bitslice::{self, PlaneStore};
 use flexor::inference::gemm::{gemm_packed_into, Epilogue, PackedB};
-use flexor::inference::InferenceModel;
+use flexor::inference::{ComputeMode, InferenceModel};
 use flexor::runtime::{Manifest, Runtime};
 use flexor::substrate::bench::{black_box, merge_bench_json, Bench, CaseMeta};
 use flexor::substrate::json::Json;
@@ -83,6 +84,52 @@ fn main() {
     let speedup = slow / fast;
     println!("\nspeedup packed-fused vs scalar-reference (batch {batch}): {speedup:.2}x");
 
+    // ---- bit-plane engine on the same bundle (DESIGN.md §8) ---------------
+    println!("\n# resnet20 bit-plane engine (same bundle, packed bit-planes)\n");
+    let act_planes = bitslice::DEFAULT_ACT_PLANES;
+    let bp_model = InferenceModel::load_with_mode(
+        &dir,
+        "rn20",
+        ComputeMode::BitPlane { act_planes },
+    )
+    .expect("bundle load (bitplane)");
+    let bp = b
+        .run_case(
+            &format!("forward bitplane/resnet20 batch={batch} threads={threads}"),
+            Some(CaseMeta::new("forward_bitplane", &shape, threads)),
+            Some(batch as f64),
+            "ex",
+            || {
+                black_box(bp_model.forward(black_box(&xs), batch).unwrap());
+            },
+        )
+        .mean_s;
+    println!(
+        "\nbitplane vs packed-fused forward (batch {batch}): {:.2}x packed time",
+        bp / fast
+    );
+    // per-bundle resident-bytes records: the memory the two engines keep
+    let mut resident_records: Vec<Json> = Vec::new();
+    for (mode_model, mode_name) in [(&model, "dense"), (&bp_model, "bitplane")] {
+        let q = mode_model.quantized_resident_bytes();
+        let fp = mode_model.fp_resident_bytes();
+        println!(
+            "resident bytes {mode_name:9}: quantized {q:>9}  fp residue {fp:>9}"
+        );
+        resident_records.push(Json::obj(vec![
+            ("name", Json::str(format!("resident bytes resnet20 {mode_name}"))),
+            ("op", Json::str("resident_bytes")),
+            ("shape", Json::str("resnet20")),
+            ("mode", Json::str(mode_name)),
+            ("quantized_bytes", Json::num(q as f64)),
+            ("fp_bytes", Json::num(fp as f64)),
+            ("total_bytes", Json::num((q + fp) as f64)),
+        ]));
+    }
+    let mem_ratio = model.quantized_resident_bytes() as f64
+        / bp_model.quantized_resident_bytes().max(1) as f64;
+    println!("quantized-layer memory ratio dense/bitplane: {mem_ratio:.1}x");
+
     // ---- raw packed-GEMM thread scaling (conv-shaped problem) -------------
     println!("\n# packed GEMM thread scaling\n");
     let (m, k, n) = (1024usize, 288usize, 32usize);
@@ -113,6 +160,30 @@ fn main() {
             },
         );
     }
+
+    // bit-plane GEMM on the same conv-shaped problem (binarize + XNOR /
+    // popcount — the true per-layer cost of BitPlane mode), vs packed FP
+    println!("\n# bit-plane GEMM thread scaling (q=1, {act_planes} act planes)\n");
+    let plane: Vec<f32> = (0..k * n)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+        .collect();
+    let alpha: Vec<f32> = (0..n).map(|_| rng.range_f32(0.05, 0.5)).collect();
+    let store = PlaneStore::from_sign_planes(&[k, n], &[plane], &[alpha])
+        .expect("bench plane store");
+    for threads in [1usize, 2, 4] {
+        let p = ThreadPool::new(threads);
+        b.run_case(
+            &format!("gemm bitplane {gemm_shape} threads={threads}"),
+            Some(CaseMeta::new("gemm_bitplane", &gemm_shape, threads)),
+            Some((m * k * n) as f64),
+            "mac",
+            || {
+                let acts = bitslice::binarize::binarize_rows(&p, &a, m, k, act_planes);
+                bitslice::xnor_gemm_into(&p, &acts, &store, Epilogue::None, &mut c);
+                black_box(&c);
+            },
+        );
+    }
     std::fs::remove_dir_all(&dir).ok();
 
     // ---- trained-bundle section (needs `make artifacts`) ------------------
@@ -132,6 +203,13 @@ fn main() {
         ("shape", Json::str(shape.clone())),
         ("threads", Json::num(threads as f64)),
         ("speedup", Json::num(speedup)),
+    ]));
+    records.extend(resident_records);
+    records.push(Json::obj(vec![
+        ("name", Json::str("quantized memory ratio dense/bitplane resnet20")),
+        ("op", Json::str("memory_ratio_dense_over_bitplane")),
+        ("shape", Json::str("resnet20")),
+        ("ratio", Json::num(mem_ratio)),
     ]));
     merge_bench_json(Path::new("BENCH_infer.json"), "inference", Json::arr(records))
         .expect("writing BENCH_infer.json");

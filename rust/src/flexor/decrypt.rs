@@ -19,7 +19,7 @@
 
 use anyhow::{ensure, Result};
 
-use super::bitpack::ColumnBits;
+use super::bitpack::{BitVec, ColumnBits};
 use super::matrix::MXor;
 
 /// A decryption engine bound to one XOR-gate network.
@@ -118,30 +118,52 @@ impl Decryptor {
             n_weights,
             slices * n_out
         );
-        // Block-transposed materialization (perf: see EXPERIMENTS.md §Perf):
-        // process 64 slices at a time, loading each output column's word
-        // once per block instead of doing a div/mod bit lookup per weight.
         let mut signs = vec![1.0f32; n_weights];
-        let mut words = vec![0u64; n_out];
-        for blk in 0..slices.div_ceil(64) {
-            for (r, w) in words.iter_mut().enumerate() {
-                *w = cols.column(r).words()[blk];
-            }
-            let s_end = (blk * 64 + 64).min(slices);
-            for s in blk * 64..s_end {
-                let shift = (s % 64) as u32;
-                let base = s * n_out;
-                if base >= n_weights {
-                    break;
-                }
-                let r_end = n_out.min(n_weights - base);
-                for (r, &w) in words[..r_end].iter().enumerate() {
-                    // branchless ±1: 1 - 2*bit
-                    signs[base + r] = 1.0 - 2.0 * ((w >> shift) & 1) as f32;
-                }
-            }
-        }
+        for_each_weight_bit(&cols, n_weights, |i, bit| {
+            // branchless ±1: 1 - 2*bit
+            signs[i] = 1.0 - 2.0 * (bit as i32 as f32);
+        });
         Ok(signs)
+    }
+
+    /// Decrypt and repack straight into **per-output-channel bit-plane
+    /// rows** for the bit-slice compute engine (DESIGN.md §8) — the FP
+    /// signs are never materialized.
+    ///
+    /// Quantized weights are row-major with the **last axis = output
+    /// channel** (the Python layout), so weight `i` of a `(k × c_out)`
+    /// GEMM right-hand side lives at reduction row `i / c_out` of output
+    /// channel `i % c_out`. Returns `c_out` [`BitVec`]s of length
+    /// `k = n_weights / c_out`; bit `t` of channel `j` is 1 ⇔ weight
+    /// `(t, j)` decrypts to −1 (the crate-wide bit convention).
+    pub fn decrypt_to_plane_rows(
+        &self,
+        enc: &ColumnBits,
+        n_weights: usize,
+        c_out: usize,
+    ) -> Result<Vec<BitVec>> {
+        ensure!(c_out > 0, "c_out must be positive");
+        ensure!(
+            n_weights % c_out == 0,
+            "n_weights {n_weights} not divisible by c_out {c_out}"
+        );
+        let cols = self.decrypt_columns(enc)?;
+        let n_out = self.mxor.n_out();
+        let slices = cols.slices();
+        ensure!(
+            n_weights <= slices * n_out,
+            "n_weights {} exceeds decrypted bits {}",
+            n_weights,
+            slices * n_out
+        );
+        let k = n_weights / c_out;
+        let mut rows = vec![BitVec::zeros(k); c_out];
+        for_each_weight_bit(&cols, n_weights, |i, bit| {
+            if bit {
+                rows[i % c_out].set(i / c_out, true);
+            }
+        });
+        Ok(rows)
     }
 
     /// Decrypted bits per stored bit — the decompression "gain".
@@ -175,6 +197,38 @@ impl Decryptor {
             })
             .max()
             .unwrap_or(0)
+    }
+}
+
+/// The block-transposed walk over decrypted quantized bits in weight
+/// order (the "reshape" of Fig. 3, slice-major: slice 0's N_out bits,
+/// then slice 1's, …): loads each output column's word once per
+/// 64-slice block instead of a div/mod bit lookup per weight, and calls
+/// `f(weight_index, bit)` for weights `0..n_weights`. The single
+/// iteration shared by `decrypt_to_signs` and `decrypt_to_plane_rows`,
+/// so the two materialization paths can never disagree on the crop /
+/// block-boundary geometry.
+fn for_each_weight_bit(cols: &ColumnBits, n_weights: usize, mut f: impl FnMut(usize, bool)) {
+    let n_out = cols.width();
+    let slices = cols.slices();
+    debug_assert!(n_weights <= slices * n_out);
+    let mut words = vec![0u64; n_out];
+    for blk in 0..slices.div_ceil(64) {
+        for (r, w) in words.iter_mut().enumerate() {
+            *w = cols.column(r).words()[blk];
+        }
+        let s_end = (blk * 64 + 64).min(slices);
+        for s in blk * 64..s_end {
+            let shift = (s % 64) as u32;
+            let base = s * n_out;
+            if base >= n_weights {
+                return;
+            }
+            let r_end = n_out.min(n_weights - base);
+            for (r, &w) in words[..r_end].iter().enumerate() {
+                f(base + r, (w >> shift) & 1 == 1);
+            }
+        }
     }
 }
 
@@ -334,6 +388,55 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn decrypt_to_plane_rows_matches_signs_repack() {
+        // the no-FP repack path must agree bit-for-bit with materializing
+        // signs and packing them per output channel
+        check_msg("decrypt_to_plane_rows == signs repack", 30, |g| {
+            let n_in = g.usize_in(1, 12);
+            let n_out = n_in + g.usize_in(0, 8);
+            let c_out = 1 + g.usize_in(0, 7);
+            let k = 1 + g.usize_in(0, 90);
+            let n_weights = k * c_out;
+            let slices = crate::flexor::num_slices(n_weights, n_out);
+            let mxor =
+                MXor::with_ntap(n_out, n_in, 1 + g.usize_in(0, n_in.min(2)), g.rng())
+                    .unwrap();
+            let enc = rand_enc(g.rng(), slices, n_in);
+            let d = Decryptor::new(mxor);
+            let rows = d
+                .decrypt_to_plane_rows(&enc, n_weights, c_out)
+                .map_err(|e| e.to_string())?;
+            if rows.len() != c_out || rows.iter().any(|r| r.len() != k) {
+                return Err("wrong plane-row geometry".into());
+            }
+            let signs = d.decrypt_to_signs(&enc, n_weights).map_err(|e| e.to_string())?;
+            for (i, &s) in signs.iter().enumerate() {
+                let want = s < 0.0;
+                if rows[i % c_out].get(i / c_out) != want {
+                    return Err(format!(
+                        "weight {i} (row {}, ch {}): {want} mismatch",
+                        i / c_out,
+                        i % c_out
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decrypt_to_plane_rows_validates() {
+        let mut rng = Pcg32::seeded(11);
+        let mxor = MXor::with_ntap(10, 8, 2, &mut rng).unwrap();
+        let enc = rand_enc(&mut rng, 13, 8);
+        let d = Decryptor::new(mxor);
+        assert!(d.decrypt_to_plane_rows(&enc, 95, 5).is_ok());
+        assert!(d.decrypt_to_plane_rows(&enc, 95, 4).is_err()); // not divisible
+        assert!(d.decrypt_to_plane_rows(&enc, 95, 0).is_err());
+        assert!(d.decrypt_to_plane_rows(&enc, 140, 5).is_err()); // > 130 bits
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! Activation binarization — the input-side contract of the XNOR engine
+//! (DESIGN.md §8).
+//!
+//! Each im2col row `a` (length `k`) is decomposed greedily into `m`
+//! sign/scale planes: `a ≈ Σ_p β_p · h_p` with `h_p ∈ {±1}^k` and
+//! `β_p ≥ 0` per **row**. Plane `p` takes `h_p = sign(r)` and
+//! `β_p = mean|r|` of the current residual `r` (the L2-optimal scale for
+//! those signs, per XNOR-Net), then subtracts `β_p·h_p`. The residual's
+//! L2 norm contracts at every step (strictly, unless already zero), so
+//! the decomposition is exact for rows whose values share one magnitude
+//! (e.g. ±1 inputs ⇒ one plane, β = 1) and converges geometrically for
+//! smooth distributions — `m = 8` is the serving default, higher `m`
+//! trades popcount passes for fidelity.
+//!
+//! Everything is per-row, so a row's planes are identical no matter how
+//! rows are sharded across threads — binarization never breaks the
+//! engine's bit-identical-across-thread-counts guarantee.
+
+use crate::substrate::pool::{SendPtr, ThreadPool};
+
+use super::super::gemm::{scratch, ROWS_PER_SHARD};
+
+/// Upper bound on activation planes (beyond ~24 the residual is at f32
+/// noise level; the cap keeps `bitplane:<m>` CLI input sane).
+pub const MAX_ACT_PLANES: usize = 32;
+
+/// The serving default: ~0.6^8 ≈ 2% residual L2 on smooth activations.
+pub const DEFAULT_ACT_PLANES: usize = 8;
+
+/// A batch of binarized rows: per row, `m` packed sign planes + scales.
+pub struct BinarizedActs {
+    rows: usize,
+    k: usize,
+    /// Words per row plane: `⌈k/64⌉`.
+    wpr: usize,
+    m: usize,
+    /// `bits[((i·m)+p)·wpr ..][w]` — row `i`, plane `p` (bit 1 ⇔ −1;
+    /// padding bits past `k` are zero).
+    bits: Vec<u64>,
+    /// `scales[i·m + p]` = row `i`'s β_p (0 ⇒ plane unused).
+    scales: Vec<f32>,
+}
+
+impl BinarizedActs {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Activation planes per row.
+    pub fn planes(&self) -> usize {
+        self.m
+    }
+
+    pub fn words_per_row(&self) -> usize {
+        self.wpr
+    }
+
+    /// Row `i`'s packed sign bits for plane `p`.
+    #[inline]
+    pub fn row_bits(&self, i: usize, p: usize) -> &[u64] {
+        let base = (i * self.m + p) * self.wpr;
+        &self.bits[base..base + self.wpr]
+    }
+
+    /// Row `i`'s β_p.
+    #[inline]
+    pub fn scale(&self, i: usize, p: usize) -> f32 {
+        self.scales[i * self.m + p]
+    }
+
+    /// Dequantize back to dense rows (`rows × k`) — the oracle for
+    /// equivalence tests; serving never calls this.
+    pub fn reconstruct(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.k];
+        for i in 0..self.rows {
+            let row = &mut out[i * self.k..(i + 1) * self.k];
+            for p in 0..self.m {
+                let beta = self.scale(i, p);
+                if beta == 0.0 {
+                    continue;
+                }
+                let bits = self.row_bits(i, p);
+                for (t, v) in row.iter_mut().enumerate() {
+                    let neg = (bits[t / 64] >> (t % 64)) & 1 == 1;
+                    *v += if neg { -beta } else { beta };
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Greedily binarize one row: `src` → up to `m` (bits, β) planes written
+/// into `bits` (`m·wpr` words, must arrive zeroed) and `scales` (`m`
+/// floats, must arrive zeroed). `r` is a scratch residual buffer of
+/// length `k`. Stops early once the residual mean is zero or non-finite
+/// (remaining planes stay β = 0 ⇒ contribute nothing).
+fn binarize_row(src: &[f32], r: &mut [f32], wpr: usize, bits: &mut [u64], scales: &mut [f32]) {
+    let k = src.len();
+    debug_assert_eq!(r.len(), k);
+    debug_assert_eq!(bits.len(), scales.len() * wpr);
+    r.copy_from_slice(src);
+    for (p, scale) in scales.iter_mut().enumerate() {
+        let beta = r.iter().map(|v| v.abs()).sum::<f32>() / k as f32;
+        if !(beta > 0.0) || !beta.is_finite() {
+            break;
+        }
+        *scale = beta;
+        let pb = &mut bits[p * wpr..(p + 1) * wpr];
+        for (t, v) in r.iter_mut().enumerate() {
+            if *v < 0.0 {
+                pb[t / 64] |= 1 << (t % 64);
+                *v += beta;
+            } else {
+                *v -= beta;
+            }
+        }
+    }
+}
+
+/// Binarize `rows` rows of length `k` (row-major in `a`) into `m` planes
+/// each, sharded across `pool` by row ranges.
+pub fn binarize_rows(
+    pool: &ThreadPool,
+    a: &[f32],
+    rows: usize,
+    k: usize,
+    m: usize,
+) -> BinarizedActs {
+    assert_eq!(a.len(), rows * k, "activations are {rows}x{k}");
+    assert!(k > 0, "zero-length rows");
+    let m = m.clamp(1, MAX_ACT_PLANES);
+    let wpr = k.div_ceil(64);
+    let mut bits = vec![0u64; rows * m * wpr];
+    let mut scales = vec![0.0f32; rows * m];
+    let scales_ptr = SendPtr(scales.as_mut_ptr());
+    let row_words = m * wpr;
+    pool.run_chunks_mut(&mut bits, ROWS_PER_SHARD * row_words, |_shard, start, part| {
+        let row0 = start / row_words;
+        let nrows = part.len() / row_words;
+        scratch::with(|arena| {
+            let mut r = arena.take(k);
+            for t in 0..nrows {
+                let i = row0 + t;
+                // Safety: row ranges are disjoint across shards, so each
+                // row's m scales are written by exactly one shard.
+                let row_scales = unsafe {
+                    std::slice::from_raw_parts_mut(scales_ptr.0.add(i * m), m)
+                };
+                binarize_row(
+                    &a[i * k..(i + 1) * k],
+                    &mut r,
+                    wpr,
+                    &mut part[t * row_words..(t + 1) * row_words],
+                    row_scales,
+                );
+            }
+            arena.give(r);
+        });
+    });
+    BinarizedActs { rows, k, wpr, m, bits, scales }
+}
+
+/// Serial binarize → reconstruct: the dense image of the binarization
+/// contract, consumed by the reference forward ("`forward_reference`
+/// with binarized activations") and equivalence tests.
+pub fn binarize_reconstruct_rows(a: &[f32], rows: usize, k: usize, m: usize) -> Vec<f32> {
+    assert_eq!(a.len(), rows * k, "activations are {rows}x{k}");
+    assert!(k > 0, "zero-length rows");
+    let m = m.clamp(1, MAX_ACT_PLANES);
+    let wpr = k.div_ceil(64);
+    let mut out = vec![0.0f32; rows * k];
+    let mut r = vec![0.0f32; k];
+    let mut bits = vec![0u64; m * wpr];
+    let mut scales = vec![0.0f32; m];
+    for i in 0..rows {
+        bits.iter_mut().for_each(|w| *w = 0);
+        scales.iter_mut().for_each(|s| *s = 0.0);
+        binarize_row(&a[i * k..(i + 1) * k], &mut r, wpr, &mut bits, &mut scales);
+        let row = &mut out[i * k..(i + 1) * k];
+        for (p, &beta) in scales.iter().enumerate() {
+            if beta == 0.0 {
+                continue;
+            }
+            let pb = &bits[p * wpr..(p + 1) * wpr];
+            for (t, v) in row.iter_mut().enumerate() {
+                let neg = (pb[t / 64] >> (t % 64)) & 1 == 1;
+                *v += if neg { -beta } else { beta };
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prng::Pcg32;
+
+    #[test]
+    fn pm1_rows_are_exact_with_one_plane() {
+        let mut rng = Pcg32::seeded(5);
+        for k in [1usize, 63, 64, 65, 127, 128] {
+            let row: Vec<f32> =
+                (0..k).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+            let pool = ThreadPool::new(1);
+            let acts = binarize_rows(&pool, &row, 1, k, 4);
+            assert_eq!(acts.scale(0, 0), 1.0, "k={k}");
+            for p in 1..4 {
+                assert_eq!(acts.scale(0, p), 0.0, "k={k} plane {p} should be unused");
+            }
+            let back = acts.reconstruct();
+            assert_eq!(back, row, "±1 row must binarize exactly (k={k})");
+        }
+    }
+
+    #[test]
+    fn residual_error_shrinks_with_planes() {
+        let mut rng = Pcg32::seeded(6);
+        let k = 200;
+        // half-normal-ish (post-ReLU shaped) rows are the hard case
+        let row: Vec<f32> = (0..k).map(|_| rng.normal().abs()).collect();
+        let norm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let mut last = f32::INFINITY;
+        for m in [1usize, 2, 4, 8, 16] {
+            let back = binarize_reconstruct_rows(&row, 1, k, m);
+            let err: f32 = row
+                .iter()
+                .zip(&back)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt();
+            assert!(err <= last + 1e-6, "m={m}: error {err} grew from {last}");
+            last = err;
+            if m == 16 {
+                assert!(err < 0.02 * norm, "m=16 residual {err} vs norm {norm}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_binarize_matches_serial_reconstruct() {
+        let mut rng = Pcg32::seeded(7);
+        let (rows, k, m) = (150, 70, 5);
+        let a: Vec<f32> = (0..rows * k).map(|_| rng.normal()).collect();
+        let serial = binarize_reconstruct_rows(&a, rows, k, m);
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let acts = binarize_rows(&pool, &a, rows, k, m);
+            assert_eq!(
+                acts.reconstruct(),
+                serial,
+                "threads={threads}: sharded binarize diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_and_degenerate_rows() {
+        let pool = ThreadPool::new(2);
+        let a = vec![0.0f32; 64];
+        let acts = binarize_rows(&pool, &a, 1, 64, 3);
+        assert!(acts.reconstruct().iter().all(|&v| v == 0.0));
+        // NaN rows collapse to zero planes instead of poisoning bits
+        let a = vec![f32::NAN; 8];
+        let acts = binarize_rows(&pool, &a, 1, 8, 3);
+        assert!((0..3).all(|p| acts.scale(0, p) == 0.0));
+    }
+}

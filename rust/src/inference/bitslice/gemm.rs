@@ -1,0 +1,358 @@
+//! The XNOR/popcount GEMM over packed bit-planes (DESIGN.md §8).
+//!
+//! For ±1 vectors packed LSB-first (bit 1 ⇔ −1), the dot product over
+//! `len` lanes is `len − 2·popcount(a ⊕ b)` — 64 multiply-accumulates
+//! per XOR+POPCNT word pair, zero FP multiplies in the reduction. A
+//! quantized layer output is then pure α/β algebra over those integer
+//! counts:
+//!
+//! ```text
+//! y[i][j] = Σ_m β_m[i] · Σ_p α_p[j] · ( k − 2·pc(h_m[i] ⊕ b_p[j]) )
+//! ```
+//!
+//! with `h_m` the activation sign planes ([`super::binarize`]), `b_p`
+//! the weight bit planes ([`super::PlaneStore`]), row-sharded across the
+//! substrate pool exactly like the packed-FP engine and finished by the
+//! **same** [`Epilogue`] fusion contract (`gemm::store_tile`), so bias /
+//! eval-BN / ReLU / residual fuse into the output tile here too.
+//!
+//! Determinism: each output element is produced by one shard with a
+//! fixed (plane, word) accumulation order, and shard boundaries depend
+//! only on the constant shard size — results are bit-identical across
+//! thread counts, matching the packed-FP engine's guarantee.
+
+use crate::substrate::pool::ThreadPool;
+
+use super::super::gemm::{self, scratch, Epilogue, MR, NR, ROWS_PER_SHARD};
+use super::super::tensor::{self, Tensor};
+use super::binarize::{self, BinarizedActs};
+use super::plane::PlaneStore;
+
+/// `Σ_t a_t·b_t` for two packed ±1 vectors of `len` bits (bit 1 ⇔ −1):
+/// `len − 2·popcount(a ⊕ b)`. Padding bits past `len` must be zero in
+/// both operands (they then XOR to zero and drop out of the count).
+#[inline]
+pub fn popcount_dot(a: &[u64], b: &[u64], len: usize) -> i64 {
+    let words = len.div_ceil(64);
+    debug_assert!(a.len() >= words && b.len() >= words);
+    let mut pc = 0u32;
+    for w in 0..words {
+        pc += (a[w] ^ b[w]).count_ones();
+    }
+    len as i64 - 2 * pc as i64
+}
+
+/// `C = epilogue(Â · W)` where `Â` is binarized activations and `W` a
+/// bit-plane weight store. `c` is (rows × n) fully overwritten; row
+/// blocks are sharded across `pool`.
+pub fn xnor_gemm_into(
+    pool: &ThreadPool,
+    acts: &BinarizedActs,
+    w: &PlaneStore,
+    epi: Epilogue<'_>,
+    c: &mut [f32],
+) {
+    let k = w.k();
+    let n = w.n();
+    assert_eq!(acts.k(), k, "activation rows are length {}, W expects {k}", acts.k());
+    assert_eq!(c.len(), acts.rows() * n, "C is {}x{n}", acts.rows());
+    gemm::validate_epilogue(&epi, n, c.len());
+    pool.run_chunks_mut(c, ROWS_PER_SHARD * n, |_shard, start, c_part| {
+        let i0 = start / n;
+        let prows = c_part.len() / n;
+        for t0 in (0..prows).step_by(MR) {
+            let mh = (prows - t0).min(MR);
+            for j0 in (0..n).step_by(NR) {
+                let jw = (n - j0).min(NR);
+                let mut acc = [[0.0f32; NR]; MR];
+                for (r, acc_row) in acc.iter_mut().enumerate().take(mh) {
+                    let i = i0 + t0 + r;
+                    for p in 0..w.q() {
+                        let alpha = w.alpha(p);
+                        for m in 0..acts.planes() {
+                            let beta = acts.scale(i, m);
+                            if beta == 0.0 {
+                                continue;
+                            }
+                            let abits = acts.row_bits(i, m);
+                            for (jj, av) in acc_row.iter_mut().enumerate().take(jw) {
+                                let j = j0 + jj;
+                                let t = popcount_dot(abits, w.col_bits(p, j), k);
+                                *av += beta * alpha[j] * t as f32;
+                            }
+                        }
+                    }
+                }
+                gemm::store_tile(&acc, c_part, t0, i0, mh, j0, n, &epi);
+            }
+        }
+    });
+}
+
+/// Fused `conv2d → epilogue` on the bit-plane engine: im2col into a
+/// recycled scratch buffer (sharded like the packed-FP path), binarize
+/// the rows into `act_planes` sign/scale planes, one XNOR GEMM with the
+/// epilogue applied in-tile. The weight never exists as dense FP.
+pub fn conv2d_bitplane(
+    pool: &ThreadPool,
+    x: &Tensor,
+    w: &PlaneStore,
+    stride: usize,
+    act_planes: usize,
+    epi: Epilogue<'_>,
+) -> Tensor {
+    let (kh, kw, ci) = w
+        .conv_geometry()
+        .expect("conv2d_bitplane needs a rank-4 HWIO plane store");
+    assert_eq!(x.rank(), 4, "conv input must be NHWC");
+    assert_eq!(x.dims[3], ci, "channel mismatch");
+    let n_im = x.dims[0];
+    let dims = (n_im, x.dims[1], x.dims[2], ci);
+    let (ho, wo, _, _) =
+        tensor::conv_out_geometry((x.dims[1], x.dims[2]), (kh, kw), stride);
+    let k = kh * kw * ci;
+    debug_assert_eq!(w.k(), k);
+    let rows = n_im * ho * wo;
+    let mut col = scratch::take(rows * k);
+    pool.run_chunks_mut(&mut col, ROWS_PER_SHARD * k, |_shard, start, part| {
+        tensor::im2col_rows(&x.data, dims, (kh, kw), stride, start / k, part);
+    });
+    let acts = binarize::binarize_rows(pool, &col, rows, k, act_planes);
+    scratch::give(col);
+    let mut out = scratch::take(rows * w.n());
+    xnor_gemm_into(pool, &acts, w, epi, &mut out);
+    Tensor::new(vec![n_im, ho, wo, w.n()], out)
+}
+
+/// Fused `dense → epilogue` on the bit-plane engine: x (N, In) rows are
+/// binarized directly (a dense layer's rows *are* its im2col rows).
+pub fn dense_bitplane(
+    pool: &ThreadPool,
+    x: &Tensor,
+    w: &PlaneStore,
+    act_planes: usize,
+    epi: Epilogue<'_>,
+) -> Tensor {
+    assert_eq!(x.rank(), 2, "dense input must be (N, In)");
+    assert_eq!(x.dims[1], w.k(), "dense in-features mismatch");
+    let acts = binarize::binarize_rows(pool, &x.data, x.dims[0], x.dims[1], act_planes);
+    let mut out = scratch::take(x.dims[0] * w.n());
+    xnor_gemm_into(pool, &acts, w, epi, &mut out);
+    Tensor::new(vec![x.dims[0], w.n()], out)
+}
+
+// ---- reference path (oracle) ------------------------------------------------
+
+/// Reference conv for BitPlane mode: identical im2col + **identical
+/// binarization contract**, but dense f32 math over the reconstructed
+/// rows and the reconstructed `Σ α_p b_p` weight. No epilogue — callers
+/// compose separate passes, mirroring `forward_reference`.
+pub fn conv2d_bitplane_reference(
+    x: &Tensor,
+    w: &PlaneStore,
+    stride: usize,
+    act_planes: usize,
+) -> Tensor {
+    let (kh, kw, ci) = w
+        .conv_geometry()
+        .expect("conv2d_bitplane_reference needs a rank-4 HWIO plane store");
+    assert_eq!(x.rank(), 4, "conv input must be NHWC");
+    assert_eq!(x.dims[3], ci, "channel mismatch");
+    let n_im = x.dims[0];
+    let mut col = Vec::new();
+    let (rows, k, ho, wo) = tensor::im2col_into(
+        &x.data,
+        (n_im, x.dims[1], x.dims[2], ci),
+        (kh, kw),
+        stride,
+        &mut col,
+    );
+    let binz = binarize::binarize_reconstruct_rows(&col, rows, k, act_planes);
+    let dense_w = w.reconstruct_dense();
+    let out = tensor::gemm(&binz, rows, k, &dense_w, w.n());
+    Tensor::new(vec![n_im, ho, wo, w.n()], out)
+}
+
+/// Reference dense for BitPlane mode (see [`conv2d_bitplane_reference`]).
+pub fn dense_bitplane_reference(x: &Tensor, w: &PlaneStore, act_planes: usize) -> Tensor {
+    assert_eq!(x.rank(), 2, "dense input must be (N, In)");
+    assert_eq!(x.dims[1], w.k(), "dense in-features mismatch");
+    let binz =
+        binarize::binarize_reconstruct_rows(&x.data, x.dims[0], x.dims[1], act_planes);
+    let out = tensor::gemm(&binz, x.dims[0], x.dims[1], w.reconstruct_dense().as_slice(), w.n());
+    Tensor::new(vec![x.dims[0], w.n()], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flexor::binarycodes::dot_binary;
+    use crate::flexor::bitpack::BitVec;
+    use crate::substrate::prng::Pcg32;
+    use crate::substrate::ptest::check_msg;
+
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() <= 1e-3 * (1.0 + b.abs())
+    }
+
+    /// Satellite: popcount dot ≡ `binarycodes::dot_binary` on ±1 vectors
+    /// at lengths straddling u64 word boundaries.
+    #[test]
+    fn popcount_dot_matches_dot_binary_at_word_boundaries() {
+        let mut rng = Pcg32::seeded(13);
+        for len in [1usize, 63, 64, 65, 127, 128] {
+            for _ in 0..8 {
+                let a_signs: Vec<f32> = (0..len)
+                    .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                    .collect();
+                let b_signs: Vec<f32> = (0..len)
+                    .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                    .collect();
+                let a_bits = BitVec::from_signs(&a_signs);
+                let b_bits = BitVec::from_signs(&b_signs);
+                let want = dot_binary(&a_signs, &b_bits);
+                let got = popcount_dot(a_bits.words(), b_bits.words(), len);
+                assert_eq!(
+                    got as f32, want,
+                    "len={len}: popcount {got} vs dot_binary {want}"
+                );
+            }
+        }
+    }
+
+    /// XNOR GEMM ≡ dense GEMM over the reconstructed binarized rows and
+    /// the reconstructed dense weight, across 1/2/4 threads, plus
+    /// bit-identical results across thread counts.
+    #[test]
+    fn xnor_gemm_matches_dense_on_binarized_rows_across_threads() {
+        let pools = [ThreadPool::new(1), ThreadPool::new(2), ThreadPool::new(4)];
+        check_msg("xnor gemm == dense on binarized rows", 15, |g| {
+            let rows = g.usize_in(1, 40);
+            let k = g.usize_in(1, 150);
+            let n = g.usize_in(1, 20);
+            let q = 1 + g.usize_in(0, 2);
+            let m = 1 + g.usize_in(0, 5);
+            let a: Vec<f32> = (0..rows * k).map(|_| g.normal()).collect();
+            let planes: Vec<Vec<f32>> = (0..q)
+                .map(|_| {
+                    (0..k * n)
+                        .map(|_| if g.bool() { 1.0 } else { -1.0 })
+                        .collect()
+                })
+                .collect();
+            let alpha: Vec<Vec<f32>> = (0..q)
+                .map(|_| (0..n).map(|_| g.f32_in(0.05, 0.5)).collect())
+                .collect();
+            let store = PlaneStore::from_sign_planes(&[k, n], &planes, &alpha)
+                .map_err(|e| e.to_string())?;
+
+            let binz = binarize::binarize_reconstruct_rows(&a, rows, k, m);
+            let want = tensor::gemm(&binz, rows, k, &store.reconstruct_dense(), n);
+
+            let mut first: Option<Vec<f32>> = None;
+            for pool in &pools {
+                let acts = binarize::binarize_rows(pool, &a, rows, k, m);
+                let mut c = vec![0.0f32; rows * n];
+                xnor_gemm_into(pool, &acts, &store, Epilogue::None, &mut c);
+                for (i, (x, y)) in c.iter().zip(&want).enumerate() {
+                    if !close(*x, *y) {
+                        return Err(format!(
+                            "threads={} ({rows}x{k}x{n} q={q} m={m}) elem {i}: {x} vs {y}",
+                            pool.threads()
+                        ));
+                    }
+                }
+                match &first {
+                    None => first = Some(c),
+                    Some(f) => {
+                        if *f != c {
+                            return Err(format!(
+                                "threads={} changed the bits",
+                                pool.threads()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The shared epilogue contract holds on the bit-plane engine too:
+    /// fused bias/affine/residual ≡ GEMM then separate passes.
+    #[test]
+    fn epilogues_fuse_identically() {
+        let pool = ThreadPool::new(2);
+        let mut rng = Pcg32::seeded(77);
+        let (rows, k, n) = (9, 70, 5);
+        let a: Vec<f32> = (0..rows * k).map(|_| rng.normal()).collect();
+        let plane: Vec<f32> = (0..k * n)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        let alpha: Vec<f32> = (0..n).map(|_| rng.range_f32(0.05, 0.5)).collect();
+        let store =
+            PlaneStore::from_sign_planes(&[k, n], &[plane], &[alpha]).unwrap();
+        let acts = binarize::binarize_rows(&pool, &a, rows, k, 4);
+
+        let mut raw = vec![0.0f32; rows * n];
+        xnor_gemm_into(&pool, &acts, &store, Epilogue::None, &mut raw);
+
+        let ea: Vec<f32> = (0..n).map(|_| rng.range_f32(0.5, 1.5)).collect();
+        let eb: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let res: Vec<f32> = (0..rows * n).map(|_| rng.normal()).collect();
+        let mut fused = vec![0.0f32; rows * n];
+        xnor_gemm_into(
+            &pool,
+            &acts,
+            &store,
+            Epilogue::AffineAdd { a: &ea, b: &eb, residual: &res, relu: true },
+            &mut fused,
+        );
+        for i in 0..rows * n {
+            let v = raw[i] * ea[i % n] + eb[i % n] + res[i];
+            let want = if v < 0.0 { 0.0 } else { v };
+            assert_eq!(fused[i], want, "elem {i}");
+        }
+    }
+
+    /// Fused conv on the bit-plane engine ≡ the serial reference
+    /// composition (same binarization, dense math).
+    #[test]
+    fn conv_bitplane_matches_reference() {
+        let pool = ThreadPool::new(2);
+        check_msg("bitplane conv == reference", 10, |g| {
+            let n_im = g.usize_in(1, 3);
+            let h = g.usize_in(2, 7);
+            let wd = g.usize_in(2, 7);
+            let ci = g.usize_in(1, 4);
+            let co = g.usize_in(1, 7);
+            let kk = [1usize, 3][g.usize_in(0, 2)];
+            let stride = 1 + g.usize_in(0, 2);
+            let m = 1 + g.usize_in(0, 7);
+            let x = Tensor::new(
+                vec![n_im, h, wd, ci],
+                (0..n_im * h * wd * ci).map(|_| g.normal()).collect(),
+            );
+            let kdim = kk * kk * ci;
+            let plane: Vec<f32> = (0..kdim * co)
+                .map(|_| if g.bool() { 1.0 } else { -1.0 })
+                .collect();
+            let alpha: Vec<f32> = (0..co).map(|_| g.f32_in(0.05, 0.5)).collect();
+            let store =
+                PlaneStore::from_sign_planes(&[kk, kk, ci, co], &[plane], &[alpha])
+                    .map_err(|e| e.to_string())?;
+            let got = conv2d_bitplane(&pool, &x, &store, stride, m, Epilogue::None);
+            let want = conv2d_bitplane_reference(&x, &store, stride, m);
+            if got.dims != want.dims {
+                return Err(format!("dims {:?} vs {:?}", got.dims, want.dims));
+            }
+            for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+                if !close(*a, *b) {
+                    return Err(format!("elem {i}: {a} vs {b} (k={kk} s={stride} m={m})"));
+                }
+            }
+            scratch::give(got.data);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,148 @@
+//! Bit-plane XNOR/popcount compute engine (DESIGN.md §8): serve
+//! encrypted bundles **without dequantizing to dense FP**.
+//!
+//! The DenseF32 engine (§4/§7) decrypts once at load and materializes
+//! `Σ α_p b_p` f32 weights — ~32× the resident bytes the `.fxr` format
+//! was designed to avoid. This subsystem keeps quantized layers as
+//! packed bit-planes for their entire serving lifetime:
+//!
+//! * [`plane`]    — [`PlaneStore`]: per-output-channel u64 bit rows + α,
+//!   repacked straight off the word-parallel decryptor
+//!   (`Decryptor::decrypt_to_plane_rows`);
+//! * [`binarize`] — the activation contract: each im2col row becomes up
+//!   to `m` greedy sign/scale planes (`a ≈ Σ β_m h_m`, exact for ±1
+//!   rows);
+//! * [`gemm`]     — the XNOR/popcount GEMM: `k − 2·popcount(h ⊕ b)` per
+//!   plane pair, α/β scaling, row-sharded on the substrate pool and
+//!   finished by the same [`Epilogue`](super::gemm::Epilogue) fusion
+//!   contract as the packed-FP engine.
+//!
+//! [`ComputeMode`] selects the engine per model: a single server mixes
+//! FP-exact models with high-density bit-plane models (`serve::Registry`
+//! reports each entry's resident bytes).
+
+pub mod binarize;
+pub mod gemm;
+pub mod plane;
+
+pub use binarize::{BinarizedActs, DEFAULT_ACT_PLANES, MAX_ACT_PLANES};
+pub use gemm::{conv2d_bitplane, dense_bitplane, popcount_dot, xnor_gemm_into};
+pub use plane::PlaneStore;
+
+use anyhow::{bail, Result};
+
+/// Which compute engine a loaded model runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ComputeMode {
+    /// Decrypt once at load, materialize dense `Σ α_p b_p` f32 weights,
+    /// run the packed-FP fused engine (§7). Exact.
+    DenseF32,
+    /// Keep quantized layers as packed bit-planes and run the
+    /// XNOR/popcount engine over activations binarized into
+    /// `act_planes` sign/scale planes per im2col row. Exact when every
+    /// row is representable in ≤ `act_planes` planes (e.g. ±1 inputs),
+    /// an approximation otherwise — see DESIGN.md §8.
+    BitPlane {
+        /// Activation sign/scale planes per row (1..=[`MAX_ACT_PLANES`]).
+        act_planes: usize,
+    },
+}
+
+impl ComputeMode {
+    /// BitPlane with the serving default of [`DEFAULT_ACT_PLANES`].
+    pub fn bit_plane() -> ComputeMode {
+        ComputeMode::BitPlane { act_planes: DEFAULT_ACT_PLANES }
+    }
+
+    /// Parse `dense` / `bitplane` / `bitplane:<m>` (CLI flags and the
+    /// `FLEXOR_COMPUTE` env var).
+    pub fn parse(s: &str) -> Result<ComputeMode> {
+        let t = s.trim().to_ascii_lowercase();
+        match t.as_str() {
+            "dense" | "densef32" | "fp32" => Ok(ComputeMode::DenseF32),
+            "bitplane" | "bit-plane" | "xnor" => Ok(ComputeMode::bit_plane()),
+            other => {
+                if let Some(m) = other.strip_prefix("bitplane:") {
+                    match m.parse::<usize>() {
+                        Ok(m) if (1..=MAX_ACT_PLANES).contains(&m) => {
+                            Ok(ComputeMode::BitPlane { act_planes: m })
+                        }
+                        _ => bail!(
+                            "bad act-plane count {m:?} (want 1..={MAX_ACT_PLANES})"
+                        ),
+                    }
+                } else {
+                    bail!(
+                        "unknown compute mode {s:?} (want dense | bitplane | bitplane:<m>)"
+                    )
+                }
+            }
+        }
+    }
+
+    /// The process default: `FLEXOR_COMPUTE` when set, else DenseF32.
+    pub fn default_from_env() -> Result<ComputeMode> {
+        match std::env::var("FLEXOR_COMPUTE") {
+            Ok(v) if !v.trim().is_empty() => ComputeMode::parse(&v),
+            _ => Ok(ComputeMode::DenseF32),
+        }
+    }
+
+    /// Short name for `/models` JSON and log lines.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ComputeMode::DenseF32 => "dense",
+            ComputeMode::BitPlane { .. } => "bitplane",
+        }
+    }
+
+    /// Activation planes when in BitPlane mode.
+    pub fn act_planes(&self) -> Option<usize> {
+        match *self {
+            ComputeMode::DenseF32 => None,
+            ComputeMode::BitPlane { act_planes } => Some(act_planes),
+        }
+    }
+
+    pub fn is_bit_plane(&self) -> bool {
+        matches!(self, ComputeMode::BitPlane { .. })
+    }
+}
+
+impl Default for ComputeMode {
+    fn default() -> Self {
+        ComputeMode::DenseF32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_modes() {
+        assert_eq!(ComputeMode::parse("dense").unwrap(), ComputeMode::DenseF32);
+        assert_eq!(ComputeMode::parse(" FP32 ").unwrap(), ComputeMode::DenseF32);
+        assert_eq!(
+            ComputeMode::parse("bitplane").unwrap(),
+            ComputeMode::BitPlane { act_planes: DEFAULT_ACT_PLANES }
+        );
+        assert_eq!(
+            ComputeMode::parse("bitplane:16").unwrap(),
+            ComputeMode::BitPlane { act_planes: 16 }
+        );
+        assert!(ComputeMode::parse("bitplane:0").is_err());
+        assert!(ComputeMode::parse("bitplane:999").is_err());
+        assert!(ComputeMode::parse("quantum").is_err());
+    }
+
+    #[test]
+    fn labels_and_accessors() {
+        assert_eq!(ComputeMode::DenseF32.label(), "dense");
+        assert_eq!(ComputeMode::bit_plane().label(), "bitplane");
+        assert_eq!(ComputeMode::DenseF32.act_planes(), None);
+        assert_eq!(ComputeMode::bit_plane().act_planes(), Some(DEFAULT_ACT_PLANES));
+        assert!(ComputeMode::bit_plane().is_bit_plane());
+        assert!(!ComputeMode::default().is_bit_plane());
+    }
+}

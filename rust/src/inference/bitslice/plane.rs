@@ -1,0 +1,223 @@
+//! [`PlaneStore`] — a quantized GEMM right-hand side kept as packed
+//! bit-planes for its entire serving lifetime (DESIGN.md §8).
+//!
+//! A `(k × n)` weight matrix (`k` = reduction length, `n` = output
+//! channels) is stored as `q` planes; plane `p` holds one u64 bit row per
+//! output channel (`k` bits, LSB-first, bit = 1 ⇔ that ±1 weight bit is
+//! −1 — the crate-wide convention) plus the per-channel scale `α_p`.
+//! Resident cost is `q·n·⌈k/64⌉` words + `q·n` floats — the dense f32
+//! tensor the DenseF32 engine materializes is never built.
+
+use anyhow::{ensure, Result};
+
+use crate::flexor::bitpack::BitVec;
+
+/// One bit-plane: per-output-channel packed bit rows + α scales.
+struct WeightPlane {
+    /// `bits[j·wpr .. (j+1)·wpr]` = channel `j`'s k-bit row (zero-padded
+    /// past `k`, so XOR/popcount over whole words is exact).
+    bits: Vec<u64>,
+    /// `alpha[j]` — the per-output-channel scale of this plane.
+    alpha: Vec<f32>,
+}
+
+/// A quantized layer held as packed bit-planes (never dense f32).
+pub struct PlaneStore {
+    /// Original weight tensor dims (HWIO for conv, `(in, out)` for dense).
+    shape: Vec<usize>,
+    k: usize,
+    n: usize,
+    /// Words per channel row: `⌈k/64⌉`.
+    wpr: usize,
+    planes: Vec<WeightPlane>,
+}
+
+impl PlaneStore {
+    /// Build from decrypted per-output-channel bit rows — the output of
+    /// [`crate::flexor::Decryptor::decrypt_to_plane_rows`] — plus each
+    /// plane's α. `shape` is the weight tensor's dims (last axis = output
+    /// channel).
+    pub fn from_decrypted(
+        shape: &[usize],
+        planes: Vec<(Vec<BitVec>, Vec<f32>)>,
+    ) -> Result<PlaneStore> {
+        ensure!(!shape.is_empty(), "empty weight shape");
+        ensure!(!planes.is_empty(), "no bit planes");
+        let n = *shape.last().unwrap();
+        let total: usize = shape.iter().product();
+        ensure!(n > 0 && total % n == 0, "bad weight shape {shape:?}");
+        let k = total / n;
+        let wpr = k.div_ceil(64);
+        let mut packed = Vec::with_capacity(planes.len());
+        for (pi, (rows, alpha)) in planes.into_iter().enumerate() {
+            ensure!(rows.len() == n, "plane {pi}: {} rows != n {n}", rows.len());
+            ensure!(alpha.len() == n, "plane {pi}: alpha len != n {n}");
+            let mut bits = Vec::with_capacity(n * wpr);
+            for (j, row) in rows.iter().enumerate() {
+                ensure!(row.len() == k, "plane {pi} ch {j}: row len != k {k}");
+                debug_assert_eq!(row.words().len(), wpr);
+                bits.extend_from_slice(row.words());
+            }
+            packed.push(WeightPlane { bits, alpha });
+        }
+        Ok(PlaneStore { shape: shape.to_vec(), k, n, wpr, planes: packed })
+    }
+
+    /// Build from row-major ±1 sign planes (`planes[p][t·n + j]`) — the
+    /// fixture path for tests and benches (real loads come off the
+    /// decryptor via [`PlaneStore::from_decrypted`]).
+    pub fn from_sign_planes(
+        shape: &[usize],
+        planes: &[Vec<f32>],
+        alpha: &[Vec<f32>],
+    ) -> Result<PlaneStore> {
+        ensure!(planes.len() == alpha.len(), "planes/alpha count mismatch");
+        ensure!(!shape.is_empty(), "empty weight shape");
+        let n = *shape.last().unwrap();
+        let total: usize = shape.iter().product();
+        ensure!(n > 0 && total % n == 0, "bad weight shape {shape:?}");
+        let k = total / n;
+        let mut decrypted = Vec::with_capacity(planes.len());
+        for (p, a) in planes.iter().zip(alpha) {
+            ensure!(p.len() == total, "plane size mismatch");
+            let mut rows = Vec::with_capacity(n);
+            for j in 0..n {
+                let mut bv = BitVec::zeros(k);
+                for t in 0..k {
+                    if p[t * n + j] < 0.0 {
+                        bv.set(t, true);
+                    }
+                }
+                rows.push(bv);
+            }
+            decrypted.push((rows, a.clone()));
+        }
+        PlaneStore::from_decrypted(shape, decrypted)
+    }
+
+    /// Reduction length (rows of the GEMM right-hand side).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output channels (columns of the GEMM right-hand side).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Bit planes (the paper's q).
+    pub fn q(&self) -> usize {
+        self.planes.len()
+    }
+
+    /// Words per channel bit row.
+    pub fn words_per_row(&self) -> usize {
+        self.wpr
+    }
+
+    /// Original weight tensor dims.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// `(kh, kw, ci)` when this is a conv weight (rank-4 HWIO shape).
+    pub fn conv_geometry(&self) -> Option<(usize, usize, usize)> {
+        if self.shape.len() == 4 {
+            Some((self.shape[0], self.shape[1], self.shape[2]))
+        } else {
+            None
+        }
+    }
+
+    /// Channel `j`'s packed bit row in plane `p`.
+    #[inline]
+    pub fn col_bits(&self, p: usize, j: usize) -> &[u64] {
+        &self.planes[p].bits[j * self.wpr..(j + 1) * self.wpr]
+    }
+
+    /// Plane `p`'s per-channel α.
+    #[inline]
+    pub fn alpha(&self, p: usize) -> &[f32] {
+        &self.planes[p].alpha
+    }
+
+    /// Materialize the dense `Σ α_p b_p` matrix (row-major `k × n`) —
+    /// reference/oracle use only; the serving path never calls this.
+    pub fn reconstruct_dense(&self) -> Vec<f32> {
+        let mut w = vec![0.0f32; self.k * self.n];
+        for plane in &self.planes {
+            for j in 0..self.n {
+                let bits = &plane.bits[j * self.wpr..(j + 1) * self.wpr];
+                let a = plane.alpha[j];
+                for t in 0..self.k {
+                    let neg = (bits[t / 64] >> (t % 64)) & 1 == 1;
+                    w[t * self.n + j] += if neg { -a } else { a };
+                }
+            }
+        }
+        w
+    }
+
+    /// Bytes this layer keeps resident in BitPlane mode (bit rows + α).
+    pub fn resident_bytes(&self) -> usize {
+        self.planes
+            .iter()
+            .map(|p| p.bits.len() * 8 + p.alpha.len() * 4)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flexor::binarycodes;
+    use crate::substrate::prng::Pcg32;
+
+    #[test]
+    fn reconstruct_matches_binarycodes() {
+        let mut rng = Pcg32::seeded(41);
+        let (k, n, q) = (70, 5, 2); // k straddles a word boundary
+        let planes: Vec<Vec<f32>> = (0..q)
+            .map(|_| {
+                (0..k * n)
+                    .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                    .collect()
+            })
+            .collect();
+        let alpha: Vec<Vec<f32>> = (0..q)
+            .map(|_| (0..n).map(|_| rng.range_f32(0.1, 1.0)).collect())
+            .collect();
+        let store = PlaneStore::from_sign_planes(&[k, n], &planes, &alpha).unwrap();
+        assert_eq!((store.k(), store.n(), store.q()), (k, n, q));
+        assert_eq!(store.words_per_row(), 2);
+        let want = binarycodes::reconstruct_dense(&planes, &alpha, n).unwrap();
+        let got = store.reconstruct_dense();
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-6, "elem {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn resident_bytes_accounting() {
+        let planes = vec![vec![1.0f32; 130 * 3]];
+        let alpha = vec![vec![0.5f32; 3]];
+        let store =
+            PlaneStore::from_sign_planes(&[130, 3], &planes, &alpha).unwrap();
+        // 3 channels × ⌈130/64⌉=3 words × 8 bytes + 3 α × 4 bytes
+        assert_eq!(store.resident_bytes(), 3 * 3 * 8 + 3 * 4);
+        assert!(store.conv_geometry().is_none());
+    }
+
+    #[test]
+    fn validation() {
+        assert!(PlaneStore::from_sign_planes(&[4, 2], &[], &[]).is_err());
+        assert!(
+            PlaneStore::from_sign_planes(&[4, 2], &[vec![1.0; 8]], &[vec![1.0; 3]])
+                .is_err()
+        );
+        assert!(
+            PlaneStore::from_sign_planes(&[4, 2], &[vec![1.0; 7]], &[vec![1.0; 2]])
+                .is_err()
+        );
+    }
+}

@@ -28,7 +28,8 @@ pub const MR: usize = 4;
 pub const NR: usize = 8;
 
 /// Rows of C per pool shard (a multiple of MR keeps tiles unsplit).
-const ROWS_PER_SHARD: usize = 64;
+/// Shared with the bit-plane engine so both shard identically.
+pub(crate) const ROWS_PER_SHARD: usize = 64;
 
 /// 64-byte-aligned storage block so panel rows start on cache-line
 /// boundaries regardless of allocator mood.
@@ -91,6 +92,11 @@ impl PackedB {
     fn panel(&self, p: usize) -> &[f32] {
         &floats(&self.buf)[p * self.k * NR..(p + 1) * self.k * NR]
     }
+
+    /// Bytes this packed copy keeps resident (the `/models` accounting).
+    pub fn resident_bytes(&self) -> usize {
+        self.buf.len() * std::mem::size_of::<AlignedBlock>()
+    }
 }
 
 fn floats(buf: &[AlignedBlock]) -> &[f32] {
@@ -134,24 +140,7 @@ pub fn gemm_packed_into(
     assert_eq!(a.len(), m * k, "A is {m}x{k}");
     assert_eq!(b.k, k, "B expects k={}, got {k}", b.k);
     assert_eq!(c.len(), m * b.n, "C is {m}x{}", b.n);
-    // validate per-channel epilogue parameters up front (the reference
-    // path's batch_norm_eval asserts the same) so a malformed bundle
-    // fails with a clear message, not an index panic inside a shard
-    match epi {
-        Epilogue::None => {}
-        Epilogue::Bias { bias, .. } => {
-            assert_eq!(bias.len(), b.n, "bias length must match n={}", b.n);
-        }
-        Epilogue::Affine { a: ea, b: eb, .. } => {
-            assert!(ea.len() == b.n && eb.len() == b.n,
-                    "affine params must match n={}", b.n);
-        }
-        Epilogue::AffineAdd { a: ea, b: eb, residual, .. } => {
-            assert!(ea.len() == b.n && eb.len() == b.n,
-                    "affine params must match n={}", b.n);
-            assert_eq!(residual.len(), c.len(), "residual must match C");
-        }
-    }
+    validate_epilogue(&epi, b.n, c.len());
     let n = b.n;
     pool.run_chunks_mut(c, ROWS_PER_SHARD * n, |_shard, start, c_part| {
         let i0 = start / n;
@@ -184,6 +173,28 @@ pub fn gemm_packed(
     let mut c = scratch::take(m * b.n);
     gemm_packed_into(pool, a, m, k, b, epi, &mut c);
     c
+}
+
+/// Validate per-channel epilogue parameters up front (the reference
+/// path's batch_norm_eval asserts the same) so a malformed bundle fails
+/// with a clear message, not an index panic inside a shard. Shared with
+/// the bit-plane engine.
+pub(crate) fn validate_epilogue(epi: &Epilogue<'_>, n: usize, c_len: usize) {
+    match *epi {
+        Epilogue::None => {}
+        Epilogue::Bias { bias, .. } => {
+            assert_eq!(bias.len(), n, "bias length must match n={n}");
+        }
+        Epilogue::Affine { a: ea, b: eb, .. } => {
+            assert!(ea.len() == n && eb.len() == n,
+                    "affine params must match n={n}");
+        }
+        Epilogue::AffineAdd { a: ea, b: eb, residual, .. } => {
+            assert!(ea.len() == n && eb.len() == n,
+                    "affine params must match n={n}");
+            assert_eq!(residual.len(), c_len, "residual must match C");
+        }
+    }
 }
 
 /// Transpose `mh` rows of A (starting at `row0`) into the MR-interleaved
@@ -222,9 +233,10 @@ fn kernel(apack: &[f32], panel: &[f32], k: usize, acc: &mut [[f32; NR]; MR]) {
 
 /// Apply the epilogue to one tile and store its live `mh × jw` region.
 /// `t0` is the tile's first row inside `c_part`; `i0` the part's first
-/// absolute row (for residual addressing).
+/// absolute row (for residual addressing). Shared with the bit-plane
+/// engine ([`super::bitslice`]) so both honour one fusion contract.
 #[inline]
-fn store_tile(
+pub(crate) fn store_tile(
     acc: &[[f32; NR]; MR],
     c_part: &mut [f32],
     t0: usize,

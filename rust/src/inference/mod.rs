@@ -10,12 +10,20 @@
 //!   microkernel sharded row-parallel across the substrate thread pool,
 //!   epilogues (bias / BN / ReLU / residual) fused into the output tile,
 //!   and a per-thread scratch arena for im2col/activation buffers;
+//! * [`bitslice`] — the bit-plane XNOR/popcount engine (DESIGN.md §8):
+//!   quantized layers stay packed bit-planes for their whole serving
+//!   lifetime, activations are binarized per im2col row, and dot
+//!   products are `k − 2·popcount(h ⊕ b)` with α/β scaling — dense FP
+//!   weights are never materialized in [`ComputeMode::BitPlane`];
 //! * [`model`]  — rebuilds the model graphs (mlp / lenet5 / resnet family)
 //!   from an exported bundle (`.fxr` + FP sidecar) and runs batched
-//!   forward passes whose logits match the AOT eval HLO.
+//!   forward passes whose logits match the AOT eval HLO, on either
+//!   compute engine.
 
+pub mod bitslice;
 pub mod gemm;
 pub mod model;
 pub mod tensor;
 
+pub use bitslice::{ComputeMode, PlaneStore};
 pub use model::InferenceModel;

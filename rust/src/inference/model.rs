@@ -4,9 +4,14 @@
 //! `<stem>.fxr` (encrypted quantized weights), `<stem>.fp.bin` (FXIN FP
 //! residue: stem/head/biases/BN), and `<stem>.bundle.json` (index). This
 //! module decrypts the quantized layers through the word-parallel XOR
-//! engine, reconstructs dense weights with `Σ α_i b_i`, rebuilds the
-//! architecture, and runs forward passes whose logits match the AOT eval
-//! HLO (verified in `rust/tests/e2e_train.rs`).
+//! engine, rebuilds the architecture, and runs forward passes on one of
+//! two engines selected by [`ComputeMode`] at load:
+//!
+//! * **DenseF32** — reconstructs dense weights with `Σ α_i b_i`; logits
+//!   match the AOT eval HLO (verified in `rust/tests/e2e_train.rs`).
+//! * **BitPlane** — repacks the decryptor output straight into
+//!   [`PlaneStore`] bit-planes (never materializing FP weights) and runs
+//!   the XNOR/popcount engine over binarized activations (DESIGN.md §8).
 //!
 //! Forward passes run on the packed compute engine (DESIGN.md §7): every
 //! GEMM right-hand side — quantized layers, stem, head — is packed once
@@ -30,6 +35,7 @@ use crate::runtime::initbin;
 use crate::substrate::json::{self, Json};
 use crate::substrate::pool::{self, ThreadPool};
 
+use super::bitslice::{self, ComputeMode, PlaneStore};
 use super::gemm::{self, conv2d_fused, dense_fused, Epilogue, PackedB};
 use super::tensor::{self, Tensor};
 
@@ -137,9 +143,17 @@ pub struct InferenceModel {
     pub model: String,
     pub num_classes: usize,
     pub input_dims: Vec<usize>,
-    /// Dense weights of quantized layers, by layer index, reconstructed
-    /// from the encrypted container (decrypt + Σ α_i b_i).
+    /// Which compute engine the quantized layers run on.
+    mode: ComputeMode,
+    /// Declared shapes of quantized layers, by layer index (always
+    /// populated; the geometry source for both engines).
+    qshapes: BTreeMap<usize, Vec<usize>>,
+    /// Dense weights of quantized layers, reconstructed from the
+    /// encrypted container (decrypt + Σ α_i b_i). DenseF32 mode only.
     qweights: BTreeMap<usize, Tensor>,
+    /// Packed bit-plane stores of quantized layers. BitPlane mode only —
+    /// dense FP weights are never materialized.
+    qplanes: BTreeMap<usize, PlaneStore>,
     bns: Vec<Bn>,
     engine: Engine,
     /// Paper-format storage stats, carried for reporting.
@@ -148,8 +162,17 @@ pub struct InferenceModel {
 }
 
 impl InferenceModel {
-    /// Load `<stem>.fxr` + `<stem>.fp.bin` + `<stem>.bundle.json`.
+    /// Load `<stem>.fxr` + `<stem>.fp.bin` + `<stem>.bundle.json` on the
+    /// default (DenseF32) engine.
     pub fn load(dir: &Path, stem: &str) -> Result<Self> {
+        Self::load_with_mode(dir, stem, ComputeMode::DenseF32)
+    }
+
+    /// Load a bundle onto the given compute engine. DenseF32 decrypts to
+    /// dense `Σ α_i b_i` weights and packs panels; BitPlane repacks the
+    /// decryptor's output straight into per-channel bit-plane rows
+    /// ([`PlaneStore`]) — the quantized layers never exist as dense FP.
+    pub fn load_with_mode(dir: &Path, stem: &str, mode: ComputeMode) -> Result<Self> {
         let bundle_text =
             std::fs::read_to_string(dir.join(format!("{stem}.bundle.json")))?;
         let bundle = json::parse(&bundle_text)?;
@@ -171,8 +194,11 @@ impl InferenceModel {
             shapes.insert(idx, shape);
         }
 
-        // decrypt every quantized layer
+        // decrypt every quantized layer, materializing per the engine:
+        // dense Σ α_i b_i tensors (DenseF32) or packed bit-plane stores
+        // (BitPlane — no FP weights, ever)
         let mut qweights = BTreeMap::new();
+        let mut qplanes = BTreeMap::new();
         for layer in &fxr.layers {
             let idx: usize = layer
                 .name
@@ -184,15 +210,35 @@ impl InferenceModel {
                 .with_context(|| format!("no shape for layer {idx}"))?;
             ensure!(shape.iter().product::<usize>() == layer.n_weights,
                     "layer {idx}: shape {:?} != n_weights {}", shape, layer.n_weights);
-            let mut planes = Vec::with_capacity(layer.q());
-            let mut alphas = Vec::with_capacity(layer.q());
-            for p in &layer.planes {
-                let d = Decryptor::new(p.mxor.clone());
-                planes.push(d.decrypt_to_signs(&p.enc, layer.n_weights)?);
-                alphas.push(p.alpha.clone());
+            ensure!(*shape.last().unwrap() == layer.c_out,
+                    "layer {idx}: shape {:?} last axis != c_out {}",
+                    shape, layer.c_out);
+            match mode {
+                ComputeMode::DenseF32 => {
+                    let mut planes = Vec::with_capacity(layer.q());
+                    let mut alphas = Vec::with_capacity(layer.q());
+                    for p in &layer.planes {
+                        let d = Decryptor::new(p.mxor.clone());
+                        planes.push(d.decrypt_to_signs(&p.enc, layer.n_weights)?);
+                        alphas.push(p.alpha.clone());
+                    }
+                    let dense = reconstruct_dense(&planes, &alphas, layer.c_out)?;
+                    qweights.insert(idx, Tensor::new(shape.clone(), dense));
+                }
+                ComputeMode::BitPlane { .. } => {
+                    let mut planes = Vec::with_capacity(layer.q());
+                    for p in &layer.planes {
+                        let d = Decryptor::new(p.mxor.clone());
+                        let rows = d.decrypt_to_plane_rows(
+                            &p.enc,
+                            layer.n_weights,
+                            layer.c_out,
+                        )?;
+                        planes.push((rows, p.alpha.clone()));
+                    }
+                    qplanes.insert(idx, PlaneStore::from_decrypted(shape, planes)?);
+                }
             }
-            let dense = reconstruct_dense(&planes, &alphas, layer.c_out)?;
-            qweights.insert(idx, Tensor::new(shape.clone(), dense));
         }
 
         // BN packs, in conv-site order (paths ['bn'][i][...])
@@ -211,7 +257,8 @@ impl InferenceModel {
         }
 
         // pack every GEMM right-hand side once; cache the FP leaves the
-        // forwards consume
+        // forwards consume. Quantized panels only exist in DenseF32 mode
+        // (BitPlane keeps the PlaneStores instead).
         let mut engine = Engine::default();
         for (idx, w) in &qweights {
             engine.qpacked.insert(*idx, PackedB::from_tensor(w));
@@ -248,7 +295,10 @@ impl InferenceModel {
                 .iter()
                 .filter_map(|d| d.as_usize())
                 .collect(),
+            mode,
+            qshapes: shapes,
             qweights,
+            qplanes,
             bns,
             engine,
             bits_per_weight: stats.bits_per_weight,
@@ -256,10 +306,56 @@ impl InferenceModel {
         })
     }
 
+    /// The compute engine this model was loaded onto.
+    pub fn compute_mode(&self) -> ComputeMode {
+        self.mode
+    }
+
+    /// Bytes the quantized layers keep resident under this model's
+    /// compute mode: dense tensors + packed panels (DenseF32) or packed
+    /// bit-plane rows + α (BitPlane). The `/models` accounting.
+    pub fn quantized_resident_bytes(&self) -> usize {
+        let dense: usize = self
+            .qweights
+            .values()
+            .map(|t| t.data.len() * std::mem::size_of::<f32>())
+            .sum();
+        let packed: usize =
+            self.engine.qpacked.values().map(PackedB::resident_bytes).sum();
+        let planes: usize = self.qplanes.values().map(PlaneStore::resident_bytes).sum();
+        dense + packed + planes
+    }
+
+    /// Bytes of the FP residue (stem/head/biases/BN packs) — identical
+    /// across compute modes.
+    pub fn fp_resident_bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        let t = |o: &Option<Tensor>| o.as_ref().map_or(0, |t| t.data.len() * f);
+        let p = |o: &Option<PackedB>| o.as_ref().map_or(0, PackedB::resident_bytes);
+        let mut bytes = t(&self.engine.stem) + p(&self.engine.stem_packed);
+        bytes += t(&self.engine.head_w) + p(&self.engine.head_packed);
+        bytes += self.engine.head_b.as_ref().map_or(0, |b| b.len() * f);
+        bytes += self.engine.biases.iter().map(|b| b.len() * f).sum::<usize>();
+        // each BN site caches 6 per-channel vectors (raw + a·x+b fold)
+        bytes += self.bns.iter().map(|b| 6 * b.scale.len() * f).sum::<usize>();
+        bytes
+    }
+
+    /// Total resident weight bytes (quantized + FP residue).
+    pub fn resident_bytes(&self) -> usize {
+        self.quantized_resident_bytes() + self.fp_resident_bytes()
+    }
+
     fn qweight(&self, idx: usize) -> Result<&Tensor> {
         self.qweights
             .get(&idx)
             .with_context(|| format!("missing quantized layer {idx}"))
+    }
+
+    fn qplane(&self, idx: usize) -> Result<&PlaneStore> {
+        self.qplanes
+            .get(&idx)
+            .with_context(|| format!("missing bit-plane layer {idx}"))
     }
 
     /// Packed panels + (kh, kw, ci) conv geometry of quantized layer `idx`.
@@ -269,9 +365,96 @@ impl InferenceModel {
             .qpacked
             .get(&idx)
             .with_context(|| format!("missing packed layer {idx}"))?;
-        let dims = &self.qweight(idx)?.dims;
+        let dims = self
+            .qshapes
+            .get(&idx)
+            .with_context(|| format!("missing shape for layer {idx}"))?;
         let geom = if dims.len() == 4 { (dims[0], dims[1], dims[2]) } else { (0, 0, 0) };
         Ok((p, geom))
+    }
+
+    /// Is quantized layer `idx` present? (Engine-agnostic existence test.)
+    fn has_qlayer(&self, idx: usize) -> bool {
+        self.qshapes.contains_key(&idx)
+    }
+
+    /// Quantized conv → epilogue on the active engine.
+    fn qconv(
+        &self,
+        pool: &ThreadPool,
+        x: &Tensor,
+        idx: usize,
+        stride: usize,
+        epi: Epilogue<'_>,
+    ) -> Result<Tensor> {
+        match self.mode {
+            ComputeMode::DenseF32 => {
+                let (w, g) = self.qpacked(idx)?;
+                Ok(conv2d_fused(pool, x, w, g, stride, epi))
+            }
+            ComputeMode::BitPlane { act_planes } => Ok(bitslice::conv2d_bitplane(
+                pool,
+                x,
+                self.qplane(idx)?,
+                stride,
+                act_planes,
+                epi,
+            )),
+        }
+    }
+
+    /// Quantized dense → epilogue on the active engine.
+    fn qdense(
+        &self,
+        pool: &ThreadPool,
+        x: &Tensor,
+        idx: usize,
+        epi: Epilogue<'_>,
+    ) -> Result<Tensor> {
+        match self.mode {
+            ComputeMode::DenseF32 => {
+                let (w, _) = self.qpacked(idx)?;
+                Ok(dense_fused(pool, x, w, epi))
+            }
+            ComputeMode::BitPlane { act_planes } => Ok(bitslice::dense_bitplane(
+                pool,
+                x,
+                self.qplane(idx)?,
+                act_planes,
+                epi,
+            )),
+        }
+    }
+
+    /// Reference quantized conv (separate-pass oracle): dense math in
+    /// DenseF32 mode; in BitPlane mode the same binarization contract as
+    /// the engine but dense math over reconstructed rows/weights.
+    fn ref_qconv(&self, x: &Tensor, idx: usize, stride: usize) -> Result<Tensor> {
+        match self.mode {
+            ComputeMode::DenseF32 => Ok(tensor::conv2d(x, self.qweight(idx)?, stride)),
+            ComputeMode::BitPlane { act_planes } => Ok(
+                bitslice::gemm::conv2d_bitplane_reference(
+                    x,
+                    self.qplane(idx)?,
+                    stride,
+                    act_planes,
+                ),
+            ),
+        }
+    }
+
+    /// Reference quantized dense (no bias — callers compose it).
+    fn ref_qdense(&self, x: &Tensor, idx: usize) -> Result<Tensor> {
+        match self.mode {
+            ComputeMode::DenseF32 => Ok(tensor::dense(x, self.qweight(idx)?, None)),
+            ComputeMode::BitPlane { act_planes } => Ok(
+                bitslice::gemm::dense_bitplane_reference(
+                    x,
+                    self.qplane(idx)?,
+                    act_planes,
+                ),
+            ),
+        }
     }
 
     fn bn(&self, idx: usize) -> Result<&Bn> {
@@ -286,11 +469,17 @@ impl InferenceModel {
             .with_context(|| format!("missing bias {i}"))
     }
 
-    /// Batched forward on the packed parallel engine: x flat NHWC (or NC
+    /// Batched forward on the active compute engine: x flat NHWC (or NC
     /// for mlp), returns (N, classes) logits in a scratch-arena buffer
     /// (callers may `gemm::scratch::give` it back, as `predict` does).
     pub fn forward(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
-        let pool = pool::global();
+        self.forward_with_pool(x, n, pool::global())
+    }
+
+    /// [`forward`](Self::forward) on an explicit thread pool — lets tests
+    /// pin exact thread counts (both engines are bit-identical across
+    /// pool sizes).
+    pub fn forward_with_pool(&self, x: &[f32], n: usize, pool: &ThreadPool) -> Result<Vec<f32>> {
         match self.model.as_str() {
             m if m.starts_with("resnet") => self.forward_resnet(x, n, pool),
             "lenet5" => self.forward_lenet(x, n, pool),
@@ -299,9 +488,12 @@ impl InferenceModel {
         }
     }
 
-    /// The pre-engine separate-pass composition (scalar blocked GEMM, one
-    /// full-tensor pass per op). Semantically ≡ [`forward`]; kept as the
-    /// property-test oracle and the `benches/inference.rs` baseline.
+    /// The separate-pass composition (scalar blocked GEMM, one
+    /// full-tensor pass per op). Semantically ≡ [`forward`] under the
+    /// same compute mode — in BitPlane mode the quantized layers apply
+    /// the identical activation-binarization contract before dense
+    /// math — so it is the property-test oracle and the
+    /// `benches/inference.rs` baseline for both engines.
     pub fn forward_reference(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
         match self.model.as_str() {
             m if m.starts_with("resnet") => self.forward_resnet_ref(x, n),
@@ -368,36 +560,34 @@ impl InferenceModel {
                 let stride = if si > 0 && bi == 0 { 2 } else { 1 };
                 let downsample = stride != 1 || c_in != wd;
 
-                let (w1, g1) = self.qpacked(q_i)?;
                 let bn1 = self.bn(bn_i)?;
-                let (w2, g2) = self.qpacked(q_i + 1)?;
                 let bn2 = self.bn(bn_i + 1)?;
+                let (q1, q2) = (q_i, q_i + 1);
                 q_i += 2;
                 bn_i += 2;
 
                 // conv1 → bn → relu fused
-                let out1 = conv2d_fused(pool, &cur, w1, g1, stride, bn1.affine(true));
+                let out1 = self.qconv(pool, &cur, q1, stride, bn1.affine(true))?;
 
                 // shortcut first, so conv2's epilogue can fuse the
                 // residual add (+ final relu) into its output tile
                 let short = if downsample {
-                    let (ws, gs) = self.qpacked(q_i)?;
                     let bns = self.bn(bn_i)?;
+                    let qs = q_i;
                     q_i += 1;
                     bn_i += 1;
-                    Some(conv2d_fused(pool, &cur, ws, gs, stride, bns.affine(false)))
+                    Some(self.qconv(pool, &cur, qs, stride, bns.affine(false))?)
                 } else {
                     None
                 };
                 let residual = short.as_ref().map_or(&cur.data[..], |s| &s.data[..]);
-                let out = conv2d_fused(
+                let out = self.qconv(
                     pool,
                     &out1,
-                    w2,
-                    g2,
+                    q2,
                     1,
                     Epilogue::AffineAdd { a: &bn2.a, b: &bn2.b, residual, relu: true },
-                );
+                )?;
 
                 gemm::scratch::give(out1.data);
                 if let Some(s) = short {
@@ -417,9 +607,8 @@ impl InferenceModel {
         let mut t = self.take_input(x, vec![n, h, w, ci])?;
 
         for i in 0..2 {
-            let (wp, g) = self.qpacked(i)?;
-            let conv = conv2d_fused(pool, &t, wp, g, 1,
-                                    Epilogue::Bias { bias: self.lenet_bias(i)?, relu: true });
+            let conv = self.qconv(pool, &t, i, 1,
+                                  Epilogue::Bias { bias: self.lenet_bias(i)?, relu: true })?;
             gemm::scratch::give(std::mem::replace(&mut t, conv).data);
             let pooled = tensor::max_pool2(&t);
             gemm::scratch::give(std::mem::replace(&mut t, pooled).data);
@@ -428,13 +617,11 @@ impl InferenceModel {
         let flat_len: usize = t.dims[1] * t.dims[2] * t.dims[3];
         let flat = Tensor::new(vec![n, flat_len], t.data);
 
-        let (w2, _) = self.qpacked(2)?;
-        let fc = dense_fused(pool, &flat, w2,
-                             Epilogue::Bias { bias: self.lenet_bias(2)?, relu: true });
+        let fc = self.qdense(pool, &flat, 2,
+                             Epilogue::Bias { bias: self.lenet_bias(2)?, relu: true })?;
         gemm::scratch::give(flat.data);
-        let (w3, _) = self.qpacked(3)?;
-        let out = dense_fused(pool, &fc, w3,
-                              Epilogue::Bias { bias: self.lenet_bias(3)?, relu: false });
+        let out = self.qdense(pool, &fc, 3,
+                              Epilogue::Bias { bias: self.lenet_bias(3)?, relu: false })?;
         gemm::scratch::give(fc.data);
         Ok(out.data)
     }
@@ -443,9 +630,11 @@ impl InferenceModel {
         let d_in = x.len() / n;
         let mut t = self.take_input(x, vec![n, d_in])?;
         for i in 0.. {
-            let Some(w) = self.engine.qpacked.get(&i) else { break };
+            if !self.has_qlayer(i) {
+                break;
+            }
             let bn = self.bns.get(i).context("missing BN pack for mlp layer")?;
-            let next = dense_fused(pool, &t, w, bn.affine(true));
+            let next = self.qdense(pool, &t, i, bn.affine(true))?;
             gemm::scratch::give(std::mem::replace(&mut t, next).data);
         }
         self.head_fused(t, pool)
@@ -482,19 +671,16 @@ impl InferenceModel {
             for bi in 0..nb {
                 let stride = if si > 0 && bi == 0 { 2 } else { 1 };
                 let identity = hmap.clone();
-                let w1 = self.qweight(q_i)?;
+                let mut out = self.ref_qconv(&hmap, q_i, stride)?;
                 q_i += 1;
-                let mut out = tensor::conv2d(&hmap, w1, stride);
                 bn(&mut out, &self.bns)?;
                 tensor::relu(&mut out);
-                let w2 = self.qweight(q_i)?;
+                let mut out = self.ref_qconv(&out, q_i, 1)?;
                 q_i += 1;
-                let mut out = tensor::conv2d(&out, w2, 1);
                 bn(&mut out, &self.bns)?;
                 let short = if stride != 1 || c_in != wd {
-                    let wd_w = self.qweight(q_i)?;
+                    let mut s = self.ref_qconv(&identity, q_i, stride)?;
                     q_i += 1;
-                    let mut s = tensor::conv2d(&identity, wd_w, stride);
                     bn(&mut s, &self.bns)?;
                     s
                 } else {
@@ -516,34 +702,32 @@ impl InferenceModel {
         let (h, w, ci) = self.input_hwc()?;
         let mut t = Tensor::new(vec![n, h, w, ci], x.to_vec());
 
-        let w0 = self.qweight(0)?;
-        t = tensor::conv2d(&t, w0, 1);
-        add_bias_nhwc(&mut t, self.lenet_bias(0)?);
-        tensor::relu(&mut t);
-        t = tensor::max_pool2(&t);
-
-        let w1 = self.qweight(1)?;
-        t = tensor::conv2d(&t, w1, 1);
-        add_bias_nhwc(&mut t, self.lenet_bias(1)?);
-        tensor::relu(&mut t);
-        t = tensor::max_pool2(&t);
+        for i in 0..2 {
+            let mut conv = self.ref_qconv(&t, i, 1)?;
+            add_bias_nhwc(&mut conv, self.lenet_bias(i)?);
+            tensor::relu(&mut conv);
+            t = tensor::max_pool2(&conv);
+        }
 
         let flat_len: usize = t.dims[1] * t.dims[2] * t.dims[3];
         let flat = Tensor::new(vec![n, flat_len], t.data);
 
-        let w2 = self.qweight(2)?;
-        let mut fc = tensor::dense(&flat, w2, Some(self.lenet_bias(2)?));
+        let mut fc = self.ref_qdense(&flat, 2)?;
+        add_bias_nhwc(&mut fc, self.lenet_bias(2)?);
         tensor::relu(&mut fc);
-        let w3 = self.qweight(3)?;
-        Ok(tensor::dense(&fc, w3, Some(self.lenet_bias(3)?)).data)
+        let mut out = self.ref_qdense(&fc, 3)?;
+        add_bias_nhwc(&mut out, self.lenet_bias(3)?);
+        Ok(out.data)
     }
 
     fn forward_mlp_ref(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
         let d_in = x.len() / n;
         let mut t = Tensor::new(vec![n, d_in], x.to_vec());
         for i in 0.. {
-            let Some(w) = self.qweights.get(&i) else { break };
-            t = tensor::dense(&t, w, None);
+            if !self.has_qlayer(i) {
+                break;
+            }
+            t = self.ref_qdense(&t, i)?;
             self.bns
                 .get(i)
                 .context("missing BN pack for mlp layer")?
@@ -591,7 +775,10 @@ mod tests {
             model: model.into(),
             num_classes: 10,
             input_dims: vec![32, 32, 3],
+            mode: ComputeMode::DenseF32,
+            qshapes: BTreeMap::new(),
             qweights: BTreeMap::new(),
+            qplanes: BTreeMap::new(),
             bns: vec![],
             engine: Engine::default(),
             bits_per_weight: 0.8,

@@ -151,15 +151,29 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
         .positional("stem", "bundle stem (config name)")
         .flag("dataset", "dataset for the smoke batch", Some("shapes32"))
         .flag("batch", "examples", Some("32"))
+        .flag(
+            "compute-mode",
+            "dense | bitplane | bitplane:<m> (default: FLEXOR_COMPUTE env, else dense)",
+            Some(""),
+        )
         .parse_from(argv)
         .map_err(|m| anyhow::anyhow!("{m}"))?;
-    let model = flexor::inference::InferenceModel::load(
+    let mode = match a.get("compute-mode") {
+        "" => flexor::inference::ComputeMode::default_from_env()?,
+        s => flexor::inference::ComputeMode::parse(s)?,
+    };
+    let model = flexor::inference::InferenceModel::load_with_mode(
         Path::new(a.pos(0).unwrap()),
         a.pos(1).unwrap(),
+        mode,
     )?;
     println!(
-        "loaded {} ({:.2} b/w, {:.1}× compression)",
-        model.model, model.bits_per_weight, model.compression_ratio
+        "loaded {} ({:.2} b/w, {:.1}× compression, {} mode, {} quantized bytes resident)",
+        model.model,
+        model.bits_per_weight,
+        model.compression_ratio,
+        model.compute_mode().label(),
+        model.quantized_resident_bytes()
     );
     let ds = data::by_name(a.get("dataset"), 0)?;
     let n = a.get_usize("batch");

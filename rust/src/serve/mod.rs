@@ -15,7 +15,9 @@
 //! ```
 //!
 //! * [`registry`] — named `.fxr` bundle hosting, decrypt-once-at-load,
-//!   per-model storage stats;
+//!   per-model compute mode (DenseF32 packed-FP engine or BitPlane
+//!   XNOR/popcount engine — DESIGN.md §8), per-model storage stats and
+//!   resident-bytes accounting, `unload` to release memory;
 //! * [`queue`]    — bounded admission + micro-batch coalescing
 //!   (`max_batch` / `max_wait_us`) on `std::sync::{Mutex, Condvar}`;
 //! * [`worker`]   — thread pool draining the queue, one forward pass per

@@ -2,19 +2,22 @@
 //!
 //! The paper's deployment story (Fig. 1, Algorithm 1) pays the XOR
 //! decryption cost **once**, when the encrypted `.fxr` bundle is loaded;
-//! after that the dense reconstructed weights serve every request. The
-//! registry owns that step for any number of bundles, keyed by name, and
-//! carries the per-model storage stats (`bits/weight`, compression ratio)
-//! that `GET /models` reports.
+//! after that the resident weights serve every request. The registry
+//! owns that step for any number of bundles, keyed by name, each on its
+//! own [`ComputeMode`] — a single server mixes FP-exact DenseF32 models
+//! with high-density BitPlane models. `GET /models` reports per-model
+//! storage stats (`bits/weight`, compression ratio) plus the resident
+//! bytes each entry actually keeps under its mode (quantized vs FP
+//! residue), and [`Registry::unload`] releases a model's memory.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{Context, ensure, Result};
 
-use crate::inference::InferenceModel;
+use crate::inference::{ComputeMode, InferenceModel};
 use crate::substrate::json::Json;
 
 /// One hosted model plus its serving metadata.
@@ -32,19 +35,48 @@ pub struct ModelEntry {
 /// Name → model map shared between the HTTP front-end and the workers.
 pub struct Registry {
     models: BTreeMap<String, Arc<ModelEntry>>,
+    /// Engine [`Registry::load`] puts new entries on (per-call overrides
+    /// go through [`Registry::load_with_mode`]).
+    default_mode: ComputeMode,
 }
 
 impl Registry {
+    /// An empty registry whose `load` uses the DenseF32 engine.
     pub fn new() -> Self {
-        Registry { models: BTreeMap::new() }
+        Self::with_default_mode(ComputeMode::DenseF32)
     }
 
-    /// Load `<stem>.fxr` + sidecars from `dir` and register as `name`,
-    /// timing the decrypt-at-load step.
+    /// An empty registry whose `load` uses `mode` — the consumption
+    /// point for `ServeConfig::compute_mode` when a binary builds the
+    /// registry it hands to `Server::start` (see `examples/serve.rs`).
+    pub fn with_default_mode(mode: ComputeMode) -> Self {
+        Registry { models: BTreeMap::new(), default_mode: mode }
+    }
+
+    /// The engine `load` puts new entries on.
+    pub fn default_mode(&self) -> ComputeMode {
+        self.default_mode
+    }
+
+    /// Load `<stem>.fxr` + sidecars from `dir` and register as `name` on
+    /// the registry's default engine, timing the decrypt-at-load step.
     pub fn load(&mut self, name: &str, dir: &Path, stem: &str) -> Result<Arc<ModelEntry>> {
+        self.load_with_mode(name, dir, stem, self.default_mode)
+    }
+
+    /// Load and register on an explicit compute mode (BitPlane entries
+    /// keep their quantized layers as packed bit-planes — see
+    /// `inference::bitslice`).
+    pub fn load_with_mode(
+        &mut self,
+        name: &str,
+        dir: &Path,
+        stem: &str,
+        mode: ComputeMode,
+    ) -> Result<Arc<ModelEntry>> {
         ensure!(!self.models.contains_key(name), "model '{name}' already registered");
         let t0 = Instant::now();
-        let model = InferenceModel::load(dir, stem)?;
+        let model = InferenceModel::load_with_mode(dir, stem, mode)?;
         let load_ms = t0.elapsed().as_secs_f64() * 1e3;
         self.register(name, model, load_ms)
     }
@@ -67,6 +99,16 @@ impl Registry {
         });
         self.models.insert(name.to_string(), entry.clone());
         Ok(entry)
+    }
+
+    /// Remove `name` from the registry and return its entry. In-flight
+    /// requests holding the `Arc` finish normally; the model's resident
+    /// weights are freed once the last reference drops — the registry is
+    /// no longer grow-only.
+    pub fn unload(&mut self, name: &str) -> Result<Arc<ModelEntry>> {
+        self.models
+            .remove(name)
+            .with_context(|| format!("model '{name}' is not registered"))
     }
 
     pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
@@ -109,6 +151,12 @@ impl Registry {
                     ("feature_len", Json::num(e.feature_len as f64)),
                     ("bits_per_weight", Json::num(e.model.bits_per_weight)),
                     ("compression_ratio", Json::num(e.model.compression_ratio)),
+                    ("compute_mode", Json::str(e.model.compute_mode().label())),
+                    ("quantized_weight_bytes",
+                     Json::num(e.model.quantized_resident_bytes() as f64)),
+                    ("fp_weight_bytes",
+                     Json::num(e.model.fp_resident_bytes() as f64)),
+                    ("resident_bytes", Json::num(e.model.resident_bytes() as f64)),
                     ("load_ms", Json::num(e.load_ms)),
                 ])
             })),
@@ -138,6 +186,15 @@ mod tests {
         assert!(r.sole().is_none());
         assert!(r.names().is_empty());
         assert_eq!(r.to_json().get("models").as_arr().map(|a| a.len()), Some(0));
+    }
+
+    #[test]
+    fn unload_unknown_model_fails() {
+        // full load → unload → reload round trips live in
+        // rust/tests/bitslice.rs (they need a real bundle)
+        let mut r = Registry::new();
+        let err = r.unload("ghost").unwrap_err();
+        assert!(err.to_string().contains("ghost"), "{err}");
     }
 
     #[test]

@@ -153,8 +153,11 @@ impl ThreadPool {
 }
 
 /// Raw-pointer wrapper so disjoint-chunk dispatch can cross the `Sync`
-/// boundary of the shard closure.
-struct SendPtr<T>(*mut T);
+/// boundary of the shard closure. Shared with other data-parallel
+/// kernels (e.g. `inference::bitslice::binarize`) that write disjoint
+/// ranges of a second output buffer from inside a shard — keeping the
+/// crate's unsafe Send/Sync surface in one place.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 

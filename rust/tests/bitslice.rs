@@ -1,0 +1,254 @@
+//! Integration tests for the bit-plane XNOR/popcount compute engine
+//! (DESIGN.md §8): whole-bundle equivalence against the binarized
+//! reference composition, thread-count determinism, serving-path
+//! agreement between DenseF32 and BitPlane entries of one registry, and
+//! the resident-bytes accounting `GET /models` reports.
+
+use std::path::PathBuf;
+
+use flexor::coordinator::{export_synthetic_mlp_bundle, export_synthetic_resnet_bundle};
+use flexor::inference::{ComputeMode, InferenceModel};
+use flexor::serve::{http, Registry, ServeConfig, Server};
+use flexor::substrate::json::{self, Json};
+use flexor::substrate::pool::ThreadPool;
+use flexor::substrate::prng::Pcg32;
+
+fn bundle_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("flexor_bitslice_{tag}_{}", std::process::id()))
+}
+
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + b.abs())
+}
+
+/// Satellite: whole-bundle property — the bit-plane forward must match
+/// `forward_reference` (which applies the identical activation
+/// binarization contract, then dense math) across 1/2/4 pool threads,
+/// and must be bit-identical across those thread counts.
+#[test]
+fn bitplane_forward_matches_binarized_reference_across_threads() {
+    let pools = [ThreadPool::new(1), ThreadPool::new(2), ThreadPool::new(4)];
+    let mut rng = Pcg32::seeded(501);
+
+    // mlp bundle
+    let dir = bundle_dir("ref_mlp");
+    let d_in = 16usize;
+    export_synthetic_mlp_bundle(&dir, "m", 31, d_in, &[40, 24], 10).unwrap();
+    let mlp =
+        InferenceModel::load_with_mode(&dir, "m", ComputeMode::BitPlane { act_planes: 6 })
+            .unwrap();
+    let x: Vec<f32> = (0..5 * d_in).map(|_| rng.normal()).collect();
+    let reference = mlp.forward_reference(&x, 5).unwrap();
+    let mut first: Option<Vec<f32>> = None;
+    for pool in &pools {
+        let got = mlp.forward_with_pool(&x, 5, pool).unwrap();
+        for (i, (a, b)) in got.iter().zip(&reference).enumerate() {
+            assert!(
+                close(*a, *b, 1e-3),
+                "mlp logit {i} (threads {}): engine {a} vs reference {b}",
+                pool.threads()
+            );
+        }
+        match &first {
+            None => first = Some(got),
+            Some(f) => assert_eq!(*f, got, "mlp: thread count changed the bits"),
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    // conv-heavy resnet bundle. The engine and the reference chain their
+    // own layer outputs, so tiny FP differences can land near a
+    // binarization threshold and re-quantize differently — the layer-level
+    // property tests pin tight tolerances; here 1e-2 guards the algebra.
+    let dir = bundle_dir("ref_resnet");
+    export_synthetic_resnet_bundle(&dir, "r", 32, "resnet8", 8, 10).unwrap();
+    let resnet =
+        InferenceModel::load_with_mode(&dir, "r", ComputeMode::BitPlane { act_planes: 8 })
+            .unwrap();
+    let feat = 8 * 8 * 3;
+    let x: Vec<f32> = (0..2 * feat).map(|_| rng.normal()).collect();
+    let reference = resnet.forward_reference(&x, 2).unwrap();
+    assert_eq!(reference.len(), 2 * 10);
+    let mut first: Option<Vec<f32>> = None;
+    for pool in &pools {
+        let got = resnet.forward_with_pool(&x, 2, pool).unwrap();
+        for (i, (a, b)) in got.iter().zip(&reference).enumerate() {
+            assert!(a.is_finite(), "resnet logit {i} not finite: {a}");
+            assert!(
+                close(*a, *b, 1e-2),
+                "resnet logit {i} (threads {}): engine {a} vs reference {b}",
+                pool.threads()
+            );
+        }
+        match &first {
+            None => first = Some(got),
+            Some(f) => assert_eq!(*f, got, "resnet: thread count changed the bits"),
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance: one registry hosts the same synthetic resnet bundle as a
+/// DenseF32 entry and a BitPlane entry. Bit-plane `/predict` answers
+/// must agree with dense top-1 on ≥ 99% of a procedural input set, the
+/// HTTP path must match direct inference for both entries, and
+/// `GET /models` must show ≥ 8× lower resident quantized bytes for the
+/// bit-plane entry.
+#[test]
+fn bitplane_serving_agrees_with_dense_and_saves_memory() {
+    let dir = bundle_dir("serve");
+    export_synthetic_resnet_bundle(&dir, "rn", 33, "resnet8", 8, 10).unwrap();
+
+    let mut registry = Registry::new();
+    registry.load("dense", &dir, "rn").unwrap();
+    registry
+        .load_with_mode("bp", &dir, "rn", ComputeMode::BitPlane { act_planes: 24 })
+        .unwrap();
+    let dense_entry = registry.get("dense").unwrap();
+    let bp_entry = registry.get("bp").unwrap();
+
+    // ≥ 8× lower resident quantized weight bytes in bit-plane mode
+    let dense_bytes = dense_entry.model.quantized_resident_bytes();
+    let bp_bytes = bp_entry.model.quantized_resident_bytes();
+    assert!(
+        bp_bytes * 8 <= dense_bytes,
+        "bit-plane resident {bp_bytes} B not ≥8× below dense {dense_bytes} B"
+    );
+    // FP residue is mode-independent
+    assert_eq!(
+        dense_entry.model.fp_resident_bytes(),
+        bp_entry.model.fp_resident_bytes()
+    );
+
+    // top-1 agreement over a procedural input set (batched through the
+    // exact models the server holds)
+    const SAMPLES: usize = 100;
+    let feat = 8 * 8 * 3;
+    let mut rng = Pcg32::seeded(4242);
+    let xs: Vec<f32> = (0..SAMPLES * feat).map(|_| rng.normal()).collect();
+    let dense_preds = dense_entry.model.predict(&xs, SAMPLES).unwrap();
+    let bp_preds = bp_entry.model.predict(&xs, SAMPLES).unwrap();
+    let agree = dense_preds
+        .iter()
+        .zip(&bp_preds)
+        .filter(|(a, b)| a == b)
+        .count();
+    assert!(
+        agree * 100 >= SAMPLES * 99,
+        "top-1 agreement {agree}/{SAMPLES} below 99%"
+    );
+
+    // the serving path answers /predict for both entries and matches the
+    // direct predictions computed above
+    let server = Server::start(
+        "127.0.0.1:0",
+        registry,
+        ServeConfig { workers: 1, intra_threads: 1, ..ServeConfig::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    for (name, preds) in [("dense", &dense_preds), ("bp", &bp_preds)] {
+        for i in 0..4 {
+            let body = Json::obj(vec![
+                ("model", Json::str(name)),
+                ("features",
+                 Json::arr(xs[i * feat..(i + 1) * feat].iter().map(|&v| Json::num(v)))),
+            ])
+            .to_string();
+            let (status, resp) =
+                http::client::request(addr, "POST", "/predict", Some(&body)).unwrap();
+            assert_eq!(status, 200, "{name} request {i}: {resp}");
+            let pred = json::parse(&resp).unwrap().get("prediction").as_i64().unwrap();
+            assert_eq!(pred as i32, preds[i], "{name} request {i} diverged");
+        }
+    }
+
+    // GET /models reports both modes and the resident-bytes accounting
+    let (status, body) = http::client::request(addr, "GET", "/models", None).unwrap();
+    assert_eq!(status, 200);
+    let v = json::parse(&body).unwrap();
+    let models = v.get("models").as_arr().unwrap();
+    assert_eq!(models.len(), 2);
+    let find = |name: &str| {
+        models
+            .iter()
+            .find(|m| m.get("name").as_str() == Some(name))
+            .unwrap_or_else(|| panic!("missing {name} in /models"))
+    };
+    let dm = find("dense");
+    let bm = find("bp");
+    assert_eq!(dm.get("compute_mode").as_str(), Some("dense"));
+    assert_eq!(bm.get("compute_mode").as_str(), Some("bitplane"));
+    assert_eq!(dm.get("quantized_weight_bytes").as_usize(), Some(dense_bytes));
+    assert_eq!(bm.get("quantized_weight_bytes").as_usize(), Some(bp_bytes));
+    assert!(bm.get("resident_bytes").as_usize().unwrap() > 0);
+    assert!(
+        bm.get("fp_weight_bytes").as_usize().unwrap()
+            == dm.get("fp_weight_bytes").as_usize().unwrap()
+    );
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite: the registry is no longer grow-only — unload releases an
+/// entry, frees its slot for reloading, and `/models` accounting follows.
+#[test]
+fn registry_unload_and_reload() {
+    let dir = bundle_dir("unload");
+    let d_in = 12usize;
+    export_synthetic_mlp_bundle(&dir, "m", 35, d_in, &[24, 16], 10).unwrap();
+
+    let mut registry = Registry::new();
+    registry.load("a", &dir, "m").unwrap();
+    registry
+        .load_with_mode("b", &dir, "m", ComputeMode::bit_plane())
+        .unwrap();
+    assert_eq!(registry.len(), 2);
+
+    // an in-flight handle survives the unload
+    let held = registry.get("a").unwrap();
+    let gone = registry.unload("a").unwrap();
+    assert_eq!(gone.name, "a");
+    assert_eq!(registry.len(), 1);
+    assert!(registry.get("a").is_none());
+    assert!(registry.unload("a").is_err(), "double unload must fail");
+    let probe = vec![0.5f32; d_in];
+    assert_eq!(held.model.predict(&probe, 1).unwrap().len(), 1);
+    drop(held);
+
+    // the name is reusable, and the JSON listing follows the registry
+    registry.load("a", &dir, "m").unwrap();
+    assert_eq!(registry.len(), 2);
+    let listed = registry.to_json();
+    assert_eq!(listed.get("models").as_arr().unwrap().len(), 2);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The bit-plane engine is exact (not approximate) for ±1 inputs on a
+/// dense layer chain: binarization of a ±1 row is a single plane with
+/// β = 1, so mlp logits from both engines coincide to FP rounding.
+#[test]
+fn bitplane_mlp_exact_on_pm1_inputs_vs_dense() {
+    let dir = bundle_dir("pm1");
+    let d_in = 20usize;
+    export_synthetic_mlp_bundle(&dir, "m", 36, d_in, &[32], 10).unwrap();
+    let dense = InferenceModel::load(&dir, "m").unwrap();
+    let bp = InferenceModel::load_with_mode(&dir, "m", ComputeMode::bit_plane()).unwrap();
+    let mut rng = Pcg32::seeded(9);
+    let x: Vec<f32> =
+        (0..4 * d_in).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+    // the single quantized layer sees ±1 rows (one plane, β = 1, zero
+    // residual) and the head is FP in both modes, so the whole forward
+    // differs only by FP summation order
+    let a = dense.forward(&x, 4).unwrap();
+    let b = bp.forward(&x, 4).unwrap();
+    for (i, (p, q)) in a.iter().zip(&b).enumerate() {
+        assert!(
+            close(*p, *q, 1e-3),
+            "logit {i}: dense {p} vs bitplane {q} on ±1 inputs"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

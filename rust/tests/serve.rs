@@ -56,6 +56,7 @@ fn concurrent_predictions_match_direct_inference_and_coalesce() {
         max_wait_us: 10_000,
         queue_capacity: 256,
         intra_threads: 2,
+        ..ServeConfig::default()
     };
     let (server, dir) = start_server("e2e", cfg);
     let addr = server.local_addr();
@@ -179,6 +180,12 @@ fn models_endpoint_reports_storage_stats() {
     assert!((0.75..0.95).contains(&bpw), "bits/weight {bpw}");
     assert!(m.get("compression_ratio").as_f64().unwrap() > 10.0);
     assert!(m.get("load_ms").as_f64().unwrap() >= 0.0);
+    // per-model resident-bytes accounting (dense default mode)
+    assert_eq!(m.get("compute_mode").as_str(), Some("dense"));
+    let qb = m.get("quantized_weight_bytes").as_usize().unwrap();
+    let fpb = m.get("fp_weight_bytes").as_usize().unwrap();
+    assert!(qb > 0 && fpb > 0, "resident accounting missing: q={qb} fp={fpb}");
+    assert_eq!(m.get("resident_bytes").as_usize(), Some(qb + fpb));
 
     let (status, body) = http::client::request(addr, "GET", "/healthz", None).unwrap();
     assert_eq!(status, 200);
