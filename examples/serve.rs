@@ -19,7 +19,7 @@ use flexor::coordinator::{
     export_bundle, export_synthetic_mlp_bundle, MetricsSink, Schedule, TrainSession,
 };
 use flexor::data::{self, Batcher, Split};
-use flexor::inference::ComputeMode;
+use flexor::inference::ModePolicy;
 use flexor::runtime::{Manifest, Runtime};
 use flexor::serve::{http, Registry, ServeConfig, Server};
 use flexor::substrate::argparse::Args;
@@ -36,23 +36,23 @@ fn main() -> Result<()> {
         .flag("max-batch", "max coalesced batch size", Some("16"))
         .flag("max-wait-us", "batching linger window (µs)", Some("2000"))
         .flag("compute-mode",
-              "dense | bitplane | bitplane:<m> (default: FLEXOR_COMPUTE env, else dense)",
+              "policy <mode>[@min=<w>][,<idx>=<mode>]*, mode = dense | bitplane | bitplane:<m> (default: FLEXOR_COMPUTE env, else dense)",
               Some(""))
         .flag("artifact", "config to train/export", Some("quickstart_mlp"))
         .flag("dataset", "request generator", Some("digits"))
         .parse();
 
-    // serving policy, including the compute engine bundles load onto:
-    // explicit flag wins, else the FLEXOR_COMPUTE env var, else dense
+    // per-layer compute policy the registry loads bundles onto:
+    // explicit flag wins, else FLEXOR_COMPUTE, else dense
+    let policy = match a.get("compute-mode") {
+        "" => ModePolicy::default_from_env()?,
+        s => ModePolicy::parse(s)?,
+    };
     let cfg = ServeConfig {
         workers: a.get_usize("workers"),
         intra_threads: a.get_usize("intra-threads"),
         max_batch: a.get_usize("max-batch"),
         max_wait_us: a.get_u64("max-wait-us"),
-        compute_mode: match a.get("compute-mode") {
-            "" => ComputeMode::default_from_env()?,
-            s => ComputeMode::parse(s)?,
-        },
         ..ServeConfig::default()
     };
 
@@ -92,21 +92,28 @@ fn main() -> Result<()> {
                                     ds.num_classes())?;
     }
 
-    // 2. load into the registry: XOR decryption happens once, here. In
-    //    bitplane mode the quantized layers stay packed bit-planes for
-    //    their whole serving lifetime (DESIGN.md §8).
-    let mut registry = Registry::with_default_mode(cfg.compute_mode);
+    // 2. load into the registry: XOR decryption happens once, here.
+    //    Bit-plane layers stay packed bit-plane panels for their whole
+    //    serving lifetime (DESIGN.md §8/§9); a mixed policy keeps small
+    //    layers FP-exact.
+    let mut registry = Registry::with_default_policy(policy);
     let entry = registry.load("served", dir, "served")?;
     println!(
         "loaded + decrypted in {:.1} ms  ({:.2} b/w, {:.1}× compression)",
         entry.load_ms, entry.model.bits_per_weight, entry.model.compression_ratio
     );
     println!(
-        "compute mode {}: {} quantized weight bytes resident (+{} FP residue)",
-        entry.model.compute_mode().label(),
+        "compute mode {} (simd kernel {}): {} quantized weight bytes resident (+{} FP residue)",
+        entry.model.mode_label(),
+        flexor::inference::bitslice::popcount::active().label(),
         entry.model.quantized_resident_bytes(),
         entry.model.fp_resident_bytes()
     );
+    if entry.model.is_mixed() {
+        for lm in entry.model.layer_modes() {
+            println!("  layer {:>2}: {:8} ({} weights)", lm.idx, lm.mode.label(), lm.weights);
+        }
+    }
 
     // 3. start the server on an ephemeral loopback port
     let server = Server::start("127.0.0.1:0", registry, cfg)?;

@@ -17,6 +17,7 @@ use flexor::coordinator::{
     export_bundle, export_synthetic_resnet_bundle, MetricsSink, Schedule, TrainSession,
 };
 use flexor::data::{self, Batcher, Split};
+use flexor::inference::bitslice::popcount::{self, Kernel};
 use flexor::inference::bitslice::{self, PlaneStore};
 use flexor::inference::gemm::{gemm_packed_into, Epilogue, PackedB};
 use flexor::inference::{ComputeMode, InferenceModel};
@@ -108,6 +109,28 @@ fn main() {
         "\nbitplane vs packed-fused forward (batch {batch}): {:.2}x packed time",
         bp / fast
     );
+
+    // forward simd A/B: pin the scalar popcount kernel, then return to
+    // auto — kernels are bit-identical, so only speed changes
+    popcount::set_override(Some(Kernel::Scalar));
+    let bp_scalar = b
+        .run_case(
+            &format!("forward bitplane kernel=scalar/resnet20 batch={batch} threads={threads}"),
+            Some(CaseMeta::new("forward_bitplane_scalar", &shape, threads)),
+            Some(batch as f64),
+            "ex",
+            || {
+                black_box(bp_model.forward(black_box(&xs), batch).unwrap());
+            },
+        )
+        .mean_s;
+    popcount::set_override(None);
+    let active_kernel = popcount::active();
+    let fwd_simd_speedup = bp_scalar / bp;
+    println!(
+        "bitplane forward {} vs scalar kernel: {fwd_simd_speedup:.2}x",
+        active_kernel.label()
+    );
     // per-bundle resident-bytes records: the memory the two engines keep
     let mut resident_records: Vec<Json> = Vec::new();
     for (mode_model, mode_name) in [(&model, "dense"), (&bp_model, "bitplane")] {
@@ -180,10 +203,61 @@ fn main() {
             || {
                 let acts = bitslice::binarize::binarize_rows(&p, &a, m, k, act_planes);
                 bitslice::xnor_gemm_into(&p, &acts, &store, Epilogue::None, &mut c);
+                acts.recycle();
                 black_box(&c);
             },
         );
     }
+
+    // popcount kernel A/B on the same problem — binarize hoisted out of
+    // the timed region so the record isolates the XNOR GEMM itself.
+    // Kernel::Scalar is the PR 4-style word-at-a-time baseline.
+    println!("\n# bit-plane GEMM popcount kernels (threads={THREADS})\n");
+    let pk = ThreadPool::new(THREADS);
+    let acts = bitslice::binarize::binarize_rows(&pk, &a, m, k, act_planes);
+    let mut kernel_times: Vec<(Kernel, f64)> = Vec::new();
+    for kern in popcount::available() {
+        let t = b
+            .run_case(
+                &format!("gemm bitplane kernel={} {gemm_shape} threads={THREADS}", kern.label()),
+                Some(CaseMeta::new(
+                    &format!("gemm_bitplane_{}", kern.label()),
+                    &gemm_shape,
+                    THREADS,
+                )),
+                Some((m * k * n) as f64),
+                "mac",
+                || {
+                    bitslice::xnor_gemm_into_with_kernel(
+                        &pk,
+                        &acts,
+                        &store,
+                        kern,
+                        Epilogue::None,
+                        &mut c,
+                    );
+                    black_box(&c);
+                },
+            )
+            .mean_s;
+        kernel_times.push((kern, t));
+    }
+    acts.recycle();
+    let scalar_t = kernel_times
+        .iter()
+        .find(|(kk, _)| *kk == Kernel::Scalar)
+        .map(|(_, t)| *t)
+        .expect("scalar kernel is always available");
+    let (best_kernel, best_t) = kernel_times
+        .iter()
+        .copied()
+        .min_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+        .unwrap();
+    let gemm_simd_speedup = scalar_t / best_t;
+    println!(
+        "\nbitplane GEMM best kernel ({}) vs scalar word-at-a-time: {gemm_simd_speedup:.2}x",
+        best_kernel.label()
+    );
     std::fs::remove_dir_all(&dir).ok();
 
     // ---- trained-bundle section (needs `make artifacts`) ------------------
@@ -210,6 +284,22 @@ fn main() {
         ("op", Json::str("memory_ratio_dense_over_bitplane")),
         ("shape", Json::str("resnet20")),
         ("ratio", Json::num(mem_ratio)),
+    ]));
+    records.push(Json::obj(vec![
+        ("name", Json::str("speedup bitplane gemm simd vs scalar word-at-a-time")),
+        ("op", Json::str("speedup_gemm_bitplane_simd_vs_scalar")),
+        ("shape", Json::str(gemm_shape.clone())),
+        ("threads", Json::num(THREADS as f64)),
+        ("kernel", Json::str(best_kernel.label())),
+        ("speedup", Json::num(gemm_simd_speedup)),
+    ]));
+    records.push(Json::obj(vec![
+        ("name", Json::str("speedup bitplane forward simd vs scalar")),
+        ("op", Json::str("speedup_forward_bitplane_simd_vs_scalar")),
+        ("shape", Json::str(shape.clone())),
+        ("threads", Json::num(threads as f64)),
+        ("kernel", Json::str(active_kernel.label())),
+        ("speedup", Json::num(fwd_simd_speedup)),
     ]));
     merge_bench_json(Path::new("BENCH_infer.json"), "inference", Json::arr(records))
         .expect("writing BENCH_infer.json");

@@ -15,6 +15,13 @@
 //! Everything is per-row, so a row's planes are identical no matter how
 //! rows are sharded across threads — binarization never breaks the
 //! engine's bit-identical-across-thread-counts guarantee.
+//!
+//! Buffer lifecycle: the packed u64 plane buffer and the f32 scale
+//! buffer come from the per-thread scratch arena
+//! ([`scratch::take_u64`](super::super::gemm::scratch) / `take`) and go
+//! back via [`BinarizedActs::recycle`] — a forward pass reuses the same
+//! activation-plane storage instead of allocating per layer. Arena
+//! buffers arrive dirty; each shard zeroes its own slice before packing.
 
 use crate::substrate::pool::{SendPtr, ThreadPool};
 
@@ -70,6 +77,13 @@ impl BinarizedActs {
     #[inline]
     pub fn scale(&self, i: usize, p: usize) -> f32 {
         self.scales[i * self.m + p]
+    }
+
+    /// Return the plane/scale buffers to the current thread's scratch
+    /// arena so the next binarize (or any other taker) reuses them.
+    pub fn recycle(self) {
+        scratch::give_u64(self.bits);
+        scratch::give(self.scales);
     }
 
     /// Dequantize back to dense rows (`rows × k`) — the oracle for
@@ -135,11 +149,13 @@ pub fn binarize_rows(
     assert!(k > 0, "zero-length rows");
     let m = m.clamp(1, MAX_ACT_PLANES);
     let wpr = k.div_ceil(64);
-    let mut bits = vec![0u64; rows * m * wpr];
-    let mut scales = vec![0.0f32; rows * m];
+    // arena-recycled (dirty) buffers: each shard zeroes its own slice
+    let mut bits = scratch::take_u64(rows * m * wpr);
+    let mut scales = scratch::take(rows * m);
     let scales_ptr = SendPtr(scales.as_mut_ptr());
     let row_words = m * wpr;
     pool.run_chunks_mut(&mut bits, ROWS_PER_SHARD * row_words, |_shard, start, part| {
+        part.fill(0);
         let row0 = start / row_words;
         let nrows = part.len() / row_words;
         scratch::with(|arena| {
@@ -151,6 +167,7 @@ pub fn binarize_rows(
                 let row_scales = unsafe {
                     std::slice::from_raw_parts_mut(scales_ptr.0.add(i * m), m)
                 };
+                row_scales.fill(0.0);
                 binarize_row(
                     &a[i * k..(i + 1) * k],
                     &mut r,
@@ -257,6 +274,38 @@ mod tests {
                 "threads={threads}: sharded binarize diverged"
             );
         }
+    }
+
+    /// Satellite: arena-recycled buffers arrive dirty — poisoned u64
+    /// plane words and NaN scales must not leak into the packed planes.
+    #[test]
+    fn recycled_dirty_buffers_do_not_leak_into_planes() {
+        let pool = ThreadPool::new(1); // chunks run inline ⇒ this thread's arena
+        let (rows, k, m) = (6, 70, 3);
+        let wpr = k.div_ceil(64);
+        let mut dirty = scratch::take_u64(rows * m * wpr);
+        dirty.iter_mut().for_each(|w| *w = u64::MAX);
+        scratch::give_u64(dirty);
+        let mut dirty_scales = scratch::take(rows * m);
+        dirty_scales.iter_mut().for_each(|v| *v = f32::NAN);
+        scratch::give(dirty_scales);
+
+        let mut rng = Pcg32::seeded(8);
+        let a: Vec<f32> = (0..rows * k).map(|_| rng.normal()).collect();
+        let acts = binarize_rows(&pool, &a, rows, k, m);
+        // padding bits past k must still be zero (XOR exactness contract)
+        for i in 0..rows {
+            for p in 0..m {
+                let bits = acts.row_bits(i, p);
+                assert_eq!(bits[wpr - 1] >> (k % 64), 0, "row {i} plane {p} padding");
+            }
+        }
+        assert_eq!(
+            acts.reconstruct(),
+            binarize_reconstruct_rows(&a, rows, k, m),
+            "dirty arena buffers leaked into binarization"
+        );
+        acts.recycle();
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The XNOR/popcount GEMM over packed bit-planes (DESIGN.md §8).
+//! The XNOR/popcount GEMM over panelized bit-planes (DESIGN.md §8/§9).
 //!
 //! For ±1 vectors packed LSB-first (bit 1 ⇔ −1), the dot product over
 //! `len` lanes is `len − 2·popcount(a ⊕ b)` — 64 multiply-accumulates
@@ -10,16 +10,20 @@
 //! y[i][j] = Σ_m β_m[i] · Σ_p α_p[j] · ( k − 2·pc(h_m[i] ⊕ b_p[j]) )
 //! ```
 //!
-//! with `h_m` the activation sign planes ([`super::binarize`]), `b_p`
-//! the weight bit planes ([`super::PlaneStore`]), row-sharded across the
-//! substrate pool exactly like the packed-FP engine and finished by the
-//! **same** [`Epilogue`] fusion contract (`gemm::store_tile`), so bias /
-//! eval-BN / ReLU / residual fuse into the output tile here too.
+//! with `h_m` the activation sign planes ([`super::binarize`]) and `b_p`
+//! the weight bit planes ([`super::PlaneStore`]). The inner product runs
+//! NR channels at a time through [`super::popcount::panel_dot`] — the
+//! runtime-dispatched scalar/unrolled/AVX2 kernel over the interleaved
+//! channel panels — row-sharded across the substrate pool exactly like
+//! the packed-FP engine and finished by the **same** [`Epilogue`] fusion
+//! contract (`gemm::store_tile`), so bias / eval-BN / ReLU / residual
+//! fuse into the output tile here too.
 //!
 //! Determinism: each output element is produced by one shard with a
-//! fixed (plane, word) accumulation order, and shard boundaries depend
-//! only on the constant shard size — results are bit-identical across
-//! thread counts, matching the packed-FP engine's guarantee.
+//! fixed (plane, word) accumulation order, shard boundaries depend only
+//! on the constant shard size, and every popcount kernel returns the
+//! same exact integers — results are bit-identical across thread counts
+//! **and** across `Kernel::{Scalar, Unrolled, Avx2}`.
 
 use crate::substrate::pool::ThreadPool;
 
@@ -27,28 +31,32 @@ use super::super::gemm::{self, scratch, Epilogue, MR, NR, ROWS_PER_SHARD};
 use super::super::tensor::{self, Tensor};
 use super::binarize::{self, BinarizedActs};
 use super::plane::PlaneStore;
+use super::popcount::{self, Kernel};
 
-/// `Σ_t a_t·b_t` for two packed ±1 vectors of `len` bits (bit 1 ⇔ −1):
-/// `len − 2·popcount(a ⊕ b)`. Padding bits past `len` must be zero in
-/// both operands (they then XOR to zero and drop out of the count).
-#[inline]
-pub fn popcount_dot(a: &[u64], b: &[u64], len: usize) -> i64 {
-    let words = len.div_ceil(64);
-    debug_assert!(a.len() >= words && b.len() >= words);
-    let mut pc = 0u32;
-    for w in 0..words {
-        pc += (a[w] ^ b[w]).count_ones();
-    }
-    len as i64 - 2 * pc as i64
-}
+pub use super::popcount::popcount_dot;
 
-/// `C = epilogue(Â · W)` where `Â` is binarized activations and `W` a
-/// bit-plane weight store. `c` is (rows × n) fully overwritten; row
-/// blocks are sharded across `pool`.
+/// `C = epilogue(Â · W)` on the process-wide popcount kernel
+/// ([`popcount::active`]). `Â` is binarized activations, `W` a
+/// panelized bit-plane store; `c` is (rows × n) fully overwritten and
+/// row blocks are sharded across `pool`.
 pub fn xnor_gemm_into(
     pool: &ThreadPool,
     acts: &BinarizedActs,
     w: &PlaneStore,
+    epi: Epilogue<'_>,
+    c: &mut [f32],
+) {
+    xnor_gemm_into_with_kernel(pool, acts, w, popcount::active(), epi, c)
+}
+
+/// [`xnor_gemm_into`] with an explicit popcount kernel — the A/B seam
+/// for benches and the kernel-equivalence property tests (all kernels
+/// are bit-identical, so this only ever changes speed).
+pub fn xnor_gemm_into_with_kernel(
+    pool: &ThreadPool,
+    acts: &BinarizedActs,
+    w: &PlaneStore,
+    kernel: Kernel,
     epi: Epilogue<'_>,
     c: &mut [f32],
 ) {
@@ -68,17 +76,17 @@ pub fn xnor_gemm_into(
                 for (r, acc_row) in acc.iter_mut().enumerate().take(mh) {
                     let i = i0 + t0 + r;
                     for p in 0..w.q() {
-                        let alpha = w.alpha(p);
+                        let alpha = &w.alpha(p)[j0..j0 + jw];
+                        let panel = w.panel(p, j0 / NR);
                         for m in 0..acts.planes() {
                             let beta = acts.scale(i, m);
                             if beta == 0.0 {
                                 continue;
                             }
-                            let abits = acts.row_bits(i, m);
+                            let dots =
+                                popcount::panel_dot(kernel, acts.row_bits(i, m), panel, k);
                             for (jj, av) in acc_row.iter_mut().enumerate().take(jw) {
-                                let j = j0 + jj;
-                                let t = popcount_dot(abits, w.col_bits(p, j), k);
-                                *av += beta * alpha[j] * t as f32;
+                                *av += beta * alpha[jj] * dots[jj] as f32;
                             }
                         }
                     }
@@ -92,7 +100,8 @@ pub fn xnor_gemm_into(
 /// Fused `conv2d → epilogue` on the bit-plane engine: im2col into a
 /// recycled scratch buffer (sharded like the packed-FP path), binarize
 /// the rows into `act_planes` sign/scale planes, one XNOR GEMM with the
-/// epilogue applied in-tile. The weight never exists as dense FP.
+/// epilogue applied in-tile. The weight never exists as dense FP, and
+/// the activation plane buffers recycle through the per-thread arena.
 pub fn conv2d_bitplane(
     pool: &ThreadPool,
     x: &Tensor,
@@ -121,6 +130,7 @@ pub fn conv2d_bitplane(
     scratch::give(col);
     let mut out = scratch::take(rows * w.n());
     xnor_gemm_into(pool, &acts, w, epi, &mut out);
+    acts.recycle();
     Tensor::new(vec![n_im, ho, wo, w.n()], out)
 }
 
@@ -138,6 +148,7 @@ pub fn dense_bitplane(
     let acts = binarize::binarize_rows(pool, &x.data, x.dims[0], x.dims[1], act_planes);
     let mut out = scratch::take(x.dims[0] * w.n());
     xnor_gemm_into(pool, &acts, w, epi, &mut out);
+    acts.recycle();
     Tensor::new(vec![x.dims[0], w.n()], out)
 }
 
@@ -221,11 +232,13 @@ mod tests {
     }
 
     /// XNOR GEMM ≡ dense GEMM over the reconstructed binarized rows and
-    /// the reconstructed dense weight, across 1/2/4 threads, plus
-    /// bit-identical results across thread counts.
+    /// the reconstructed dense weight, across 1/2/4 threads and across
+    /// every supported popcount kernel, plus bit-identical results
+    /// across all of those.
     #[test]
-    fn xnor_gemm_matches_dense_on_binarized_rows_across_threads() {
+    fn xnor_gemm_matches_dense_on_binarized_rows_across_threads_and_kernels() {
         let pools = [ThreadPool::new(1), ThreadPool::new(2), ThreadPool::new(4)];
+        let kernels = popcount::available();
         check_msg("xnor gemm == dense on binarized rows", 15, |g| {
             let rows = g.usize_in(1, 40);
             let k = g.usize_in(1, 150);
@@ -252,27 +265,39 @@ mod tests {
             let mut first: Option<Vec<f32>> = None;
             for pool in &pools {
                 let acts = binarize::binarize_rows(pool, &a, rows, k, m);
-                let mut c = vec![0.0f32; rows * n];
-                xnor_gemm_into(pool, &acts, &store, Epilogue::None, &mut c);
-                for (i, (x, y)) in c.iter().zip(&want).enumerate() {
-                    if !close(*x, *y) {
-                        return Err(format!(
-                            "threads={} ({rows}x{k}x{n} q={q} m={m}) elem {i}: {x} vs {y}",
-                            pool.threads()
-                        ));
-                    }
-                }
-                match &first {
-                    None => first = Some(c),
-                    Some(f) => {
-                        if *f != c {
+                for kern in &kernels {
+                    let mut c = vec![0.0f32; rows * n];
+                    xnor_gemm_into_with_kernel(
+                        pool,
+                        &acts,
+                        &store,
+                        *kern,
+                        Epilogue::None,
+                        &mut c,
+                    );
+                    for (i, (x, y)) in c.iter().zip(&want).enumerate() {
+                        if !close(*x, *y) {
                             return Err(format!(
-                                "threads={} changed the bits",
-                                pool.threads()
+                                "threads={} kernel={} ({rows}x{k}x{n} q={q} m={m}) elem {i}: {x} vs {y}",
+                                pool.threads(),
+                                kern.label()
                             ));
                         }
                     }
+                    match &first {
+                        None => first = Some(c),
+                        Some(f) => {
+                            if *f != c {
+                                return Err(format!(
+                                    "threads={} kernel={} changed the bits",
+                                    pool.threads(),
+                                    kern.label()
+                                ));
+                            }
+                        }
+                    }
                 }
+                acts.recycle();
             }
             Ok(())
         });

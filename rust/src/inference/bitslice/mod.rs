@@ -1,4 +1,4 @@
-//! Bit-plane XNOR/popcount compute engine (DESIGN.md §8): serve
+//! Bit-plane XNOR/popcount compute engine (DESIGN.md §8/§9): serve
 //! encrypted bundles **without dequantizing to dense FP**.
 //!
 //! The DenseF32 engine (§4/§7) decrypts once at load and materializes
@@ -8,30 +8,45 @@
 //!
 //! * [`plane`]    — [`PlaneStore`]: per-output-channel u64 bit rows + α,
 //!   repacked straight off the word-parallel decryptor
-//!   (`Decryptor::decrypt_to_plane_rows`);
+//!   (`Decryptor::decrypt_to_plane_rows`) into cache-aligned NR-channel
+//!   panels (the SIMD-friendly mirror of the packed-FP `PackedB`);
 //! * [`binarize`] — the activation contract: each im2col row becomes up
 //!   to `m` greedy sign/scale planes (`a ≈ Σ β_m h_m`, exact for ±1
-//!   rows);
+//!   rows), packed into arena-recycled u64 buffers;
+//! * [`popcount`] — the runtime-dispatched popcount kernels
+//!   ([`popcount::panel_dot`]): portable scalar, unrolled multi-word
+//!   scalar, and AVX2 `vpshufb` — selected by CPU detection, overridable
+//!   with `FLEXOR_SIMD=scalar|unrolled|avx2`, all bit-identical;
 //! * [`gemm`]     — the XNOR/popcount GEMM: `k − 2·popcount(h ⊕ b)` per
-//!   plane pair, α/β scaling, row-sharded on the substrate pool and
-//!   finished by the same [`Epilogue`](super::gemm::Epilogue) fusion
-//!   contract as the packed-FP engine.
+//!   plane pair, NR channels per `panel_dot`, α/β scaling, row-sharded
+//!   on the substrate pool and finished by the same
+//!   [`Epilogue`](super::gemm::Epilogue) fusion contract as the
+//!   packed-FP engine.
 //!
-//! [`ComputeMode`] selects the engine per model: a single server mixes
-//! FP-exact models with high-density bit-plane models (`serve::Registry`
-//! reports each entry's resident bytes).
+//! [`ComputeMode`] selects the engine per model and [`ModePolicy`]
+//! refines it **per layer**: big conv/dense layers ride the bit-plane
+//! engine while tiny stems/heads stay FP-exact, with a weight-count
+//! threshold and explicit per-layer overrides (`serve::Registry`
+//! reports each entry's per-layer modes and resident bytes).
 
 pub mod binarize;
 pub mod gemm;
 pub mod plane;
+pub mod popcount;
 
 pub use binarize::{BinarizedActs, DEFAULT_ACT_PLANES, MAX_ACT_PLANES};
-pub use gemm::{conv2d_bitplane, dense_bitplane, popcount_dot, xnor_gemm_into};
+pub use gemm::{
+    conv2d_bitplane, dense_bitplane, popcount_dot, xnor_gemm_into,
+    xnor_gemm_into_with_kernel,
+};
 pub use plane::PlaneStore;
+pub use popcount::Kernel;
 
-use anyhow::{bail, Result};
+use std::collections::BTreeMap;
 
-/// Which compute engine a loaded model runs on.
+use anyhow::{bail, Context, Result};
+
+/// Which compute engine a quantized layer (or whole model) runs on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ComputeMode {
     /// Decrypt once at load, materialize dense `Σ α_p b_p` f32 weights,
@@ -55,7 +70,21 @@ impl ComputeMode {
     }
 
     /// Parse `dense` / `bitplane` / `bitplane:<m>` (CLI flags and the
-    /// `FLEXOR_COMPUTE` env var).
+    /// `FLEXOR_COMPUTE` env var). For the per-layer policy grammar see
+    /// [`ModePolicy::parse`].
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use flexor::inference::ComputeMode;
+    ///
+    /// assert_eq!(ComputeMode::parse("dense").unwrap(), ComputeMode::DenseF32);
+    /// assert_eq!(
+    ///     ComputeMode::parse("bitplane:16").unwrap(),
+    ///     ComputeMode::BitPlane { act_planes: 16 }
+    /// );
+    /// assert!(ComputeMode::parse("quantum").is_err());
+    /// ```
     pub fn parse(s: &str) -> Result<ComputeMode> {
         let t = s.trim().to_ascii_lowercase();
         match t.as_str() {
@@ -81,6 +110,7 @@ impl ComputeMode {
     }
 
     /// The process default: `FLEXOR_COMPUTE` when set, else DenseF32.
+    /// (Policy-aware callers use [`ModePolicy::default_from_env`].)
     pub fn default_from_env() -> Result<ComputeMode> {
         match std::env::var("FLEXOR_COMPUTE") {
             Ok(v) if !v.trim().is_empty() => ComputeMode::parse(&v),
@@ -115,6 +145,117 @@ impl Default for ComputeMode {
     }
 }
 
+/// Per-layer compute-mode policy: a base engine, a weight-count
+/// threshold under which layers fall back to DenseF32 (tiny stems,
+/// shortcut convs and heads are cheap in FP and most accuracy-sensitive
+/// per weight), and explicit per-layer overrides that always win.
+///
+/// Uniform policies (`ModePolicy::uniform(mode)`) reproduce the old
+/// whole-model `ComputeMode` behavior exactly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModePolicy {
+    /// Engine for layers without an override at/above the threshold.
+    pub base: ComputeMode,
+    /// Quantized layers with fewer weights than this run DenseF32 even
+    /// when `base` is BitPlane (0 = no threshold).
+    pub dense_below: usize,
+    /// Explicit per-layer engine overrides, by quantized-layer index.
+    pub overrides: BTreeMap<usize, ComputeMode>,
+}
+
+impl ModePolicy {
+    /// Every quantized layer on `mode` — the whole-model behavior.
+    pub fn uniform(mode: ComputeMode) -> ModePolicy {
+        ModePolicy { base: mode, dense_below: 0, overrides: BTreeMap::new() }
+    }
+
+    /// The engine quantized layer `idx` (with `n_weights` weights) runs
+    /// on under this policy.
+    pub fn mode_for(&self, idx: usize, n_weights: usize) -> ComputeMode {
+        if let Some(m) = self.overrides.get(&idx) {
+            return *m;
+        }
+        match self.base {
+            ComputeMode::BitPlane { .. } if n_weights < self.dense_below => {
+                ComputeMode::DenseF32
+            }
+            m => m,
+        }
+    }
+
+    /// No threshold and no overrides — layers all follow `base`.
+    pub fn is_uniform(&self) -> bool {
+        self.dense_below == 0 && self.overrides.is_empty()
+    }
+
+    /// Parse the policy grammar
+    /// `<mode>[@min=<weights>][,<idx>=<mode>]*` — a plain
+    /// [`ComputeMode`] string is a uniform policy, `@min=` sets the
+    /// DenseF32 fallback threshold, and `,<idx>=<mode>` pins single
+    /// layers (CLI flags and the `FLEXOR_COMPUTE` env var).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use flexor::inference::{ComputeMode, ModePolicy};
+    ///
+    /// let p = ModePolicy::parse("bitplane:16@min=4096,0=dense").unwrap();
+    /// assert_eq!(p.base, ComputeMode::BitPlane { act_planes: 16 });
+    /// // layer 0 pinned dense, small layers fall back, big ones ride bitplane
+    /// assert_eq!(p.mode_for(0, 100_000), ComputeMode::DenseF32);
+    /// assert_eq!(p.mode_for(1, 1024), ComputeMode::DenseF32);
+    /// assert!(p.mode_for(1, 8192).is_bit_plane());
+    /// ```
+    pub fn parse(s: &str) -> Result<ModePolicy> {
+        let mut segs = s.split(',');
+        let head = segs.next().context("empty compute-mode policy")?;
+        let (mode_str, opt) = match head.split_once('@') {
+            Some((m, o)) => (m, Some(o)),
+            None => (head, None),
+        };
+        let base = ComputeMode::parse(mode_str)?;
+        let mut dense_below = 0usize;
+        if let Some(o) = opt {
+            let o = o.trim();
+            if let Some(v) = o.strip_prefix("min=") {
+                dense_below = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad threshold in {o:?} (want min=<weights>)"))?;
+            } else {
+                bail!("unknown policy option {o:?} (want min=<weights>)");
+            }
+        }
+        let mut overrides = BTreeMap::new();
+        for seg in segs {
+            let (idx, m) = seg.split_once('=').with_context(|| {
+                format!("bad layer override {seg:?} (want <idx>=<mode>)")
+            })?;
+            let idx: usize = idx
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad layer index in {seg:?}"))?;
+            overrides.insert(idx, ComputeMode::parse(m)?);
+        }
+        Ok(ModePolicy { base, dense_below, overrides })
+    }
+
+    /// The process default policy: `FLEXOR_COMPUTE` (full policy
+    /// grammar) when set, else uniform DenseF32.
+    pub fn default_from_env() -> Result<ModePolicy> {
+        match std::env::var("FLEXOR_COMPUTE") {
+            Ok(v) if !v.trim().is_empty() => ModePolicy::parse(&v),
+            _ => Ok(ModePolicy::uniform(ComputeMode::DenseF32)),
+        }
+    }
+}
+
+impl Default for ModePolicy {
+    fn default() -> Self {
+        ModePolicy::uniform(ComputeMode::DenseF32)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,5 +285,42 @@ mod tests {
         assert_eq!(ComputeMode::bit_plane().act_planes(), Some(DEFAULT_ACT_PLANES));
         assert!(ComputeMode::bit_plane().is_bit_plane());
         assert!(!ComputeMode::default().is_bit_plane());
+    }
+
+    #[test]
+    fn parse_policies() {
+        let p = ModePolicy::parse("bitplane").unwrap();
+        assert!(p.is_uniform());
+        assert_eq!(p.base, ComputeMode::bit_plane());
+
+        let p = ModePolicy::parse("bitplane:4@min=1000").unwrap();
+        assert_eq!(p.dense_below, 1000);
+        assert_eq!(p.mode_for(3, 999), ComputeMode::DenseF32);
+        assert_eq!(p.mode_for(3, 1000), ComputeMode::BitPlane { act_planes: 4 });
+
+        let p = ModePolicy::parse("dense,2=bitplane:6").unwrap();
+        assert_eq!(p.mode_for(0, 50), ComputeMode::DenseF32);
+        assert_eq!(p.mode_for(2, 50), ComputeMode::BitPlane { act_planes: 6 });
+
+        // overrides beat the threshold in both directions
+        let p = ModePolicy::parse("bitplane@min=100,0=dense,1=bitplane:2").unwrap();
+        assert_eq!(p.mode_for(0, 1_000_000), ComputeMode::DenseF32);
+        assert_eq!(p.mode_for(1, 10), ComputeMode::BitPlane { act_planes: 2 });
+        assert!(!p.is_uniform());
+
+        assert!(ModePolicy::parse("bitplane@max=4").is_err());
+        assert!(ModePolicy::parse("bitplane@min=abc").is_err());
+        assert!(ModePolicy::parse("bitplane,3").is_err());
+        assert!(ModePolicy::parse("bitplane,x=dense").is_err());
+        assert!(ModePolicy::parse("bitplane,3=warp").is_err());
+    }
+
+    #[test]
+    fn uniform_policy_reproduces_compute_mode() {
+        let p = ModePolicy::uniform(ComputeMode::bit_plane());
+        for (idx, w) in [(0usize, 1usize), (7, 1_000_000)] {
+            assert_eq!(p.mode_for(idx, w), ComputeMode::bit_plane());
+        }
+        assert_eq!(ModePolicy::default().base, ComputeMode::DenseF32);
     }
 }

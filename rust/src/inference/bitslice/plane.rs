@@ -1,27 +1,45 @@
 //! [`PlaneStore`] — a quantized GEMM right-hand side kept as packed
-//! bit-planes for its entire serving lifetime (DESIGN.md §8).
+//! bit-planes for its entire serving lifetime (DESIGN.md §8/§9).
 //!
 //! A `(k × n)` weight matrix (`k` = reduction length, `n` = output
-//! channels) is stored as `q` planes; plane `p` holds one u64 bit row per
-//! output channel (`k` bits, LSB-first, bit = 1 ⇔ that ±1 weight bit is
-//! −1 — the crate-wide convention) plus the per-channel scale `α_p`.
-//! Resident cost is `q·n·⌈k/64⌉` words + `q·n` floats — the dense f32
-//! tensor the DenseF32 engine materializes is never built.
+//! channels) is stored as `q` planes. Plane `p` holds the channels'
+//! k-bit rows (LSB-first, bit = 1 ⇔ that ±1 weight bit is −1 — the
+//! crate-wide convention) **panelized** for the SIMD popcount kernels:
+//! channels are grouped into `⌈n/NR⌉` panels of
+//! [`NR`](crate::inference::gemm::NR) channels, and inside a panel word
+//! `w` of the NR channels sits interleaved (`panel[w·NR + jj]`) so one
+//! activation word XORs against NR contiguous channel words — the exact
+//! mirror of the packed-FP engine's [`PackedB`](crate::inference::gemm::PackedB)
+//! column panels. Storage is 64-byte-aligned; with NR = 8 every
+//! interleaved word-row is one cache line. Channels past `n` and bits
+//! past `k` are zero, so XOR/popcount over whole words and panels is
+//! exact. Per-channel scales `α_p` ride alongside; the dense f32 tensor
+//! the DenseF32 engine materializes is never built.
 
 use anyhow::{ensure, Result};
 
+use super::super::gemm::NR;
 use crate::flexor::bitpack::BitVec;
 
-/// One bit-plane: per-output-channel packed bit rows + α scales.
+/// 64-byte-aligned block of 8 u64 words — one interleaved panel
+/// word-row (NR = 8 channel words) per cache line.
+#[repr(align(64))]
+#[derive(Clone, Copy)]
+struct AlignedWords([u64; 8]);
+
+const _: () = assert!(NR == 8, "AlignedWords packs exactly one NR-wide word-row");
+
+/// One bit-plane: panelized per-channel packed bit rows + α scales.
 struct WeightPlane {
-    /// `bits[j·wpr .. (j+1)·wpr]` = channel `j`'s k-bit row (zero-padded
-    /// past `k`, so XOR/popcount over whole words is exact).
-    bits: Vec<u64>,
+    /// `⌈n/NR⌉` panels × `wpr` word-rows × NR interleaved channel words
+    /// (zero-padded past `n` and `k`). One `AlignedWords` block per
+    /// word-row.
+    buf: Vec<AlignedWords>,
     /// `alpha[j]` — the per-output-channel scale of this plane.
     alpha: Vec<f32>,
 }
 
-/// A quantized layer held as packed bit-planes (never dense f32).
+/// A quantized layer held as packed bit-plane panels (never dense f32).
 pub struct PlaneStore {
     /// Original weight tensor dims (HWIO for conv, `(in, out)` for dense).
     shape: Vec<usize>,
@@ -32,11 +50,22 @@ pub struct PlaneStore {
     planes: Vec<WeightPlane>,
 }
 
+fn words(buf: &[AlignedWords]) -> &[u64] {
+    // Safety: AlignedWords is exactly 8 u64s with stricter alignment.
+    unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u64, buf.len() * 8) }
+}
+
+fn words_mut(buf: &mut [AlignedWords]) -> &mut [u64] {
+    unsafe {
+        std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u64, buf.len() * 8)
+    }
+}
+
 impl PlaneStore {
     /// Build from decrypted per-output-channel bit rows — the output of
     /// [`crate::flexor::Decryptor::decrypt_to_plane_rows`] — plus each
-    /// plane's α. `shape` is the weight tensor's dims (last axis = output
-    /// channel).
+    /// plane's α, repacking the rows into the panelized layout. `shape`
+    /// is the weight tensor's dims (last axis = output channel).
     pub fn from_decrypted(
         shape: &[usize],
         planes: Vec<(Vec<BitVec>, Vec<f32>)>,
@@ -48,17 +77,26 @@ impl PlaneStore {
         ensure!(n > 0 && total % n == 0, "bad weight shape {shape:?}");
         let k = total / n;
         let wpr = k.div_ceil(64);
+        let npanels = n.div_ceil(NR);
         let mut packed = Vec::with_capacity(planes.len());
         for (pi, (rows, alpha)) in planes.into_iter().enumerate() {
             ensure!(rows.len() == n, "plane {pi}: {} rows != n {n}", rows.len());
             ensure!(alpha.len() == n, "plane {pi}: alpha len != n {n}");
-            let mut bits = Vec::with_capacity(n * wpr);
-            for (j, row) in rows.iter().enumerate() {
-                ensure!(row.len() == k, "plane {pi} ch {j}: row len != k {k}");
-                debug_assert_eq!(row.words().len(), wpr);
-                bits.extend_from_slice(row.words());
+            let mut buf = vec![AlignedWords([0u64; 8]); npanels * wpr];
+            {
+                let dst = words_mut(&mut buf);
+                for (j, row) in rows.iter().enumerate() {
+                    ensure!(row.len() == k, "plane {pi} ch {j}: row len != k {k}");
+                    let rw = row.words();
+                    debug_assert_eq!(rw.len(), wpr);
+                    // channel j lands in panel j/NR at interleave slot j%NR
+                    let base = (j / NR) * wpr * NR + j % NR;
+                    for (w, &word) in rw.iter().enumerate() {
+                        dst[base + w * NR] = word;
+                    }
+                }
             }
-            packed.push(WeightPlane { bits, alpha });
+            packed.push(WeightPlane { buf, alpha });
         }
         Ok(PlaneStore { shape: shape.to_vec(), k, n, wpr, planes: packed })
     }
@@ -115,6 +153,11 @@ impl PlaneStore {
         self.wpr
     }
 
+    /// Channel panels per plane: `⌈n/NR⌉`.
+    pub fn num_panels(&self) -> usize {
+        self.n.div_ceil(NR)
+    }
+
     /// Original weight tensor dims.
     pub fn shape(&self) -> &[usize] {
         &self.shape
@@ -129,10 +172,14 @@ impl PlaneStore {
         }
     }
 
-    /// Channel `j`'s packed bit row in plane `p`.
+    /// Channel panel `cp` of plane `p`: `wpr` word-rows of NR
+    /// interleaved channel words (`panel[w·NR + jj]` = word `w` of
+    /// channel `cp·NR + jj`), the operand shape
+    /// [`popcount::panel_dot`](super::popcount::panel_dot) consumes.
     #[inline]
-    pub fn col_bits(&self, p: usize, j: usize) -> &[u64] {
-        &self.planes[p].bits[j * self.wpr..(j + 1) * self.wpr]
+    pub fn panel(&self, p: usize, cp: usize) -> &[u64] {
+        let stride = self.wpr * NR;
+        &words(&self.planes[p].buf)[cp * stride..(cp + 1) * stride]
     }
 
     /// Plane `p`'s per-channel α.
@@ -145,12 +192,13 @@ impl PlaneStore {
     /// reference/oracle use only; the serving path never calls this.
     pub fn reconstruct_dense(&self) -> Vec<f32> {
         let mut w = vec![0.0f32; self.k * self.n];
-        for plane in &self.planes {
+        for pi in 0..self.planes.len() {
             for j in 0..self.n {
-                let bits = &plane.bits[j * self.wpr..(j + 1) * self.wpr];
-                let a = plane.alpha[j];
+                let a = self.planes[pi].alpha[j];
+                let pan = self.panel(pi, j / NR);
+                let jj = j % NR;
                 for t in 0..self.k {
-                    let neg = (bits[t / 64] >> (t % 64)) & 1 == 1;
+                    let neg = (pan[(t / 64) * NR + jj] >> (t % 64)) & 1 == 1;
                     w[t * self.n + j] += if neg { -a } else { a };
                 }
             }
@@ -158,11 +206,13 @@ impl PlaneStore {
         w
     }
 
-    /// Bytes this layer keeps resident in BitPlane mode (bit rows + α).
+    /// Bytes this layer keeps resident in BitPlane mode (panelized bit
+    /// rows + α). Panel padding (channels rounded up to NR) is counted —
+    /// it is genuinely resident.
     pub fn resident_bytes(&self) -> usize {
         self.planes
             .iter()
-            .map(|p| p.bits.len() * 8 + p.alpha.len() * 4)
+            .map(|p| p.buf.len() * std::mem::size_of::<AlignedWords>() + p.alpha.len() * 4)
             .sum()
     }
 }
@@ -176,7 +226,8 @@ mod tests {
     #[test]
     fn reconstruct_matches_binarycodes() {
         let mut rng = Pcg32::seeded(41);
-        let (k, n, q) = (70, 5, 2); // k straddles a word boundary
+        // k straddles a word boundary, n straddles a panel boundary
+        let (k, n, q) = (70, 11, 2);
         let planes: Vec<Vec<f32>> = (0..q)
             .map(|_| {
                 (0..k * n)
@@ -190,10 +241,34 @@ mod tests {
         let store = PlaneStore::from_sign_planes(&[k, n], &planes, &alpha).unwrap();
         assert_eq!((store.k(), store.n(), store.q()), (k, n, q));
         assert_eq!(store.words_per_row(), 2);
+        assert_eq!(store.num_panels(), 2);
         let want = binarycodes::reconstruct_dense(&planes, &alpha, n).unwrap();
         let got = store.reconstruct_dense();
         for (i, (g, w)) in got.iter().zip(&want).enumerate() {
             assert!((g - w).abs() < 1e-6, "elem {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn panel_layout_interleaves_channels() {
+        // channel j all-negative ⇒ its interleave slot is all ones up to
+        // k; other channels all-positive ⇒ zero words
+        let (k, n) = (70, 10);
+        let mut plane = vec![1.0f32; k * n];
+        let j_neg = 8usize; // second panel, slot 0
+        for t in 0..k {
+            plane[t * n + j_neg] = -1.0;
+        }
+        let store =
+            PlaneStore::from_sign_planes(&[k, n], &[plane], &[vec![1.0; n]]).unwrap();
+        let p0 = store.panel(0, 0);
+        assert!(p0.iter().all(|&w| w == 0), "panel 0 should be all +1");
+        let p1 = store.panel(0, 1);
+        for w in 0..store.words_per_row() {
+            let row = &p1[w * NR..(w + 1) * NR];
+            let want = if w == 0 { u64::MAX } else { (1u64 << (k - 64)) - 1 };
+            assert_eq!(row[0], want, "word {w} of the all-negative channel");
+            assert!(row[1..].iter().all(|&x| x == 0), "padding channels must be zero");
         }
     }
 
@@ -203,8 +278,8 @@ mod tests {
         let alpha = vec![vec![0.5f32; 3]];
         let store =
             PlaneStore::from_sign_planes(&[130, 3], &planes, &alpha).unwrap();
-        // 3 channels × ⌈130/64⌉=3 words × 8 bytes + 3 α × 4 bytes
-        assert_eq!(store.resident_bytes(), 3 * 3 * 8 + 3 * 4);
+        // 1 panel × ⌈130/64⌉=3 word-rows × 64 B + 3 α × 4 B
+        assert_eq!(store.resident_bytes(), 3 * 64 + 3 * 4);
         assert!(store.conv_geometry().is_none());
     }
 

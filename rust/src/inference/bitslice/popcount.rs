@@ -1,0 +1,425 @@
+//! Popcount kernels for the panelized XNOR GEMM (DESIGN.md §9).
+//!
+//! For ±1 vectors packed LSB-first (bit 1 ⇔ −1), the dot product over
+//! `len` lanes is `len − 2·popcount(a ⊕ b)`. This module supplies that
+//! primitive at two granularities:
+//!
+//! * [`popcount_dot`] — one packed pair at a time (the word-at-a-time
+//!   form the PR 4 engine used; still the reference and the oracle);
+//! * [`panel_dot`] — one activation row against a *channel panel* of
+//!   [`NR`](crate::inference::gemm::NR) interleaved weight rows
+//!   ([`super::PlaneStore`] layout), returning all NR dots at once.
+//!
+//! `panel_dot` dispatches over [`Kernel`]:
+//!
+//! * `Scalar`   — portable `u64::count_ones`, one word-row per step;
+//! * `Unrolled` — 4 word-rows per step with independent accumulators
+//!   (breaks the POPCNT dependency chain on x86, auto-vectorizes
+//!   elsewhere);
+//! * `Avx2`     — `vpshufb` nibble-LUT popcount (Muła) with `vpsadbw`
+//!   lane reduction, 4 channels per 256-bit vector, guarded by
+//!   `is_x86_feature_detected!` at dispatch.
+//!
+//! Every kernel returns **exact integer popcounts**, so downstream α/β
+//! FP accumulation sees identical operands no matter the kernel —
+//! results are bit-identical across `Scalar`/`Unrolled`/`Avx2`, which
+//! the property tests assert and the engine's determinism contract
+//! relies on.
+//!
+//! Selection: [`active`] picks the best supported kernel once per
+//! process, overridable with `FLEXOR_SIMD=scalar|unrolled|avx2` for A/B
+//! benchmarking and [`set_override`] for in-process forcing (benches,
+//! tests).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+use super::super::gemm::NR;
+
+// The panel layout and the AVX2 kernel (2×4 u64 lanes) assume NR == 8.
+const _: () = assert!(NR == 8, "bitslice panels are built for NR == 8");
+
+/// `Σ_t a_t·b_t` for two packed ±1 vectors of `len` bits (bit 1 ⇔ −1):
+/// `len − 2·popcount(a ⊕ b)`. Padding bits past `len` must be zero in
+/// both operands (they then XOR to zero and drop out of the count).
+///
+/// # Examples
+///
+/// ```
+/// use flexor::inference::bitslice::popcount_dot;
+///
+/// // a = [+1, +1, −1], b = [+1, −1, −1]  (LSB-first, bit 1 ⇔ −1)
+/// let a = [0b100u64];
+/// let b = [0b110u64];
+/// assert_eq!(popcount_dot(&a, &b, 3), 1); // 1·1 + 1·(−1) + (−1)·(−1)
+/// ```
+#[inline]
+pub fn popcount_dot(a: &[u64], b: &[u64], len: usize) -> i64 {
+    let words = len.div_ceil(64);
+    debug_assert!(a.len() >= words && b.len() >= words);
+    let mut pc = 0u32;
+    for w in 0..words {
+        pc += (a[w] ^ b[w]).count_ones();
+    }
+    len as i64 - 2 * pc as i64
+}
+
+/// Which `panel_dot` implementation runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable `u64::count_ones`, one word-row per step.
+    Scalar,
+    /// 4 word-rows per step, independent accumulators.
+    Unrolled,
+    /// `vpshufb` nibble-LUT popcount; requires AVX2 (runtime-detected).
+    Avx2,
+}
+
+impl Kernel {
+    /// Short name for bench records, log lines and `FLEXOR_SIMD`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Unrolled => "unrolled",
+            Kernel::Avx2 => "avx2",
+        }
+    }
+
+    /// Can this kernel run on the current CPU?
+    pub fn is_supported(&self) -> bool {
+        match self {
+            Kernel::Scalar | Kernel::Unrolled => true,
+            Kernel::Avx2 => avx2_supported(),
+        }
+    }
+
+    /// Parse a `FLEXOR_SIMD` value.
+    pub fn parse(s: &str) -> Result<Kernel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Kernel::Scalar),
+            "unrolled" => Ok(Kernel::Unrolled),
+            "avx2" | "simd" => Ok(Kernel::Avx2),
+            other => bail!("unknown SIMD kernel {other:?} (want scalar | unrolled | avx2)"),
+        }
+    }
+}
+
+fn avx2_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Every kernel the current CPU can run, in escalation order
+/// (`Scalar` first, the widest SIMD last).
+pub fn available() -> Vec<Kernel> {
+    [Kernel::Scalar, Kernel::Unrolled, Kernel::Avx2]
+        .into_iter()
+        .filter(Kernel::is_supported)
+        .collect()
+}
+
+/// In-process override (0 = none, else kernel code + 1) — see
+/// [`set_override`].
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+/// The auto-selected kernel, resolved once per process.
+static DETECTED: OnceLock<Kernel> = OnceLock::new();
+
+fn code(k: Kernel) -> u8 {
+    match k {
+        Kernel::Scalar => 1,
+        Kernel::Unrolled => 2,
+        Kernel::Avx2 => 3,
+    }
+}
+
+/// The kernel [`panel_dot`] callers should use: an in-process
+/// [`set_override`] wins, else `FLEXOR_SIMD` (when set to a kernel this
+/// CPU supports), else the best supported kernel (`Avx2` where
+/// detected, `Unrolled` otherwise).
+pub fn active() -> Kernel {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        1 => Kernel::Scalar,
+        2 => Kernel::Unrolled,
+        3 => Kernel::Avx2,
+        _ => *DETECTED.get_or_init(detect),
+    }
+}
+
+/// Pin the process-wide kernel (`Some`) or return to auto selection
+/// (`None`). Refuses unsupported kernels (returns `false`). Bench/test
+/// hook: because every kernel is bit-identical, flipping this mid-serve
+/// can change speed but never results.
+pub fn set_override(k: Option<Kernel>) -> bool {
+    match k {
+        Some(k) if !k.is_supported() => false,
+        Some(k) => {
+            OVERRIDE.store(code(k), Ordering::Relaxed);
+            true
+        }
+        None => {
+            OVERRIDE.store(0, Ordering::Relaxed);
+            true
+        }
+    }
+}
+
+fn detect() -> Kernel {
+    let best = if avx2_supported() { Kernel::Avx2 } else { Kernel::Unrolled };
+    match std::env::var("FLEXOR_SIMD") {
+        Ok(v) if !v.trim().is_empty() => match Kernel::parse(&v) {
+            Ok(k) if k.is_supported() => k,
+            Ok(k) => {
+                eprintln!(
+                    "FLEXOR_SIMD={} unsupported on this CPU; using {}",
+                    k.label(),
+                    best.label()
+                );
+                best
+            }
+            Err(e) => {
+                eprintln!("ignoring FLEXOR_SIMD: {e}");
+                best
+            }
+        },
+        _ => best,
+    }
+}
+
+/// Dot one packed activation row against one channel panel: `out[jj]` is
+/// the ±1 dot product of `abits` with panel channel `jj` over `k` lanes.
+///
+/// `panel` is the [`super::PlaneStore`] interleaved layout —
+/// `panel[w·NR + jj]` holds word `w` of channel `jj` — with zeroed
+/// padding (bits past `k`, channels past the live width). Lanes past the
+/// live channel width return garbage the caller discards.
+///
+/// Exactness contract: every kernel returns the same integers.
+#[inline]
+pub fn panel_dot(kernel: Kernel, abits: &[u64], panel: &[u64], k: usize) -> [i64; NR] {
+    let words = k.div_ceil(64);
+    // real asserts, not debug_asserts: the AVX2 arm reads through raw
+    // pointers, so this length check is what keeps the safe API sound
+    assert!(abits.len() >= words, "activation row too short");
+    assert!(panel.len() >= words * NR, "panel too short");
+    match kernel {
+        Kernel::Scalar => panel_dot_scalar(abits, panel, words, k),
+        Kernel::Unrolled => panel_dot_unrolled(abits, panel, words, k),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: dispatch is gated on runtime AVX2 detection.
+        Kernel::Avx2 if avx2_supported() => unsafe {
+            avx2::panel_dot(abits, panel, words, k)
+        },
+        Kernel::Avx2 => panel_dot_unrolled(abits, panel, words, k),
+    }
+}
+
+#[inline]
+fn finish(pc: [u32; NR], k: usize) -> [i64; NR] {
+    let mut out = [0i64; NR];
+    for j in 0..NR {
+        out[j] = k as i64 - 2 * pc[j] as i64;
+    }
+    out
+}
+
+fn panel_dot_scalar(abits: &[u64], panel: &[u64], words: usize, k: usize) -> [i64; NR] {
+    let mut pc = [0u32; NR];
+    for w in 0..words {
+        let a = abits[w];
+        let row = &panel[w * NR..(w + 1) * NR];
+        for j in 0..NR {
+            pc[j] += (a ^ row[j]).count_ones();
+        }
+    }
+    finish(pc, k)
+}
+
+fn panel_dot_unrolled(abits: &[u64], panel: &[u64], words: usize, k: usize) -> [i64; NR] {
+    let mut pc = [0u32; NR];
+    let mut w = 0usize;
+    while w + 4 <= words {
+        let (a0, a1, a2, a3) = (abits[w], abits[w + 1], abits[w + 2], abits[w + 3]);
+        let rows = &panel[w * NR..(w + 4) * NR];
+        for j in 0..NR {
+            pc[j] += (a0 ^ rows[j]).count_ones()
+                + (a1 ^ rows[NR + j]).count_ones()
+                + (a2 ^ rows[2 * NR + j]).count_ones()
+                + (a3 ^ rows[3 * NR + j]).count_ones();
+        }
+        w += 4;
+    }
+    while w < words {
+        let a = abits[w];
+        let row = &panel[w * NR..(w + 1) * NR];
+        for j in 0..NR {
+            pc[j] += (a ^ row[j]).count_ones();
+        }
+        w += 1;
+    }
+    finish(pc, k)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::NR;
+    use std::arch::x86_64::*;
+
+    /// Per-64-bit-lane popcount of a 256-bit vector: `vpshufb` nibble
+    /// LUT (Muła) for byte counts, `vpsadbw` to fold each 8-byte group
+    /// into its u64 lane. Byte counts are ≤ 8 and lane sums ≤ 64 — no
+    /// overflow anywhere.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt_epi64(v: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low);
+        let cnt =
+            _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+    }
+
+    /// # Safety
+    ///
+    /// Caller must ensure AVX2 is available, `abits.len() >= words` and
+    /// `panel.len() >= words * NR`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn panel_dot(
+        abits: &[u64],
+        panel: &[u64],
+        words: usize,
+        k: usize,
+    ) -> [i64; NR] {
+        // channels 0..4 in acc0, 4..8 in acc1 — one u64 count per lane
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let p = panel.as_ptr();
+        for (w, &aw) in abits.iter().enumerate().take(words) {
+            let a = _mm256_set1_epi64x(aw as i64);
+            let b0 = _mm256_loadu_si256(p.add(w * NR) as *const __m256i);
+            let b1 = _mm256_loadu_si256(p.add(w * NR + 4) as *const __m256i);
+            acc0 = _mm256_add_epi64(acc0, popcnt_epi64(_mm256_xor_si256(a, b0)));
+            acc1 = _mm256_add_epi64(acc1, popcnt_epi64(_mm256_xor_si256(a, b1)));
+        }
+        let mut pc = [0i64; NR];
+        _mm256_storeu_si256(pc.as_mut_ptr() as *mut __m256i, acc0);
+        _mm256_storeu_si256(pc.as_mut_ptr().add(4) as *mut __m256i, acc1);
+        let mut out = [0i64; NR];
+        for j in 0..NR {
+            out[j] = k as i64 - 2 * pc[j];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prng::Pcg32;
+
+    /// Random packed operands with zeroed padding past `k` — the layout
+    /// invariant both `PlaneStore` and `BinarizedActs` maintain.
+    fn random_packed(rng: &mut Pcg32, words: usize, k: usize, lanes: usize) -> Vec<u64> {
+        let mask_last = if k % 64 == 0 { u64::MAX } else { (1u64 << (k % 64)) - 1 };
+        (0..words * lanes)
+            .map(|i| {
+                let w = i / lanes;
+                let v = rng.next_u64();
+                if w + 1 == words {
+                    v & mask_last
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    /// Satellite: every supported kernel returns bit-identical panel
+    /// dots at K values straddling u64 word boundaries, and lane 0
+    /// agrees with the pairwise word-at-a-time `popcount_dot`.
+    #[test]
+    fn kernels_agree_at_word_boundaries() {
+        let mut rng = Pcg32::seeded(21);
+        let kernels = available();
+        assert!(kernels.contains(&Kernel::Scalar) && kernels.contains(&Kernel::Unrolled));
+        for k in [1usize, 63, 64, 65, 127, 128, 1000] {
+            let words = k.div_ceil(64);
+            for _ in 0..6 {
+                let abits = random_packed(&mut rng, words, k, 1);
+                let panel = random_packed(&mut rng, words, k, NR);
+                let want = panel_dot(Kernel::Scalar, &abits, &panel, k);
+                for jj in 0..NR {
+                    let col: Vec<u64> = (0..words).map(|w| panel[w * NR + jj]).collect();
+                    assert_eq!(
+                        want[jj],
+                        popcount_dot(&abits, &col, k),
+                        "scalar panel lane {jj} vs pairwise (k={k})"
+                    );
+                }
+                for kern in &kernels {
+                    assert_eq!(
+                        panel_dot(*kern, &abits, &panel, k),
+                        want,
+                        "kernel {} diverged from scalar at k={k}",
+                        kern.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_and_labels() {
+        assert_eq!(Kernel::parse("scalar").unwrap(), Kernel::Scalar);
+        assert_eq!(Kernel::parse(" AVX2 ").unwrap(), Kernel::Avx2);
+        assert_eq!(Kernel::parse("unrolled").unwrap(), Kernel::Unrolled);
+        assert!(Kernel::parse("neon").is_err());
+        assert_eq!(Kernel::Unrolled.label(), "unrolled");
+        assert!(Kernel::Scalar.is_supported());
+    }
+
+    #[test]
+    fn override_round_trip() {
+        // Kernels are bit-identical, so flipping the override is safe
+        // even while other tests run forwards concurrently.
+        assert!(set_override(Some(Kernel::Scalar)));
+        assert_eq!(active(), Kernel::Scalar);
+        assert!(set_override(None));
+        let auto = active();
+        assert!(auto.is_supported());
+        assert_ne!(auto, Kernel::Scalar, "auto selection should beat scalar");
+    }
+
+    #[test]
+    fn padded_lanes_do_not_disturb_live_ones() {
+        // zero channel words (padding channels) yield k − 2·pc(a) in
+        // their lane; live lanes are unaffected
+        let k = 70;
+        let words = k.div_ceil(64);
+        let mut rng = Pcg32::seeded(9);
+        let abits = random_packed(&mut rng, words, k, 1);
+        let mut panel = random_packed(&mut rng, words, k, NR);
+        for w in 0..words {
+            for jj in 5..NR {
+                panel[w * NR + jj] = 0; // channels 5.. are padding
+            }
+        }
+        let dots = panel_dot(Kernel::Unrolled, &abits, &panel, k);
+        for jj in 0..5 {
+            let col: Vec<u64> = (0..words).map(|w| panel[w * NR + jj]).collect();
+            assert_eq!(dots[jj], popcount_dot(&abits, &col, k));
+        }
+    }
+}

@@ -5,7 +5,7 @@
 //! never changes after bundle load, so it is packed **once** into
 //! cache-aligned column panels ([`PackedB`]). The forward pass then runs a
 //! register-blocked MR×NR microkernel over row blocks of the activation
-//! matrix, sharded across the [`substrate::pool`] thread pool, and applies
+//! matrix, sharded across the [`crate::substrate::pool`] thread pool, and applies
 //! the layer epilogue (bias / eval-mode batch-norm in `a·x+b` form / ReLU /
 //! residual add) inside the output tile while it is still hot in registers
 //! — `conv2d → bn → relu` is one kernel invocation instead of three
@@ -320,42 +320,54 @@ pub fn dense_fused(
 
 // ---- per-thread scratch arena -----------------------------------------------
 
-/// Per-thread buffer recycling so im2col columns, activations and logits
-/// are not reallocated on every request. Buffers come back via [`give`];
-/// contents of a taken buffer are unspecified (callers fully overwrite).
+/// Per-thread buffer recycling so im2col columns, activations, logits —
+/// and the bit-plane engine's packed u64 activation planes — are not
+/// reallocated on every request. Buffers come back via [`give`] /
+/// [`give_u64`]; contents of a taken buffer are unspecified (callers
+/// fully overwrite, or zero what they only OR into).
 pub mod scratch {
     use std::cell::RefCell;
 
-    /// Free buffers retained per thread (bounds idle memory).
+    /// Free buffers retained per thread per element type (bounds idle
+    /// memory).
     const MAX_FREE: usize = 16;
+
+    /// Best-fit pick: the smallest free buffer whose capacity suffices,
+    /// else the largest (it will grow the least).
+    fn best_fit<T>(free: &mut Vec<Vec<T>>, len: usize) -> Vec<T> {
+        let pick = free
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.capacity() >= len)
+            .min_by_key(|(_, v)| v.capacity())
+            .map(|(i, _)| i)
+            .or_else(|| {
+                free.iter()
+                    .enumerate()
+                    .max_by_key(|(_, v)| v.capacity())
+                    .map(|(i, _)| i)
+            });
+        match pick {
+            Some(i) => free.swap_remove(i),
+            None => Vec::new(),
+        }
+    }
+
+    fn keep<T>(free: &mut Vec<Vec<T>>, v: Vec<T>) {
+        if free.len() < MAX_FREE && v.capacity() > 0 {
+            free.push(v);
+        }
+    }
 
     pub struct Arena {
         free: Vec<Vec<f32>>,
+        free64: Vec<Vec<u64>>,
     }
 
     impl Arena {
         /// A buffer of exactly `len` floats with unspecified contents.
         pub fn take(&mut self, len: usize) -> Vec<f32> {
-            // best-fit: the smallest free buffer whose capacity suffices,
-            // else the largest (it will grow the least)
-            let pick = self
-                .free
-                .iter()
-                .enumerate()
-                .filter(|(_, v)| v.capacity() >= len)
-                .min_by_key(|(_, v)| v.capacity())
-                .map(|(i, _)| i)
-                .or_else(|| {
-                    self.free
-                        .iter()
-                        .enumerate()
-                        .max_by_key(|(_, v)| v.capacity())
-                        .map(|(i, _)| i)
-                });
-            let mut v = match pick {
-                Some(i) => self.free.swap_remove(i),
-                None => Vec::new(),
-            };
+            let mut v = best_fit(&mut self.free, len);
             if v.len() > len {
                 v.truncate(len);
             } else {
@@ -366,14 +378,30 @@ pub mod scratch {
 
         /// Return a buffer for reuse by later takes on this thread.
         pub fn give(&mut self, v: Vec<f32>) {
-            if self.free.len() < MAX_FREE && v.capacity() > 0 {
-                self.free.push(v);
+            keep(&mut self.free, v);
+        }
+
+        /// A buffer of exactly `len` u64 words with unspecified
+        /// contents (the bit-plane engine's activation planes).
+        pub fn take_u64(&mut self, len: usize) -> Vec<u64> {
+            let mut v = best_fit(&mut self.free64, len);
+            if v.len() > len {
+                v.truncate(len);
+            } else {
+                v.resize(len, 0);
             }
+            v
+        }
+
+        /// Return a u64 buffer for reuse by later takes on this thread.
+        pub fn give_u64(&mut self, v: Vec<u64>) {
+            keep(&mut self.free64, v);
         }
     }
 
     thread_local! {
-        static ARENA: RefCell<Arena> = const { RefCell::new(Arena { free: Vec::new() }) };
+        static ARENA: RefCell<Arena> =
+            const { RefCell::new(Arena { free: Vec::new(), free64: Vec::new() }) };
     }
 
     /// Run `f` with this thread's arena.
@@ -389,6 +417,16 @@ pub mod scratch {
     /// [`Arena::give`] on the current thread's arena.
     pub fn give(v: Vec<f32>) {
         with(|a| a.give(v));
+    }
+
+    /// [`Arena::take_u64`] on the current thread's arena.
+    pub fn take_u64(len: usize) -> Vec<u64> {
+        with(|a| a.take_u64(len))
+    }
+
+    /// [`Arena::give_u64`] on the current thread's arena.
+    pub fn give_u64(v: Vec<u64>) {
+        with(|a| a.give_u64(v));
     }
 }
 
@@ -557,5 +595,21 @@ mod tests {
         assert_eq!(v2.as_ptr(), p, "arena should reuse the freed buffer");
         assert_eq!(v2.len(), 64);
         scratch::give(v2);
+    }
+
+    #[test]
+    fn scratch_arena_recycles_u64() {
+        let v = scratch::take_u64(256);
+        let p = v.as_ptr();
+        scratch::give_u64(v);
+        let v2 = scratch::take_u64(100);
+        assert_eq!(v2.as_ptr(), p, "u64 arena should reuse the freed buffer");
+        assert_eq!(v2.len(), 100);
+        // the two free-lists are independent: an f32 take never returns
+        // u64 storage
+        let f = scratch::take(100);
+        assert_ne!(f.as_ptr() as usize, p as usize);
+        scratch::give(f);
+        scratch::give_u64(v2);
     }
 }

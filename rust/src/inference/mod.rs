@@ -10,20 +10,23 @@
 //!   microkernel sharded row-parallel across the substrate thread pool,
 //!   epilogues (bias / BN / ReLU / residual) fused into the output tile,
 //!   and a per-thread scratch arena for im2col/activation buffers;
-//! * [`bitslice`] — the bit-plane XNOR/popcount engine (DESIGN.md §8):
-//!   quantized layers stay packed bit-planes for their whole serving
-//!   lifetime, activations are binarized per im2col row, and dot
-//!   products are `k − 2·popcount(h ⊕ b)` with α/β scaling — dense FP
-//!   weights are never materialized in [`ComputeMode::BitPlane`];
+//! * [`bitslice`] — the bit-plane XNOR/popcount engine (DESIGN.md §8/§9):
+//!   quantized layers stay packed bit-plane *panels* for their whole
+//!   serving lifetime, activations are binarized per im2col row into
+//!   arena-recycled plane buffers, and dot products run NR channels at a
+//!   time through runtime-dispatched popcount kernels
+//!   (scalar / unrolled / AVX2, all bit-identical) — dense FP weights
+//!   are never materialized in [`ComputeMode::BitPlane`];
 //! * [`model`]  — rebuilds the model graphs (mlp / lenet5 / resnet family)
 //!   from an exported bundle (`.fxr` + FP sidecar) and runs batched
-//!   forward passes whose logits match the AOT eval HLO, on either
-//!   compute engine.
+//!   forward passes whose logits match the AOT eval HLO, with the engine
+//!   chosen **per quantized layer** by a [`ModePolicy`] (uniform, or
+//!   mixed via weight-count threshold / per-layer overrides).
 
 pub mod bitslice;
 pub mod gemm;
 pub mod model;
 pub mod tensor;
 
-pub use bitslice::{ComputeMode, PlaneStore};
-pub use model::InferenceModel;
+pub use bitslice::{ComputeMode, ModePolicy, PlaneStore};
+pub use model::{InferenceModel, LayerMode};

@@ -4,14 +4,22 @@
 //! `<stem>.fxr` (encrypted quantized weights), `<stem>.fp.bin` (FXIN FP
 //! residue: stem/head/biases/BN), and `<stem>.bundle.json` (index). This
 //! module decrypts the quantized layers through the word-parallel XOR
-//! engine, rebuilds the architecture, and runs forward passes on one of
-//! two engines selected by [`ComputeMode`] at load:
+//! engine, rebuilds the architecture, and runs forward passes on two
+//! engines selected **per quantized layer** by a [`ModePolicy`] at load
+//! (a uniform policy is the plain [`ComputeMode`] behavior):
 //!
 //! * **DenseF32** — reconstructs dense weights with `Σ α_i b_i`; logits
 //!   match the AOT eval HLO (verified in `rust/tests/e2e_train.rs`).
 //! * **BitPlane** — repacks the decryptor output straight into
-//!   [`PlaneStore`] bit-planes (never materializing FP weights) and runs
-//!   the XNOR/popcount engine over binarized activations (DESIGN.md §8).
+//!   [`PlaneStore`] bit-plane panels (never materializing FP weights)
+//!   and runs the XNOR/popcount engine over binarized activations
+//!   (DESIGN.md §8/§9).
+//!
+//! A mixed policy (threshold or per-layer overrides) keeps tiny layers —
+//! where FP is cheap and approximation error hurts most per weight — on
+//! the exact engine while the big convs ride the bit-plane engine;
+//! [`InferenceModel::layer_modes`] reports the per-layer decision
+//! (`GET /models` serves it).
 //!
 //! Forward passes run on the packed compute engine (DESIGN.md §7): every
 //! GEMM right-hand side — quantized layers, stem, head — is packed once
@@ -35,7 +43,7 @@ use crate::runtime::initbin;
 use crate::substrate::json::{self, Json};
 use crate::substrate::pool::{self, ThreadPool};
 
-use super::bitslice::{self, ComputeMode, PlaneStore};
+use super::bitslice::{self, ComputeMode, ModePolicy, PlaneStore};
 use super::gemm::{self, conv2d_fused, dense_fused, Epilogue, PackedB};
 use super::tensor::{self, Tensor};
 
@@ -138,21 +146,36 @@ struct Engine {
     biases: Vec<Vec<f32>>,
 }
 
+/// One quantized layer's engine assignment under the load policy —
+/// what `GET /models` reports per entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerMode {
+    /// Quantized-layer index (the bundle's `q<idx>` naming).
+    pub idx: usize,
+    /// Engine this layer runs on.
+    pub mode: ComputeMode,
+    /// Weights in the layer (what the policy threshold compares).
+    pub weights: usize,
+}
+
 /// A fully materialized inference model.
 pub struct InferenceModel {
     pub model: String,
     pub num_classes: usize,
     pub input_dims: Vec<usize>,
-    /// Which compute engine the quantized layers run on.
-    mode: ComputeMode,
+    /// The per-layer compute policy this model was loaded under.
+    policy: ModePolicy,
+    /// The engine each quantized layer actually runs on (resolved from
+    /// `policy` at load).
+    qmodes: BTreeMap<usize, ComputeMode>,
     /// Declared shapes of quantized layers, by layer index (always
     /// populated; the geometry source for both engines).
     qshapes: BTreeMap<usize, Vec<usize>>,
     /// Dense weights of quantized layers, reconstructed from the
-    /// encrypted container (decrypt + Σ α_i b_i). DenseF32 mode only.
+    /// encrypted container (decrypt + Σ α_i b_i). DenseF32 layers only.
     qweights: BTreeMap<usize, Tensor>,
-    /// Packed bit-plane stores of quantized layers. BitPlane mode only —
-    /// dense FP weights are never materialized.
+    /// Packed bit-plane stores of quantized layers. BitPlane layers only
+    /// — their dense FP weights are never materialized.
     qplanes: BTreeMap<usize, PlaneStore>,
     bns: Vec<Bn>,
     engine: Engine,
@@ -168,11 +191,20 @@ impl InferenceModel {
         Self::load_with_mode(dir, stem, ComputeMode::DenseF32)
     }
 
-    /// Load a bundle onto the given compute engine. DenseF32 decrypts to
-    /// dense `Σ α_i b_i` weights and packs panels; BitPlane repacks the
-    /// decryptor's output straight into per-channel bit-plane rows
-    /// ([`PlaneStore`]) — the quantized layers never exist as dense FP.
+    /// Load a bundle with every quantized layer on `mode` (a uniform
+    /// [`ModePolicy`]). DenseF32 decrypts to dense `Σ α_i b_i` weights
+    /// and packs panels; BitPlane repacks the decryptor's output
+    /// straight into panelized bit-plane rows ([`PlaneStore`]) — those
+    /// layers never exist as dense FP.
     pub fn load_with_mode(dir: &Path, stem: &str, mode: ComputeMode) -> Result<Self> {
+        Self::load_with_policy(dir, stem, ModePolicy::uniform(mode))
+    }
+
+    /// Load a bundle under a per-layer compute policy: each quantized
+    /// layer is materialized for exactly the engine
+    /// [`ModePolicy::mode_for`] assigns it (dense tensors + packed
+    /// panels, or bit-plane panels — never both).
+    pub fn load_with_policy(dir: &Path, stem: &str, policy: ModePolicy) -> Result<Self> {
         let bundle_text =
             std::fs::read_to_string(dir.join(format!("{stem}.bundle.json")))?;
         let bundle = json::parse(&bundle_text)?;
@@ -194,11 +226,23 @@ impl InferenceModel {
             shapes.insert(idx, shape);
         }
 
-        // decrypt every quantized layer, materializing per the engine:
-        // dense Σ α_i b_i tensors (DenseF32) or packed bit-plane stores
-        // (BitPlane — no FP weights, ever)
+        // a policy override naming a layer this bundle doesn't have is
+        // an operator typo — fail loudly instead of silently ignoring it
+        for idx in policy.overrides.keys() {
+            ensure!(
+                shapes.contains_key(idx),
+                "compute-mode override for layer {idx}, but bundle has no quantized \
+                 layer {idx} (layers: {:?})",
+                shapes.keys().collect::<Vec<_>>()
+            );
+        }
+
+        // decrypt every quantized layer, materializing per its
+        // policy-assigned engine: dense Σ α_i b_i tensors (DenseF32) or
+        // packed bit-plane stores (BitPlane — no FP weights, ever)
         let mut qweights = BTreeMap::new();
         let mut qplanes = BTreeMap::new();
+        let mut qmodes = BTreeMap::new();
         for layer in &fxr.layers {
             let idx: usize = layer
                 .name
@@ -213,7 +257,9 @@ impl InferenceModel {
             ensure!(*shape.last().unwrap() == layer.c_out,
                     "layer {idx}: shape {:?} last axis != c_out {}",
                     shape, layer.c_out);
-            match mode {
+            let lmode = policy.mode_for(idx, layer.n_weights);
+            qmodes.insert(idx, lmode);
+            match lmode {
                 ComputeMode::DenseF32 => {
                     let mut planes = Vec::with_capacity(layer.q());
                     let mut alphas = Vec::with_capacity(layer.q());
@@ -257,8 +303,8 @@ impl InferenceModel {
         }
 
         // pack every GEMM right-hand side once; cache the FP leaves the
-        // forwards consume. Quantized panels only exist in DenseF32 mode
-        // (BitPlane keeps the PlaneStores instead).
+        // forwards consume. Quantized panels only exist for DenseF32
+        // layers (BitPlane layers keep their PlaneStores instead).
         let mut engine = Engine::default();
         for (idx, w) in &qweights {
             engine.qpacked.insert(*idx, PackedB::from_tensor(w));
@@ -295,7 +341,8 @@ impl InferenceModel {
                 .iter()
                 .filter_map(|d| d.as_usize())
                 .collect(),
-            mode,
+            policy,
+            qmodes,
             qshapes: shapes,
             qweights,
             qplanes,
@@ -306,14 +353,57 @@ impl InferenceModel {
         })
     }
 
-    /// The compute engine this model was loaded onto.
+    /// The policy's base engine (the whole-model mode for uniform
+    /// loads). Per-layer decisions are in [`InferenceModel::layer_modes`].
     pub fn compute_mode(&self) -> ComputeMode {
-        self.mode
+        self.policy.base
+    }
+
+    /// The policy this model was loaded under.
+    pub fn mode_policy(&self) -> &ModePolicy {
+        &self.policy
+    }
+
+    /// The engine quantized layer `idx` runs on.
+    fn layer_mode(&self, idx: usize) -> ComputeMode {
+        self.qmodes.get(&idx).copied().unwrap_or(self.policy.base)
+    }
+
+    /// Summary label for `/models` and log lines: `"dense"` /
+    /// `"bitplane"` when every quantized layer agrees, `"mixed"`
+    /// otherwise.
+    pub fn mode_label(&self) -> &'static str {
+        if self.is_mixed() {
+            "mixed"
+        } else if let Some(m) = self.qmodes.values().next() {
+            m.label()
+        } else {
+            self.policy.base.label() // no quantized layers
+        }
+    }
+
+    /// Do this model's quantized layers run on more than one engine?
+    pub fn is_mixed(&self) -> bool {
+        self.qmodes.values().any(|m| m.is_bit_plane())
+            && self.qmodes.values().any(|m| !m.is_bit_plane())
+    }
+
+    /// Per-quantized-layer engine assignments, in layer order.
+    pub fn layer_modes(&self) -> Vec<LayerMode> {
+        self.qshapes
+            .iter()
+            .map(|(&idx, shape)| LayerMode {
+                idx,
+                mode: self.layer_mode(idx),
+                weights: shape.iter().product(),
+            })
+            .collect()
     }
 
     /// Bytes the quantized layers keep resident under this model's
-    /// compute mode: dense tensors + packed panels (DenseF32) or packed
-    /// bit-plane rows + α (BitPlane). The `/models` accounting.
+    /// per-layer modes: dense tensors + packed panels (DenseF32 layers)
+    /// plus panelized bit-plane rows + α (BitPlane layers). The
+    /// `/models` accounting.
     pub fn quantized_resident_bytes(&self) -> usize {
         let dense: usize = self
             .qweights
@@ -378,7 +468,7 @@ impl InferenceModel {
         self.qshapes.contains_key(&idx)
     }
 
-    /// Quantized conv → epilogue on the active engine.
+    /// Quantized conv → epilogue on the layer's assigned engine.
     fn qconv(
         &self,
         pool: &ThreadPool,
@@ -387,7 +477,7 @@ impl InferenceModel {
         stride: usize,
         epi: Epilogue<'_>,
     ) -> Result<Tensor> {
-        match self.mode {
+        match self.layer_mode(idx) {
             ComputeMode::DenseF32 => {
                 let (w, g) = self.qpacked(idx)?;
                 Ok(conv2d_fused(pool, x, w, g, stride, epi))
@@ -403,7 +493,7 @@ impl InferenceModel {
         }
     }
 
-    /// Quantized dense → epilogue on the active engine.
+    /// Quantized dense → epilogue on the layer's assigned engine.
     fn qdense(
         &self,
         pool: &ThreadPool,
@@ -411,7 +501,7 @@ impl InferenceModel {
         idx: usize,
         epi: Epilogue<'_>,
     ) -> Result<Tensor> {
-        match self.mode {
+        match self.layer_mode(idx) {
             ComputeMode::DenseF32 => {
                 let (w, _) = self.qpacked(idx)?;
                 Ok(dense_fused(pool, x, w, epi))
@@ -426,11 +516,12 @@ impl InferenceModel {
         }
     }
 
-    /// Reference quantized conv (separate-pass oracle): dense math in
-    /// DenseF32 mode; in BitPlane mode the same binarization contract as
-    /// the engine but dense math over reconstructed rows/weights.
+    /// Reference quantized conv (separate-pass oracle): dense math for
+    /// DenseF32 layers; for BitPlane layers the same binarization
+    /// contract as the engine but dense math over reconstructed
+    /// rows/weights.
     fn ref_qconv(&self, x: &Tensor, idx: usize, stride: usize) -> Result<Tensor> {
-        match self.mode {
+        match self.layer_mode(idx) {
             ComputeMode::DenseF32 => Ok(tensor::conv2d(x, self.qweight(idx)?, stride)),
             ComputeMode::BitPlane { act_planes } => Ok(
                 bitslice::gemm::conv2d_bitplane_reference(
@@ -445,7 +536,7 @@ impl InferenceModel {
 
     /// Reference quantized dense (no bias — callers compose it).
     fn ref_qdense(&self, x: &Tensor, idx: usize) -> Result<Tensor> {
-        match self.mode {
+        match self.layer_mode(idx) {
             ComputeMode::DenseF32 => Ok(tensor::dense(x, self.qweight(idx)?, None)),
             ComputeMode::BitPlane { act_planes } => Ok(
                 bitslice::gemm::dense_bitplane_reference(
@@ -775,7 +866,8 @@ mod tests {
             model: model.into(),
             num_classes: 10,
             input_dims: vec![32, 32, 3],
-            mode: ComputeMode::DenseF32,
+            policy: ModePolicy::uniform(ComputeMode::DenseF32),
+            qmodes: BTreeMap::new(),
             qshapes: BTreeMap::new(),
             qweights: BTreeMap::new(),
             qplanes: BTreeMap::new(),
@@ -792,6 +884,12 @@ mod tests {
         assert_eq!(resnet_geometry("resnet10img").unwrap().1,
                    vec![16, 32, 64, 128]);
         assert!(resnet_geometry("resnet99").is_err());
+    }
+
+    #[test]
+    fn mode_label_with_no_quantized_layers_follows_policy_base() {
+        assert_eq!(dummy("mlp").mode_label(), "dense");
+        assert!(dummy("mlp").layer_modes().is_empty());
     }
 
     #[test]

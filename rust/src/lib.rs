@@ -18,15 +18,34 @@
 //!   container, and a pure-Rust binary-code inference engine — i.e. the
 //!   paper's deployment story (Fig. 1–3, Algorithm 1) implemented with
 //!   word-parallel XOR/popcount.
+//! * **Inference** ([`inference`], DESIGN.md §7–§9): two compute engines
+//!   behind one [`inference::ModePolicy`] — the packed-FP fused GEMM
+//!   engine (cache-aligned panels, register-blocked microkernel, fused
+//!   bias/BN/ReLU/residual epilogues) and the bit-plane XNOR/popcount
+//!   engine (quantized layers stay packed bit-plane panels, dot products
+//!   run on runtime-dispatched scalar/unrolled/AVX2 popcount kernels).
+//!   Both shard across the [`substrate::pool`] thread pool and are
+//!   bit-identical across thread counts and kernels.
 //! * **Serving** ([`serve`], DESIGN.md §6): a multi-threaded batched
 //!   inference server over the encrypted-bundle engine — model registry
-//!   (decrypt once at load), micro-batching admission queue, worker pool,
-//!   and an HTTP/1.1 front-end with latency/batching metrics.
+//!   (decrypt once at load, per-layer compute modes), micro-batching
+//!   admission queue, worker pool, and an HTTP/1.1 front-end
+//!   (`/predict`, `/models`, `/metrics`, `/healthz`).
 //!
-//! Quick start:
+//! Build and test (tier-1, offline — vendored stand-ins only):
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo build --release && cargo test -q
 //! ```
+//!
+//! Serve a bundle (synthesizes one when no artifacts are present):
+//! ```bash
+//! cargo run --release --example serve -- --compute-mode bitplane
+//! ```
+//!
+//! Runtime dials: `FLEXOR_THREADS` (intra-op pool size),
+//! `FLEXOR_COMPUTE` (compute-mode policy, e.g. `bitplane:8@min=4096`),
+//! `FLEXOR_SIMD` (`scalar|unrolled|avx2` popcount kernel override).
+//! See `README.md` for the full quickstart and the endpoint table.
 
 pub mod substrate;
 pub mod flexor;

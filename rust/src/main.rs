@@ -153,28 +153,39 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
         .flag("batch", "examples", Some("32"))
         .flag(
             "compute-mode",
-            "dense | bitplane | bitplane:<m> (default: FLEXOR_COMPUTE env, else dense)",
+            "policy: <mode>[@min=<weights>][,<idx>=<mode>]* with mode = dense | bitplane | bitplane:<m> (default: FLEXOR_COMPUTE env, else dense)",
             Some(""),
         )
         .parse_from(argv)
         .map_err(|m| anyhow::anyhow!("{m}"))?;
-    let mode = match a.get("compute-mode") {
-        "" => flexor::inference::ComputeMode::default_from_env()?,
-        s => flexor::inference::ComputeMode::parse(s)?,
+    let policy = match a.get("compute-mode") {
+        "" => flexor::inference::ModePolicy::default_from_env()?,
+        s => flexor::inference::ModePolicy::parse(s)?,
     };
-    let model = flexor::inference::InferenceModel::load_with_mode(
+    let model = flexor::inference::InferenceModel::load_with_policy(
         Path::new(a.pos(0).unwrap()),
         a.pos(1).unwrap(),
-        mode,
+        policy,
     )?;
     println!(
-        "loaded {} ({:.2} b/w, {:.1}× compression, {} mode, {} quantized bytes resident)",
+        "loaded {} ({:.2} b/w, {:.1}× compression, {} mode, {} quantized bytes resident, {} simd kernel)",
         model.model,
         model.bits_per_weight,
         model.compression_ratio,
-        model.compute_mode().label(),
-        model.quantized_resident_bytes()
+        model.mode_label(),
+        model.quantized_resident_bytes(),
+        flexor::inference::bitslice::popcount::active().label()
     );
+    if model.is_mixed() {
+        for lm in model.layer_modes() {
+            println!(
+                "  layer {:>2}: {:8} ({} weights)",
+                lm.idx,
+                lm.mode.label(),
+                lm.weights
+            );
+        }
+    }
     let ds = data::by_name(a.get("dataset"), 0)?;
     let n = a.get_usize("batch");
     let (xs, ys) = data::Batcher::eval_set(ds.as_ref(), data::Split::Test, n);

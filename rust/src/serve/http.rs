@@ -31,11 +31,14 @@ use super::metrics::ServeMetrics;
 use super::queue::{BatchQueue, PushError};
 use super::registry::Registry;
 use super::worker::{Request, WorkerPool};
-use crate::inference::ComputeMode;
 use crate::substrate::json::{self, Json};
 use crate::substrate::pool;
 
-/// Serving policy knobs.
+/// Serving policy knobs. Compute-engine selection is *not* here: it is
+/// a property of the registry the caller builds and hands to
+/// [`Server::start`] — `Registry::with_default_policy` /
+/// `Registry::load_with_policy` (per-layer `ModePolicy`, DESIGN.md §9),
+/// as `examples/serve.rs` does.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
     /// Worker threads draining the queue.
@@ -52,13 +55,6 @@ pub struct ServeConfig {
     /// `available_parallelism / workers`, so worker-level and GEMM-level
     /// parallelism compose instead of oversubscribing the machine.
     pub intra_threads: usize,
-    /// Default compute engine for bundles loaded into this server's
-    /// registry (DESIGN.md §8): hand it to `Registry::with_default_mode`
-    /// when building the registry passed to `Server::start` (as
-    /// `examples/serve.rs` does). Per-model overrides go through
-    /// `Registry::load_with_mode`; `GET /models` reports each entry's
-    /// actual mode and resident bytes.
-    pub compute_mode: ComputeMode,
 }
 
 impl Default for ServeConfig {
@@ -69,7 +65,6 @@ impl Default for ServeConfig {
             max_wait_us: 2_000,
             queue_capacity: 1024,
             intra_threads: 0,
-            compute_mode: ComputeMode::DenseF32,
         }
     }
 }

@@ -4,11 +4,13 @@
 //! decryption cost **once**, when the encrypted `.fxr` bundle is loaded;
 //! after that the resident weights serve every request. The registry
 //! owns that step for any number of bundles, keyed by name, each on its
-//! own [`ComputeMode`] — a single server mixes FP-exact DenseF32 models
-//! with high-density BitPlane models. `GET /models` reports per-model
-//! storage stats (`bits/weight`, compression ratio) plus the resident
-//! bytes each entry actually keeps under its mode (quantized vs FP
-//! residue), and [`Registry::unload`] releases a model's memory.
+//! own [`ModePolicy`] — a single server mixes FP-exact DenseF32 models,
+//! high-density BitPlane models, and per-layer mixed-mode entries (big
+//! convs on XNOR/popcount, tiny layers FP-exact). `GET /models` reports
+//! per-model storage stats (`bits/weight`, compression ratio), the
+//! resident bytes each entry actually keeps under its modes (quantized
+//! vs FP residue), and the per-layer `layer_modes` assignment;
+//! [`Registry::unload`] releases a model's memory.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -17,7 +19,7 @@ use std::time::Instant;
 
 use anyhow::{Context, ensure, Result};
 
-use crate::inference::{ComputeMode, InferenceModel};
+use crate::inference::{ComputeMode, InferenceModel, ModePolicy};
 use crate::substrate::json::Json;
 
 /// One hosted model plus its serving metadata.
@@ -35,37 +37,49 @@ pub struct ModelEntry {
 /// Name → model map shared between the HTTP front-end and the workers.
 pub struct Registry {
     models: BTreeMap<String, Arc<ModelEntry>>,
-    /// Engine [`Registry::load`] puts new entries on (per-call overrides
-    /// go through [`Registry::load_with_mode`]).
-    default_mode: ComputeMode,
+    /// Policy [`Registry::load`] puts new entries on (per-call overrides
+    /// go through [`Registry::load_with_mode`] /
+    /// [`Registry::load_with_policy`]).
+    default_policy: ModePolicy,
 }
 
 impl Registry {
     /// An empty registry whose `load` uses the DenseF32 engine.
     pub fn new() -> Self {
-        Self::with_default_mode(ComputeMode::DenseF32)
+        Self::with_default_policy(ModePolicy::uniform(ComputeMode::DenseF32))
     }
 
-    /// An empty registry whose `load` uses `mode` — the consumption
-    /// point for `ServeConfig::compute_mode` when a binary builds the
-    /// registry it hands to `Server::start` (see `examples/serve.rs`).
+    /// An empty registry whose `load` uses a uniform `mode` policy.
     pub fn with_default_mode(mode: ComputeMode) -> Self {
-        Registry { models: BTreeMap::new(), default_mode: mode }
+        Self::with_default_policy(ModePolicy::uniform(mode))
     }
 
-    /// The engine `load` puts new entries on.
+    /// An empty registry whose `load` uses `policy` — the consumption
+    /// point for the `--compute-mode` policy grammar when a binary
+    /// builds the registry it hands to `Server::start` (see
+    /// `examples/serve.rs`).
+    pub fn with_default_policy(policy: ModePolicy) -> Self {
+        Registry { models: BTreeMap::new(), default_policy: policy }
+    }
+
+    /// The base engine of the registry's default policy.
     pub fn default_mode(&self) -> ComputeMode {
-        self.default_mode
+        self.default_policy.base
+    }
+
+    /// The policy `load` puts new entries on.
+    pub fn default_policy(&self) -> &ModePolicy {
+        &self.default_policy
     }
 
     /// Load `<stem>.fxr` + sidecars from `dir` and register as `name` on
-    /// the registry's default engine, timing the decrypt-at-load step.
+    /// the registry's default policy, timing the decrypt-at-load step.
     pub fn load(&mut self, name: &str, dir: &Path, stem: &str) -> Result<Arc<ModelEntry>> {
-        self.load_with_mode(name, dir, stem, self.default_mode)
+        self.load_with_policy(name, dir, stem, self.default_policy.clone())
     }
 
-    /// Load and register on an explicit compute mode (BitPlane entries
-    /// keep their quantized layers as packed bit-planes — see
+    /// Load and register on an explicit uniform compute mode (BitPlane
+    /// entries keep their quantized layers as packed bit-planes — see
     /// `inference::bitslice`).
     pub fn load_with_mode(
         &mut self,
@@ -74,9 +88,22 @@ impl Registry {
         stem: &str,
         mode: ComputeMode,
     ) -> Result<Arc<ModelEntry>> {
+        self.load_with_policy(name, dir, stem, ModePolicy::uniform(mode))
+    }
+
+    /// Load and register under a per-layer compute policy (mixed
+    /// entries run big layers on XNOR/popcount and small ones FP-exact;
+    /// `GET /models` reports the per-layer assignment).
+    pub fn load_with_policy(
+        &mut self,
+        name: &str,
+        dir: &Path,
+        stem: &str,
+        policy: ModePolicy,
+    ) -> Result<Arc<ModelEntry>> {
         ensure!(!self.models.contains_key(name), "model '{name}' already registered");
         let t0 = Instant::now();
-        let model = InferenceModel::load_with_mode(dir, stem, mode)?;
+        let model = InferenceModel::load_with_policy(dir, stem, policy)?;
         let load_ms = t0.elapsed().as_secs_f64() * 1e3;
         self.register(name, model, load_ms)
     }
@@ -151,7 +178,19 @@ impl Registry {
                     ("feature_len", Json::num(e.feature_len as f64)),
                     ("bits_per_weight", Json::num(e.model.bits_per_weight)),
                     ("compression_ratio", Json::num(e.model.compression_ratio)),
-                    ("compute_mode", Json::str(e.model.compute_mode().label())),
+                    ("compute_mode", Json::str(e.model.mode_label())),
+                    ("layer_modes",
+                     Json::arr(e.model.layer_modes().into_iter().map(|lm| {
+                         Json::obj(vec![
+                             ("idx", Json::num(lm.idx as f64)),
+                             ("mode", Json::str(lm.mode.label())),
+                             ("act_planes",
+                              lm.mode
+                                  .act_planes()
+                                  .map_or(Json::Null, |m| Json::num(m as f64))),
+                             ("weights", Json::num(lm.weights as f64)),
+                         ])
+                     }))),
                     ("quantized_weight_bytes",
                      Json::num(e.model.quantized_resident_bytes() as f64)),
                     ("fp_weight_bytes",

@@ -67,6 +67,16 @@ impl Json {
 
     /// Flat f32 vector from an array of numbers (the serve request
     /// payload); `None` if not an array or any element is non-numeric.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use flexor::substrate::json;
+    ///
+    /// let v = json::parse("[1, 2.5, -3]").unwrap();
+    /// assert_eq!(v.as_f32_vec(), Some(vec![1.0, 2.5, -3.0]));
+    /// assert_eq!(json::parse(r#"[1, "x"]"#).unwrap().as_f32_vec(), None);
+    /// ```
     pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
         let arr = self.as_arr()?;
         let mut out = Vec::with_capacity(arr.len());

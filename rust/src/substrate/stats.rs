@@ -73,6 +73,15 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
 /// Take several percentiles of a sample at once. Borrows the sample and
 /// sorts a local copy, so callers keep their data (no more `lat.clone()`
 /// at every call site).
+///
+/// # Examples
+///
+/// ```
+/// use flexor::substrate::stats::percentiles;
+///
+/// let lat = vec![4.0, 1.0, 3.0, 2.0]; // unsorted is fine
+/// assert_eq!(percentiles(&lat, &[0.0, 50.0, 100.0]), vec![1.0, 2.5, 4.0]);
+/// ```
 pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
     let mut sorted = xs.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());

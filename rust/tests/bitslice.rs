@@ -1,13 +1,15 @@
 //! Integration tests for the bit-plane XNOR/popcount compute engine
-//! (DESIGN.md §8): whole-bundle equivalence against the binarized
-//! reference composition, thread-count determinism, serving-path
-//! agreement between DenseF32 and BitPlane entries of one registry, and
-//! the resident-bytes accounting `GET /models` reports.
+//! (DESIGN.md §8/§9): whole-bundle equivalence against the binarized
+//! reference composition, thread-count *and* popcount-kernel
+//! determinism, per-layer mixed-mode policies, serving-path agreement
+//! between DenseF32 and BitPlane entries of one registry, and the
+//! resident-bytes / layer-mode accounting `GET /models` reports.
 
 use std::path::PathBuf;
 
 use flexor::coordinator::{export_synthetic_mlp_bundle, export_synthetic_resnet_bundle};
-use flexor::inference::{ComputeMode, InferenceModel};
+use flexor::inference::bitslice::popcount;
+use flexor::inference::{ComputeMode, InferenceModel, ModePolicy};
 use flexor::serve::{http, Registry, ServeConfig, Server};
 use flexor::substrate::json::{self, Json};
 use flexor::substrate::pool::ThreadPool;
@@ -85,6 +87,153 @@ fn bitplane_forward_matches_binarized_reference_across_threads() {
             Some(f) => assert_eq!(*f, got, "resnet: thread count changed the bits"),
         }
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite: the whole-bundle forward is **bit-identical** across every
+/// supported popcount kernel × 1/2/4 pool threads. (The kernel override
+/// is process-global; because kernels are exact-integer-identical, a
+/// concurrent test observing a flipped kernel still computes the same
+/// bits — the very property this test pins.)
+#[test]
+fn forward_bit_identical_across_kernels_and_threads() {
+    let dir = bundle_dir("kernels");
+    export_synthetic_resnet_bundle(&dir, "r", 40, "resnet8", 8, 10).unwrap();
+    let model =
+        InferenceModel::load_with_mode(&dir, "r", ComputeMode::BitPlane { act_planes: 8 })
+            .unwrap();
+    let feat = 8 * 8 * 3;
+    let mut rng = Pcg32::seeded(77);
+    let x: Vec<f32> = (0..2 * feat).map(|_| rng.normal()).collect();
+    let pools = [ThreadPool::new(1), ThreadPool::new(2), ThreadPool::new(4)];
+    let mut first: Option<Vec<f32>> = None;
+    for kern in popcount::available() {
+        assert!(popcount::set_override(Some(kern)), "{} refused", kern.label());
+        for pool in &pools {
+            let got = model.forward_with_pool(&x, 2, pool).unwrap();
+            match &first {
+                None => first = Some(got),
+                Some(f) => assert_eq!(
+                    *f,
+                    got,
+                    "kernel {} × {} threads changed the bits",
+                    kern.label(),
+                    pool.threads()
+                ),
+            }
+        }
+    }
+    popcount::set_override(None);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite: a mixed per-layer policy runs small layers dense and big
+/// layers on bit-planes, labels itself `mixed`, reports per-layer modes
+/// over `GET /models`, sits between the pure modes in resident bytes —
+/// and with a threshold above every layer it degenerates to exactly the
+/// DenseF32 engine (bit-identical logits).
+#[test]
+fn mixed_mode_policy_assigns_layers_and_serves() {
+    let dir = bundle_dir("mixed");
+    export_synthetic_resnet_bundle(&dir, "rn", 44, "resnet8", 8, 10).unwrap();
+    const THRESHOLD: usize = 2000;
+    let policy = ModePolicy::parse("bitplane:24@min=2000,0=dense").unwrap();
+    let mixed = InferenceModel::load_with_policy(&dir, "rn", policy.clone()).unwrap();
+    assert_eq!(mixed.mode_label(), "mixed");
+    let lm = mixed.layer_modes();
+    assert!(lm.iter().any(|l| l.mode.is_bit_plane()), "no bit-plane layers");
+    assert!(lm.iter().any(|l| !l.mode.is_bit_plane()), "no dense layers");
+    assert_eq!(
+        lm.iter().find(|l| l.idx == 0).unwrap().mode,
+        ComputeMode::DenseF32,
+        "explicit override for layer 0 must win"
+    );
+    for l in &lm {
+        if l.idx == 0 {
+            continue;
+        }
+        assert_eq!(
+            l.mode.is_bit_plane(),
+            l.weights >= THRESHOLD,
+            "layer {} ({} weights) on the wrong engine",
+            l.idx,
+            l.weights
+        );
+    }
+
+    // an override naming a layer the bundle doesn't have is an operator
+    // typo — the load must fail loudly, not silently ignore it
+    let bogus = ModePolicy::parse("bitplane,99=dense").unwrap();
+    let err = InferenceModel::load_with_policy(&dir, "rn", bogus).unwrap_err();
+    assert!(err.to_string().contains("99"), "unhelpful error: {err}");
+
+    // resident bytes: pure dense ≥ mixed ≥ pure bitplane
+    let dense = InferenceModel::load(&dir, "rn").unwrap();
+    let bp = InferenceModel::load_with_mode(
+        &dir,
+        "rn",
+        ComputeMode::BitPlane { act_planes: 24 },
+    )
+    .unwrap();
+    let (qd, qm, qb) = (
+        dense.quantized_resident_bytes(),
+        mixed.quantized_resident_bytes(),
+        bp.quantized_resident_bytes(),
+    );
+    assert!(qd > qm && qm > qb, "resident bytes not ordered: {qd} / {qm} / {qb}");
+
+    // threshold above every layer ⇒ pure dense engine, bit-identical
+    let all_dense =
+        InferenceModel::load_with_policy(&dir, "rn", ModePolicy::parse("bitplane@min=1000000").unwrap())
+            .unwrap();
+    assert_eq!(all_dense.mode_label(), "dense");
+    let feat = 8 * 8 * 3;
+    let mut rng = Pcg32::seeded(55);
+    let x: Vec<f32> = (0..2 * feat).map(|_| rng.normal()).collect();
+    assert_eq!(
+        dense.forward(&x, 2).unwrap(),
+        all_dense.forward(&x, 2).unwrap(),
+        "degenerate bitplane policy must be the dense engine exactly"
+    );
+
+    // mixed forward produces finite logits and serves over HTTP with
+    // per-layer modes in /models
+    let mut registry = Registry::new();
+    registry.load_with_policy("mix", &dir, "rn", policy).unwrap();
+    let server = Server::start(
+        "127.0.0.1:0",
+        registry,
+        ServeConfig { workers: 1, intra_threads: 1, ..ServeConfig::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let body = Json::obj(vec![
+        ("features", Json::arr(x[..feat].iter().map(|&v| Json::num(v)))),
+    ])
+    .to_string();
+    let (status, resp) = http::client::request(addr, "POST", "/predict", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let direct = mixed.predict(&x[..feat], 1).unwrap();
+    assert_eq!(
+        json::parse(&resp).unwrap().get("prediction").as_i64().unwrap() as i32,
+        direct[0],
+        "served mixed-mode prediction diverged from direct inference"
+    );
+
+    let (status, models) = http::client::request(addr, "GET", "/models", None).unwrap();
+    assert_eq!(status, 200);
+    let v = json::parse(&models).unwrap();
+    let entry = &v.get("models").as_arr().unwrap()[0];
+    assert_eq!(entry.get("compute_mode").as_str(), Some("mixed"));
+    let listed = entry.get("layer_modes").as_arr().unwrap();
+    assert_eq!(listed.len(), lm.len());
+    for (j, l) in lm.iter().enumerate() {
+        assert_eq!(listed[j].get("idx").as_usize(), Some(l.idx));
+        assert_eq!(listed[j].get("mode").as_str(), Some(l.mode.label()));
+        assert_eq!(listed[j].get("weights").as_usize(), Some(l.weights));
+    }
+
+    server.shutdown();
     std::fs::remove_dir_all(&dir).ok();
 }
 
