@@ -195,6 +195,28 @@ fn main() -> Result<()> {
         mj.get("latency_ms").get("p99").as_f64().unwrap_or(0.0),
     );
 
+    // 7. observability endpoints: the Prometheus exposition and the
+    //    per-layer profile (populated when FLEXOR_TRACE samples forwards)
+    let (status, prom) =
+        http::client::request(addr, "GET", "/metrics?format=prometheus", None)?;
+    anyhow::ensure!(
+        status == 200 && prom.contains("flexor_requests_total"),
+        "prometheus exposition failed ({status})"
+    );
+    let metric_lines =
+        prom.lines().filter(|l| !l.starts_with('#') && !l.is_empty()).count();
+    println!("  prometheus    : {metric_lines} metric lines exposed");
+
+    let (status, prof) = http::client::request(addr, "GET", "/models/served/profile", None)?;
+    anyhow::ensure!(status == 200, "profile endpoint failed ({status}): {prof}");
+    let pj = json::parse(&prof)?;
+    let traced = pj.get("traced_forwards").as_usize().unwrap_or(0);
+    let layers = pj.get("layers").as_arr().map(|a| a.len()).unwrap_or(0);
+    println!(
+        "  profile       : {traced} traced forwards, {layers} layers (trace mode {})",
+        pj.get("trace_mode").as_str().unwrap_or("?")
+    );
+
     server.shutdown();
     Ok(())
 }

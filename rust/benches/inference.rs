@@ -22,10 +22,11 @@ use flexor::inference::bitslice::{self, PlaneStore};
 use flexor::inference::gemm::{gemm_packed_into, Epilogue, PackedB};
 use flexor::inference::{ComputeMode, InferenceModel};
 use flexor::runtime::{Manifest, Runtime};
-use flexor::substrate::bench::{black_box, merge_bench_json, Bench, CaseMeta};
+use flexor::substrate::bench::{black_box, merge_bench_history, merge_bench_json, Bench, CaseMeta};
 use flexor::substrate::json::Json;
 use flexor::substrate::pool::{self, ThreadPool};
 use flexor::substrate::prng::Pcg32;
+use flexor::substrate::trace;
 
 /// Intra-op budget for the headline forward numbers (the acceptance
 /// configuration: batch 8, 4 threads).
@@ -152,6 +153,41 @@ fn main() {
     let mem_ratio = model.quantized_resident_bytes() as f64
         / bp_model.quantized_resident_bytes().max(1) as f64;
     println!("quantized-layer memory ratio dense/bitplane: {mem_ratio:.1}x");
+
+    // ---- stage-tracing overhead A/B (observability contract, §10) ---------
+    // tracing must be free when off and cheap when sampled; the ratio is
+    // tracked in BENCH_infer.json as overhead_trace_sampled_vs_off
+    println!("\n# stage-tracing overhead (forward packed-fused batch={batch})\n");
+    let trace_off = b
+        .run_case(
+            &format!("forward trace=off/resnet20 batch={batch} threads={threads}"),
+            Some(CaseMeta::new("forward_trace_off", &shape, threads)),
+            Some(batch as f64),
+            "ex",
+            || {
+                let _t = trace::scope_with(trace::TraceMode::Off, None);
+                black_box(model.forward(black_box(&xs), batch).unwrap());
+            },
+        )
+        .mean_s;
+    let profile = std::sync::Arc::new(trace::Profile::new());
+    let trace_sampled = b
+        .run_case(
+            &format!("forward trace=sample:8/resnet20 batch={batch} threads={threads}"),
+            Some(CaseMeta::new("forward_trace_sampled", &shape, threads)),
+            Some(batch as f64),
+            "ex",
+            || {
+                let _t = trace::scope_with(trace::TraceMode::Sample(8), Some(profile.clone()));
+                black_box(model.forward(black_box(&xs), batch).unwrap());
+            },
+        )
+        .mean_s;
+    let trace_overhead = trace_sampled / trace_off;
+    println!(
+        "\ntrace sample:8 vs off: {trace_overhead:.3}x ({} forwards traced)",
+        profile.traced_forwards()
+    );
 
     // ---- raw packed-GEMM thread scaling (conv-shaped problem) -------------
     println!("\n# packed GEMM thread scaling\n");
@@ -301,9 +337,18 @@ fn main() {
         ("kernel", Json::str(active_kernel.label())),
         ("speedup", Json::num(fwd_simd_speedup)),
     ]));
-    merge_bench_json(Path::new("BENCH_infer.json"), "inference", Json::arr(records))
+    records.push(Json::obj(vec![
+        ("name", Json::str("overhead trace sampled vs off")),
+        ("op", Json::str("overhead_trace_sampled_vs_off")),
+        ("shape", Json::str(shape.clone())),
+        ("threads", Json::num(threads as f64)),
+        ("ratio", Json::num(trace_overhead)),
+    ]));
+    let records = Json::arr(records);
+    merge_bench_json(Path::new("BENCH_infer.json"), "inference", records.clone())
         .expect("writing BENCH_infer.json");
-    println!("\nwrote BENCH_infer.json (source=inference)");
+    merge_bench_history("inference", records).expect("writing bench_history snapshot");
+    println!("\nwrote BENCH_infer.json (source=inference, mirrored to bench_history/)");
 }
 
 fn bench_trained_bundles(b: &mut Bench, root: &Path) {

@@ -16,7 +16,7 @@ use std::time::Duration;
 use flexor::coordinator::export_synthetic_mlp_bundle;
 use flexor::inference::InferenceModel;
 use flexor::serve::{http, BatchQueue, Registry, ServeConfig, Server};
-use flexor::substrate::bench::{black_box, merge_bench_json, Bench, CaseMeta};
+use flexor::substrate::bench::{black_box, merge_bench_history, merge_bench_json, Bench, CaseMeta};
 use flexor::substrate::json::Json;
 use flexor::substrate::pool;
 use flexor::substrate::prng::Pcg32;
@@ -91,6 +91,7 @@ fn main() {
     println!("\n{}", b.to_json().to_string_pretty());
     merge_bench_json(std::path::Path::new("BENCH_infer.json"), "serve", b.to_json())
         .expect("writing BENCH_infer.json");
-    println!("wrote BENCH_infer.json (source=serve)");
+    merge_bench_history("serve", b.to_json()).expect("writing bench_history snapshot");
+    println!("wrote BENCH_infer.json (source=serve, mirrored to bench_history/)");
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -26,6 +26,7 @@
 //! **and** across `Kernel::{Scalar, Unrolled, Avx2}`.
 
 use crate::substrate::pool::ThreadPool;
+use crate::substrate::trace;
 
 use super::super::gemm::{self, scratch, Epilogue, MR, NR, ROWS_PER_SHARD};
 use super::super::tensor::{self, Tensor};
@@ -65,6 +66,8 @@ pub fn xnor_gemm_into_with_kernel(
     assert_eq!(acts.k(), k, "activation rows are length {}, W expects {k}", acts.k());
     assert_eq!(c.len(), acts.rows() * n, "C is {}x{n}", acts.rows());
     gemm::validate_epilogue(&epi, n, c.len());
+    popcount::count_dispatch(kernel);
+    let _s = trace::span("xnor_gemm");
     pool.run_chunks_mut(c, ROWS_PER_SHARD * n, |_shard, start, c_part| {
         let i0 = start / n;
         let prows = c_part.len() / n;
@@ -123,10 +126,16 @@ pub fn conv2d_bitplane(
     debug_assert_eq!(w.k(), k);
     let rows = n_im * ho * wo;
     let mut col = scratch::take(rows * k);
-    pool.run_chunks_mut(&mut col, ROWS_PER_SHARD * k, |_shard, start, part| {
-        tensor::im2col_rows(&x.data, dims, (kh, kw), stride, start / k, part);
-    });
-    let acts = binarize::binarize_rows(pool, &col, rows, k, act_planes);
+    {
+        let _s = trace::span("im2col");
+        pool.run_chunks_mut(&mut col, ROWS_PER_SHARD * k, |_shard, start, part| {
+            tensor::im2col_rows(&x.data, dims, (kh, kw), stride, start / k, part);
+        });
+    }
+    let acts = {
+        let _s = trace::span("binarize");
+        binarize::binarize_rows(pool, &col, rows, k, act_planes)
+    };
     scratch::give(col);
     let mut out = scratch::take(rows * w.n());
     xnor_gemm_into(pool, &acts, w, epi, &mut out);
@@ -145,7 +154,10 @@ pub fn dense_bitplane(
 ) -> Tensor {
     assert_eq!(x.rank(), 2, "dense input must be (N, In)");
     assert_eq!(x.dims[1], w.k(), "dense in-features mismatch");
-    let acts = binarize::binarize_rows(pool, &x.data, x.dims[0], x.dims[1], act_planes);
+    let acts = {
+        let _s = trace::span("binarize");
+        binarize::binarize_rows(pool, &x.data, x.dims[0], x.dims[1], act_planes)
+    };
     let mut out = scratch::take(x.dims[0] * w.n());
     xnor_gemm_into(pool, &acts, w, epi, &mut out);
     acts.recycle();

@@ -31,7 +31,7 @@
 //! benchmarking and [`set_override`] for in-process forcing (benches,
 //! tests).
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::OnceLock;
 
 use anyhow::{bail, Result};
@@ -169,6 +169,28 @@ pub fn set_override(k: Option<Kernel>) -> bool {
             true
         }
     }
+}
+
+/// Cumulative XNOR-GEMM dispatches per kernel (indexed by `code - 1`).
+/// Bumped once per GEMM call, not per `panel_dot`, so the counter never
+/// contends on the inner-loop cache lines.
+static DISPATCHES: [AtomicU64; 3] =
+    [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+
+/// Record one XNOR-GEMM dispatch through `kernel` (called by
+/// `bitslice::gemm` at GEMM granularity).
+pub fn count_dispatch(kernel: Kernel) {
+    DISPATCHES[code(kernel) as usize - 1].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Cumulative dispatch counts for every kernel (including never-used
+/// ones, so exposition rows are stable), in `[Scalar, Unrolled, Avx2]`
+/// order.
+pub fn dispatch_counts() -> Vec<(Kernel, u64)> {
+    [Kernel::Scalar, Kernel::Unrolled, Kernel::Avx2]
+        .into_iter()
+        .map(|k| (k, DISPATCHES[code(k) as usize - 1].load(Ordering::Relaxed)))
+        .collect()
 }
 
 fn detect() -> Kernel {

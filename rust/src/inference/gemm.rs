@@ -17,6 +17,7 @@
 //! matter the thread budget.
 
 use crate::substrate::pool::ThreadPool;
+use crate::substrate::trace;
 
 use super::tensor::{self, Tensor};
 
@@ -142,6 +143,10 @@ pub fn gemm_packed_into(
     assert_eq!(c.len(), m * b.n, "C is {m}x{}", b.n);
     validate_epilogue(&epi, b.n, c.len());
     let n = b.n;
+    // One span for the whole sharded GEMM: A-packing and the fused
+    // epilogue happen inside the tile loop, so they are part of this
+    // stage by construction (DESIGN.md §10).
+    let _s = trace::span("gemm");
     pool.run_chunks_mut(c, ROWS_PER_SHARD * n, |_shard, start, c_part| {
         let i0 = start / n;
         let rows = c_part.len() / n;
@@ -297,9 +302,12 @@ pub fn conv2d_fused(
     let k = kh * kw * ci;
     let rows = n * ho * wo;
     let mut col = scratch::take(rows * k);
-    pool.run_chunks_mut(&mut col, ROWS_PER_SHARD * k, |_shard, start, part| {
-        tensor::im2col_rows(&x.data, dims, (kh, kw), stride, start / k, part);
-    });
+    {
+        let _s = trace::span("im2col");
+        pool.run_chunks_mut(&mut col, ROWS_PER_SHARD * k, |_shard, start, part| {
+            tensor::im2col_rows(&x.data, dims, (kh, kw), stride, start / k, part);
+        });
+    }
     let out = gemm_packed(pool, &col, rows, k, w, epi);
     scratch::give(col);
     Tensor::new(vec![n, ho, wo, w.n()], out)

@@ -42,6 +42,7 @@ use crate::flexor::Decryptor;
 use crate::runtime::initbin;
 use crate::substrate::json::{self, Json};
 use crate::substrate::pool::{self, ThreadPool};
+use crate::substrate::trace;
 
 use super::bitslice::{self, ComputeMode, ModePolicy, PlaneStore};
 use super::gemm::{self, conv2d_fused, dense_fused, Epilogue, PackedB};
@@ -468,6 +469,19 @@ impl InferenceModel {
         self.qshapes.contains_key(&idx)
     }
 
+    /// Trace label for quantized layer `idx`: `q<idx>:<mode>`, with the
+    /// active-plane count and popcount kernel appended on the bit-plane
+    /// engine (`q3:bitplane1@avx2`). Only built inside a traced scope.
+    fn layer_label(&self, idx: usize) -> String {
+        match self.layer_mode(idx) {
+            ComputeMode::DenseF32 => format!("q{idx}:dense"),
+            ComputeMode::BitPlane { act_planes } => format!(
+                "q{idx}:bitplane{act_planes}@{}",
+                bitslice::popcount::active().label()
+            ),
+        }
+    }
+
     /// Quantized conv → epilogue on the layer's assigned engine.
     fn qconv(
         &self,
@@ -477,6 +491,7 @@ impl InferenceModel {
         stride: usize,
         epi: Epilogue<'_>,
     ) -> Result<Tensor> {
+        let _l = trace::layer_span(|| self.layer_label(idx));
         match self.layer_mode(idx) {
             ComputeMode::DenseF32 => {
                 let (w, g) = self.qpacked(idx)?;
@@ -501,6 +516,7 @@ impl InferenceModel {
         idx: usize,
         epi: Epilogue<'_>,
     ) -> Result<Tensor> {
+        let _l = trace::layer_span(|| self.layer_label(idx));
         match self.layer_mode(idx) {
             ComputeMode::DenseF32 => {
                 let (w, _) = self.qpacked(idx)?;
@@ -571,6 +587,9 @@ impl InferenceModel {
     /// pin exact thread counts (both engines are bit-identical across
     /// pool sizes).
     pub fn forward_with_pool(&self, x: &[f32], n: usize, pool: &ThreadPool) -> Result<Vec<f32>> {
+        // End-to-end span: the per-layer spans below must sum to (nearly)
+        // this — the profile endpoint's coverage contract (DESIGN.md §10).
+        let _f = trace::span("forward");
         match self.model.as_str() {
             m if m.starts_with("resnet") => self.forward_resnet(x, n, pool),
             "lenet5" => self.forward_lenet(x, n, pool),
@@ -622,6 +641,7 @@ impl InferenceModel {
     }
 
     fn head_fused(&self, pooled: Tensor, pool: &ThreadPool) -> Result<Vec<f32>> {
+        let _l = trace::layer_span(|| "head".to_string());
         let head = self.engine.head_packed.as_ref().context("missing FP head")?;
         let head_b = self.engine.head_b.as_ref().context("missing head bias")?;
         let logits =
@@ -640,8 +660,11 @@ impl InferenceModel {
         let sd = &self.engine.stem.as_ref().unwrap().dims;
         let mut bn_i = 0usize;
         let mut q_i = 0usize;
-        let mut cur = conv2d_fused(pool, &xin, stem, (sd[0], sd[1], sd[2]), 1,
-                                   self.bn(bn_i)?.affine(true));
+        let mut cur = {
+            let _l = trace::layer_span(|| "stem".to_string());
+            conv2d_fused(pool, &xin, stem, (sd[0], sd[1], sd[2]), 1,
+                         self.bn(bn_i)?.affine(true))
+        };
         bn_i += 1;
         gemm::scratch::give(xin.data);
 
@@ -688,7 +711,10 @@ impl InferenceModel {
                 c_in = wd;
             }
         }
-        let pooled = tensor::avg_pool_global(&cur);
+        let pooled = {
+            let _l = trace::layer_span(|| "pool".to_string());
+            tensor::avg_pool_global(&cur)
+        };
         gemm::scratch::give(cur.data);
         self.head_fused(pooled, pool)
     }
@@ -701,7 +727,10 @@ impl InferenceModel {
             let conv = self.qconv(pool, &t, i, 1,
                                   Epilogue::Bias { bias: self.lenet_bias(i)?, relu: true })?;
             gemm::scratch::give(std::mem::replace(&mut t, conv).data);
-            let pooled = tensor::max_pool2(&t);
+            let pooled = {
+                let _l = trace::layer_span(|| "pool".to_string());
+                tensor::max_pool2(&t)
+            };
             gemm::scratch::give(std::mem::replace(&mut t, pooled).data);
         }
 

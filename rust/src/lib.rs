@@ -44,7 +44,10 @@
 //!
 //! Runtime dials: `FLEXOR_THREADS` (intra-op pool size),
 //! `FLEXOR_COMPUTE` (compute-mode policy, e.g. `bitplane:8@min=4096`),
-//! `FLEXOR_SIMD` (`scalar|unrolled|avx2` popcount kernel override).
+//! `FLEXOR_SIMD` (`scalar|unrolled|avx2` popcount kernel override),
+//! `FLEXOR_TRACE` (`off|sample:N|all` stage tracing — DESIGN.md §10),
+//! `FLEXOR_LOG` (`error|warn|info|debug` structured-log threshold),
+//! `FLEXOR_SLOW_MS` (slow-request warning threshold).
 //! See `README.md` for the full quickstart and the endpoint table.
 
 pub mod substrate;

@@ -5,6 +5,7 @@
 //! flexor train <config.json|artifact> run a training experiment
 //! flexor analyze --n-out 20 --n-in 8  M⊕ encryption-quality report
 //! flexor infer <bundle-dir> <stem>    load a bundle, run a smoke batch
+//! flexor profile <bundle-dir> <stem>  per-layer stage timing table
 //! ```
 
 use std::path::Path;
@@ -30,7 +31,7 @@ fn run() -> Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
         println!("flexor {} — FleXOR trainable fractional quantization", flexor::VERSION);
-        println!("subcommands: list | train | analyze | infer  (--help per command)");
+        println!("subcommands: list | train | analyze | infer | profile  (--help per command)");
         return Ok(());
     }
     let cmd = argv.remove(0);
@@ -39,7 +40,10 @@ fn run() -> Result<()> {
         "train" => cmd_train(argv),
         "analyze" => cmd_analyze(argv),
         "infer" => cmd_infer(argv),
-        other => bail!("unknown subcommand '{other}' (try: list, train, analyze, infer)"),
+        "profile" => cmd_profile(argv),
+        other => {
+            bail!("unknown subcommand '{other}' (try: list, train, analyze, infer, profile)")
+        }
     }
 }
 
@@ -196,6 +200,80 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
     println!(
         "top1 {}/{} ({:.1}%), {:.2} ms/example",
         correct, n, 100.0 * correct as f64 / n as f64, dt * 1e3 / n as f64
+    );
+    Ok(())
+}
+
+fn cmd_profile(argv: Vec<String>) -> Result<()> {
+    use flexor::substrate::trace;
+
+    let a = Args::new(
+        "flexor profile",
+        "per-layer stage timing for a deployment bundle (trace-instrumented forwards)",
+    )
+    .positional("dir", "bundle directory")
+    .positional("stem", "bundle stem (config name)")
+    .flag("dataset", "dataset for the profiled batches", Some("shapes32"))
+    .flag("batch", "examples per forward", Some("8"))
+    .flag("iters", "profiled forward passes", Some("10"))
+    .flag(
+        "compute-mode",
+        "policy: <mode>[@min=<weights>][,<idx>=<mode>]* with mode = dense | bitplane | bitplane:<m> (default: FLEXOR_COMPUTE env, else dense)",
+        Some(""),
+    )
+    .parse_from(argv)
+    .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let policy = match a.get("compute-mode") {
+        "" => flexor::inference::ModePolicy::default_from_env()?,
+        s => flexor::inference::ModePolicy::parse(s)?,
+    };
+    let model = flexor::inference::InferenceModel::load_with_policy(
+        Path::new(a.pos(0).unwrap()),
+        a.pos(1).unwrap(),
+        policy,
+    )?;
+    let ds = data::by_name(a.get("dataset"), 0)?;
+    let n = a.get_usize("batch").max(1);
+    let iters = a.get_usize("iters").max(1);
+    let (xs, _ys) = data::Batcher::eval_set(ds.as_ref(), data::Split::Test, n);
+
+    model.predict(&xs, n)?; // warm-up (pool build, scratch arenas) untraced
+
+    let profile = std::sync::Arc::new(trace::Profile::new());
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let _t = trace::scope_with(trace::TraceMode::All, Some(profile.clone()));
+        model.predict(&xs, n)?;
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    println!(
+        "{} — {} forwards × batch {} ({} mode, {} simd kernel)",
+        model.model,
+        iters,
+        n,
+        model.mode_label(),
+        flexor::inference::bitslice::popcount::active().label()
+    );
+    println!(
+        "{:<26} {:<10} {:>7} {:>12} {:>10}",
+        "layer", "stage", "count", "total ms", "mean µs"
+    );
+    for r in profile.rows() {
+        let layer = if r.layer.is_empty() { "-" } else { r.layer.as_str() };
+        println!(
+            "{:<26} {:<10} {:>7} {:>12.3} {:>10.1}",
+            layer,
+            r.stage,
+            r.count,
+            r.total_ns as f64 / 1e6,
+            r.total_ns as f64 / r.count.max(1) as f64 / 1e3
+        );
+    }
+    println!(
+        "traced {} forwards in {:.1} ms wall",
+        profile.traced_forwards(),
+        wall_ms
     );
     Ok(())
 }

@@ -5,11 +5,22 @@
 //!   (`model` optional when exactly one model is registered). The request
 //!   is admitted to the batching queue and the handler blocks on its
 //!   one-shot channel; reply `{"model", "prediction", "batch_size",
-//!   "latency_ms"}`.
+//!   "latency_ms", "request_id"}`.
 //! * `GET /models`  — registry listing with storage stats.
 //! * `GET /metrics` — latency percentiles, queue depth, served-batch-size
-//!   histogram, throughput ([`ServeMetrics::snapshot`]).
+//!   histogram, throughput ([`ServeMetrics::snapshot`]); add
+//!   `?format=prometheus` for the text exposition
+//!   ([`ServeMetrics::prometheus`] plus pool/kernel counters).
+//! * `GET /models/<name>/profile` — per-layer stage timing aggregated
+//!   from traced forwards ([`trace::Profile`]); empty until the trace
+//!   dial (`FLEXOR_TRACE` / [`ServeConfig::trace`]) samples a forward in.
 //! * `GET /healthz` — liveness.
+//!
+//! Every request carries an id: `X-Request-Id` is honored when the
+//! client sends one (sanitized), generated otherwise, echoed back as a
+//! response header, and included in predict/error JSON bodies — so a
+//! client-reported failure can be joined against the server's
+//! structured log lines ([`trace::log`]).
 //!
 //! Overload degrades to fast `503`s (non-blocking admission); shutdown is
 //! graceful: stop accepting, drain the queue, join the workers.
@@ -21,7 +32,7 @@
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, OnceLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -31,8 +42,13 @@ use super::metrics::ServeMetrics;
 use super::queue::{BatchQueue, PushError};
 use super::registry::Registry;
 use super::worker::{Request, WorkerPool};
+use crate::inference::bitslice::popcount;
 use crate::substrate::json::{self, Json};
 use crate::substrate::pool;
+use crate::substrate::trace::{self, Level};
+
+const CT_JSON: &str = "application/json";
+const CT_PROM: &str = "text/plain; version=0.0.4";
 
 /// Serving policy knobs. Compute-engine selection is *not* here: it is
 /// a property of the registry the caller builds and hands to
@@ -55,6 +71,10 @@ pub struct ServeConfig {
     /// `available_parallelism / workers`, so worker-level and GEMM-level
     /// parallelism compose instead of oversubscribing the machine.
     pub intra_threads: usize,
+    /// Stage-tracing dial for served forwards. `None` (default) defers
+    /// to the `FLEXOR_TRACE` env var; tests and embedders set an explicit
+    /// mode so they never touch process-global env state.
+    pub trace: Option<trace::TraceMode>,
 }
 
 impl Default for ServeConfig {
@@ -65,6 +85,7 @@ impl Default for ServeConfig {
             max_wait_us: 2_000,
             queue_capacity: 1024,
             intra_threads: 0,
+            trace: None,
         }
     }
 }
@@ -98,11 +119,12 @@ impl Server {
         if !pool::configure_global(intra) && pool::global().threads() != intra {
             // the pool is built once per process; a budget requested after
             // that cannot apply, so say so instead of silently ignoring it
-            eprintln!(
-                "serve: intra-op pool already sized to {} threads; requested {intra} ignored",
-                pool::global().threads()
-            );
+            trace::log(Level::Warn, "pool_already_sized", &[
+                ("threads", Json::num(pool::global().threads() as f64)),
+                ("requested", Json::num(intra as f64)),
+            ]);
         }
+        let trace_mode = cfg.trace.unwrap_or_else(trace::env_mode);
         let listener = TcpListener::bind(addr).context("binding serve socket")?;
         let local = listener.local_addr()?;
 
@@ -115,7 +137,16 @@ impl Server {
             metrics.clone(),
             cfg.max_batch,
             Duration::from_micros(cfg.max_wait_us),
+            Some(trace_mode),
         );
+
+        trace::log(Level::Info, "serve_started", &[
+            ("addr", Json::str(local.to_string())),
+            ("workers", Json::num(cfg.workers as f64)),
+            ("intra_threads", Json::num(pool::global().threads() as f64)),
+            ("models", Json::num(registry.len() as f64)),
+            ("trace", Json::str(trace_mode.label())),
+        ]);
 
         let shutdown = Arc::new(AtomicBool::new(false));
         let accept_handle = {
@@ -136,6 +167,7 @@ impl Server {
                             metrics: metrics.clone(),
                             queue: queue.clone(),
                             shutdown: shutdown.clone(),
+                            trace_mode,
                         };
                         thread::Builder::new()
                             .name("serve-conn".to_string())
@@ -174,6 +206,9 @@ impl Server {
         self.accept_handle.join().ok();
         self.queue.close();
         self.workers.join();
+        trace::log(Level::Info, "serve_stopped", &[
+            ("addr", Json::str(self.addr.to_string())),
+        ]);
     }
 }
 
@@ -182,11 +217,25 @@ struct ConnCtx {
     metrics: Arc<ServeMetrics>,
     queue: Arc<BatchQueue<Request>>,
     shutdown: Arc<AtomicBool>,
+    trace_mode: trace::TraceMode,
 }
 
 const MAX_BODY_BYTES: usize = 8 << 20;
 const MAX_HEADER_LINES: usize = 64;
 const MAX_LINE_BYTES: usize = 8 << 10;
+
+/// Requests slower than this log a `slow_request` warning
+/// (`FLEXOR_SLOW_MS`, default 1000).
+fn slow_ms() -> f64 {
+    static SLOW_MS: OnceLock<f64> = OnceLock::new();
+    *SLOW_MS.get_or_init(|| {
+        std::env::var("FLEXOR_SLOW_MS")
+            .ok()
+            .and_then(|v| v.trim().parse::<f64>().ok())
+            .filter(|v| *v > 0.0)
+            .unwrap_or(1000.0)
+    })
+}
 
 /// `read_line` with a hard length cap, so a newline-free stream cannot
 /// grow memory unboundedly. A line that fills the cap without a trailing
@@ -204,7 +253,24 @@ struct HttpRequest {
     method: String,
     path: String,
     keep_alive: bool,
+    /// Client-supplied `X-Request-Id`, sanitized; `None` → generate one.
+    request_id: Option<String>,
     body: String,
+}
+
+/// Clamp a client-supplied request id to something log-safe: keep
+/// `[A-Za-z0-9._-]`, cap at 64 chars, drop the rest.
+fn sanitize_rid(v: &str) -> Option<String> {
+    let cleaned: String = v
+        .chars()
+        .filter(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+        .take(64)
+        .collect();
+    if cleaned.is_empty() {
+        None
+    } else {
+        Some(cleaned)
+    }
 }
 
 fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
@@ -218,13 +284,44 @@ fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
             Ok(Some(r)) => r,
             Ok(None) => return, // clean EOF / idle timeout
             Err(msg) => {
-                write_response(&mut writer, 400, &err_json(&msg), false).ok();
+                let rid = trace::next_request_id();
+                trace::log(Level::Warn, "bad_request", &[
+                    ("request_id", Json::str(rid.clone())),
+                    ("error", Json::str(msg.clone())),
+                ]);
+                write_response(&mut writer, 400, &err_json(&msg, Some(&rid)), CT_JSON, Some(&rid), false)
+                    .ok();
                 return;
             }
         };
+        let rid = req.request_id.clone().unwrap_or_else(trace::next_request_id);
         let keep_alive = req.keep_alive && !ctx.shutdown.load(Ordering::SeqCst);
-        let (status, body) = route(&req, ctx);
-        if write_response(&mut writer, status, &body, keep_alive).is_err() || !keep_alive {
+        let t0 = Instant::now();
+        let (status, body, ctype) = route(&req, ctx, &rid);
+        let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let fields = |extra: &mut Vec<(&'static str, Json)>| {
+            let mut f = vec![
+                ("request_id", Json::str(rid.clone())),
+                ("method", Json::str(req.method.clone())),
+                ("path", Json::str(req.path.clone())),
+                ("status", Json::num(status as f64)),
+                ("latency_ms", Json::num(latency_ms)),
+            ];
+            f.append(extra);
+            f
+        };
+        if status >= 500 {
+            trace::log(Level::Error, "request_failed", &fields(&mut vec![]));
+        } else if latency_ms > slow_ms() {
+            trace::log(Level::Warn, "slow_request", &fields(&mut vec![
+                ("threshold_ms", Json::num(slow_ms())),
+            ]));
+        } else {
+            trace::log(Level::Debug, "request", &fields(&mut vec![]));
+        }
+        if write_response(&mut writer, status, &body, ctype, Some(&rid), keep_alive).is_err()
+            || !keep_alive
+        {
             return;
         }
     }
@@ -251,6 +348,7 @@ fn read_request<R: BufRead>(r: &mut R) -> std::result::Result<Option<HttpRequest
 
     let mut content_length = 0usize;
     let mut keep_alive = version != "HTTP/1.0";
+    let mut request_id: Option<String> = None;
     for _ in 0..MAX_HEADER_LINES {
         let mut h = String::new();
         match read_line_capped(r, &mut h) {
@@ -273,7 +371,7 @@ fn read_request<R: BufRead>(r: &mut R) -> std::result::Result<Option<HttpRequest
             } else {
                 String::new()
             };
-            return Ok(Some(HttpRequest { method, path, keep_alive, body }));
+            return Ok(Some(HttpRequest { method, path, keep_alive, request_id, body }));
         }
         let lower = t.to_ascii_lowercase();
         if let Some(v) = lower.strip_prefix("content-length:") {
@@ -287,28 +385,134 @@ fn read_request<R: BufRead>(r: &mut R) -> std::result::Result<Option<HttpRequest
                 "keep-alive" => keep_alive = true,
                 _ => {}
             }
+        } else if lower.starts_with("x-request-id:") {
+            // take the value from the original line — lowercasing is
+            // length-preserving for ASCII, so the offset is the same —
+            // to keep the client's id case intact
+            request_id = sanitize_rid(t["x-request-id:".len()..].trim());
         }
     }
     Err("too many header lines".to_string())
 }
 
-fn route(req: &HttpRequest, ctx: &ConnCtx) -> (u16, String) {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/predict") => handle_predict(&req.body, ctx),
-        ("GET", "/models") => (200, ctx.registry.to_json().to_string()),
-        ("GET", "/metrics") => (200, ctx.metrics.snapshot(ctx.queue.len()).to_string()),
-        ("GET", "/healthz") => (200, r#"{"status":"ok"}"#.to_string()),
-        ("POST", _) | ("GET", _) => (404, err_json(&format!("no route {}", req.path))),
-        _ => (405, err_json(&format!("method {} not allowed", req.method))),
+fn route(req: &HttpRequest, ctx: &ConnCtx, rid: &str) -> (u16, String, &'static str) {
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.path.as_str(), ""),
+    };
+    let json3 = |(status, body): (u16, String)| (status, body, CT_JSON);
+    match (req.method.as_str(), path) {
+        ("POST", "/predict") => json3(handle_predict(&req.body, ctx, rid)),
+        ("GET", "/models") => (200, ctx.registry.to_json().to_string(), CT_JSON),
+        ("GET", "/metrics") => {
+            if query.split('&').any(|kv| kv == "format=prometheus") {
+                (200, prometheus_body(ctx), CT_PROM)
+            } else {
+                (200, ctx.metrics.snapshot(ctx.queue.len()).to_string(), CT_JSON)
+            }
+        }
+        ("GET", "/healthz") => (200, r#"{"status":"ok"}"#.to_string(), CT_JSON),
+        ("GET", p) => {
+            if let Some(name) =
+                p.strip_prefix("/models/").and_then(|s| s.strip_suffix("/profile"))
+            {
+                return json3(handle_profile(name, ctx, rid));
+            }
+            (404, err_json(&format!("no route {p}"), Some(rid)), CT_JSON)
+        }
+        ("POST", p) => (404, err_json(&format!("no route {p}"), Some(rid)), CT_JSON),
+        _ => (405, err_json(&format!("method {} not allowed", req.method), Some(rid)), CT_JSON),
     }
 }
 
-fn handle_predict(body: &str, ctx: &ConnCtx) -> (u16, String) {
-    // rejections never reach a worker; count them so /metrics shows load
-    // shedding and client errors instead of a silent flat line
+/// `GET /metrics?format=prometheus`: the serve metrics exposition plus
+/// process-wide compute counters (intra-op pool, popcount kernel
+/// dispatch) and the active trace mode.
+fn prometheus_body(ctx: &ConnCtx) -> String {
+    let mut out = ctx.metrics.prometheus(ctx.queue.len());
+    let p = pool::global();
+    let c = p.counters();
+    out.push_str(&format!(
+        "# HELP flexor_pool_threads Intra-op compute threads (incl. callers).\n\
+         # TYPE flexor_pool_threads gauge\n\
+         flexor_pool_threads {}\n",
+        p.threads()
+    ));
+    out.push_str(&format!(
+        "# HELP flexor_pool_jobs_total Jobs submitted to the intra-op pool.\n\
+         # TYPE flexor_pool_jobs_total counter\n\
+         flexor_pool_jobs_total {}\n",
+        c.jobs
+    ));
+    out.push_str(&format!(
+        "# HELP flexor_pool_shards_total Shards dispatched across all jobs.\n\
+         # TYPE flexor_pool_shards_total counter\n\
+         flexor_pool_shards_total {}\n",
+        c.shards
+    ));
+    out.push_str(&format!(
+        "# HELP flexor_pool_job_wait_seconds_total Summed submit-to-first-claim wait.\n\
+         # TYPE flexor_pool_job_wait_seconds_total counter\n\
+         flexor_pool_job_wait_seconds_total {}\n",
+        c.job_wait_ns as f64 / 1e9
+    ));
+    out.push_str(
+        "# HELP flexor_pool_busy_seconds_total Per-thread shard compute time (traced scopes only).\n\
+         # TYPE flexor_pool_busy_seconds_total counter\n",
+    );
+    for (i, &ns) in c.busy_ns.iter().enumerate() {
+        let thread = if i == 0 { "caller".to_string() } else { format!("worker-{}", i - 1) };
+        out.push_str(&format!(
+            "flexor_pool_busy_seconds_total{{thread=\"{thread}\"}} {}\n",
+            ns as f64 / 1e9
+        ));
+    }
+    out.push_str(
+        "# HELP flexor_popcount_dispatch_total XNOR-GEMM calls per popcount kernel.\n\
+         # TYPE flexor_popcount_dispatch_total counter\n",
+    );
+    for (k, n) in popcount::dispatch_counts() {
+        out.push_str(&format!(
+            "flexor_popcount_dispatch_total{{kernel=\"{}\"}} {n}\n",
+            k.label()
+        ));
+    }
+    out.push_str(&format!(
+        "# HELP flexor_trace_mode Active trace sampling mode (1 = this mode).\n\
+         # TYPE flexor_trace_mode gauge\n\
+         flexor_trace_mode{{mode=\"{}\"}} 1\n",
+        ctx.trace_mode.label()
+    ));
+    out
+}
+
+/// `GET /models/<name>/profile`: the model's aggregated per-layer stage
+/// timing, annotated with its compute mode and the server's trace dial.
+fn handle_profile(name: &str, ctx: &ConnCtx, rid: &str) -> (u16, String) {
+    match ctx.registry.get(name) {
+        Some(e) => {
+            let mut j = e.profile.to_json();
+            j.set("model", Json::str(name));
+            j.set("compute_mode", Json::str(e.model.mode_label()));
+            j.set("trace_mode", Json::str(ctx.trace_mode.label()));
+            (200, j.to_string())
+        }
+        None => (404, err_json(&format!("unknown model '{name}'"), Some(rid))),
+    }
+}
+
+fn handle_predict(body: &str, ctx: &ConnCtx, rid: &str) -> (u16, String) {
+    // rejections never reach a worker; count + log them so /metrics and
+    // the structured log show load shedding and client errors instead of
+    // a silent flat line
     let reject = |status: u16, msg: &str| {
         ctx.metrics.record_rejected();
-        (status, err_json(msg))
+        trace::log(Level::Warn, "request_rejected", &[
+            ("request_id", Json::str(rid)),
+            ("status", Json::num(status as f64)),
+            ("reason", Json::str(msg)),
+        ]);
+        (status, err_json(msg, Some(rid)))
     };
     let parsed = match json::parse(body) {
         Ok(v) => v,
@@ -365,19 +569,24 @@ fn handle_predict(body: &str, ctx: &ConnCtx) -> (u16, String) {
                 ("prediction", Json::num(p.class as f64)),
                 ("batch_size", Json::num(p.batch_size as f64)),
                 ("latency_ms", Json::num(p.latency_ms)),
+                ("request_id", Json::str(rid)),
             ])
             .to_string(),
         ),
-        Ok(Err(msg)) => (500, err_json(&msg)),
-        Err(mpsc::RecvTimeoutError::Timeout) => (504, err_json("inference timed out")),
+        Ok(Err(msg)) => (500, err_json(&msg, Some(rid))),
+        Err(mpsc::RecvTimeoutError::Timeout) => (504, err_json("inference timed out", Some(rid))),
         Err(mpsc::RecvTimeoutError::Disconnected) => {
-            (500, err_json("worker dropped the request"))
+            (500, err_json("worker dropped the request", Some(rid)))
         }
     }
 }
 
-fn err_json(msg: &str) -> String {
-    Json::obj(vec![("error", Json::str(msg))]).to_string()
+fn err_json(msg: &str, rid: Option<&str>) -> String {
+    let mut o = Json::obj(vec![("error", Json::str(msg))]);
+    if let Some(r) = rid {
+        o.set("request_id", Json::str(r));
+    }
+    o.to_string()
 }
 
 fn reason(status: u16) -> &'static str {
@@ -393,14 +602,26 @@ fn reason(status: u16) -> &'static str {
     }
 }
 
-fn write_response<W: Write>(w: &mut W, status: u16, body: &str, keep_alive: bool) -> std::io::Result<()> {
+fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    body: &str,
+    content_type: &str,
+    request_id: Option<&str>,
+    keep_alive: bool,
+) -> std::io::Result<()> {
     // one write_all per response: formatting straight into a NODELAY
     // socket would issue a syscall (and possibly a packet) per fragment
+    let rid_header = request_id
+        .map(|r| format!("X-Request-Id: {r}\r\n"))
+        .unwrap_or_default();
     let msg = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{}Connection: {}\r\n\r\n{}",
         status,
         reason(status),
+        content_type,
         body.len(),
+        rid_header,
         if keep_alive { "keep-alive" } else { "close" },
         body
     );
@@ -421,12 +642,27 @@ pub mod client {
         path: &str,
         body: Option<&str>,
     ) -> Result<(u16, String)> {
+        let (status, _headers, body) = request_with_headers(addr, method, path, &[], body)?;
+        Ok((status, body))
+    }
+
+    /// [`request`] with extra request headers; returns
+    /// `(status, response_headers, body)` with header names lower-cased.
+    pub fn request_with_headers(
+        addr: SocketAddr,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: Option<&str>,
+    ) -> Result<(u16, Vec<(String, String)>, String)> {
         let mut stream = TcpStream::connect(addr).context("connecting to server")?;
         stream.set_nodelay(true).ok();
         stream.set_read_timeout(Some(Duration::from_secs(60)))?;
         let b = body.unwrap_or("");
+        let extra: String =
+            headers.iter().map(|(k, v)| format!("{k}: {v}\r\n")).collect();
         let msg = format!(
-            "{method} {path} HTTP/1.1\r\nHost: flexor-serve\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{b}",
+            "{method} {path} HTTP/1.1\r\nHost: flexor-serve\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{extra}Connection: close\r\n\r\n{b}",
             b.len()
         );
         stream.write_all(msg.as_bytes())?;
@@ -442,6 +678,7 @@ pub mod client {
             .parse()
             .context("non-numeric status code")?;
         let mut content_length = 0usize;
+        let mut resp_headers = Vec::new();
         loop {
             let mut h = String::new();
             if reader.read_line(&mut h)? == 0 {
@@ -451,6 +688,9 @@ pub mod client {
             if t.is_empty() {
                 break;
             }
+            if let Some((name, value)) = t.split_once(':') {
+                resp_headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+            }
             let lower = t.to_ascii_lowercase();
             if let Some(v) = lower.strip_prefix("content-length:") {
                 content_length = v.trim().parse().context("bad content-length")?;
@@ -458,14 +698,15 @@ pub mod client {
         }
         let mut buf = vec![0u8; content_length];
         reader.read_exact(&mut buf)?;
-        Ok((status, String::from_utf8(buf).context("non-utf8 response body")?))
+        Ok((status, resp_headers, String::from_utf8(buf).context("non-utf8 response body")?))
     }
 }
 
 #[cfg(test)]
 mod tests {
     //! Wire-format units; full registry → queue → worker → HTTP round
-    //! trips live in `rust/tests/serve.rs` (they need a model bundle).
+    //! trips live in `rust/tests/serve.rs` and `rust/tests/observe.rs`
+    //! (they need a model bundle).
     use super::*;
     use std::io::Cursor;
 
@@ -483,6 +724,7 @@ mod tests {
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/predict");
         assert!(req.keep_alive); // HTTP/1.1 default
+        assert!(req.request_id.is_none());
         assert_eq!(req.body, "hello world");
     }
 
@@ -498,6 +740,33 @@ mod tests {
             .unwrap()
             .unwrap();
         assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn request_id_header_parsed_case_preserving() {
+        let req = parse_str("GET /metrics HTTP/1.1\r\nX-Request-ID: My-Id.01\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.request_id.as_deref(), Some("My-Id.01"));
+        // hostile values are stripped, not echoed verbatim
+        let req = parse_str(
+            "GET /metrics HTTP/1.1\r\nX-Request-Id: a b\"c\u{7f}d\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.request_id.as_deref(), Some("abcd"));
+        let req = parse_str("GET /metrics HTTP/1.1\r\nX-Request-Id: \"\"\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(req.request_id.is_none());
+    }
+
+    #[test]
+    fn sanitize_rid_caps_length() {
+        let long = "x".repeat(200);
+        assert_eq!(sanitize_rid(&long).unwrap().len(), 64);
+        assert_eq!(sanitize_rid("ok-1_2.3"), Some("ok-1_2.3".to_string()));
+        assert_eq!(sanitize_rid("<>!"), None);
     }
 
     #[test]
@@ -524,12 +793,24 @@ mod tests {
     #[test]
     fn response_wire_format() {
         let mut out = Vec::new();
-        write_response(&mut out, 404, r#"{"error":"x"}"#, false).unwrap();
+        write_response(&mut out, 404, r#"{"error":"x"}"#, CT_JSON, Some("rid-1"), false)
+            .unwrap();
         let s = String::from_utf8(out).unwrap();
         assert!(s.starts_with("HTTP/1.1 404 Not Found\r\n"));
+        assert!(s.contains("Content-Type: application/json\r\n"));
         assert!(s.contains("Content-Length: 13\r\n"));
+        assert!(s.contains("X-Request-Id: rid-1\r\n"));
         assert!(s.contains("Connection: close\r\n"));
         assert!(s.ends_with(r#"{"error":"x"}"#));
+    }
+
+    #[test]
+    fn error_bodies_carry_request_id() {
+        let body = err_json("boom", Some("rid-9"));
+        let j = json::parse(&body).unwrap();
+        assert_eq!(j.get("error").as_str(), Some("boom"));
+        assert_eq!(j.get("request_id").as_str(), Some("rid-9"));
+        assert!(json::parse(&err_json("x", None)).unwrap().get("request_id").is_null());
     }
 
     #[test]

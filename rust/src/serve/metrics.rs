@@ -1,10 +1,15 @@
 //! Serving metrics: request latency distribution, served-batch-size
-//! histogram, throughput and error counters — the numbers `GET /metrics`
-//! reports and the integration tests assert on (e.g. that the admission
-//! queue actually coalesced requests: mean served batch size > 1).
+//! histogram, throughput and error counters — per model *and* in
+//! aggregate — plus admission queue wait and batch-assembly timing.
+//! Backs both `GET /metrics` bodies: the JSON snapshot and the
+//! Prometheus text exposition (`?format=prometheus`).
 //!
 //! Percentiles are computed over a sliding window of recent requests
 //! (bounded memory under sustained traffic); totals are exact counters.
+//!
+//! Lock discipline: every reader copies the inner state out under the
+//! mutex and formats *after* release, so a slow `/metrics` scrape never
+//! stalls the workers recording latencies.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Mutex;
@@ -13,11 +18,13 @@ use std::time::Instant;
 use crate::substrate::json::Json;
 use crate::substrate::stats::{percentiles, Moments};
 
-/// Latencies retained for percentile estimation.
+/// Latencies retained for percentile estimation (per model, and again
+/// for the aggregate view).
 const LATENCY_WINDOW: usize = 8192;
 
-#[derive(Default)]
-struct Inner {
+/// One model's (or the aggregate's) counters and latency window.
+#[derive(Clone, Default)]
+struct ModelStats {
     /// Sliding window of per-request latencies (ms), newest at the back.
     lat_window: VecDeque<f64>,
     /// Exact running moments over *all* request latencies.
@@ -28,10 +35,78 @@ struct Inner {
     examples: u64,
     ok: u64,
     errors: u64,
+}
+
+impl ModelStats {
+    fn record_batch(&mut self, n: usize) {
+        *self.batch_hist.entry(n).or_insert(0) += 1;
+        self.batches += 1;
+        self.examples += n as u64;
+    }
+
+    fn record_request(&mut self, latency_ms: f64, ok: bool) {
+        if self.lat_window.len() == LATENCY_WINDOW {
+            self.lat_window.pop_front();
+        }
+        self.lat_window.push_back(latency_ms);
+        self.lat_all.push(latency_ms);
+        if ok {
+            self.ok += 1;
+        } else {
+            self.errors += 1;
+        }
+    }
+
+    fn total(&self) -> u64 {
+        self.ok + self.errors
+    }
+
+    fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.examples as f64 / self.batches as f64
+        }
+    }
+
+    /// (p50, p95, p99) over the sliding window.
+    fn lat_percentiles(&self) -> (f64, f64, f64) {
+        if self.lat_window.is_empty() {
+            return (0.0, 0.0, 0.0);
+        }
+        let window: Vec<f64> = self.lat_window.iter().copied().collect();
+        let p = percentiles(&window, &[50.0, 95.0, 99.0]);
+        (p[0], p[1], p[2])
+    }
+
+    fn latency_json(&self) -> Json {
+        let (p50, p95, p99) = self.lat_percentiles();
+        let empty = self.lat_all.count() == 0;
+        Json::obj(vec![
+            ("count", Json::num(self.lat_all.count() as f64)),
+            ("mean", Json::num(if empty { 0.0 } else { self.lat_all.mean() })),
+            ("max", Json::num(if empty { 0.0 } else { self.lat_all.max() })),
+            ("p50", Json::num(p50)),
+            ("p95", Json::num(p95)),
+            ("p99", Json::num(p99)),
+        ])
+    }
+}
+
+#[derive(Clone, Default)]
+struct Inner {
+    /// Aggregate across every model (the pre-existing `/metrics` keys).
+    global: ModelStats,
+    /// Per-model breakdown, keyed by registry name.
+    per_model: BTreeMap<String, ModelStats>,
     /// Requests refused at the HTTP layer (bad body, unknown model,
     /// load-shed 503) — they never reached a worker, so they are counted
     /// separately from served-request errors.
     rejected: u64,
+    /// Admission → dequeue wait per request (ms).
+    queue_wait_ms: Moments,
+    /// Time `pop_batch` spent coalescing after its first item (ms).
+    assembly_ms: Moments,
 }
 
 /// Shared, thread-safe serving metrics.
@@ -41,31 +116,24 @@ pub struct ServeMetrics {
 }
 
 impl ServeMetrics {
+    /// Fresh metrics; uptime starts now.
     pub fn new() -> Self {
         ServeMetrics { start: Instant::now(), inner: Mutex::new(Inner::default()) }
     }
 
-    /// One forward pass served `n` coalesced requests.
-    pub fn record_batch(&self, n: usize) {
+    /// One forward pass on `model` served `n` coalesced requests.
+    pub fn record_batch(&self, model: &str, n: usize) {
         let mut m = self.inner.lock().unwrap();
-        *m.batch_hist.entry(n).or_insert(0) += 1;
-        m.batches += 1;
-        m.examples += n as u64;
+        m.global.record_batch(n);
+        m.per_model.entry(model.to_string()).or_default().record_batch(n);
     }
 
-    /// One request completed (admission → response) in `latency_ms`.
-    pub fn record_request(&self, latency_ms: f64, ok: bool) {
+    /// One request to `model` completed (admission → response) in
+    /// `latency_ms`.
+    pub fn record_request(&self, model: &str, latency_ms: f64, ok: bool) {
         let mut m = self.inner.lock().unwrap();
-        if m.lat_window.len() == LATENCY_WINDOW {
-            m.lat_window.pop_front();
-        }
-        m.lat_window.push_back(latency_ms);
-        m.lat_all.push(latency_ms);
-        if ok {
-            m.ok += 1;
-        } else {
-            m.errors += 1;
-        }
+        m.global.record_request(latency_ms, ok);
+        m.per_model.entry(model.to_string()).or_default().record_request(latency_ms, ok);
     }
 
     /// One request refused before admission (4xx/503 at the HTTP layer).
@@ -73,68 +141,142 @@ impl ServeMetrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
-    /// Completed requests (ok + errors).
+    /// One request waited `ms` between admission and worker dequeue.
+    pub fn record_queue_wait(&self, ms: f64) {
+        self.inner.lock().unwrap().queue_wait_ms.push(ms);
+    }
+
+    /// One `pop_batch` spent `ms` coalescing after its first item.
+    pub fn record_batch_assembly(&self, ms: f64) {
+        self.inner.lock().unwrap().assembly_ms.push(ms);
+    }
+
+    /// Completed requests (ok + errors), across all models.
     pub fn requests_total(&self) -> u64 {
-        let m = self.inner.lock().unwrap();
-        m.ok + m.errors
+        self.inner.lock().unwrap().global.total()
     }
 
     /// Examples served per forward pass, averaged — the coalescing factor.
     pub fn mean_batch_size(&self) -> f64 {
-        let m = self.inner.lock().unwrap();
-        if m.batches == 0 {
-            0.0
-        } else {
-            m.examples as f64 / m.batches as f64
-        }
+        self.inner.lock().unwrap().global.mean_batch()
+    }
+
+    /// Copy the inner state out under the lock (cheap: counters, bounded
+    /// windows) so formatting happens lock-free.
+    fn copy_inner(&self) -> Inner {
+        self.inner.lock().unwrap().clone()
     }
 
     /// Full snapshot as JSON (the `GET /metrics` body). `queue_depth` is
     /// sampled by the caller from the admission queue.
     pub fn snapshot(&self, queue_depth: usize) -> Json {
-        let m = self.inner.lock().unwrap();
+        let m = self.copy_inner(); // lock released here; format below
         let uptime_s = self.start.elapsed().as_secs_f64();
-        let window: Vec<f64> = m.lat_window.iter().copied().collect();
-        let (p50, p95, p99) = if window.is_empty() {
-            (0.0, 0.0, 0.0)
-        } else {
-            let p = percentiles(&window, &[50.0, 95.0, 99.0]);
-            (p[0], p[1], p[2])
-        };
-        let total = m.ok + m.errors;
-        let mean_batch = if m.batches == 0 {
-            0.0
-        } else {
-            m.examples as f64 / m.batches as f64
+        let total = m.global.total();
+        let moments_json = |w: &Moments| {
+            let empty = w.count() == 0;
+            Json::obj(vec![
+                ("count", Json::num(w.count() as f64)),
+                ("mean", Json::num(if empty { 0.0 } else { w.mean() })),
+                ("max", Json::num(if empty { 0.0 } else { w.max() })),
+            ])
         };
         Json::obj(vec![
             ("uptime_s", Json::num(uptime_s)),
             ("requests_total", Json::num(total as f64)),
-            ("errors_total", Json::num(m.errors as f64)),
+            ("errors_total", Json::num(m.global.errors as f64)),
             ("rejected_total", Json::num(m.rejected as f64)),
-            ("examples_total", Json::num(m.examples as f64)),
-            ("batches_total", Json::num(m.batches as f64)),
-            ("mean_batch_size", Json::num(mean_batch)),
+            ("examples_total", Json::num(m.global.examples as f64)),
+            ("batches_total", Json::num(m.global.batches as f64)),
+            ("mean_batch_size", Json::num(m.global.mean_batch())),
             ("batch_size_hist",
-             Json::arr(m.batch_hist.iter().map(|(&size, &count)| {
+             Json::arr(m.global.batch_hist.iter().map(|(&size, &count)| {
                  Json::obj(vec![
                      ("batch", Json::num(size as f64)),
                      ("count", Json::num(count as f64)),
                  ])
              }))),
             ("queue_depth", Json::num(queue_depth as f64)),
-            ("latency_ms",
-             Json::obj(vec![
-                 ("count", Json::num(m.lat_all.count() as f64)),
-                 ("mean", Json::num(if m.lat_all.count() == 0 { 0.0 } else { m.lat_all.mean() })),
-                 ("max", Json::num(if m.lat_all.count() == 0 { 0.0 } else { m.lat_all.max() })),
-                 ("p50", Json::num(p50)),
-                 ("p95", Json::num(p95)),
-                 ("p99", Json::num(p99)),
-             ])),
+            ("queue_wait_ms", moments_json(&m.queue_wait_ms)),
+            ("batch_assembly_ms", moments_json(&m.assembly_ms)),
+            ("latency_ms", m.global.latency_json()),
+            ("models", {
+                let mut o = Json::obj(vec![]);
+                for (name, s) in &m.per_model {
+                    o.set(
+                        name,
+                        Json::obj(vec![
+                            ("requests_total", Json::num(s.total() as f64)),
+                            ("errors_total", Json::num(s.errors as f64)),
+                            ("examples_total", Json::num(s.examples as f64)),
+                            ("batches_total", Json::num(s.batches as f64)),
+                            ("mean_batch_size", Json::num(s.mean_batch())),
+                            ("latency_ms", s.latency_json()),
+                        ]),
+                    );
+                }
+                o
+            }),
             ("throughput_rps",
              Json::num(if uptime_s > 0.0 { total as f64 / uptime_s } else { 0.0 })),
         ])
+    }
+
+    /// Prometheus text exposition (the `GET /metrics?format=prometheus`
+    /// body, minus the pool/kernel lines `serve::http` appends). Names
+    /// and label schema are part of the public contract pinned by
+    /// `tests/observe.rs`.
+    pub fn prometheus(&self, queue_depth: usize) -> String {
+        let m = self.copy_inner(); // lock released here; format below
+        let uptime_s = self.start.elapsed().as_secs_f64();
+        let mut p = Prom::default();
+
+        p.header("flexor_uptime_seconds", "Server uptime.", "gauge");
+        p.line("flexor_uptime_seconds", &[], uptime_s);
+        p.header("flexor_requests_total", "Completed requests (ok + errors).", "counter");
+        p.line("flexor_requests_total", &[], m.global.total() as f64);
+        p.header("flexor_errors_total", "Requests that failed in a worker.", "counter");
+        p.line("flexor_errors_total", &[], m.global.errors as f64);
+        p.header("flexor_rejected_total", "Requests refused before admission.", "counter");
+        p.line("flexor_rejected_total", &[], m.rejected as f64);
+        p.header("flexor_examples_total", "Examples served across batches.", "counter");
+        p.line("flexor_examples_total", &[], m.global.examples as f64);
+        p.header("flexor_batches_total", "Forward passes run.", "counter");
+        p.line("flexor_batches_total", &[], m.global.batches as f64);
+        p.header("flexor_mean_batch_size", "Examples per forward pass.", "gauge");
+        p.line("flexor_mean_batch_size", &[], m.global.mean_batch());
+        p.header("flexor_queue_depth", "Admission queue depth at scrape time.", "gauge");
+        p.line("flexor_queue_depth", &[], queue_depth as f64);
+
+        p.header("flexor_request_latency_ms", "Request latency (window percentiles).", "summary");
+        p.summary("flexor_request_latency_ms", &[], &m.global);
+
+        p.header("flexor_queue_wait_ms", "Admission → dequeue wait.", "summary");
+        p.moments("flexor_queue_wait_ms", &[], &m.queue_wait_ms);
+        p.header("flexor_batch_assembly_ms", "Coalescing time after first item.", "summary");
+        p.moments("flexor_batch_assembly_ms", &[], &m.assembly_ms);
+
+        p.header("flexor_model_requests_total", "Completed requests per model.", "counter");
+        for (name, s) in &m.per_model {
+            p.line("flexor_model_requests_total", &[("model", name.as_str())], s.total() as f64);
+        }
+        p.header("flexor_model_errors_total", "Failed requests per model.", "counter");
+        for (name, s) in &m.per_model {
+            p.line("flexor_model_errors_total", &[("model", name.as_str())], s.errors as f64);
+        }
+        p.header("flexor_model_examples_total", "Examples served per model.", "counter");
+        for (name, s) in &m.per_model {
+            p.line("flexor_model_examples_total", &[("model", name.as_str())], s.examples as f64);
+        }
+        p.header("flexor_model_batches_total", "Forward passes per model.", "counter");
+        for (name, s) in &m.per_model {
+            p.line("flexor_model_batches_total", &[("model", name.as_str())], s.batches as f64);
+        }
+        p.header("flexor_model_latency_ms", "Request latency per model.", "summary");
+        for (name, s) in &m.per_model {
+            p.summary("flexor_model_latency_ms", &[("model", name.as_str())], s);
+        }
+        p.out
     }
 }
 
@@ -144,16 +286,70 @@ impl Default for ServeMetrics {
     }
 }
 
+/// Tiny Prometheus text-format builder (exposition format 0.0.4).
+#[derive(Default)]
+struct Prom {
+    out: String,
+}
+
+impl Prom {
+    fn header(&mut self, name: &str, help: &str, typ: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {typ}\n"));
+    }
+
+    fn line(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, val)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(&format!("{k}=\"{}\"", escape_label(val)));
+            }
+            self.out.push('}');
+        }
+        self.out.push_str(&format!(" {v}\n"));
+    }
+
+    /// Quantiles + `_sum`/`_count` rows for one latency distribution.
+    fn summary(&mut self, name: &str, labels: &[(&str, &str)], s: &ModelStats) {
+        let (p50, p95, p99) = s.lat_percentiles();
+        for (q, v) in [("0.5", p50), ("0.95", p95), ("0.99", p99)] {
+            let mut with_q: Vec<(&str, &str)> = labels.to_vec();
+            with_q.push(("quantile", q));
+            self.line(name, &with_q, v);
+        }
+        let sum = if s.lat_all.count() == 0 { 0.0 } else { s.lat_all.mean() * s.lat_all.count() as f64 };
+        self.line(&format!("{name}_sum"), labels, sum);
+        self.line(&format!("{name}_count"), labels, s.lat_all.count() as f64);
+    }
+
+    /// `_sum`/`_count` rows for a plain [`Moments`] accumulator.
+    fn moments(&mut self, name: &str, labels: &[(&str, &str)], w: &Moments) {
+        let sum = if w.count() == 0 { 0.0 } else { w.mean() * w.count() as f64 };
+        self.line(&format!("{name}_sum"), labels, sum);
+        self.line(&format!("{name}_count"), labels, w.count() as f64);
+    }
+}
+
+/// Escape a label value per the exposition format: backslash, quote,
+/// newline.
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn batch_accounting() {
         let m = ServeMetrics::new();
-        m.record_batch(1);
-        m.record_batch(4);
-        m.record_batch(4);
+        m.record_batch("a", 1);
+        m.record_batch("a", 4);
+        m.record_batch("a", 4);
         assert!((m.mean_batch_size() - 3.0).abs() < 1e-12);
         let j = m.snapshot(2);
         assert_eq!(j.get("batches_total").as_usize(), Some(3));
@@ -169,7 +365,7 @@ mod tests {
     fn request_latency_percentiles() {
         let m = ServeMetrics::new();
         for i in 1..=100 {
-            m.record_request(i as f64, i != 13);
+            m.record_request("a", i as f64, i != 13);
         }
         let j = m.snapshot(0);
         assert_eq!(j.get("requests_total").as_usize(), Some(100));
@@ -189,6 +385,8 @@ mod tests {
         assert_eq!(j.get("rejected_total").as_usize(), Some(0));
         assert_eq!(j.get("mean_batch_size").as_f64(), Some(0.0));
         assert_eq!(j.get("latency_ms").get("p99").as_f64(), Some(0.0));
+        assert_eq!(j.get("queue_wait_ms").get("count").as_usize(), Some(0));
+        assert!(j.get("models").as_obj().unwrap().is_empty());
     }
 
     #[test]
@@ -196,7 +394,7 @@ mod tests {
         let m = ServeMetrics::new();
         m.record_rejected();
         m.record_rejected();
-        m.record_request(1.0, true);
+        m.record_request("a", 1.0, true);
         let j = m.snapshot(0);
         assert_eq!(j.get("rejected_total").as_usize(), Some(2));
         assert_eq!(j.get("requests_total").as_usize(), Some(1));
@@ -207,10 +405,116 @@ mod tests {
     fn window_is_bounded() {
         let m = ServeMetrics::new();
         for i in 0..(LATENCY_WINDOW + 10) {
-            m.record_request(i as f64, true);
+            m.record_request("a", i as f64, true);
         }
         let inner = m.inner.lock().unwrap();
-        assert_eq!(inner.lat_window.len(), LATENCY_WINDOW);
-        assert_eq!(inner.lat_all.count() as usize, LATENCY_WINDOW + 10);
+        assert_eq!(inner.global.lat_window.len(), LATENCY_WINDOW);
+        assert_eq!(inner.global.lat_all.count() as usize, LATENCY_WINDOW + 10);
+        assert_eq!(inner.per_model["a"].lat_window.len(), LATENCY_WINDOW);
+    }
+
+    #[test]
+    fn per_model_stats_are_disjoint() {
+        let m = ServeMetrics::new();
+        m.record_batch("a", 2);
+        m.record_request("a", 1.0, true);
+        m.record_request("a", 2.0, true);
+        m.record_batch("b", 1);
+        m.record_request("b", 5.0, false);
+        let j = m.snapshot(0);
+        assert_eq!(j.get("requests_total").as_usize(), Some(3));
+        let a = j.get("models").get("a");
+        let b = j.get("models").get("b");
+        assert_eq!(a.get("requests_total").as_usize(), Some(2));
+        assert_eq!(a.get("errors_total").as_usize(), Some(0));
+        assert_eq!(b.get("requests_total").as_usize(), Some(1));
+        assert_eq!(b.get("errors_total").as_usize(), Some(1));
+        assert_eq!(a.get("examples_total").as_usize(), Some(2));
+        assert_eq!(b.get("examples_total").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn queue_wait_and_assembly_land_in_snapshot() {
+        let m = ServeMetrics::new();
+        m.record_queue_wait(2.0);
+        m.record_queue_wait(4.0);
+        m.record_batch_assembly(1.0);
+        let j = m.snapshot(0);
+        assert_eq!(j.get("queue_wait_ms").get("count").as_usize(), Some(2));
+        assert!((j.get("queue_wait_ms").get("mean").as_f64().unwrap() - 3.0).abs() < 1e-12);
+        assert_eq!(j.get("batch_assembly_ms").get("count").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn prometheus_exposition_has_stable_names() {
+        let m = ServeMetrics::new();
+        m.record_batch("mod\"el", 2);
+        m.record_request("mod\"el", 1.5, true);
+        m.record_rejected();
+        let text = m.prometheus(3);
+        for name in [
+            "flexor_uptime_seconds",
+            "flexor_requests_total",
+            "flexor_rejected_total",
+            "flexor_queue_depth 3",
+            "flexor_request_latency_ms{quantile=\"0.5\"}",
+            "flexor_request_latency_ms_count 1",
+            "flexor_model_requests_total{model=\"mod\\\"el\"} 1",
+            "flexor_model_latency_ms{model=\"mod\\\"el\",quantile=\"0.99\"}",
+        ] {
+            assert!(text.contains(name), "missing {name:?} in:\n{text}");
+        }
+        // every HELP has a TYPE
+        let helps = text.matches("# HELP").count();
+        let types = text.matches("# TYPE").count();
+        assert_eq!(helps, types);
+    }
+
+    /// Satellite: snapshot no longer formats under the metrics mutex —
+    /// hammer records from several threads while snapshotting and check
+    /// nothing deadlocks and the final totals are exact.
+    #[test]
+    fn snapshot_under_contention_is_consistent() {
+        let m = Arc::new(ServeMetrics::new());
+        const THREADS: usize = 4;
+        const PER_THREAD: usize = 5_000;
+        let recorders: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    let model = format!("m{t}");
+                    for i in 0..PER_THREAD {
+                        m.record_request(&model, i as f64 % 7.0, true);
+                        if i % 8 == 0 {
+                            m.record_batch(&model, 8);
+                        }
+                    }
+                })
+            })
+            .collect();
+        // concurrent scrapes: every intermediate snapshot must be
+        // internally consistent (requests == sum of per-model requests)
+        for _ in 0..50 {
+            let j = m.snapshot(0);
+            let total = j.get("requests_total").as_usize().unwrap();
+            let sum: usize = j
+                .get("models")
+                .as_obj()
+                .unwrap()
+                .values()
+                .map(|v| v.get("requests_total").as_usize().unwrap())
+                .sum();
+            assert_eq!(total, sum, "global and per-model counters diverged");
+            let _ = m.prometheus(0);
+        }
+        for r in recorders {
+            r.join().unwrap();
+        }
+        let j = m.snapshot(0);
+        assert_eq!(j.get("requests_total").as_usize(), Some(THREADS * PER_THREAD));
+        for t in 0..THREADS {
+            let s = j.get("models").get(&format!("m{t}"));
+            assert_eq!(s.get("requests_total").as_usize(), Some(PER_THREAD));
+        }
     }
 }

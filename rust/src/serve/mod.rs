@@ -23,10 +23,14 @@
 //! * [`worker`]   — thread pool draining the queue, one forward pass per
 //!   coalesced per-model group, results fanned back over one-shot
 //!   channels;
-//! * [`metrics`]  — latency percentiles, batch-size histogram, queue
-//!   depth, throughput;
+//! * [`metrics`]  — latency percentiles (global + per model), batch-size
+//!   histogram, queue depth/wait and batch-assembly timing, JSON and
+//!   Prometheus text exposition;
 //! * [`http`]     — HTTP/1.1 front-end (`/predict`, `/models`,
-//!   `/metrics`, `/healthz`) plus a one-shot client for tests/benches.
+//!   `/metrics` — `?format=prometheus` for the text exposition,
+//!   `/models/<name>/profile`, `/healthz`), `X-Request-Id`
+//!   generation/echo, structured request logging, plus a one-shot
+//!   client for tests/benches.
 //!
 //! Forward passes inside the workers run on the packed parallel compute
 //! engine (`inference::gemm`, DESIGN.md §7); `ServeConfig::intra_threads`

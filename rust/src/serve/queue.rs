@@ -107,6 +107,18 @@ impl<T> BatchQueue<T> {
     /// return the batch — always non-empty. Returns `None` once the queue
     /// is closed *and* drained — the worker-thread exit signal.
     pub fn pop_batch(&self, max_batch: usize, max_wait: Duration) -> Option<Vec<T>> {
+        self.pop_batch_timed(max_batch, max_wait).map(|(batch, _)| batch)
+    }
+
+    /// [`pop_batch`](Self::pop_batch) plus the *assembly time*: how long
+    /// this call spent coalescing after its first item became available
+    /// (zero when the batch filled instantly). Blocking for the first item
+    /// is queue idle time, not assembly, so it is excluded.
+    pub fn pop_batch_timed(
+        &self,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> Option<(Vec<T>, Duration)> {
         assert!(max_batch > 0, "zero max_batch");
         let mut s = self.state.lock().unwrap();
         loop {
@@ -116,8 +128,10 @@ impl<T> BatchQueue<T> {
                 }
                 s = self.not_empty.wait(s).unwrap();
             }
+            // assembly clock starts once the first item is visible
+            let assembly_start = Instant::now();
             if s.items.len() < max_batch && !s.closed && !max_wait.is_zero() {
-                let deadline = Instant::now() + max_wait;
+                let deadline = assembly_start + max_wait;
                 while s.items.len() < max_batch && !s.closed {
                     let remaining = deadline.saturating_duration_since(Instant::now());
                     if remaining.is_zero() {
@@ -133,7 +147,7 @@ impl<T> BatchQueue<T> {
             let batch: Vec<T> = s.items.drain(..take).collect();
             drop(s);
             self.not_full.notify_all();
-            return Some(batch);
+            return Some((batch, assembly_start.elapsed()));
         }
     }
 
@@ -227,6 +241,21 @@ mod tests {
             p.join().unwrap();
         }
         assert_eq!(b.len(), 8, "expected a fully coalesced batch, got {b:?}");
+    }
+
+    #[test]
+    fn timed_pop_reports_assembly_window() {
+        let q = BatchQueue::bounded(8);
+        q.try_push(1u32).unwrap();
+        // batch fills instantly at max_batch=1 → negligible assembly time
+        let (b, dt) = q.pop_batch_timed(1, Duration::from_millis(200)).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(dt < Duration::from_millis(100), "assembly {dt:?}");
+        // lingering for a batch that never fills costs ~max_wait
+        q.try_push(2u32).unwrap();
+        let (b, dt) = q.pop_batch_timed(4, 10 * MS).unwrap();
+        assert_eq!(b, vec![2]);
+        assert!(dt >= 10 * MS, "assembly {dt:?}");
     }
 
     #[test]

@@ -21,6 +21,7 @@ use anyhow::{Context, ensure, Result};
 
 use crate::inference::{ComputeMode, InferenceModel, ModePolicy};
 use crate::substrate::json::Json;
+use crate::substrate::trace;
 
 /// One hosted model plus its serving metadata.
 pub struct ModelEntry {
@@ -32,6 +33,10 @@ pub struct ModelEntry {
     pub feature_len: usize,
     /// Load + decrypt wall time (the one-time XOR cost).
     pub load_ms: f64,
+    /// Per-layer stage-timing aggregate fed by traced forwards (the
+    /// `GET /models/<name>/profile` body). Always present; stays empty
+    /// while tracing is off.
+    pub profile: Arc<trace::Profile>,
 }
 
 /// Name → model map shared between the HTTP front-end and the workers.
@@ -123,6 +128,7 @@ impl Registry {
             model,
             feature_len,
             load_ms,
+            profile: Arc::new(trace::Profile::default()),
         });
         self.models.insert(name.to_string(), entry.clone());
         Ok(entry)

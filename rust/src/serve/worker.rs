@@ -1,11 +1,17 @@
 //! Worker-thread pool: drains the admission queue against the shared
 //! decrypted models and fans results back through per-request channels.
 //!
-//! Each worker loops on [`BatchQueue::pop_batch`], groups the coalesced
-//! requests by target model (a popped batch may interleave models), runs
-//! **one forward pass per group**, and answers every request on its own
-//! one-shot channel. Workers exit when the queue is closed and drained,
-//! so shutdown never drops an admitted request.
+//! Each worker loops on [`BatchQueue::pop_batch_timed`], groups the
+//! coalesced requests by target model (a popped batch may interleave
+//! models), runs **one forward pass per group**, and answers every
+//! request on its own one-shot channel. Workers exit when the queue is
+//! closed and drained, so shutdown never drops an admitted request.
+//!
+//! Observability: each forward runs inside a [`trace`] scope carrying
+//! the model's [`Profile`](trace::Profile) sink, so (when the server's
+//! [`TraceMode`](trace::TraceMode) samples it in) every pipeline stage
+//! lands in `GET /models/<name>/profile`. Queue wait and batch-assembly
+//! time feed [`ServeMetrics`] per dequeue.
 //!
 //! Thread budget: each forward shards its GEMMs across the shared
 //! intra-op pool (`substrate::pool`, sized by `ServeConfig::intra_threads`
@@ -19,6 +25,8 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
+
+use crate::substrate::trace;
 
 use super::metrics::ServeMetrics;
 use super::queue::BatchQueue;
@@ -59,21 +67,25 @@ pub struct WorkerPool {
 
 impl WorkerPool {
     /// Spawn `n` workers draining `queue` with the given batching policy.
+    /// `trace_mode` decides which forwards get stage-level spans
+    /// (`None` defers to the `FLEXOR_TRACE` env dial).
     pub fn spawn(
         n: usize,
         queue: Arc<BatchQueue<Request>>,
         metrics: Arc<ServeMetrics>,
         max_batch: usize,
         max_wait: Duration,
+        trace_mode: Option<trace::TraceMode>,
     ) -> WorkerPool {
         assert!(n > 0, "worker pool needs at least one thread");
+        let mode = trace_mode.unwrap_or_else(trace::env_mode);
         let handles = (0..n)
             .map(|i| {
                 let queue = queue.clone();
                 let metrics = metrics.clone();
                 thread::Builder::new()
                     .name(format!("serve-worker-{i}"))
-                    .spawn(move || worker_loop(&queue, &metrics, max_batch, max_wait))
+                    .spawn(move || worker_loop(&queue, &metrics, max_batch, max_wait, mode))
                     .expect("spawning serve worker")
             })
             .collect();
@@ -97,21 +109,29 @@ fn worker_loop(
     metrics: &ServeMetrics,
     max_batch: usize,
     max_wait: Duration,
+    mode: trace::TraceMode,
 ) {
-    while let Some(batch) = queue.pop_batch(max_batch, max_wait) {
+    while let Some((batch, assembly)) = queue.pop_batch_timed(max_batch, max_wait) {
+        metrics.record_batch_assembly(assembly.as_secs_f64() * 1e3);
+        let dequeued = Instant::now();
         // group by model, preserving arrival order within each group
         let mut groups: BTreeMap<String, Vec<Request>> = BTreeMap::new();
         for r in batch {
+            // queue wait = admission → dequeue (assembly linger included,
+            // forward excluded)
+            metrics.record_queue_wait(
+                dequeued.saturating_duration_since(r.enqueued).as_secs_f64() * 1e3,
+            );
             groups.entry(r.entry.name.clone()).or_default().push(r);
         }
         for (_, reqs) in groups {
-            serve_group(reqs, metrics);
+            serve_group(reqs, metrics, mode);
         }
     }
 }
 
 /// Run one batched forward for requests that share a model.
-fn serve_group(reqs: Vec<Request>, metrics: &ServeMetrics) {
+fn serve_group(reqs: Vec<Request>, metrics: &ServeMetrics, mode: trace::TraceMode) {
     let entry = reqs[0].entry.clone();
     let fl = entry.feature_len;
 
@@ -128,7 +148,7 @@ fn serve_group(reqs: Vec<Request>, metrics: &ServeMetrics) {
                 "feature length {} != model feature_len {fl}",
                 r.features.len()
             );
-            metrics.record_request(elapsed_ms(&r), false);
+            metrics.record_request(&entry.name, elapsed_ms(&r), false);
             r.respond.send(Err(msg)).ok();
         }
     }
@@ -137,12 +157,17 @@ fn serve_group(reqs: Vec<Request>, metrics: &ServeMetrics) {
     }
 
     let n = batch.len();
-    metrics.record_batch(n);
-    match entry.model.predict(&x, n) {
+    metrics.record_batch(&entry.name, n);
+    let result = {
+        // scope drops (deactivating tracing) before responses are sent
+        let _t = trace::scope_with(mode, Some(entry.profile.clone()));
+        entry.model.predict(&x, n)
+    };
+    match result {
         Ok(preds) => {
             for (r, &class) in batch.iter().zip(&preds) {
                 let latency_ms = elapsed_ms(r);
-                metrics.record_request(latency_ms, true);
+                metrics.record_request(&entry.name, latency_ms, true);
                 r.respond
                     .send(Ok(Prediction {
                         model: entry.name.clone(),
@@ -155,8 +180,17 @@ fn serve_group(reqs: Vec<Request>, metrics: &ServeMetrics) {
         }
         Err(e) => {
             let msg = format!("forward pass failed: {e:#}");
+            trace::log(
+                trace::Level::Error,
+                "forward_failed",
+                &[
+                    ("model", crate::substrate::json::Json::str(entry.name.clone())),
+                    ("batch_size", crate::substrate::json::Json::num(n as f64)),
+                    ("error", crate::substrate::json::Json::str(format!("{e:#}"))),
+                ],
+            );
             for r in &batch {
-                metrics.record_request(elapsed_ms(r), false);
+                metrics.record_request(&entry.name, elapsed_ms(r), false);
                 r.respond.send(Err(msg.clone())).ok();
             }
         }

@@ -9,3 +9,4 @@ pub mod stats;
 pub mod bench;
 pub mod pool;
 pub mod ptest;
+pub mod trace;

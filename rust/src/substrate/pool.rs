@@ -17,9 +17,12 @@
 //! `FLEXOR_THREADS` env var, falling back to `available_parallelism`.
 
 use std::any::Any;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
+use std::time::Instant;
+
+use super::trace;
 
 /// One data-parallel job: `len` independent shards over an erased closure.
 struct Job {
@@ -37,6 +40,9 @@ struct Job {
     payload: Mutex<Option<Box<dyn Any + Send + 'static>>>,
     done: Mutex<bool>,
     done_cv: Condvar,
+    /// When the job was queued; the thread that claims shard 0 records
+    /// the submit→first-claim gap as the job's queue wait.
+    submitted: Instant,
 }
 
 unsafe impl Send for Job {}
@@ -46,6 +52,54 @@ struct Shared {
     queue: Mutex<Vec<Arc<Job>>>,
     work_cv: Condvar,
     shutdown: AtomicBool,
+    counters: PoolCounters,
+}
+
+/// Always-on cumulative pool counters (a handful of relaxed atomic adds
+/// per *job*, not per shard — the shard path stays untouched unless a
+/// traced scope is live, see [`trace::pool_timing`]).
+struct PoolCounters {
+    jobs: AtomicU64,
+    shards: AtomicU64,
+    /// Summed submit→first-claim gap across jobs (ns).
+    job_wait_ns: AtomicU64,
+    /// Per-compute-thread busy ns, only accumulated while a traced scope
+    /// is live anywhere in the process. Slot 0 aggregates all callers;
+    /// slots `1..threads` are the pool workers.
+    busy_ns: Vec<AtomicU64>,
+}
+
+impl PoolCounters {
+    fn new(threads: usize) -> PoolCounters {
+        PoolCounters {
+            jobs: AtomicU64::new(0),
+            shards: AtomicU64::new(0),
+            job_wait_ns: AtomicU64::new(0),
+            busy_ns: (0..threads.max(1)).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of a pool's counters (`/metrics` `"pool"` object).
+#[derive(Clone, Debug, Default)]
+pub struct PoolCountersSnapshot {
+    /// Jobs submitted (one `run` call above the inline threshold, or one
+    /// inline run).
+    pub jobs: u64,
+    /// Shards dispatched across all jobs.
+    pub shards: u64,
+    /// Summed submit→first-claim queue wait across jobs, ns.
+    pub job_wait_ns: u64,
+    /// Per-thread busy ns (slot 0 = callers, then workers); zeros unless
+    /// tracing was live.
+    pub busy_ns: Vec<u64>,
+}
+
+impl PoolCountersSnapshot {
+    /// Total busy ns across all compute threads.
+    pub fn busy_ns_total(&self) -> u64 {
+        self.busy_ns.iter().sum()
+    }
 }
 
 /// The pool. One instance per process is the normal mode ([`global`]);
@@ -66,13 +120,14 @@ impl ThreadPool {
             queue: Mutex::new(Vec::new()),
             work_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            counters: PoolCounters::new(threads),
         });
         let handles = (1..threads)
             .map(|i| {
                 let shared = shared.clone();
                 thread::Builder::new()
                     .name(format!("flexor-pool-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || worker_loop(&shared, i))
                     .expect("spawning pool worker")
             })
             .collect();
@@ -84,6 +139,17 @@ impl ThreadPool {
         self.threads
     }
 
+    /// Snapshot the cumulative job/shard/wait/busy counters.
+    pub fn counters(&self) -> PoolCountersSnapshot {
+        let c = &self.shared.counters;
+        PoolCountersSnapshot {
+            jobs: c.jobs.load(Ordering::Relaxed),
+            shards: c.shards.load(Ordering::Relaxed),
+            job_wait_ns: c.job_wait_ns.load(Ordering::Relaxed),
+            busy_ns: c.busy_ns.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+
     /// Run `f(0), f(1), …, f(len-1)` across the pool and the calling
     /// thread; returns when every index has completed. Panics (after all
     /// shards settle) if any shard panicked.
@@ -91,9 +157,16 @@ impl ThreadPool {
         if len == 0 {
             return;
         }
+        let c = &self.shared.counters;
+        c.jobs.fetch_add(1, Ordering::Relaxed);
+        c.shards.fetch_add(len as u64, Ordering::Relaxed);
         if self.threads == 1 || len == 1 {
+            let t0 = trace::pool_timing().then(Instant::now);
             for i in 0..len {
                 f(i);
+            }
+            if let Some(t0) = t0 {
+                c.busy_ns[0].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             }
             return;
         }
@@ -109,11 +182,12 @@ impl ThreadPool {
             payload: Mutex::new(None),
             done: Mutex::new(false),
             done_cv: Condvar::new(),
+            submitted: Instant::now(),
         });
         self.shared.queue.lock().unwrap().push(job.clone());
         self.shared.work_cv.notify_all();
 
-        run_shards(&job);
+        run_shards(&job, c, 0);
         let mut done = job.done.lock().unwrap();
         while !*done {
             done = job.done_cv.wait(done).unwrap();
@@ -171,7 +245,7 @@ impl Drop for ThreadPool {
     }
 }
 
-fn worker_loop(shared: &Shared) {
+fn worker_loop(shared: &Shared, slot: usize) {
     loop {
         let job = {
             let mut q = shared.queue.lock().unwrap();
@@ -188,26 +262,38 @@ fn worker_loop(shared: &Shared) {
                 q = shared.work_cv.wait(q).unwrap();
             }
         };
-        run_shards(&job);
+        run_shards(&job, &shared.counters, slot);
     }
 }
 
-/// Claim and run shards of `job` until its counter is exhausted.
-fn run_shards(job: &Job) {
+/// Claim and run shards of `job` until its counter is exhausted,
+/// attributing busy time to `counters.busy_ns[slot]` while tracing is
+/// live (one relaxed load per shard otherwise).
+fn run_shards(job: &Job, counters: &PoolCounters, slot: usize) {
+    let timing = trace::pool_timing();
     loop {
         let i = job.next.fetch_add(1, Ordering::Relaxed);
         if i >= job.len {
             return;
         }
+        if i == 0 {
+            counters
+                .job_wait_ns
+                .fetch_add(job.submitted.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        let t0 = timing.then(Instant::now);
         // Safety: i < len, so the caller is still inside `run`.
         let f = unsafe { &*job.f };
         if let Err(p) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))) {
-            let mut slot = job.payload.lock().unwrap();
-            if slot.is_none() {
-                *slot = Some(p);
+            let mut slot_p = job.payload.lock().unwrap();
+            if slot_p.is_none() {
+                *slot_p = Some(p);
             }
-            drop(slot);
+            drop(slot_p);
             job.panicked.store(true, Ordering::Release);
+        }
+        if let Some(t0) = t0 {
+            counters.busy_ns[slot].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         }
         if job.completed.fetch_add(1, Ordering::AcqRel) + 1 == job.len {
             let mut done = job.done.lock().unwrap();
@@ -345,5 +431,33 @@ mod tests {
     #[test]
     fn global_pool_exists() {
         assert!(global().threads() >= 1);
+    }
+
+    #[test]
+    fn counters_track_jobs_shards_and_traced_busy_time() {
+        let pool = ThreadPool::new(2);
+        let before = pool.counters();
+        pool.run(10, &|_| {});
+        pool.run(1, &|_| {}); // inline path must count too
+        let after = pool.counters();
+        assert_eq!(after.jobs - before.jobs, 2);
+        assert_eq!(after.shards - before.shards, 11);
+        assert_eq!(after.busy_ns.len(), 2);
+
+        // busy time accumulates only while a traced scope is live
+        let _t = trace::scope_with(trace::TraceMode::All, None);
+        let acc = AtomicU64::new(0);
+        pool.run(64, &|i| {
+            let mut s = 0u64;
+            for k in 0..5_000u64 {
+                s = std::hint::black_box(s.wrapping_add(k * i as u64));
+            }
+            acc.fetch_add(s | 1, Ordering::Relaxed);
+        });
+        let busy = pool.counters();
+        assert!(
+            busy.busy_ns_total() > after.busy_ns_total(),
+            "no busy time recorded under a traced scope"
+        );
     }
 }

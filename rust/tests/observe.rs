@@ -1,0 +1,355 @@
+//! Observability integration tests: per-model metrics isolation,
+//! Prometheus exposition, the per-layer profile endpoint, request-id
+//! round-tripping, and the tracing overhead contract (trace state must
+//! never change numeric results — only observe them).
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use flexor::coordinator::{export_synthetic_mlp_bundle, export_synthetic_resnet_bundle};
+use flexor::inference::InferenceModel;
+use flexor::serve::{http, Registry, ServeConfig, Server};
+use flexor::substrate::json::{self, Json};
+use flexor::substrate::prng::Pcg32;
+use flexor::substrate::trace;
+
+const D_IN: usize = 16;
+
+fn bundle_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("flexor_observe_{tag}_{}", std::process::id()))
+}
+
+fn predict_body(model: &str, features: &[f32]) -> String {
+    Json::obj(vec![
+        ("model", Json::str(model)),
+        ("features", Json::arr(features.iter().map(|&v| Json::num(v)))),
+    ])
+    .to_string()
+}
+
+fn post_predict(addr: SocketAddr, body: &str) -> (u16, Json) {
+    let (status, resp) = http::client::request(addr, "POST", "/predict", Some(body)).unwrap();
+    (status, json::parse(&resp).unwrap())
+}
+
+/// Two models behind one server: their `/metrics` counters must stay
+/// disjoint, in both the JSON snapshot and the Prometheus exposition.
+#[test]
+fn per_model_metrics_are_isolated() {
+    let dir_a = bundle_dir("iso_a");
+    let dir_b = bundle_dir("iso_b");
+    export_synthetic_mlp_bundle(&dir_a, "alpha", 7, D_IN, &[32, 24], 10).unwrap();
+    export_synthetic_mlp_bundle(&dir_b, "beta", 8, D_IN, &[24], 10).unwrap();
+    let mut registry = Registry::new();
+    registry.load("alpha", &dir_a, "alpha").unwrap();
+    registry.load("beta", &dir_b, "beta").unwrap();
+    let server = Server::start("127.0.0.1:0", registry, ServeConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    let x: Vec<f32> = vec![0.5; D_IN];
+    for _ in 0..3 {
+        let (status, v) = post_predict(addr, &predict_body("alpha", &x));
+        assert_eq!(status, 200, "{v}");
+    }
+    let (status, v) = post_predict(addr, &predict_body("beta", &x));
+    assert_eq!(status, 200, "{v}");
+
+    let (status, m) = http::client::request(addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let mj = json::parse(&m).unwrap();
+    assert_eq!(mj.get("requests_total").as_usize(), Some(4));
+    let models = mj.get("models");
+    assert_eq!(models.get("alpha").get("requests_total").as_usize(), Some(3));
+    assert_eq!(models.get("alpha").get("errors_total").as_usize(), Some(0));
+    assert_eq!(models.get("beta").get("requests_total").as_usize(), Some(1));
+    assert_eq!(models.get("beta").get("examples_total").as_usize(), Some(1));
+    assert!(models.get("alpha").get("latency_ms").get("p99").as_f64().unwrap() >= 0.0);
+
+    let (status, prom) =
+        http::client::request(addr, "GET", "/metrics?format=prometheus", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(prom.contains("flexor_model_requests_total{model=\"alpha\"} 3"), "{prom}");
+    assert!(prom.contains("flexor_model_requests_total{model=\"beta\"} 1"), "{prom}");
+    assert!(prom.contains("flexor_requests_total 4"), "{prom}");
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}
+
+/// A metric name: `[a-zA-Z_:][a-zA-Z0-9_:]*`.
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Line-level check of the text exposition format 0.0.4: every
+/// non-comment line is `name[{labels}] value`, every sample belongs to
+/// a family announced by `# TYPE`, and `# HELP` pairs with `# TYPE`.
+#[test]
+fn prometheus_exposition_is_parseable() {
+    let dir = bundle_dir("prom");
+    export_synthetic_mlp_bundle(&dir, "served", 7, D_IN, &[32], 10).unwrap();
+    let mut registry = Registry::new();
+    registry.load("served", &dir, "served").unwrap();
+    let server = Server::start("127.0.0.1:0", registry, ServeConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    let x: Vec<f32> = vec![0.25; D_IN];
+    let (status, _) = post_predict(addr, &predict_body("served", &x));
+    assert_eq!(status, 200);
+
+    let (status, headers, body) = http::client::request_with_headers(
+        addr,
+        "GET",
+        "/metrics?format=prometheus",
+        &[],
+        None,
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    let ct = headers.iter().find(|(k, _)| k == "content-type").map(|(_, v)| v.as_str());
+    assert_eq!(ct, Some("text/plain; version=0.0.4"));
+
+    let mut typed: Vec<String> = Vec::new();
+    let mut helped: Vec<String> = Vec::new();
+    let mut samples = 0usize;
+    for line in body.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            helped.push(rest.split_whitespace().next().unwrap().to_string());
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            typed.push(it.next().unwrap().to_string());
+            let kind = it.next().unwrap();
+            assert!(
+                ["counter", "gauge", "summary"].contains(&kind),
+                "unknown metric type in {line:?}"
+            );
+            continue;
+        }
+        assert!(!line.starts_with('#'), "malformed comment line {line:?}");
+        // sample: name[{labels}] value
+        let (name_labels, value) = line.rsplit_once(' ').expect("sample has a value");
+        assert!(value.parse::<f64>().is_ok(), "non-numeric value in {line:?}");
+        let name = match name_labels.split_once('{') {
+            Some((n, labels)) => {
+                assert!(labels.ends_with('}'), "unterminated labels in {line:?}");
+                n
+            }
+            None => name_labels,
+        };
+        assert!(valid_metric_name(name), "bad metric name in {line:?}");
+        let family = name
+            .strip_suffix("_sum")
+            .or_else(|| name.strip_suffix("_count"))
+            .unwrap_or(name);
+        assert!(
+            typed.iter().any(|t| t == family || t == name),
+            "sample {name} has no # TYPE header"
+        );
+        samples += 1;
+    }
+    assert!(samples >= 10, "suspiciously few samples: {samples}");
+    assert_eq!(typed, helped, "every family needs matching HELP and TYPE");
+    for want in [
+        "flexor_requests_total",
+        "flexor_request_latency_ms",
+        "flexor_queue_depth",
+        "flexor_pool_threads",
+        "flexor_trace_mode",
+    ] {
+        assert!(typed.iter().any(|t| t == want), "missing family {want}");
+    }
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// With tracing forced on, `/models/<name>/profile` reports per-layer
+/// stage timing that accounts for the traced forwards.
+#[test]
+fn profile_endpoint_reports_stage_timing() {
+    let dir = bundle_dir("profile");
+    export_synthetic_mlp_bundle(&dir, "served", 7, D_IN, &[32, 24], 10).unwrap();
+    let mut registry = Registry::new();
+    registry.load("served", &dir, "served").unwrap();
+    let cfg = ServeConfig { trace: Some(trace::TraceMode::All), ..ServeConfig::default() };
+    let server = Server::start("127.0.0.1:0", registry, cfg).unwrap();
+    let addr = server.local_addr();
+
+    let x: Vec<f32> = vec![0.75; D_IN];
+    for _ in 0..6 {
+        let (status, v) = post_predict(addr, &predict_body("served", &x));
+        assert_eq!(status, 200, "{v}");
+    }
+
+    let (status, body) =
+        http::client::request(addr, "GET", "/models/served/profile", None).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let p = json::parse(&body).unwrap();
+    assert_eq!(p.get("model").as_str(), Some("served"));
+    assert_eq!(p.get("trace_mode").as_str(), Some("all"));
+    let forwards = p.get("traced_forwards").as_usize().unwrap();
+    assert!((1..=6).contains(&forwards), "traced_forwards {forwards}");
+    assert_eq!(p.get("forward").get("count").as_usize(), Some(forwards));
+    let layers = p.get("layers").as_arr().unwrap();
+    assert!(!layers.is_empty(), "no layers recorded: {body}");
+    for layer in layers {
+        assert!(!layer.get("layer").as_str().unwrap().is_empty());
+        assert_eq!(layer.get("count").as_usize(), Some(forwards));
+        for stage in layer.get("stages").as_arr().unwrap() {
+            assert!(stage.get("count").as_usize().unwrap() > 0);
+            assert!(stage.get("total_ms").as_f64().unwrap() >= 0.0);
+            assert!(stage.get("mean_us").as_f64().unwrap() >= 0.0);
+        }
+    }
+
+    let (status, _) = http::client::request(addr, "GET", "/models/ghost/profile", None).unwrap();
+    assert_eq!(status, 404);
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The overhead contract's accounting half: per-layer span totals must
+/// sum to (nearly) the end-to-end forward span — no stage double-counts
+/// and no large untraced gap. The bench records the latency half
+/// (`overhead_trace_sampled_vs_off`).
+#[test]
+fn profile_stage_sums_track_forward_latency() {
+    let dir = bundle_dir("sums");
+    export_synthetic_resnet_bundle(&dir, "r", 31, "resnet8", 8, 10).unwrap();
+    let model = InferenceModel::load(&dir, "r").unwrap();
+    let feat = 8 * 8 * 3;
+    let mut rng = Pcg32::seeded(5);
+    let x: Vec<f32> = (0..8 * feat).map(|_| rng.normal()).collect();
+    model.predict(&x, 8).unwrap(); // warm-up, untraced
+
+    let profile = Arc::new(trace::Profile::new());
+    const ITERS: usize = 4;
+    let wall = Instant::now();
+    for _ in 0..ITERS {
+        let _t = trace::scope_with(trace::TraceMode::All, Some(profile.clone()));
+        model.predict(&x, 8).unwrap();
+    }
+    let wall_ms = wall.elapsed().as_secs_f64() * 1e3;
+
+    let rows = profile.rows();
+    let forward_ms: f64 = rows
+        .iter()
+        .filter(|r| r.layer.is_empty() && r.stage == "forward")
+        .map(|r| r.total_ns as f64 / 1e6)
+        .sum();
+    let layer_ms: f64 = rows
+        .iter()
+        .filter(|r| r.stage == "layer")
+        .map(|r| r.total_ns as f64 / 1e6)
+        .sum();
+    assert_eq!(profile.traced_forwards(), ITERS as u64);
+    assert!(forward_ms > 0.0, "forward span never recorded");
+    // layer spans nest inside forward, so they can never exceed it
+    // (small epsilon for clock granularity)...
+    assert!(
+        layer_ms <= forward_ms * 1.05,
+        "layer sum {layer_ms:.3}ms exceeds forward {forward_ms:.3}ms"
+    );
+    // ...and the taxonomy covers the bulk of the forward; typically
+    // > 90%, asserted loosely so scheduler noise can't flake CI.
+    assert!(
+        layer_ms >= forward_ms * 0.5,
+        "layer sum {layer_ms:.3}ms covers too little of forward {forward_ms:.3}ms"
+    );
+    // the forward span lives inside predict(), inside the walled loop
+    assert!(
+        forward_ms <= wall_ms,
+        "forward {forward_ms:.3}ms exceeds wall {wall_ms:.3}ms"
+    );
+}
+
+/// Trace state must only observe, never perturb: outputs are
+/// bit-identical with tracing off, sampled away, and fully on.
+#[test]
+fn tracing_is_bit_identical_to_untraced() {
+    let dir = bundle_dir("bitident");
+    export_synthetic_resnet_bundle(&dir, "r", 77, "resnet8", 8, 10).unwrap();
+    let model = InferenceModel::load(&dir, "r").unwrap();
+    let feat = 8 * 8 * 3;
+    let mut rng = Pcg32::seeded(9);
+    let x: Vec<f32> = (0..4 * feat).map(|_| rng.normal()).collect();
+
+    let baseline = model.forward(&x, 4).unwrap();
+    let off = {
+        let _t = trace::scope_with(trace::TraceMode::Off, None);
+        model.forward(&x, 4).unwrap()
+    };
+    let profile = Arc::new(trace::Profile::new());
+    let all = {
+        let _t = trace::scope_with(trace::TraceMode::All, Some(profile.clone()));
+        model.forward(&x, 4).unwrap()
+    };
+    assert!(profile.traced_forwards() >= 1, "All-mode scope traced nothing");
+
+    let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&baseline), bits(&off), "trace=off changed results");
+    assert_eq!(bits(&baseline), bits(&all), "trace=all changed results");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Request ids round-trip end to end: a client-supplied id is echoed in
+/// the response header and body; a server-generated id appears on
+/// errors too, so log lines can be joined to responses.
+#[test]
+fn request_ids_round_trip_end_to_end() {
+    let dir = bundle_dir("rid");
+    export_synthetic_mlp_bundle(&dir, "served", 7, D_IN, &[24], 10).unwrap();
+    let mut registry = Registry::new();
+    registry.load("served", &dir, "served").unwrap();
+    let server = Server::start("127.0.0.1:0", registry, ServeConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    let x: Vec<f32> = vec![0.1; D_IN];
+    let (status, headers, body) = http::client::request_with_headers(
+        addr,
+        "POST",
+        "/predict",
+        &[("X-Request-Id", "it-42.A")],
+        Some(&predict_body("served", &x)),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "{body}");
+    let echoed = headers.iter().find(|(k, _)| k == "x-request-id").map(|(_, v)| v.as_str());
+    assert_eq!(echoed, Some("it-42.A"));
+    assert_eq!(json::parse(&body).unwrap().get("request_id").as_str(), Some("it-42.A"));
+
+    // no client id: the server mints one and it matches header ↔ body
+    let (status, headers, body) = http::client::request_with_headers(
+        addr,
+        "POST",
+        "/predict",
+        &[],
+        Some("{not json"),
+    )
+    .unwrap();
+    assert_eq!(status, 400);
+    let minted = headers
+        .iter()
+        .find(|(k, _)| k == "x-request-id")
+        .map(|(_, v)| v.clone())
+        .expect("error responses carry a request id");
+    assert!(!minted.is_empty());
+    assert_eq!(json::parse(&body).unwrap().get("request_id").as_str(), Some(minted.as_str()));
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
