@@ -36,7 +36,7 @@ fn main() -> Result<()> {
         .flag("max-batch", "max coalesced batch size", Some("16"))
         .flag("max-wait-us", "batching linger window (µs)", Some("2000"))
         .flag("compute-mode",
-              "policy <mode>[@min=<w>][,<idx>=<mode>]*, mode = dense | bitplane | bitplane:<m> (default: FLEXOR_COMPUTE env, else dense)",
+              "policy <mode>[@min=<w>][,<idx>=<mode>]*, mode = dense | bitplane[:<m>] | encrypted[:<m>] (default: FLEXOR_COMPUTE env, else dense)",
               Some(""))
         .flag("artifact", "config to train/export", Some("quickstart_mlp"))
         .flag("dataset", "request generator", Some("digits"))

@@ -17,6 +17,8 @@
 //! Both return "negative bits" (1 ⇔ quantized weight bit is −1), matching
 //! the Python `decrypt_bits` convention; `to_signs()` recovers ±1.
 
+use std::ops::Range;
+
 use anyhow::{ensure, Result};
 
 use super::bitpack::{BitVec, ColumnBits};
@@ -136,6 +138,10 @@ impl Decryptor {
     /// channel `i % c_out`. Returns `c_out` [`BitVec`]s of length
     /// `k = n_weights / c_out`; bit `t` of channel `j` is 1 ⇔ weight
     /// `(t, j)` decrypts to −1 (the crate-wide bit convention).
+    ///
+    /// The full-range case of [`Decryptor::decrypt_panel_rows`], so both
+    /// materialization paths share one walk and can never disagree on
+    /// the crop / block-boundary geometry.
     pub fn decrypt_to_plane_rows(
         &self,
         enc: &ColumnBits,
@@ -143,13 +149,88 @@ impl Decryptor {
         c_out: usize,
     ) -> Result<Vec<BitVec>> {
         ensure!(c_out > 0, "c_out must be positive");
+        self.decrypt_panel_rows(enc, n_weights, c_out, 0..c_out)
+    }
+
+    /// Decrypt only the output channels `cols` of a `(k × c_out)`
+    /// quantized weight — the panel-granular entry point of the
+    /// decrypt-on-demand engine (`ComputeMode::Encrypted`, DESIGN.md
+    /// §11). Returns `cols.len()` [`BitVec`]s of length
+    /// `k = n_weights / c_out`, matching the corresponding slice of
+    /// [`Decryptor::decrypt_to_plane_rows`] bit-for-bit.
+    ///
+    /// Because one channel's bits stride through the **entire**
+    /// encrypted stream (weight `t·c_out + j` lives at slice
+    /// `(t·c_out + j) / n_out`), the walk still scans every slice — but
+    /// it materializes only a transient 64-slice block of decrypted
+    /// words ([`Self::decrypt_block`]-style: `N_tap` XORs + parity
+    /// complement per column) and scatters just the requested channels'
+    /// bits. No full decrypted plane ever exists.
+    pub fn decrypt_panel_rows(
+        &self,
+        enc: &ColumnBits,
+        n_weights: usize,
+        c_out: usize,
+        cols: Range<usize>,
+    ) -> Result<Vec<BitVec>> {
+        ensure!(c_out > 0, "c_out must be positive");
         ensure!(
             n_weights % c_out == 0,
             "n_weights {n_weights} not divisible by c_out {c_out}"
         );
-        let cols = self.decrypt_columns(enc)?;
+        let jw = cols.len();
+        let k = n_weights / c_out;
+        let wpr = k.div_ceil(64);
+        let mut buf = vec![0u64; wpr * jw];
+        self.decrypt_panel_into(enc, n_weights, c_out, cols, jw.max(1), &mut buf)?;
+        let mut rows = Vec::with_capacity(jw);
+        for jj in 0..jw {
+            let mut bv = BitVec::zeros(k);
+            let words = bv.words_mut();
+            for (w, word) in words.iter_mut().enumerate() {
+                *word = buf[w * jw + jj];
+            }
+            rows.push(bv);
+        }
+        Ok(rows)
+    }
+
+    /// [`Decryptor::decrypt_panel_rows`] straight into an interleaved
+    /// panel scratch tile — the hot-loop form the encrypted XNOR GEMM
+    /// consumes (`inference::bitslice::encrypted`). Channel
+    /// `cols.start + jj` lands at slot `jj` with word stride `stride`
+    /// (`dst[w·stride + jj]` = word `w` of that channel), the exact
+    /// [`PlaneStore`](crate::inference::bitslice::PlaneStore) panel
+    /// layout when `stride` = NR. `dst` must be `⌈k/64⌉ · stride` words
+    /// and is fully overwritten (slots past `cols` zeroed), so dirty
+    /// arena buffers are fine.
+    pub fn decrypt_panel_into(
+        &self,
+        enc: &ColumnBits,
+        n_weights: usize,
+        c_out: usize,
+        cols: Range<usize>,
+        stride: usize,
+        dst: &mut [u64],
+    ) -> Result<()> {
+        ensure!(c_out > 0, "c_out must be positive");
+        ensure!(
+            n_weights % c_out == 0,
+            "n_weights {n_weights} not divisible by c_out {c_out}"
+        );
+        ensure!(
+            enc.width() == self.mxor.n_in(),
+            "encrypted width {} != N_in {}",
+            enc.width(),
+            self.mxor.n_in()
+        );
+        ensure!(
+            cols.start < cols.end && cols.end <= c_out,
+            "bad channel range {cols:?} for c_out {c_out}"
+        );
+        ensure!(cols.len() <= stride, "channel range wider than panel stride");
         let n_out = self.mxor.n_out();
-        let slices = cols.slices();
+        let slices = enc.slices();
         ensure!(
             n_weights <= slices * n_out,
             "n_weights {} exceeds decrypted bits {}",
@@ -157,13 +238,82 @@ impl Decryptor {
             slices * n_out
         );
         let k = n_weights / c_out;
-        let mut rows = vec![BitVec::zeros(k); c_out];
-        for_each_weight_bit(&cols, n_weights, |i, bit| {
-            if bit {
-                rows[i % c_out].set(i / c_out, true);
+        let wpr = k.div_ceil(64);
+        ensure!(
+            dst.len() == wpr * stride,
+            "dst is {} words, panel needs {wpr} x {stride}",
+            dst.len()
+        );
+        dst.fill(0);
+        let (c0, c1) = (cols.start, cols.end);
+
+        // transient per-64-slice block of decrypted words (one per
+        // output column) — the only decrypted state that ever exists
+        let mut stack = [0u64; 64];
+        let mut heap: Vec<u64>;
+        let words: &mut [u64] = if n_out <= stack.len() {
+            &mut stack[..n_out]
+        } else {
+            heap = vec![0u64; n_out];
+            &mut heap
+        };
+
+        // incremental (reduction row t, channel j) walk over the
+        // slice-major weight order — no per-bit div/mod
+        let mut t = 0usize;
+        let mut j = 0usize;
+        let mut i = 0usize;
+        'blocks: for blk in 0..slices.div_ceil(64) {
+            self.decrypt_block(enc, blk, words);
+            let s_end = (blk * 64 + 64).min(slices);
+            for s in blk * 64..s_end {
+                if i >= n_weights {
+                    break 'blocks;
+                }
+                let shift = (s % 64) as u32;
+                let r_end = n_out.min(n_weights - i);
+                for &w in words[..r_end].iter() {
+                    if j >= c0 && j < c1 {
+                        let bit = (w >> shift) & 1;
+                        dst[(t / 64) * stride + (j - c0)] |= bit << (t % 64);
+                    }
+                    j += 1;
+                    if j == c_out {
+                        j = 0;
+                        t += 1;
+                    }
+                }
+                i += r_end;
             }
-        });
-        Ok(rows)
+        }
+        Ok(())
+    }
+
+    /// Decrypt 64-slice block `blk` of every output column at once:
+    /// `words[r]` gets column `r`'s decrypted word (tap XORs + parity
+    /// complement, padding bits past `slices` kept clear). The
+    /// word-level primitive behind the panel walk — same math as
+    /// [`Decryptor::decrypt_columns`], one block at a time.
+    fn decrypt_block(&self, enc: &ColumnBits, blk: usize, words: &mut [u64]) {
+        let slices = enc.slices();
+        let tail_mask = if (blk + 1) * 64 > slices && slices % 64 != 0 {
+            (1u64 << (slices % 64)) - 1
+        } else {
+            u64::MAX
+        };
+        for (r, out) in words.iter_mut().enumerate() {
+            let mut acc = 0u64;
+            let mut taps = self.mxor.row_mask(r);
+            while taps != 0 {
+                let j = taps.trailing_zeros() as usize;
+                taps &= taps - 1;
+                acc ^= enc.column(j).words()[blk];
+            }
+            if self.parity[r] {
+                acc = !acc & tail_mask;
+            }
+            *out = acc;
+        }
     }
 
     /// Decrypted bits per stored bit — the decompression "gain".
@@ -425,6 +575,149 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Satellite property: panel-by-panel decryption concatenated over
+    /// ragged NR-width panels equals the full-range decrypt AND the
+    /// independent signs oracle (random geometry, c_out rarely divisible
+    /// by the panel width).
+    #[test]
+    fn decrypt_panel_rows_concat_matches_full_decrypt() {
+        check_msg("panel concat == full decrypt == signs", 30, |g| {
+            let n_in = g.usize_in(1, 12);
+            let n_out = n_in + g.usize_in(0, 8);
+            let c_out = 1 + g.usize_in(0, 21); // ragged vs panel width 8
+            let k = 1 + g.usize_in(0, 150);
+            let n_weights = k * c_out;
+            let slices = crate::flexor::num_slices(n_weights, n_out);
+            let mxor =
+                MXor::with_ntap(n_out, n_in, 1 + g.usize_in(0, n_in.min(2)), g.rng())
+                    .unwrap();
+            let enc = rand_enc(g.rng(), slices, n_in);
+            let d = Decryptor::new(mxor);
+            let full = d
+                .decrypt_to_plane_rows(&enc, n_weights, c_out)
+                .map_err(|e| e.to_string())?;
+            let signs = d.decrypt_to_signs(&enc, n_weights).map_err(|e| e.to_string())?;
+            let mut got = Vec::with_capacity(c_out);
+            for j0 in (0..c_out).step_by(8) {
+                let j1 = (j0 + 8).min(c_out);
+                let panel = d
+                    .decrypt_panel_rows(&enc, n_weights, c_out, j0..j1)
+                    .map_err(|e| e.to_string())?;
+                if panel.len() != j1 - j0 {
+                    return Err(format!("panel {j0}..{j1}: {} rows", panel.len()));
+                }
+                got.extend(panel);
+            }
+            if got != full {
+                return Err(format!(
+                    "panel concat != full decrypt (c_out={c_out} k={k})"
+                ));
+            }
+            for (i, &s) in signs.iter().enumerate() {
+                if got[i % c_out].get(i / c_out) != (s < 0.0) {
+                    return Err(format!("weight {i} disagrees with signs oracle"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite property: the panel walk at k straddling u64 word
+    /// boundaries, under an all-parity M⊕ (every row complements whole
+    /// words, so the padding-mask edge the full-bundle parity test
+    /// covers is exercised panel-by-panel too).
+    #[test]
+    fn decrypt_panel_rows_at_word_boundary_k_with_all_parity_rows() {
+        let mut rng = Pcg32::seeded(23);
+        for k in [1usize, 63, 64, 65, 127, 128] {
+            for c_out in [5usize, 8, 11] {
+                let (n_in, n_out) = (6, 10);
+                let n_weights = k * c_out;
+                let slices = crate::flexor::num_slices(n_weights, n_out);
+                // n_tap = 2 ⇒ parity complement on every row
+                let mxor = MXor::with_ntap(n_out, n_in, 2, &mut rng).unwrap();
+                let enc = rand_enc(&mut rng, slices, n_in);
+                let d = Decryptor::new(mxor);
+                let signs = d.decrypt_to_signs(&enc, n_weights).unwrap();
+                for j0 in (0..c_out).step_by(8) {
+                    let j1 = (j0 + 8).min(c_out);
+                    let rows =
+                        d.decrypt_panel_rows(&enc, n_weights, c_out, j0..j1).unwrap();
+                    for (jj, row) in rows.iter().enumerate() {
+                        assert_eq!(row.len(), k);
+                        // padding bits above k must be clear (serialization
+                        // would reject them)
+                        BitVec::from_bytes(k, &row.to_bytes()).unwrap();
+                        for t in 0..k {
+                            let want = signs[t * c_out + j0 + jj] < 0.0;
+                            assert_eq!(
+                                row.get(t),
+                                want,
+                                "k={k} c_out={c_out} ch {} bit {t}",
+                                j0 + jj
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The interleaved hot-loop form writes the PlaneStore panel layout:
+    /// `dst[w·stride + jj]` = word `w` of channel `cols.start + jj`,
+    /// padding slots zeroed even when the buffer starts dirty.
+    #[test]
+    fn decrypt_panel_into_interleaved_layout() {
+        let mut rng = Pcg32::seeded(29);
+        let (n_in, n_out, c_out, k) = (6, 10, 11, 70);
+        let n_weights = k * c_out;
+        let slices = crate::flexor::num_slices(n_weights, n_out);
+        let mxor = MXor::with_ntap(n_out, n_in, 2, &mut rng).unwrap();
+        let enc = rand_enc(&mut rng, slices, n_in);
+        let d = Decryptor::new(mxor);
+        let stride = 8usize;
+        let wpr = k.div_ceil(64);
+        for j0 in (0..c_out).step_by(stride) {
+            let j1 = (j0 + stride).min(c_out);
+            let jw = j1 - j0;
+            let mut dst = vec![u64::MAX; wpr * stride]; // deliberately dirty
+            d.decrypt_panel_into(&enc, n_weights, c_out, j0..j1, stride, &mut dst)
+                .unwrap();
+            let rows = d.decrypt_panel_rows(&enc, n_weights, c_out, j0..j1).unwrap();
+            for w in 0..wpr {
+                for jj in 0..stride {
+                    let want = if jj < jw { rows[jj].words()[w] } else { 0 };
+                    assert_eq!(
+                        dst[w * stride + jj],
+                        want,
+                        "panel {j0}..{j1} word {w} slot {jj}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decrypt_panel_rows_validates() {
+        let mut rng = Pcg32::seeded(31);
+        let mxor = MXor::with_ntap(10, 8, 2, &mut rng).unwrap();
+        let enc = rand_enc(&mut rng, 13, 8);
+        let d = Decryptor::new(mxor);
+        assert!(d.decrypt_panel_rows(&enc, 95, 5, 0..5).is_ok());
+        assert!(d.decrypt_panel_rows(&enc, 95, 5, 3..5).is_ok());
+        assert!(d.decrypt_panel_rows(&enc, 95, 5, 3..6).is_err()); // past c_out
+        assert!(d.decrypt_panel_rows(&enc, 95, 5, 3..3).is_err()); // empty range
+        assert!(d.decrypt_panel_rows(&enc, 95, 4, 0..4).is_err()); // not divisible
+        assert!(d.decrypt_panel_rows(&enc, 140, 5, 0..5).is_err()); // > 130 bits
+        let mut dst = vec![0u64; 3];
+        assert!(d
+            .decrypt_panel_into(&enc, 95, 5, 0..5, 8, &mut dst)
+            .is_err()); // wrong dst len
+        assert!(d
+            .decrypt_panel_into(&enc, 95, 5, 0..5, 4, &mut dst)
+            .is_err()); // range wider than stride
     }
 
     #[test]

@@ -1,0 +1,594 @@
+//! [`EncryptedStore`] — decrypt-on-demand serving (DESIGN.md §11): the
+//! quantized GEMM right-hand side stays **encrypted** for its entire
+//! lifetime, realizing the paper's sub-1-bit storage claim at inference
+//! time instead of only on disk.
+//!
+//! The BitPlane engine (§8/§9) already avoids dense FP weights, but its
+//! resident [`PlaneStore`] holds `q` **decrypted** bit-planes — ≥ q
+//! bits/weight, above the fractional `q·N_in/N_out` the `.fxr` container
+//! stores. This engine keeps exactly the container's payload resident
+//! (encrypted column words + the XOR-gate network `M⊕` + α) and fuses
+//! the [`Decryptor`] into the XNOR GEMM tile loop:
+//!
+//! * per pool shard, the NR-channel panel loop runs **outermost**;
+//! * each panel of each bit-plane is decrypted once per (shard, panel)
+//!   into a per-thread scratch tile
+//!   ([`Decryptor::decrypt_panel_into`] → the interleaved
+//!   [`PlaneStore`] panel layout), recycled through the
+//!   [`scratch`](crate::inference::gemm::scratch) arena;
+//! * the existing [`panel_dot`](super::popcount::panel_dot) kernels run
+//!   over the scratch panel exactly as they do over a resident one, and
+//!   the tile is discarded when the shard moves on.
+//!
+//! Determinism: every output element still accumulates in the fixed
+//! (weight-plane `p` outer, activation-plane `m` inner, word-ascending)
+//! order over bit-identical decrypted panels, and elements are
+//! independent of tile *visit* order — so encrypted-mode forwards are
+//! **bit-identical** to BitPlane forwards at the same `act_planes`,
+//! across thread counts and across popcount kernels
+//! (`rust/tests/engines.rs` pins the whole matrix).
+
+use anyhow::{ensure, Result};
+
+use crate::flexor::bitpack::ColumnBits;
+use crate::flexor::fxr;
+use crate::flexor::matrix::MXor;
+use crate::flexor::{num_slices, Decryptor};
+use crate::substrate::pool::ThreadPool;
+use crate::substrate::trace;
+
+use super::super::gemm::{self, scratch, Epilogue, MR, NR, ROWS_PER_SHARD};
+use super::super::tensor::{self, Tensor};
+use super::binarize::{self, BinarizedActs};
+use super::plane::PlaneStore;
+use super::popcount::{self, Kernel};
+
+/// One bit-plane kept encrypted: the decryptor (XOR-gate network +
+/// parity), the per-channel α, and the packed encrypted column words —
+/// byte-for-byte what the `.fxr` container ships.
+struct EncryptedPlane {
+    dec: Decryptor,
+    alpha: Vec<f32>,
+    enc: ColumnBits,
+}
+
+/// A quantized layer whose weights stay encrypted while serving; panels
+/// are decrypted on demand inside the GEMM tile loop and never stored.
+pub struct EncryptedStore {
+    /// Original weight tensor dims (HWIO for conv, `(in, out)` for dense).
+    shape: Vec<usize>,
+    k: usize,
+    n: usize,
+    /// Words per channel row: `⌈k/64⌉`.
+    wpr: usize,
+    n_weights: usize,
+    planes: Vec<EncryptedPlane>,
+}
+
+impl EncryptedStore {
+    /// Build from raw per-plane parts (M⊕, α, encrypted columns) —
+    /// everything [`EncryptedStore::decrypt_panel_tile`] relies on is
+    /// validated here, so the hot loop never sees a malformed layer.
+    pub fn from_parts(
+        shape: &[usize],
+        planes: Vec<(MXor, Vec<f32>, ColumnBits)>,
+    ) -> Result<EncryptedStore> {
+        ensure!(!shape.is_empty(), "empty weight shape");
+        ensure!(!planes.is_empty(), "no encrypted planes");
+        let n = *shape.last().unwrap();
+        let total: usize = shape.iter().product();
+        ensure!(n > 0 && total % n == 0, "bad weight shape {shape:?}");
+        let k = total / n;
+        let mut packed = Vec::with_capacity(planes.len());
+        for (pi, (mxor, alpha, enc)) in planes.into_iter().enumerate() {
+            ensure!(alpha.len() == n, "plane {pi}: alpha len != n {n}");
+            ensure!(
+                enc.width() == mxor.n_in(),
+                "plane {pi}: encrypted width {} != N_in {}",
+                enc.width(),
+                mxor.n_in()
+            );
+            ensure!(
+                total <= enc.slices() * mxor.n_out(),
+                "plane {pi}: {} weights exceed {} decrypted bits",
+                total,
+                enc.slices() * mxor.n_out()
+            );
+            packed.push(EncryptedPlane { dec: Decryptor::new(mxor), alpha, enc });
+        }
+        Ok(EncryptedStore {
+            shape: shape.to_vec(),
+            k,
+            n,
+            wpr: k.div_ceil(64),
+            n_weights: total,
+            planes: packed,
+        })
+    }
+
+    /// Build straight from a `.fxr` container layer — the load path.
+    pub fn from_layer(shape: &[usize], layer: &fxr::Layer) -> Result<EncryptedStore> {
+        ensure!(
+            shape.iter().product::<usize>() == layer.n_weights,
+            "shape {shape:?} != n_weights {}",
+            layer.n_weights
+        );
+        ensure!(
+            *shape.last().unwrap_or(&0) == layer.c_out,
+            "shape {shape:?} last axis != c_out {}",
+            layer.c_out
+        );
+        EncryptedStore::from_parts(
+            shape,
+            layer
+                .planes
+                .iter()
+                .map(|p| (p.mxor.clone(), p.alpha.clone(), p.enc.clone()))
+                .collect(),
+        )
+    }
+
+    /// Reduction length (rows of the GEMM right-hand side).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output channels (columns of the GEMM right-hand side).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Bit planes (the paper's q).
+    pub fn q(&self) -> usize {
+        self.planes.len()
+    }
+
+    /// Words per channel bit row.
+    pub fn words_per_row(&self) -> usize {
+        self.wpr
+    }
+
+    /// Channel panels per plane: `⌈n/NR⌉`.
+    pub fn num_panels(&self) -> usize {
+        self.n.div_ceil(NR)
+    }
+
+    /// Words one decrypted panel occupies: `wpr · NR`.
+    pub fn panel_words(&self) -> usize {
+        self.wpr * NR
+    }
+
+    /// Words the per-shard scratch tile needs: one panel per plane.
+    pub fn tile_words(&self) -> usize {
+        self.q() * self.panel_words()
+    }
+
+    /// Original weight tensor dims.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// `(kh, kw, ci)` when this is a conv weight (rank-4 HWIO shape).
+    pub fn conv_geometry(&self) -> Option<(usize, usize, usize)> {
+        if self.shape.len() == 4 {
+            Some((self.shape[0], self.shape[1], self.shape[2]))
+        } else {
+            None
+        }
+    }
+
+    /// Plane `p`'s per-channel α.
+    #[inline]
+    pub fn alpha(&self, p: usize) -> &[f32] {
+        &self.planes[p].alpha
+    }
+
+    /// Decrypt the NR-channel panel at column `j0` of **every** plane
+    /// into `tile` (plane `p`'s panel at `tile[p·panel_words()..]`, the
+    /// interleaved [`PlaneStore`] layout `panel[w·NR + jj]`). `tile` may
+    /// be dirty — each panel is fully overwritten, padding slots zeroed.
+    ///
+    /// Inputs are validated at construction, so this cannot fail on a
+    /// well-formed store (the GEMM shard loop relies on that).
+    #[inline]
+    pub fn decrypt_panel_tile(&self, j0: usize, tile: &mut [u64]) {
+        debug_assert!(j0 < self.n && j0 % NR == 0);
+        let pw = self.panel_words();
+        debug_assert_eq!(tile.len(), self.q() * pw);
+        let j1 = (j0 + NR).min(self.n);
+        for (p, plane) in self.planes.iter().enumerate() {
+            plane
+                .dec
+                .decrypt_panel_into(
+                    &plane.enc,
+                    self.n_weights,
+                    self.n,
+                    j0..j1,
+                    NR,
+                    &mut tile[p * pw..(p + 1) * pw],
+                )
+                .expect("encrypted panel geometry validated at construction");
+        }
+    }
+
+    /// Decrypt everything into a resident [`PlaneStore`] — oracle /
+    /// reference use only (the serving path never materializes this).
+    pub fn to_plane_store(&self) -> Result<PlaneStore> {
+        let mut decrypted = Vec::with_capacity(self.planes.len());
+        for plane in &self.planes {
+            let rows =
+                plane
+                    .dec
+                    .decrypt_to_plane_rows(&plane.enc, self.n_weights, self.n)?;
+            decrypted.push((rows, plane.alpha.clone()));
+        }
+        PlaneStore::from_decrypted(&self.shape, decrypted)
+    }
+
+    /// Bytes this layer keeps resident in Encrypted mode: the packed
+    /// encrypted column words **plus the XOR-gate network and scale
+    /// parameters themselves** — `M⊕` row masks (4 B each), the derived
+    /// parity bits, and the per-channel α. Nothing decrypted is counted
+    /// because nothing decrypted is resident.
+    pub fn resident_bytes(&self) -> usize {
+        self.planes
+            .iter()
+            .map(|p| {
+                let enc_words = p.enc.width() * p.enc.slices().div_ceil(64);
+                let n_out = p.dec.mxor().n_out();
+                enc_words * 8 // encrypted columns
+                    + n_out * 4 // M⊕ row masks (u32 each)
+                    + n_out // parity complement bits (bool each)
+                    + p.alpha.len() * 4 // α scales
+            })
+            .sum()
+    }
+}
+
+/// `C = epilogue(Â · W)` with W decrypted panel-by-panel on demand, on
+/// the process-wide popcount kernel.
+pub fn xnor_gemm_encrypted_into(
+    pool: &ThreadPool,
+    acts: &BinarizedActs,
+    w: &EncryptedStore,
+    epi: Epilogue<'_>,
+    c: &mut [f32],
+) {
+    xnor_gemm_encrypted_into_with_kernel(pool, acts, w, popcount::active(), epi, c)
+}
+
+/// [`xnor_gemm_encrypted_into`] with an explicit popcount kernel.
+///
+/// Same sharding (`ROWS_PER_SHARD` rows of C per shard) and same
+/// per-element accumulation order as the resident-plane GEMM
+/// ([`super::gemm::xnor_gemm_into_with_kernel`]); the only structural
+/// difference is the panel loop hoisted outermost so each panel is
+/// decrypted **once per shard** into the arena tile, not once per row
+/// tile. Output elements are independent of tile visit order, so the
+/// result is bit-identical to the BitPlane engine's.
+pub fn xnor_gemm_encrypted_into_with_kernel(
+    pool: &ThreadPool,
+    acts: &BinarizedActs,
+    w: &EncryptedStore,
+    kernel: Kernel,
+    epi: Epilogue<'_>,
+    c: &mut [f32],
+) {
+    let k = w.k();
+    let n = w.n();
+    assert_eq!(acts.k(), k, "activation rows are length {}, W expects {k}", acts.k());
+    assert_eq!(c.len(), acts.rows() * n, "C is {}x{n}", acts.rows());
+    gemm::validate_epilogue(&epi, n, c.len());
+    popcount::count_dispatch(kernel);
+    let pw = w.panel_words();
+    let _s = trace::span("xnor_gemm");
+    pool.run_chunks_mut(c, ROWS_PER_SHARD * n, |_shard, start, c_part| {
+        let i0 = start / n;
+        let prows = c_part.len() / n;
+        scratch::with(|arena| {
+            let mut tile = arena.take_u64(w.tile_words());
+            for j0 in (0..n).step_by(NR) {
+                let jw = (n - j0).min(NR);
+                w.decrypt_panel_tile(j0, &mut tile);
+                for t0 in (0..prows).step_by(MR) {
+                    let mh = (prows - t0).min(MR);
+                    let mut acc = [[0.0f32; NR]; MR];
+                    for (r, acc_row) in acc.iter_mut().enumerate().take(mh) {
+                        let i = i0 + t0 + r;
+                        for p in 0..w.q() {
+                            let alpha = &w.alpha(p)[j0..j0 + jw];
+                            let panel = &tile[p * pw..(p + 1) * pw];
+                            for m in 0..acts.planes() {
+                                let beta = acts.scale(i, m);
+                                if beta == 0.0 {
+                                    continue;
+                                }
+                                let dots = popcount::panel_dot(
+                                    kernel,
+                                    acts.row_bits(i, m),
+                                    panel,
+                                    k,
+                                );
+                                for (jj, av) in
+                                    acc_row.iter_mut().enumerate().take(jw)
+                                {
+                                    *av += beta * alpha[jj] * dots[jj] as f32;
+                                }
+                            }
+                        }
+                    }
+                    gemm::store_tile(&acc, c_part, t0, i0, mh, j0, n, &epi);
+                }
+            }
+            arena.give_u64(tile);
+        });
+    });
+}
+
+/// Fused `conv2d → epilogue` on the encrypted engine: im2col + binarize
+/// exactly as the bit-plane path, then the decrypt-on-demand GEMM.
+pub fn conv2d_encrypted(
+    pool: &ThreadPool,
+    x: &Tensor,
+    w: &EncryptedStore,
+    stride: usize,
+    act_planes: usize,
+    epi: Epilogue<'_>,
+) -> Tensor {
+    let (kh, kw, ci) = w
+        .conv_geometry()
+        .expect("conv2d_encrypted needs a rank-4 HWIO encrypted store");
+    assert_eq!(x.rank(), 4, "conv input must be NHWC");
+    assert_eq!(x.dims[3], ci, "channel mismatch");
+    let n_im = x.dims[0];
+    let dims = (n_im, x.dims[1], x.dims[2], ci);
+    let (ho, wo, _, _) =
+        tensor::conv_out_geometry((x.dims[1], x.dims[2]), (kh, kw), stride);
+    let k = kh * kw * ci;
+    debug_assert_eq!(w.k(), k);
+    let rows = n_im * ho * wo;
+    let mut col = scratch::take(rows * k);
+    {
+        let _s = trace::span("im2col");
+        pool.run_chunks_mut(&mut col, ROWS_PER_SHARD * k, |_shard, start, part| {
+            tensor::im2col_rows(&x.data, dims, (kh, kw), stride, start / k, part);
+        });
+    }
+    let acts = {
+        let _s = trace::span("binarize");
+        binarize::binarize_rows(pool, &col, rows, k, act_planes)
+    };
+    scratch::give(col);
+    let mut out = scratch::take(rows * w.n());
+    xnor_gemm_encrypted_into(pool, &acts, w, epi, &mut out);
+    acts.recycle();
+    Tensor::new(vec![n_im, ho, wo, w.n()], out)
+}
+
+/// Fused `dense → epilogue` on the encrypted engine.
+pub fn dense_encrypted(
+    pool: &ThreadPool,
+    x: &Tensor,
+    w: &EncryptedStore,
+    act_planes: usize,
+    epi: Epilogue<'_>,
+) -> Tensor {
+    assert_eq!(x.rank(), 2, "dense input must be (N, In)");
+    assert_eq!(x.dims[1], w.k(), "dense in-features mismatch");
+    let acts = {
+        let _s = trace::span("binarize");
+        binarize::binarize_rows(pool, &x.data, x.dims[0], x.dims[1], act_planes)
+    };
+    let mut out = scratch::take(x.dims[0] * w.n());
+    xnor_gemm_encrypted_into(pool, &acts, w, epi, &mut out);
+    acts.recycle();
+    Tensor::new(vec![x.dims[0], w.n()], out)
+}
+
+// ---- reference path (oracle) ------------------------------------------------
+
+/// Reference conv for Encrypted mode: decrypt everything up front (the
+/// one thing serving never does) and run the bit-plane reference —
+/// identical binarization contract, dense math.
+pub fn conv2d_encrypted_reference(
+    x: &Tensor,
+    w: &EncryptedStore,
+    stride: usize,
+    act_planes: usize,
+) -> Tensor {
+    let store = w.to_plane_store().expect("validated at construction");
+    super::gemm::conv2d_bitplane_reference(x, &store, stride, act_planes)
+}
+
+/// Reference dense for Encrypted mode (see [`conv2d_encrypted_reference`]).
+pub fn dense_encrypted_reference(
+    x: &Tensor,
+    w: &EncryptedStore,
+    act_planes: usize,
+) -> Tensor {
+    let store = w.to_plane_store().expect("validated at construction");
+    super::gemm::dense_bitplane_reference(x, &store, act_planes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::gemm::xnor_gemm_into_with_kernel;
+    use super::*;
+    use crate::substrate::prng::Pcg32;
+    use crate::substrate::ptest::check_msg;
+
+    /// Random encrypted fixture: q planes of (M⊕, α, encrypted columns)
+    /// for a (k × n) weight, mirroring the `.fxr` layer geometry.
+    fn rand_store(
+        rng: &mut Pcg32,
+        shape: &[usize],
+        q: usize,
+        n_in: usize,
+        n_out: usize,
+    ) -> EncryptedStore {
+        let n = *shape.last().unwrap();
+        let total: usize = shape.iter().product();
+        let slices = num_slices(total, n_out);
+        let planes = (0..q)
+            .map(|_| {
+                let mxor = MXor::with_ntap(n_out, n_in, 2, rng).unwrap();
+                let alpha: Vec<f32> = (0..n).map(|_| rng.range_f32(0.05, 0.5)).collect();
+                let bits: Vec<u8> =
+                    (0..slices * n_in).map(|_| rng.bernoulli(0.5) as u8).collect();
+                let enc = ColumnBits::from_row_major(&bits, n_in).unwrap();
+                (mxor, alpha, enc)
+            })
+            .collect();
+        EncryptedStore::from_parts(shape, planes).unwrap()
+    }
+
+    /// Tentpole property: the decrypt-on-demand GEMM is bit-identical to
+    /// the resident bit-plane GEMM over the same decrypted content,
+    /// across 1/2/4 threads and every supported popcount kernel —
+    /// including ragged channel tails (n not divisible by NR) and k
+    /// straddling word boundaries.
+    #[test]
+    fn encrypted_gemm_bit_identical_to_bitplane() {
+        let pools = [ThreadPool::new(1), ThreadPool::new(2), ThreadPool::new(4)];
+        let kernels = popcount::available();
+        check_msg("encrypted gemm == bitplane gemm (bits)", 12, |g| {
+            let rows = g.usize_in(1, 80);
+            let k = g.usize_in(1, 140);
+            let n = g.usize_in(1, 21);
+            let q = 1 + g.usize_in(0, 2);
+            let m = 1 + g.usize_in(0, 4);
+            let n_in = 4 + g.usize_in(0, 6);
+            let n_out = n_in + g.usize_in(1, 6);
+            let a: Vec<f32> = (0..rows * k).map(|_| g.normal()).collect();
+            let store = rand_store(g.rng(), &[k, n], q, n_in, n_out);
+            let resident = store.to_plane_store().map_err(|e| e.to_string())?;
+
+            let mut first: Option<Vec<f32>> = None;
+            for pool in &pools {
+                let acts = binarize::binarize_rows(pool, &a, rows, k, m);
+                for kern in &kernels {
+                    let mut want = vec![0.0f32; rows * n];
+                    xnor_gemm_into_with_kernel(
+                        pool,
+                        &acts,
+                        &resident,
+                        *kern,
+                        Epilogue::None,
+                        &mut want,
+                    );
+                    let mut got = vec![0.0f32; rows * n];
+                    xnor_gemm_encrypted_into_with_kernel(
+                        pool,
+                        &acts,
+                        &store,
+                        *kern,
+                        Epilogue::None,
+                        &mut got,
+                    );
+                    if got != want {
+                        return Err(format!(
+                            "threads={} kernel={} ({rows}x{k}x{n} q={q} m={m}): \
+                             encrypted != bitplane",
+                            pool.threads(),
+                            kern.label()
+                        ));
+                    }
+                    match &first {
+                        None => first = Some(got),
+                        Some(f) => {
+                            if *f != got {
+                                return Err(format!(
+                                    "threads={} kernel={} changed the bits",
+                                    pool.threads(),
+                                    kern.label()
+                                ));
+                            }
+                        }
+                    }
+                }
+                acts.recycle();
+            }
+            Ok(())
+        });
+    }
+
+    /// Fused conv on the encrypted engine ≡ the decrypt-up-front
+    /// reference composition.
+    #[test]
+    fn conv_encrypted_matches_reference() {
+        let pool = ThreadPool::new(2);
+        check_msg("encrypted conv == reference", 8, |g| {
+            let n_im = g.usize_in(1, 3);
+            let h = g.usize_in(2, 7);
+            let wd = g.usize_in(2, 7);
+            let ci = g.usize_in(1, 4);
+            let co = g.usize_in(1, 7);
+            let kk = [1usize, 3][g.usize_in(0, 2)];
+            let stride = 1 + g.usize_in(0, 2);
+            let m = 1 + g.usize_in(0, 5);
+            let x = Tensor::new(
+                vec![n_im, h, wd, ci],
+                (0..n_im * h * wd * ci).map(|_| g.normal()).collect(),
+            );
+            let store = rand_store(g.rng(), &[kk, kk, ci, co], 1, 6, 10);
+            let got = conv2d_encrypted(&pool, &x, &store, stride, m, Epilogue::None);
+            let want = conv2d_encrypted_reference(&x, &store, stride, m);
+            if got.dims != want.dims {
+                return Err(format!("dims {:?} vs {:?}", got.dims, want.dims));
+            }
+            for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+                let ok = (a - b).abs() <= 1e-3 * (1.0 + b.abs());
+                if !ok {
+                    return Err(format!("elem {i}: {a} vs {b} (k={kk} s={stride} m={m})"));
+                }
+            }
+            scratch::give(got.data);
+            Ok(())
+        });
+    }
+
+    /// Resident accounting counts the encrypted payload + XOR-network
+    /// params, hand-computed: k=130, n=3, q=2, n_in=8, n_out=10 ⇒
+    /// 390 weights → 39 slices → 1 word per column.
+    #[test]
+    fn resident_bytes_counts_encrypted_words_and_xor_network() {
+        let mut rng = Pcg32::seeded(47);
+        let store = rand_store(&mut rng, &[130, 3], 2, 8, 10);
+        // per plane: 8 columns × ⌈39/64⌉=1 word × 8 B = 64 B encrypted,
+        // + 10 row masks × 4 B + 10 parity bytes + 3 α × 4 B = 116 B
+        assert_eq!(store.resident_bytes(), 2 * (64 + 40 + 10 + 12));
+        // and strictly below the decrypted bit-plane residency
+        let resident = store.to_plane_store().unwrap();
+        assert!(store.resident_bytes() < resident.resident_bytes());
+        assert_eq!((store.k(), store.n(), store.q()), (130, 3, 2));
+        assert_eq!(store.words_per_row(), 3);
+        assert_eq!(store.num_panels(), 1);
+        assert_eq!(store.tile_words(), 2 * 3 * NR);
+        assert!(store.conv_geometry().is_none());
+    }
+
+    #[test]
+    fn validation() {
+        let mut rng = Pcg32::seeded(53);
+        assert!(EncryptedStore::from_parts(&[4, 2], vec![]).is_err());
+        let mxor = MXor::with_ntap(10, 8, 2, &mut rng).unwrap();
+        let bits: Vec<u8> = (0..13 * 8).map(|_| rng.bernoulli(0.5) as u8).collect();
+        let enc = ColumnBits::from_row_major(&bits, 8).unwrap();
+        // alpha length mismatch
+        assert!(EncryptedStore::from_parts(
+            &[65, 2],
+            vec![(mxor.clone(), vec![1.0; 3], enc.clone())]
+        )
+        .is_err());
+        // more weights than decrypted bits (13 slices × 10 = 130)
+        assert!(EncryptedStore::from_parts(
+            &[100, 2],
+            vec![(mxor.clone(), vec![1.0; 2], enc.clone())]
+        )
+        .is_err());
+        assert!(
+            EncryptedStore::from_parts(&[65, 2], vec![(mxor, vec![1.0; 2], enc)])
+                .is_ok()
+        );
+    }
+}

@@ -23,18 +23,31 @@
 //!   [`Epilogue`](super::gemm::Epilogue) fusion contract as the
 //!   packed-FP engine.
 //!
+//! * [`encrypted`] — decrypt-on-demand serving ([`EncryptedStore`],
+//!   DESIGN.md §11): the quantized RHS stays **encrypted** resident
+//!   (sub-1-bit/weight, exactly the `.fxr` payload) and the XOR-gate
+//!   decryptor runs inside the GEMM tile loop, one NR-channel panel at
+//!   a time into a per-thread scratch tile consumed by the same
+//!   `panel_dot` kernels.
+//!
 //! [`ComputeMode`] selects the engine per model and [`ModePolicy`]
 //! refines it **per layer**: big conv/dense layers ride the bit-plane
-//! engine while tiny stems/heads stay FP-exact, with a weight-count
-//! threshold and explicit per-layer overrides (`serve::Registry`
-//! reports each entry's per-layer modes and resident bytes).
+//! or encrypted engine while tiny stems/heads stay FP-exact, with a
+//! weight-count threshold and explicit per-layer overrides
+//! (`serve::Registry` reports each entry's per-layer modes and resident
+//! bytes).
 
 pub mod binarize;
+pub mod encrypted;
 pub mod gemm;
 pub mod plane;
 pub mod popcount;
 
 pub use binarize::{BinarizedActs, DEFAULT_ACT_PLANES, MAX_ACT_PLANES};
+pub use encrypted::{
+    conv2d_encrypted, dense_encrypted, xnor_gemm_encrypted_into,
+    xnor_gemm_encrypted_into_with_kernel, EncryptedStore,
+};
 pub use gemm::{
     conv2d_bitplane, dense_bitplane, popcount_dot, xnor_gemm_into,
     xnor_gemm_into_with_kernel,
@@ -61,6 +74,16 @@ pub enum ComputeMode {
         /// Activation sign/scale planes per row (1..=[`MAX_ACT_PLANES`]).
         act_planes: usize,
     },
+    /// Keep quantized layers **encrypted** resident (sub-1-bit/weight)
+    /// and decrypt NR-channel panels on demand inside the XNOR GEMM
+    /// tile loop ([`EncryptedStore`], DESIGN.md §11). Forward outputs
+    /// are bit-identical to [`ComputeMode::BitPlane`] at the same
+    /// `act_planes`; only residency and per-forward decrypt cost
+    /// differ.
+    Encrypted {
+        /// Activation sign/scale planes per row (1..=[`MAX_ACT_PLANES`]).
+        act_planes: usize,
+    },
 }
 
 impl ComputeMode {
@@ -69,9 +92,14 @@ impl ComputeMode {
         ComputeMode::BitPlane { act_planes: DEFAULT_ACT_PLANES }
     }
 
-    /// Parse `dense` / `bitplane` / `bitplane:<m>` (CLI flags and the
-    /// `FLEXOR_COMPUTE` env var). For the per-layer policy grammar see
-    /// [`ModePolicy::parse`].
+    /// Encrypted with the serving default of [`DEFAULT_ACT_PLANES`].
+    pub fn encrypted() -> ComputeMode {
+        ComputeMode::Encrypted { act_planes: DEFAULT_ACT_PLANES }
+    }
+
+    /// Parse `dense` / `bitplane[:<m>]` / `encrypted[:<m>]` (CLI flags
+    /// and the `FLEXOR_COMPUTE` env var). For the per-layer policy
+    /// grammar see [`ModePolicy::parse`].
     ///
     /// # Examples
     ///
@@ -83,26 +111,33 @@ impl ComputeMode {
     ///     ComputeMode::parse("bitplane:16").unwrap(),
     ///     ComputeMode::BitPlane { act_planes: 16 }
     /// );
+    /// assert_eq!(
+    ///     ComputeMode::parse("encrypted:4").unwrap(),
+    ///     ComputeMode::Encrypted { act_planes: 4 }
+    /// );
     /// assert!(ComputeMode::parse("quantum").is_err());
     /// ```
     pub fn parse(s: &str) -> Result<ComputeMode> {
+        fn act_planes(m: &str) -> Result<usize> {
+            match m.parse::<usize>() {
+                Ok(m) if (1..=MAX_ACT_PLANES).contains(&m) => Ok(m),
+                _ => bail!("bad act-plane count {m:?} (want 1..={MAX_ACT_PLANES})"),
+            }
+        }
         let t = s.trim().to_ascii_lowercase();
         match t.as_str() {
             "dense" | "densef32" | "fp32" => Ok(ComputeMode::DenseF32),
             "bitplane" | "bit-plane" | "xnor" => Ok(ComputeMode::bit_plane()),
+            "encrypted" | "enc" => Ok(ComputeMode::encrypted()),
             other => {
                 if let Some(m) = other.strip_prefix("bitplane:") {
-                    match m.parse::<usize>() {
-                        Ok(m) if (1..=MAX_ACT_PLANES).contains(&m) => {
-                            Ok(ComputeMode::BitPlane { act_planes: m })
-                        }
-                        _ => bail!(
-                            "bad act-plane count {m:?} (want 1..={MAX_ACT_PLANES})"
-                        ),
-                    }
+                    Ok(ComputeMode::BitPlane { act_planes: act_planes(m)? })
+                } else if let Some(m) = other.strip_prefix("encrypted:") {
+                    Ok(ComputeMode::Encrypted { act_planes: act_planes(m)? })
                 } else {
                     bail!(
-                        "unknown compute mode {s:?} (want dense | bitplane | bitplane:<m>)"
+                        "unknown compute mode {s:?} \
+                         (want dense | bitplane[:<m>] | encrypted[:<m>])"
                     )
                 }
             }
@@ -123,19 +158,25 @@ impl ComputeMode {
         match self {
             ComputeMode::DenseF32 => "dense",
             ComputeMode::BitPlane { .. } => "bitplane",
+            ComputeMode::Encrypted { .. } => "encrypted",
         }
     }
 
-    /// Activation planes when in BitPlane mode.
+    /// Activation planes when in a binarized (BitPlane/Encrypted) mode.
     pub fn act_planes(&self) -> Option<usize> {
         match *self {
             ComputeMode::DenseF32 => None,
-            ComputeMode::BitPlane { act_planes } => Some(act_planes),
+            ComputeMode::BitPlane { act_planes }
+            | ComputeMode::Encrypted { act_planes } => Some(act_planes),
         }
     }
 
     pub fn is_bit_plane(&self) -> bool {
         matches!(self, ComputeMode::BitPlane { .. })
+    }
+
+    pub fn is_encrypted(&self) -> bool {
+        matches!(self, ComputeMode::Encrypted { .. })
     }
 }
 
@@ -157,7 +198,7 @@ pub struct ModePolicy {
     /// Engine for layers without an override at/above the threshold.
     pub base: ComputeMode,
     /// Quantized layers with fewer weights than this run DenseF32 even
-    /// when `base` is BitPlane (0 = no threshold).
+    /// when `base` is BitPlane or Encrypted (0 = no threshold).
     pub dense_below: usize,
     /// Explicit per-layer engine overrides, by quantized-layer index.
     pub overrides: BTreeMap<usize, ComputeMode>,
@@ -176,7 +217,9 @@ impl ModePolicy {
             return *m;
         }
         match self.base {
-            ComputeMode::BitPlane { .. } if n_weights < self.dense_below => {
+            ComputeMode::BitPlane { .. } | ComputeMode::Encrypted { .. }
+                if n_weights < self.dense_below =>
+            {
                 ComputeMode::DenseF32
             }
             m => m,
@@ -272,8 +315,18 @@ mod tests {
             ComputeMode::parse("bitplane:16").unwrap(),
             ComputeMode::BitPlane { act_planes: 16 }
         );
+        assert_eq!(
+            ComputeMode::parse("encrypted").unwrap(),
+            ComputeMode::Encrypted { act_planes: DEFAULT_ACT_PLANES }
+        );
+        assert_eq!(
+            ComputeMode::parse(" Encrypted:3 ").unwrap(),
+            ComputeMode::Encrypted { act_planes: 3 }
+        );
         assert!(ComputeMode::parse("bitplane:0").is_err());
         assert!(ComputeMode::parse("bitplane:999").is_err());
+        assert!(ComputeMode::parse("encrypted:0").is_err());
+        assert!(ComputeMode::parse("encrypted:999").is_err());
         assert!(ComputeMode::parse("quantum").is_err());
     }
 
@@ -281,10 +334,15 @@ mod tests {
     fn labels_and_accessors() {
         assert_eq!(ComputeMode::DenseF32.label(), "dense");
         assert_eq!(ComputeMode::bit_plane().label(), "bitplane");
+        assert_eq!(ComputeMode::encrypted().label(), "encrypted");
         assert_eq!(ComputeMode::DenseF32.act_planes(), None);
         assert_eq!(ComputeMode::bit_plane().act_planes(), Some(DEFAULT_ACT_PLANES));
+        assert_eq!(ComputeMode::encrypted().act_planes(), Some(DEFAULT_ACT_PLANES));
         assert!(ComputeMode::bit_plane().is_bit_plane());
         assert!(!ComputeMode::default().is_bit_plane());
+        assert!(ComputeMode::encrypted().is_encrypted());
+        assert!(!ComputeMode::encrypted().is_bit_plane());
+        assert!(!ComputeMode::bit_plane().is_encrypted());
     }
 
     #[test]
@@ -307,6 +365,13 @@ mod tests {
         assert_eq!(p.mode_for(0, 1_000_000), ComputeMode::DenseF32);
         assert_eq!(p.mode_for(1, 10), ComputeMode::BitPlane { act_planes: 2 });
         assert!(!p.is_uniform());
+
+        // encrypted base: same threshold + override semantics as bitplane
+        let p = ModePolicy::parse("encrypted:4@min=1000,1=bitplane").unwrap();
+        assert_eq!(p.base, ComputeMode::Encrypted { act_planes: 4 });
+        assert_eq!(p.mode_for(0, 999), ComputeMode::DenseF32);
+        assert_eq!(p.mode_for(0, 1000), ComputeMode::Encrypted { act_planes: 4 });
+        assert_eq!(p.mode_for(1, 10), ComputeMode::bit_plane());
 
         assert!(ModePolicy::parse("bitplane@max=4").is_err());
         assert!(ModePolicy::parse("bitplane@min=abc").is_err());

@@ -4,7 +4,7 @@
 //! `<stem>.fxr` (encrypted quantized weights), `<stem>.fp.bin` (FXIN FP
 //! residue: stem/head/biases/BN), and `<stem>.bundle.json` (index). This
 //! module decrypts the quantized layers through the word-parallel XOR
-//! engine, rebuilds the architecture, and runs forward passes on two
+//! engine, rebuilds the architecture, and runs forward passes on three
 //! engines selected **per quantized layer** by a [`ModePolicy`] at load
 //! (a uniform policy is the plain [`ComputeMode`] behavior):
 //!
@@ -14,6 +14,11 @@
 //!   [`PlaneStore`] bit-plane panels (never materializing FP weights)
 //!   and runs the XNOR/popcount engine over binarized activations
 //!   (DESIGN.md §8/§9).
+//! * **Encrypted** — keeps the layer **encrypted** resident
+//!   ([`EncryptedStore`], sub-1-bit/weight — exactly the `.fxr`
+//!   payload + XOR-network params) and decrypts NR-channel panels on
+//!   demand inside the XNOR GEMM tile loop; forwards are bit-identical
+//!   to BitPlane at the same `act_planes` (DESIGN.md §11).
 //!
 //! A mixed policy (threshold or per-layer overrides) keeps tiny layers —
 //! where FP is cheap and approximation error hurts most per weight — on
@@ -44,7 +49,7 @@ use crate::substrate::json::{self, Json};
 use crate::substrate::pool::{self, ThreadPool};
 use crate::substrate::trace;
 
-use super::bitslice::{self, ComputeMode, ModePolicy, PlaneStore};
+use super::bitslice::{self, ComputeMode, EncryptedStore, ModePolicy, PlaneStore};
 use super::gemm::{self, conv2d_fused, dense_fused, Epilogue, PackedB};
 use super::tensor::{self, Tensor};
 
@@ -178,6 +183,10 @@ pub struct InferenceModel {
     /// Packed bit-plane stores of quantized layers. BitPlane layers only
     /// — their dense FP weights are never materialized.
     qplanes: BTreeMap<usize, PlaneStore>,
+    /// Encrypted stores of quantized layers. Encrypted layers only —
+    /// nothing decrypted is ever resident; panels are decrypted on
+    /// demand inside the GEMM tile loop.
+    qencrypted: BTreeMap<usize, EncryptedStore>,
     bns: Vec<Bn>,
     engine: Engine,
     /// Paper-format storage stats, carried for reporting.
@@ -196,7 +205,9 @@ impl InferenceModel {
     /// [`ModePolicy`]). DenseF32 decrypts to dense `Σ α_i b_i` weights
     /// and packs panels; BitPlane repacks the decryptor's output
     /// straight into panelized bit-plane rows ([`PlaneStore`]) — those
-    /// layers never exist as dense FP.
+    /// layers never exist as dense FP; Encrypted keeps the container's
+    /// payload as-is ([`EncryptedStore`]) — those layers are never even
+    /// decrypted at load.
     pub fn load_with_mode(dir: &Path, stem: &str, mode: ComputeMode) -> Result<Self> {
         Self::load_with_policy(dir, stem, ModePolicy::uniform(mode))
     }
@@ -238,11 +249,13 @@ impl InferenceModel {
             );
         }
 
-        // decrypt every quantized layer, materializing per its
-        // policy-assigned engine: dense Σ α_i b_i tensors (DenseF32) or
-        // packed bit-plane stores (BitPlane — no FP weights, ever)
+        // materialize every quantized layer per its policy-assigned
+        // engine: dense Σ α_i b_i tensors (DenseF32), packed bit-plane
+        // stores (BitPlane — no FP weights, ever), or the raw encrypted
+        // payload (Encrypted — nothing decrypted, ever)
         let mut qweights = BTreeMap::new();
         let mut qplanes = BTreeMap::new();
+        let mut qencrypted = BTreeMap::new();
         let mut qmodes = BTreeMap::new();
         for layer in &fxr.layers {
             let idx: usize = layer
@@ -284,6 +297,9 @@ impl InferenceModel {
                         planes.push((rows, p.alpha.clone()));
                     }
                     qplanes.insert(idx, PlaneStore::from_decrypted(shape, planes)?);
+                }
+                ComputeMode::Encrypted { .. } => {
+                    qencrypted.insert(idx, EncryptedStore::from_layer(shape, layer)?);
                 }
             }
         }
@@ -347,6 +363,7 @@ impl InferenceModel {
             qshapes: shapes,
             qweights,
             qplanes,
+            qencrypted,
             bns,
             engine,
             bits_per_weight: stats.bits_per_weight,
@@ -371,8 +388,8 @@ impl InferenceModel {
     }
 
     /// Summary label for `/models` and log lines: `"dense"` /
-    /// `"bitplane"` when every quantized layer agrees, `"mixed"`
-    /// otherwise.
+    /// `"bitplane"` / `"encrypted"` when every quantized layer agrees,
+    /// `"mixed"` otherwise.
     pub fn mode_label(&self) -> &'static str {
         if self.is_mixed() {
             "mixed"
@@ -385,8 +402,11 @@ impl InferenceModel {
 
     /// Do this model's quantized layers run on more than one engine?
     pub fn is_mixed(&self) -> bool {
-        self.qmodes.values().any(|m| m.is_bit_plane())
-            && self.qmodes.values().any(|m| !m.is_bit_plane())
+        let mut labels = self.qmodes.values().map(ComputeMode::label);
+        match labels.next() {
+            Some(first) => labels.any(|l| l != first),
+            None => false,
+        }
     }
 
     /// Per-quantized-layer engine assignments, in layer order.
@@ -402,9 +422,11 @@ impl InferenceModel {
     }
 
     /// Bytes the quantized layers keep resident under this model's
-    /// per-layer modes: dense tensors + packed panels (DenseF32 layers)
-    /// plus panelized bit-plane rows + α (BitPlane layers). The
-    /// `/models` accounting.
+    /// per-layer modes: dense tensors + packed panels (DenseF32 layers),
+    /// panelized bit-plane rows + α (BitPlane layers), plus encrypted
+    /// column words **and the XOR-gate network / scale parameters
+    /// themselves** (Encrypted layers — nothing decrypted is resident).
+    /// The `/models` accounting.
     pub fn quantized_resident_bytes(&self) -> usize {
         let dense: usize = self
             .qweights
@@ -414,7 +436,28 @@ impl InferenceModel {
         let packed: usize =
             self.engine.qpacked.values().map(PackedB::resident_bytes).sum();
         let planes: usize = self.qplanes.values().map(PlaneStore::resident_bytes).sum();
-        dense + packed + planes
+        let enc: usize =
+            self.qencrypted.values().map(EncryptedStore::resident_bytes).sum();
+        dense + packed + planes + enc
+    }
+
+    /// Total weights across quantized layers (the denominator of
+    /// [`InferenceModel::resident_bits_per_weight`]).
+    pub fn quantized_weight_count(&self) -> usize {
+        self.qshapes.values().map(|s| s.iter().product::<usize>()).sum()
+    }
+
+    /// Resident bits per quantized weight under the active per-layer
+    /// modes — the serving-time analogue of the container's
+    /// `bits_per_weight`. Sub-1.0 on the Encrypted engine (the paper's
+    /// fractional rate plus XOR-network/α overhead); ≥ q on BitPlane;
+    /// ≥ 32 on DenseF32. 0.0 when the bundle has no quantized layers.
+    pub fn resident_bits_per_weight(&self) -> f64 {
+        let weights = self.quantized_weight_count();
+        if weights == 0 {
+            return 0.0;
+        }
+        (self.quantized_resident_bytes() * 8) as f64 / weights as f64
     }
 
     /// Bytes of the FP residue (stem/head/biases/BN packs) — identical
@@ -449,6 +492,12 @@ impl InferenceModel {
             .with_context(|| format!("missing bit-plane layer {idx}"))
     }
 
+    fn qenc(&self, idx: usize) -> Result<&EncryptedStore> {
+        self.qencrypted
+            .get(&idx)
+            .with_context(|| format!("missing encrypted layer {idx}"))
+    }
+
     /// Packed panels + (kh, kw, ci) conv geometry of quantized layer `idx`.
     fn qpacked(&self, idx: usize) -> Result<(&PackedB, (usize, usize, usize))> {
         let p = self
@@ -470,13 +519,18 @@ impl InferenceModel {
     }
 
     /// Trace label for quantized layer `idx`: `q<idx>:<mode>`, with the
-    /// active-plane count and popcount kernel appended on the bit-plane
-    /// engine (`q3:bitplane1@avx2`). Only built inside a traced scope.
+    /// active-plane count and popcount kernel appended on the binarized
+    /// engines (`q3:bitplane1@avx2`, `q3:encrypted1@avx2`). Only built
+    /// inside a traced scope.
     fn layer_label(&self, idx: usize) -> String {
         match self.layer_mode(idx) {
             ComputeMode::DenseF32 => format!("q{idx}:dense"),
             ComputeMode::BitPlane { act_planes } => format!(
                 "q{idx}:bitplane{act_planes}@{}",
+                bitslice::popcount::active().label()
+            ),
+            ComputeMode::Encrypted { act_planes } => format!(
+                "q{idx}:encrypted{act_planes}@{}",
                 bitslice::popcount::active().label()
             ),
         }
@@ -505,6 +559,14 @@ impl InferenceModel {
                 act_planes,
                 epi,
             )),
+            ComputeMode::Encrypted { act_planes } => Ok(bitslice::conv2d_encrypted(
+                pool,
+                x,
+                self.qenc(idx)?,
+                stride,
+                act_planes,
+                epi,
+            )),
         }
     }
 
@@ -529,6 +591,13 @@ impl InferenceModel {
                 act_planes,
                 epi,
             )),
+            ComputeMode::Encrypted { act_planes } => Ok(bitslice::dense_encrypted(
+                pool,
+                x,
+                self.qenc(idx)?,
+                act_planes,
+                epi,
+            )),
         }
     }
 
@@ -547,6 +616,14 @@ impl InferenceModel {
                     act_planes,
                 ),
             ),
+            ComputeMode::Encrypted { act_planes } => Ok(
+                bitslice::encrypted::conv2d_encrypted_reference(
+                    x,
+                    self.qenc(idx)?,
+                    stride,
+                    act_planes,
+                ),
+            ),
         }
     }
 
@@ -558,6 +635,13 @@ impl InferenceModel {
                 bitslice::gemm::dense_bitplane_reference(
                     x,
                     self.qplane(idx)?,
+                    act_planes,
+                ),
+            ),
+            ComputeMode::Encrypted { act_planes } => Ok(
+                bitslice::encrypted::dense_encrypted_reference(
+                    x,
+                    self.qenc(idx)?,
                     act_planes,
                 ),
             ),
@@ -900,6 +984,7 @@ mod tests {
             qshapes: BTreeMap::new(),
             qweights: BTreeMap::new(),
             qplanes: BTreeMap::new(),
+            qencrypted: BTreeMap::new(),
             bns: vec![],
             engine: Engine::default(),
             bits_per_weight: 0.8,

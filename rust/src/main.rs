@@ -157,7 +157,7 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
         .flag("batch", "examples", Some("32"))
         .flag(
             "compute-mode",
-            "policy: <mode>[@min=<weights>][,<idx>=<mode>]* with mode = dense | bitplane | bitplane:<m> (default: FLEXOR_COMPUTE env, else dense)",
+            "policy: <mode>[@min=<weights>][,<idx>=<mode>]* with mode = dense | bitplane[:<m>] | encrypted[:<m>] (default: FLEXOR_COMPUTE env, else dense)",
             Some(""),
         )
         .parse_from(argv)
@@ -218,7 +218,7 @@ fn cmd_profile(argv: Vec<String>) -> Result<()> {
     .flag("iters", "profiled forward passes", Some("10"))
     .flag(
         "compute-mode",
-        "policy: <mode>[@min=<weights>][,<idx>=<mode>]* with mode = dense | bitplane | bitplane:<m> (default: FLEXOR_COMPUTE env, else dense)",
+        "policy: <mode>[@min=<weights>][,<idx>=<mode>]* with mode = dense | bitplane[:<m>] | encrypted[:<m>] (default: FLEXOR_COMPUTE env, else dense)",
         Some(""),
     )
     .parse_from(argv)

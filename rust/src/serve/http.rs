@@ -430,6 +430,45 @@ fn route(req: &HttpRequest, ctx: &ConnCtx, rid: &str) -> (u16, String, &'static 
 /// dispatch) and the active trace mode.
 fn prometheus_body(ctx: &ConnCtx) -> String {
     let mut out = ctx.metrics.prometheus(ctx.queue.len());
+    // per-model engine + residency gauges off the registry: the mode
+    // label each entry serves under and the storage it actually keeps
+    // resident (sub-1-bit/weight on the Encrypted engine)
+    out.push_str(
+        "# HELP flexor_model_compute_mode Engine the model serves on (1 = this mode).\n\
+         # TYPE flexor_model_compute_mode gauge\n",
+    );
+    for name in ctx.registry.names() {
+        if let Some(e) = ctx.registry.get(name) {
+            out.push_str(&format!(
+                "flexor_model_compute_mode{{model=\"{name}\",mode=\"{}\"}} 1\n",
+                e.model.mode_label()
+            ));
+        }
+    }
+    out.push_str(
+        "# HELP flexor_model_resident_bytes Resident weight bytes (quantized + FP residue).\n\
+         # TYPE flexor_model_resident_bytes gauge\n",
+    );
+    for name in ctx.registry.names() {
+        if let Some(e) = ctx.registry.get(name) {
+            out.push_str(&format!(
+                "flexor_model_resident_bytes{{model=\"{name}\"}} {}\n",
+                e.model.resident_bytes()
+            ));
+        }
+    }
+    out.push_str(
+        "# HELP flexor_model_resident_bits_per_weight Resident bits per quantized weight under the active modes.\n\
+         # TYPE flexor_model_resident_bits_per_weight gauge\n",
+    );
+    for name in ctx.registry.names() {
+        if let Some(e) = ctx.registry.get(name) {
+            out.push_str(&format!(
+                "flexor_model_resident_bits_per_weight{{model=\"{name}\"}} {}\n",
+                e.model.resident_bits_per_weight()
+            ));
+        }
+    }
     let p = pool::global();
     let c = p.counters();
     out.push_str(&format!(

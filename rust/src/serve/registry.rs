@@ -5,11 +5,14 @@
 //! after that the resident weights serve every request. The registry
 //! owns that step for any number of bundles, keyed by name, each on its
 //! own [`ModePolicy`] — a single server mixes FP-exact DenseF32 models,
-//! high-density BitPlane models, and per-layer mixed-mode entries (big
-//! convs on XNOR/popcount, tiny layers FP-exact). `GET /models` reports
+//! high-density BitPlane models, sub-1-bit Encrypted models (which skip
+//! the decrypt-at-load step entirely and decrypt panels inside the GEMM
+//! tile loop), and per-layer mixed-mode entries (big convs on
+//! XNOR/popcount, tiny layers FP-exact). `GET /models` reports
 //! per-model storage stats (`bits/weight`, compression ratio), the
 //! resident bytes each entry actually keeps under its modes (quantized
-//! vs FP residue), and the per-layer `layer_modes` assignment;
+//! vs FP residue, plus `resident_bits_per_weight` — sub-1.0 on the
+//! Encrypted engine), and the per-layer `layer_modes` assignment;
 //! [`Registry::unload`] releases a model's memory.
 
 use std::collections::BTreeMap;
@@ -202,6 +205,11 @@ impl Registry {
                     ("fp_weight_bytes",
                      Json::num(e.model.fp_resident_bytes() as f64)),
                     ("resident_bytes", Json::num(e.model.resident_bytes() as f64)),
+                    // serving-time storage rate over the quantized layers
+                    // (sub-1.0 on the Encrypted engine) — the headline
+                    // the decrypt-on-demand path exists to deliver
+                    ("resident_bits_per_weight",
+                     Json::num(e.model.resident_bits_per_weight())),
                     ("load_ms", Json::num(e.load_ms)),
                 ])
             })),

@@ -1,7 +1,8 @@
 //! Observability integration tests: per-model metrics isolation,
 //! Prometheus exposition, the per-layer profile endpoint, request-id
-//! round-tripping, and the tracing overhead contract (trace state must
-//! never change numeric results — only observe them).
+//! round-tripping, and the tracing overhead accounting. (That trace
+//! state never changes numeric results on any engine is pinned by the
+//! matrix in `tests/engines.rs`.)
 
 use std::net::SocketAddr;
 use std::path::PathBuf;
@@ -275,35 +276,6 @@ fn profile_stage_sums_track_forward_latency() {
         forward_ms <= wall_ms,
         "forward {forward_ms:.3}ms exceeds wall {wall_ms:.3}ms"
     );
-}
-
-/// Trace state must only observe, never perturb: outputs are
-/// bit-identical with tracing off, sampled away, and fully on.
-#[test]
-fn tracing_is_bit_identical_to_untraced() {
-    let dir = bundle_dir("bitident");
-    export_synthetic_resnet_bundle(&dir, "r", 77, "resnet8", 8, 10).unwrap();
-    let model = InferenceModel::load(&dir, "r").unwrap();
-    let feat = 8 * 8 * 3;
-    let mut rng = Pcg32::seeded(9);
-    let x: Vec<f32> = (0..4 * feat).map(|_| rng.normal()).collect();
-
-    let baseline = model.forward(&x, 4).unwrap();
-    let off = {
-        let _t = trace::scope_with(trace::TraceMode::Off, None);
-        model.forward(&x, 4).unwrap()
-    };
-    let profile = Arc::new(trace::Profile::new());
-    let all = {
-        let _t = trace::scope_with(trace::TraceMode::All, Some(profile.clone()));
-        model.forward(&x, 4).unwrap()
-    };
-    assert!(profile.traced_forwards() >= 1, "All-mode scope traced nothing");
-
-    let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
-    assert_eq!(bits(&baseline), bits(&off), "trace=off changed results");
-    assert_eq!(bits(&baseline), bits(&all), "trace=all changed results");
-    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// Request ids round-trip end to end: a client-supplied id is echoed in
