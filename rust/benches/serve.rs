@@ -17,6 +17,7 @@ use flexor::coordinator::export_synthetic_mlp_bundle;
 use flexor::inference::InferenceModel;
 use flexor::serve::{http, BatchQueue, Registry, ServeConfig, Server};
 use flexor::substrate::bench::{black_box, merge_bench_history, merge_bench_json, Bench, CaseMeta};
+use flexor::substrate::fault::{self, FaultPlan};
 use flexor::substrate::json::Json;
 use flexor::substrate::pool;
 use flexor::substrate::prng::Pcg32;
@@ -86,6 +87,50 @@ fn main() {
             black_box(resp);
         },
     );
+    // 4. load-shed fast path: a draining server answers a coded 503 +
+    //    Retry-After without touching the queue or a worker — the cost
+    //    of saying no (DESIGN.md §12)
+    server.begin_drain();
+    b.run_case(
+        "http POST /predict shed (draining 503)",
+        Some(CaseMeta::new("http_predict_shed", &format!("1x{D_IN}"), threads)),
+        Some(1.0),
+        "req",
+        || {
+            let (status, resp) =
+                http::client::request(addr, "POST", "/predict", Some(&body)).unwrap();
+            assert_eq!(status, 503, "{resp}");
+            black_box(resp);
+        },
+    );
+    server.shutdown();
+
+    // 5. panic containment → recovery: one injected batch panic (coded
+    //    500, caught by the worker's catch_unwind), then the first
+    //    healthy answer on the same worker — the per-fault recovery cost
+    let mut registry = Registry::new();
+    registry.load("bench", &dir, "bench").unwrap();
+    let cfg = ServeConfig { workers: 1, max_wait_us: 0, ..ServeConfig::default() };
+    let server = Server::start("127.0.0.1:0", registry, cfg).expect("server start");
+    let addr = server.local_addr();
+    b.run_case(
+        "panic containment + recovery cycle",
+        Some(CaseMeta::new("panic_recovery", "1 worker", threads)),
+        Some(1.0),
+        "cycle",
+        || {
+            fault::arm(FaultPlan { panic_shard_p: 1.0, ..FaultPlan::default() });
+            let (status, _) =
+                http::client::request(addr, "POST", "/predict", Some(&body)).unwrap();
+            assert_eq!(status, 500, "injected panic not surfaced");
+            fault::disarm();
+            let (status, resp) =
+                http::client::request(addr, "POST", "/predict", Some(&body)).unwrap();
+            assert_eq!(status, 200, "no recovery after disarm: {resp}");
+            black_box(resp);
+        },
+    );
+    fault::disarm();
     server.shutdown();
 
     println!("\n{}", b.to_json().to_string_pretty());

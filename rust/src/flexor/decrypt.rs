@@ -361,7 +361,14 @@ impl Decryptor {
 fn for_each_weight_bit(cols: &ColumnBits, n_weights: usize, mut f: impl FnMut(usize, bool)) {
     let n_out = cols.width();
     let slices = cols.slices();
-    debug_assert!(n_weights <= slices * n_out);
+    // hard assert (not debug_assert): a geometry violation here means a
+    // corrupt or mis-validated layer, and reading past the decrypted
+    // bits would silently produce wrong weights in release builds; the
+    // serving worker contains the panic (DESIGN.md §12)
+    assert!(
+        n_weights <= slices * n_out,
+        "integrity: {n_weights} weights exceed {slices}×{n_out} decrypted bits"
+    );
     let mut words = vec![0u64; n_out];
     for blk in 0..slices.div_ceil(64) {
         for (r, w) in words.iter_mut().enumerate() {

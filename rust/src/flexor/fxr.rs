@@ -3,12 +3,18 @@
 //!
 //! Stores, per quantized layer: the XOR network `M⊕` per bit-plane, the
 //! per-output-channel scales α, and the **bit-packed encrypted weights**
-//! (`sign(w^e)`, column-major for the word-parallel decryptor). Integrity
-//! is a CRC32 trailer. All multi-byte values little-endian.
+//! (`sign(w^e)`, column-major for the word-parallel decryptor).
+//! Integrity (DESIGN.md §12): version 2 carries a vendored CRC32 per
+//! section — meta and each layer — verified on the *raw bytes before
+//! they are parsed*, plus the whole-payload trailer verified last; a
+//! corrupted bundle is rejected at load with a structured
+//! [`IntegrityError`] naming the bad section, never served. Version 1
+//! (trailer-only) files still load. All multi-byte values little-endian.
 //!
 //! ```text
-//! "FXR1" | u32 version | u32 n_layers | u32 meta_len | meta json
-//! layer*: u16 name_len | name | u8 q | u8 n_in | u8 n_out | u8 flags
+//! "FXR1" | u32 version | u32 n_layers | u32 meta_len | u32 meta_crc | meta json
+//! layer*: u32 layer_len | u32 layer_crc | layer bytes:
+//!         u16 name_len | name | u8 q | u8 n_in | u8 n_out | u8 flags
 //!         u64 n_weights | u32 c_out
 //!         plane*: n_out×u32 row masks | c_out×f32 alpha
 //!                 n_in × ceil(slices/64) × u64 packed columns
@@ -26,7 +32,33 @@ use super::num_slices;
 use crate::substrate::json::{self, Json};
 
 pub const MAGIC: &[u8; 4] = b"FXR1";
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
+
+/// A checksum mismatch while loading a bundle: the named section's
+/// stored CRC32 disagrees with the bytes on disk. Typed (unlike the
+/// other `anyhow!` load errors) so callers and tests can recognize
+/// corruption by its stable `integrity:` display prefix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IntegrityError {
+    /// Which section failed: `meta`, `layer[<idx>]`, or `container`.
+    pub section: String,
+    /// CRC32 stored in the file.
+    pub stored: u32,
+    /// CRC32 computed over the bytes actually read.
+    pub computed: u32,
+}
+
+impl std::fmt::Display for IntegrityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "integrity: {} crc32 mismatch (stored {:#010x}, computed {:#010x}) — corrupt fxr",
+            self.section, self.stored, self.computed
+        )
+    }
+}
+
+impl std::error::Error for IntegrityError {}
 
 /// One quantized layer's encrypted payload.
 #[derive(Clone, Debug)]
@@ -167,27 +199,13 @@ impl Container {
         b.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
         let meta = self.meta.to_string();
         b.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        b.extend_from_slice(&crc32(meta.as_bytes()).to_le_bytes());
         b.extend_from_slice(meta.as_bytes());
         for l in &self.layers {
-            b.extend_from_slice(&(l.name.len() as u16).to_le_bytes());
-            b.extend_from_slice(l.name.as_bytes());
-            b.push(l.q() as u8);
-            b.push(l.n_in() as u8);
-            b.push(l.n_out() as u8);
-            b.push(0); // flags
-            b.extend_from_slice(&(l.n_weights as u64).to_le_bytes());
-            b.extend_from_slice(&(l.c_out as u32).to_le_bytes());
-            for p in &l.planes {
-                for r in 0..p.mxor.n_out() {
-                    b.extend_from_slice(&p.mxor.row_mask(r).to_le_bytes());
-                }
-                for &a in &p.alpha {
-                    b.extend_from_slice(&a.to_le_bytes());
-                }
-                for j in 0..p.enc.width() {
-                    b.extend_from_slice(&p.enc.column(j).to_bytes());
-                }
-            }
+            let body = layer_bytes(l);
+            b.extend_from_slice(&(body.len() as u32).to_le_bytes());
+            b.extend_from_slice(&crc32(&body).to_le_bytes());
+            b.extend_from_slice(&body);
         }
         let crc = crc32(&b[4..]);
         b.extend_from_slice(&crc.to_le_bytes());
@@ -199,56 +217,74 @@ impl Container {
         ensure!(&bytes[..4] == MAGIC, "bad magic");
         let crc_stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into()?);
         let payload = &bytes[4..bytes.len() - 4];
-        ensure!(crc32(payload) == crc_stored, "crc mismatch (corrupt fxr)");
+        ensure!(payload.len() >= 4, "truncated fxr");
+        let version = u32::from_le_bytes(payload[..4].try_into()?);
+        ensure!(version == 1 || version == VERSION, "unsupported fxr version {version}");
+        if version == 1 {
+            // legacy files have only the trailer; nothing else can vouch
+            // for the bytes, so verify it before parsing anything
+            ensure!(crc32(payload) == crc_stored, "crc mismatch (corrupt fxr)");
+        }
 
-        let mut r = Reader { b: payload, i: 0 };
-        let version = r.u32()?;
-        ensure!(version == VERSION, "unsupported fxr version {version}");
+        let mut r = Reader { b: payload, i: 4 };
         let n_layers = r.u32()? as usize;
         let meta_len = r.u32()? as usize;
+        let meta_crc = if version >= 2 { Some(r.u32()?) } else { None };
         let meta_bytes = r.take(meta_len)?;
+        if let Some(stored) = meta_crc {
+            let computed = crc32(meta_bytes);
+            if computed != stored {
+                return Err(
+                    IntegrityError { section: "meta".to_string(), stored, computed }.into()
+                );
+            }
+        }
         let meta = json::parse(std::str::from_utf8(meta_bytes)?)
             .context("fxr meta json")?;
 
         let mut layers = Vec::with_capacity(n_layers);
-        for _ in 0..n_layers {
-            let name_len = r.u16()? as usize;
-            let name = String::from_utf8(r.take(name_len)?.to_vec())?;
-            let q = r.u8()? as usize;
-            let n_in = r.u8()? as usize;
-            let n_out = r.u8()? as usize;
-            let _flags = r.u8()?;
-            let n_weights = r.u64()? as usize;
-            let c_out = r.u32()? as usize;
-            ensure!(q >= 1 && n_in >= 1 && n_out >= n_in, "bad layer header");
-            let slices = num_slices(n_weights, n_out);
-            let col_bytes = slices.div_ceil(64) * 8;
-            let mut planes = Vec::with_capacity(q);
-            for _ in 0..q {
-                let mut masks = Vec::with_capacity(n_out);
-                for _ in 0..n_out {
-                    masks.push(r.u32()?);
+        for idx in 0..n_layers {
+            let layer = if version >= 2 {
+                // section checksum guards the raw bytes *before* the
+                // parser touches them, so corruption surfaces as a
+                // structured integrity error, not a downstream parse
+                // failure
+                let layer_len = r.u32()? as usize;
+                let stored = r.u32()?;
+                let body = r.take(layer_len)?;
+                let computed = crc32(body);
+                if computed != stored {
+                    return Err(IntegrityError {
+                        section: format!("layer[{idx}]"),
+                        stored,
+                        computed,
+                    }
+                    .into());
                 }
-                let mxor = MXor::from_masks(n_in, masks)?;
-                let mut alpha = Vec::with_capacity(c_out);
-                for _ in 0..c_out {
-                    alpha.push(f32::from_le_bytes(r.take(4)?.try_into()?));
-                }
-                let mut enc = ColumnBits::zeros(slices, n_in);
-                for j in 0..n_in {
-                    let col = super::bitpack::BitVec::from_bytes(
-                        slices,
-                        r.take(col_bytes)?,
-                    )?;
-                    *enc.column_mut(j) = col;
-                }
-                planes.push(Plane { mxor, alpha, enc });
-            }
-            let layer = Layer { name, n_weights, c_out, planes };
+                let mut lr = Reader { b: body, i: 0 };
+                let layer = parse_layer(&mut lr)?;
+                ensure!(lr.i == body.len(), "trailing bytes in fxr layer section");
+                layer
+            } else {
+                parse_layer(&mut r)?
+            };
             layer.validate()?;
             layers.push(layer);
         }
         ensure!(r.i == payload.len(), "trailing bytes in fxr");
+        if version >= 2 {
+            // whole-payload trailer last: section checks give precise
+            // blame, the trailer catches header/length-field damage
+            let computed = crc32(payload);
+            if computed != crc_stored {
+                return Err(IntegrityError {
+                    section: "container".to_string(),
+                    stored: crc_stored,
+                    computed,
+                }
+                .into());
+            }
+        }
         Ok(Container { meta, layers })
     }
 
@@ -296,6 +332,67 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// Serialize one layer's body (everything between the section header and
+/// the next section) exactly as v1 laid it out inline.
+fn layer_bytes(l: &Layer) -> Vec<u8> {
+    let mut b: Vec<u8> = Vec::new();
+    b.extend_from_slice(&(l.name.len() as u16).to_le_bytes());
+    b.extend_from_slice(l.name.as_bytes());
+    b.push(l.q() as u8);
+    b.push(l.n_in() as u8);
+    b.push(l.n_out() as u8);
+    b.push(0); // flags
+    b.extend_from_slice(&(l.n_weights as u64).to_le_bytes());
+    b.extend_from_slice(&(l.c_out as u32).to_le_bytes());
+    for p in &l.planes {
+        for r in 0..p.mxor.n_out() {
+            b.extend_from_slice(&p.mxor.row_mask(r).to_le_bytes());
+        }
+        for &a in &p.alpha {
+            b.extend_from_slice(&a.to_le_bytes());
+        }
+        for j in 0..p.enc.width() {
+            b.extend_from_slice(&p.enc.column(j).to_bytes());
+        }
+    }
+    b
+}
+
+/// Parse one layer body; shared by the v1 inline path and the v2
+/// per-section path.
+fn parse_layer(r: &mut Reader) -> Result<Layer> {
+    let name_len = r.u16()? as usize;
+    let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+    let q = r.u8()? as usize;
+    let n_in = r.u8()? as usize;
+    let n_out = r.u8()? as usize;
+    let _flags = r.u8()?;
+    let n_weights = r.u64()? as usize;
+    let c_out = r.u32()? as usize;
+    ensure!(q >= 1 && n_in >= 1 && n_out >= n_in, "bad layer header");
+    let slices = num_slices(n_weights, n_out);
+    let col_bytes = slices.div_ceil(64) * 8;
+    let mut planes = Vec::with_capacity(q);
+    for _ in 0..q {
+        let mut masks = Vec::with_capacity(n_out);
+        for _ in 0..n_out {
+            masks.push(r.u32()?);
+        }
+        let mxor = MXor::from_masks(n_in, masks)?;
+        let mut alpha = Vec::with_capacity(c_out);
+        for _ in 0..c_out {
+            alpha.push(f32::from_le_bytes(r.take(4)?.try_into()?));
+        }
+        let mut enc = ColumnBits::zeros(slices, n_in);
+        for j in 0..n_in {
+            let col = super::bitpack::BitVec::from_bytes(slices, r.take(col_bytes)?)?;
+            *enc.column_mut(j) = col;
+        }
+        planes.push(Plane { mxor, alpha, enc });
+    }
+    Ok(Layer { name, n_weights, c_out, planes })
+}
+
 /// CRC-32 (IEEE 802.3, reflected), table-driven.
 pub fn crc32(bytes: &[u8]) -> u32 {
     static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
@@ -315,6 +412,49 @@ pub fn crc32(bytes: &[u8]) -> u32 {
         c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
     }
     !c
+}
+
+/// Streaming FNV-1a 64-bit hasher. The encrypted engine fingerprints
+/// panel words with this at load and re-checks before each GEMM; FNV is
+/// a few shifts and a multiply per word, cheap enough to run hot.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+
+    pub fn new() -> Self {
+        Fnv64(Self::OFFSET)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot FNV-1a 64 over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(bytes);
+    h.finish()
 }
 
 #[cfg(test)]
@@ -425,6 +565,88 @@ mod tests {
         let mut l2 = sample_layer(&mut rng, "y", 2, 100);
         l2.planes[1].mxor = MXor::with_ntap(12, 8, 2, &mut rng).unwrap();
         assert!(l2.validate().is_err());
+    }
+
+    #[test]
+    fn fnv_known_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        let mut h = Fnv64::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), fnv1a64(b"a"));
+        let mut w = Fnv64::new();
+        w.write_u64(0x6162636465666768);
+        assert_eq!(w.finish(), fnv1a64(b"hgfedcba"));
+    }
+
+    #[test]
+    fn v2_corruption_blames_the_right_section() {
+        let mut rng = Pcg32::seeded(8);
+        let mut c = Container::new(Json::obj(vec![("model", Json::str("toy"))]));
+        c.push(sample_layer(&mut rng, "l", 1, 64)).unwrap();
+        let bytes = c.to_bytes();
+        let meta_len =
+            u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+
+        // flip a byte inside the meta json
+        let mut bad = bytes.clone();
+        bad[20] ^= 0xFF;
+        let err = Container::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("integrity: meta"), "{err}");
+
+        // flip a byte inside the first layer body (skip its len+crc prefix)
+        let mut bad = bytes.clone();
+        bad[20 + meta_len + 8] ^= 0xFF;
+        let err = Container::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("integrity: layer[0]"), "{err}");
+
+        // damage only the whole-payload trailer: sections verify, the
+        // container check catches it last
+        let mut bad = bytes.clone();
+        let n = bad.len();
+        bad[n - 1] ^= 0xFF;
+        let err = Container::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("integrity: container"), "{err}");
+    }
+
+    /// v1 files (no per-section checksums, whole-payload trailer only)
+    /// must keep loading; mirror the old writer by hand.
+    #[test]
+    fn v1_files_still_load() {
+        let mut rng = Pcg32::seeded(9);
+        let mut c = Container::new(Json::obj(vec![("model", Json::str("old"))]));
+        c.push(sample_layer(&mut rng, "conv1", 2, 123)).unwrap();
+
+        let mut b: Vec<u8> = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&(c.layers.len() as u32).to_le_bytes());
+        let meta = c.meta.to_string();
+        b.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        b.extend_from_slice(meta.as_bytes());
+        for l in &c.layers {
+            b.extend_from_slice(&layer_bytes(l));
+        }
+        let crc = crc32(&b[4..]);
+        b.extend_from_slice(&crc.to_le_bytes());
+
+        let back = Container::from_bytes(&b).unwrap();
+        assert_eq!(back.meta.get("model").as_str(), Some("old"));
+        assert_eq!(back.layers.len(), 1);
+        assert_eq!(back.layers[0].name, "conv1");
+        assert_eq!(back.layers[0].n_weights, 123);
+        for (pa, pb) in c.layers[0].planes.iter().zip(&back.layers[0].planes) {
+            assert_eq!(pa.mxor, pb.mxor);
+            assert_eq!(pa.alpha, pb.alpha);
+            assert_eq!(pa.enc, pb.enc);
+        }
+
+        // ...and a corrupt v1 file is still rejected via the trailer
+        let mid = b.len() / 2;
+        let mut bad = b.clone();
+        bad[mid] ^= 0xFF;
+        let err = Container::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("crc"), "{err}");
     }
 
     #[test]

@@ -34,6 +34,7 @@ use crate::flexor::bitpack::ColumnBits;
 use crate::flexor::fxr;
 use crate::flexor::matrix::MXor;
 use crate::flexor::{num_slices, Decryptor};
+use crate::substrate::fault;
 use crate::substrate::pool::ThreadPool;
 use crate::substrate::trace;
 
@@ -50,6 +51,26 @@ struct EncryptedPlane {
     dec: Decryptor,
     alpha: Vec<f32>,
     enc: ColumnBits,
+    /// FNV-1a fingerprint of the encrypted column words, taken at
+    /// construction; re-checked before every GEMM so in-memory panel
+    /// corruption is caught before it can silently skew an answer.
+    fnv: u64,
+}
+
+/// FNV-1a over a plane's packed column words in column order. The
+/// optional `xor_first` mask flips bits of the very first word as seen
+/// by the *hasher only* — the fault-injection hook for simulating
+/// memory corruption without touching the real panel.
+fn plane_fingerprint(enc: &ColumnBits, xor_first: u64) -> u64 {
+    let mut h = fxr::Fnv64::new();
+    let mut first = true;
+    for j in 0..enc.width() {
+        for &w in enc.column(j).words() {
+            h.write_u64(if first { w ^ xor_first } else { w });
+            first = false;
+        }
+    }
+    h.finish()
 }
 
 /// A quantized layer whose weights stay encrypted while serving; panels
@@ -94,7 +115,8 @@ impl EncryptedStore {
                 total,
                 enc.slices() * mxor.n_out()
             );
-            packed.push(EncryptedPlane { dec: Decryptor::new(mxor), alpha, enc });
+            let fnv = plane_fingerprint(&enc, 0);
+            packed.push(EncryptedPlane { dec: Decryptor::new(mxor), alpha, enc, fnv });
         }
         Ok(EncryptedStore {
             shape: shape.to_vec(),
@@ -225,6 +247,26 @@ impl EncryptedStore {
         PlaneStore::from_decrypted(&self.shape, decrypted)
     }
 
+    /// Re-fingerprint every plane's encrypted words against the hash
+    /// taken at construction (DESIGN.md §12). `fault::flip_word_mask()`
+    /// feeds the hasher a flipped first word when the `flip_word` fault
+    /// is armed, so the chaos harness can exercise this path without
+    /// corrupting shared state. Runs before every encrypted GEMM.
+    pub fn verify_integrity(&self) -> std::result::Result<(), String> {
+        for (p, plane) in self.planes.iter().enumerate() {
+            let computed = plane_fingerprint(&plane.enc, fault::flip_word_mask());
+            if computed != plane.fnv {
+                return Err(format!(
+                    "integrity: encrypted plane {p} fnv64 mismatch \
+                     (expected {:#018x}, computed {computed:#018x}) — \
+                     refusing to serve corrupt panels",
+                    plane.fnv
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Bytes this layer keeps resident in Encrypted mode: the packed
     /// encrypted column words **plus the XOR-gate network and scale
     /// parameters themselves** — `M⊕` row masks (4 B each), the derived
@@ -274,6 +316,11 @@ pub fn xnor_gemm_encrypted_into_with_kernel(
     epi: Epilogue<'_>,
     c: &mut [f32],
 ) {
+    // Integrity gate: a corrupted panel must panic (contained by the
+    // serving worker's catch_unwind) rather than produce a wrong answer.
+    if let Err(msg) = w.verify_integrity() {
+        panic!("{msg}");
+    }
     let k = w.k();
     let n = w.n();
     assert_eq!(acts.k(), k, "activation rows are length {}, W expects {k}", acts.k());
@@ -565,6 +612,23 @@ mod tests {
         assert_eq!(store.num_panels(), 1);
         assert_eq!(store.tile_words(), 2 * 3 * NR);
         assert!(store.conv_geometry().is_none());
+    }
+
+    /// A pristine store verifies; flipping one packed word in place is
+    /// caught and named. (The `flip_word` fault hook exercises the same
+    /// path end-to-end in `rust/tests/chaos.rs`.)
+    #[test]
+    fn integrity_check_catches_flipped_word() {
+        let mut rng = Pcg32::seeded(59);
+        let mut store = rand_store(&mut rng, &[130, 3], 2, 8, 10);
+        store.verify_integrity().unwrap();
+        store.planes[1].enc.column_mut(0).words_mut()[0] ^= 1 << 17;
+        let err = store.verify_integrity().unwrap_err();
+        assert!(err.contains("integrity"), "{err}");
+        assert!(err.contains("plane 1"), "{err}");
+        // restore and it verifies again
+        store.planes[1].enc.column_mut(0).words_mut()[0] ^= 1 << 17;
+        store.verify_integrity().unwrap();
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! flexor analyze --n-out 20 --n-in 8  M⊕ encryption-quality report
 //! flexor infer <bundle-dir> <stem>    load a bundle, run a smoke batch
 //! flexor profile <bundle-dir> <stem>  per-layer stage timing table
+//! flexor serve <bundle-dir> <stem>    host a bundle over HTTP until killed
 //! ```
 
 use std::path::Path;
@@ -31,7 +32,7 @@ fn run() -> Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
         println!("flexor {} — FleXOR trainable fractional quantization", flexor::VERSION);
-        println!("subcommands: list | train | analyze | infer | profile  (--help per command)");
+        println!("subcommands: list | train | analyze | infer | profile | serve  (--help per command)");
         return Ok(());
     }
     let cmd = argv.remove(0);
@@ -41,8 +42,9 @@ fn run() -> Result<()> {
         "analyze" => cmd_analyze(argv),
         "infer" => cmd_infer(argv),
         "profile" => cmd_profile(argv),
+        "serve" => cmd_serve(argv),
         other => {
-            bail!("unknown subcommand '{other}' (try: list, train, analyze, infer, profile)")
+            bail!("unknown subcommand '{other}' (try: list, train, analyze, infer, profile, serve)")
         }
     }
 }
@@ -202,6 +204,89 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
         correct, n, 100.0 * correct as f64 / n as f64, dt * 1e3 / n as f64
     );
     Ok(())
+}
+
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    use flexor::serve::{Registry, ServeConfig, Server};
+
+    let a = Args::new(
+        "flexor serve",
+        "host a deployment bundle over HTTP (POST /predict, GET /models | /metrics | /healthz | /readyz) until killed",
+    )
+    .positional("dir", "bundle directory")
+    .positional("stem", "bundle stem (config name)")
+    .flag("addr", "listen address", Some("127.0.0.1:8080"))
+    .flag("name", "registry name requests address the model by", Some("default"))
+    .flag("workers", "worker threads draining the queue", Some("2"))
+    .flag("intra-threads", "GEMM threads per forward (0 = auto)", Some("0"))
+    .flag("max-batch", "max coalesced batch size", Some("16"))
+    .flag("max-wait-us", "batching linger window (µs)", Some("2000"))
+    .flag("queue-capacity", "admission bound; beyond it requests get 503 + Retry-After", Some("1024"))
+    .flag(
+        "deadline-ms",
+        "default per-request deadline in ms, shed with 503 once expired (0 = FLEXOR_DEADLINE_MS env, else none)",
+        Some("0"),
+    )
+    .flag(
+        "max-body-bytes",
+        "request body bound, larger bodies get 413 (0 = FLEXOR_MAX_BODY_BYTES env, else 8 MiB)",
+        Some("0"),
+    )
+    .flag(
+        "compute-mode",
+        "policy: <mode>[@min=<weights>][,<idx>=<mode>]* with mode = dense | bitplane[:<m>] | encrypted[:<m>] (default: FLEXOR_COMPUTE env, else dense)",
+        Some(""),
+    )
+    .parse_from(argv)
+    .map_err(|m| anyhow::anyhow!("{m}"))?;
+
+    let policy = match a.get("compute-mode") {
+        "" => flexor::inference::ModePolicy::default_from_env()?,
+        s => flexor::inference::ModePolicy::parse(s)?,
+    };
+    let deadline = a.get_u64("deadline-ms");
+    let max_body = a.get_usize("max-body-bytes");
+    let cfg = ServeConfig {
+        workers: a.get_usize("workers"),
+        intra_threads: a.get_usize("intra-threads"),
+        max_batch: a.get_usize("max-batch"),
+        max_wait_us: a.get_u64("max-wait-us"),
+        queue_capacity: a.get_usize("queue-capacity"),
+        default_deadline_ms: (deadline > 0).then_some(deadline),
+        max_body_bytes: (max_body > 0).then_some(max_body),
+        trace: None,
+    };
+
+    // a corrupt bundle is rejected here with the failing section named
+    // (DESIGN.md §12) — the server never starts on bad weights
+    let mut registry = Registry::with_default_policy(policy);
+    let entry = registry.load(
+        a.get("name"),
+        Path::new(a.pos(0).unwrap()),
+        a.pos(1).unwrap(),
+    )?;
+    println!(
+        "loaded '{}' in {:.1} ms ({:.2} b/w, {:.1}× compression, {} mode)",
+        entry.name, entry.load_ms, entry.model.bits_per_weight,
+        entry.model.compression_ratio, entry.model.mode_label()
+    );
+
+    let server = Server::start(a.get("addr"), registry, cfg)?;
+    println!(
+        "serving on http://{}  ({} workers, max_batch {}, queue {}, deadline {})",
+        server.local_addr(),
+        cfg.workers,
+        cfg.max_batch,
+        cfg.queue_capacity,
+        match cfg.default_deadline_ms {
+            Some(ms) => format!("{ms} ms"),
+            None => "env/none".to_string(),
+        }
+    );
+    println!("endpoints: POST /predict | GET /models /metrics /healthz /readyz  (ctrl-c to stop)");
+    loop {
+        std::thread::park();
+    }
 }
 
 fn cmd_profile(argv: Vec<String>) -> Result<()> {

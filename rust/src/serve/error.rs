@@ -1,0 +1,122 @@
+//! Structured serving errors: every non-2xx response carries a stable
+//! machine-readable `code` alongside the human message and request id
+//! (DESIGN.md §12). Workers send [`ServeError`] back through the
+//! response channel so the HTTP layer can map failure classes to
+//! status codes without string matching.
+
+use std::fmt;
+
+/// Stable error codes for the HTTP surface. The `label()` strings are
+/// part of the wire contract (README error-code table) — add variants
+/// freely, never rename existing labels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// 400 — malformed JSON, wrong-shape features, bad headers.
+    BadRequest,
+    /// 404 — model name not in the registry.
+    UnknownModel,
+    /// 404 — no route for the path.
+    NoRoute,
+    /// 405 — route exists, method does not.
+    MethodNotAllowed,
+    /// 413 — request body exceeds the configured byte bound.
+    BodyTooLarge,
+    /// 500 — forward pass returned an error.
+    Internal,
+    /// 500 — a worker panicked while serving the batch.
+    WorkerPanic,
+    /// 500 — bundle integrity check failed at decrypt time.
+    Integrity,
+    /// 503 — admission queue full; retry later.
+    QueueFull,
+    /// 503 — server is draining for shutdown.
+    Draining,
+    /// 503 — request deadline expired before compute started.
+    DeadlineExceeded,
+    /// 504 — worker did not answer within the response timeout.
+    Timeout,
+}
+
+impl ErrorCode {
+    /// HTTP status code for this error class.
+    pub fn status(self) -> u16 {
+        match self {
+            ErrorCode::BadRequest => 400,
+            ErrorCode::UnknownModel | ErrorCode::NoRoute => 404,
+            ErrorCode::MethodNotAllowed => 405,
+            ErrorCode::BodyTooLarge => 413,
+            ErrorCode::Internal | ErrorCode::WorkerPanic | ErrorCode::Integrity => 500,
+            ErrorCode::QueueFull | ErrorCode::Draining | ErrorCode::DeadlineExceeded => 503,
+            ErrorCode::Timeout => 504,
+        }
+    }
+
+    /// Stable machine-readable label carried in error bodies.
+    pub fn label(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownModel => "unknown_model",
+            ErrorCode::NoRoute => "no_route",
+            ErrorCode::MethodNotAllowed => "method_not_allowed",
+            ErrorCode::BodyTooLarge => "body_too_large",
+            ErrorCode::Internal => "internal",
+            ErrorCode::WorkerPanic => "worker_panic",
+            ErrorCode::Integrity => "integrity",
+            ErrorCode::QueueFull => "queue_full",
+            ErrorCode::Draining => "draining",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
+            ErrorCode::Timeout => "timeout",
+        }
+    }
+}
+
+/// A coded serving failure: travels from workers to the HTTP layer and
+/// renders as `{"error", "code", "request_id"}`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ServeError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        ServeError { code, message: message.into() }
+    }
+
+    pub fn status(&self) -> u16 {
+        self.code.status()
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code.label(), self.message)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_map_to_statuses() {
+        assert_eq!(ErrorCode::BadRequest.status(), 400);
+        assert_eq!(ErrorCode::UnknownModel.status(), 404);
+        assert_eq!(ErrorCode::BodyTooLarge.status(), 413);
+        assert_eq!(ErrorCode::WorkerPanic.status(), 500);
+        assert_eq!(ErrorCode::QueueFull.status(), 503);
+        assert_eq!(ErrorCode::DeadlineExceeded.status(), 503);
+        assert_eq!(ErrorCode::Timeout.status(), 504);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(ErrorCode::DeadlineExceeded.label(), "deadline_exceeded");
+        assert_eq!(ErrorCode::Draining.label(), "draining");
+        assert_eq!(ErrorCode::QueueFull.label(), "queue_full");
+        assert_eq!(ErrorCode::Integrity.label(), "integrity");
+        let e = ServeError::new(ErrorCode::Timeout, "inference timed out");
+        assert_eq!(e.to_string(), "timeout: inference timed out");
+        assert_eq!(e.status(), 504);
+    }
+}

@@ -14,7 +14,9 @@
 //! * `GET /models/<name>/profile` — per-layer stage timing aggregated
 //!   from traced forwards ([`trace::Profile`]); empty until the trace
 //!   dial (`FLEXOR_TRACE` / [`ServeConfig::trace`]) samples a forward in.
-//! * `GET /healthz` — liveness.
+//! * `GET /healthz` — liveness (the process answers).
+//! * `GET /readyz` — readiness: `503` while draining or while no worker
+//!   is alive, `200` otherwise (DESIGN.md §12).
 //!
 //! Every request carries an id: `X-Request-Id` is honored when the
 //! client sends one (sanitized), generated otherwise, echoed back as a
@@ -22,8 +24,17 @@
 //! client-reported failure can be joined against the server's
 //! structured log lines ([`trace::log`]).
 //!
-//! Overload degrades to fast `503`s (non-blocking admission); shutdown is
-//! graceful: stop accepting, drain the queue, join the workers.
+//! Failure model (DESIGN.md §12): every non-2xx body carries a stable
+//! machine-readable `code` ([`ErrorCode`]). Requests may carry an
+//! `X-Deadline-Ms` budget (default [`ServeConfig::default_deadline_ms`] /
+//! `FLEXOR_DEADLINE_MS`); a request still queued past its deadline is
+//! shed with `503`/`deadline_exceeded` instead of computed. Overload
+//! degrades to fast `503`s with a `Retry-After` hint (non-blocking
+//! admission); bodies beyond the byte bound
+//! ([`ServeConfig::max_body_bytes`] / `FLEXOR_MAX_BODY_BYTES`) get `413`
+//! without buffering. Shutdown is graceful: mark draining (late
+//! arrivals get `503`/`draining`), stop accepting, drain the queue,
+//! join the workers.
 //!
 //! One thread per connection with keep-alive — plenty for the loopback /
 //! benchmark traffic this repo drives today; the accept loop is the
@@ -31,13 +42,14 @@
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, OnceLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use super::error::ErrorCode;
 use super::metrics::ServeMetrics;
 use super::queue::{BatchQueue, PushError};
 use super::registry::Registry;
@@ -75,6 +87,14 @@ pub struct ServeConfig {
     /// to the `FLEXOR_TRACE` env var; tests and embedders set an explicit
     /// mode so they never touch process-global env state.
     pub trace: Option<trace::TraceMode>,
+    /// Default per-request deadline in ms applied when the client sends
+    /// no `X-Deadline-Ms` header. `None` (default) defers to the
+    /// `FLEXOR_DEADLINE_MS` env var; unset/0 = no default deadline.
+    pub default_deadline_ms: Option<u64>,
+    /// Request body byte bound; larger bodies get `413` without
+    /// buffering. `None` (default) defers to `FLEXOR_MAX_BODY_BYTES`,
+    /// else 8 MiB.
+    pub max_body_bytes: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -86,6 +106,8 @@ impl Default for ServeConfig {
             queue_capacity: 1024,
             intra_threads: 0,
             trace: None,
+            default_deadline_ms: None,
+            max_body_bytes: None,
         }
     }
 }
@@ -94,6 +116,7 @@ impl Default for ServeConfig {
 pub struct Server {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
     queue: Arc<BatchQueue<Request>>,
     registry: Arc<Registry>,
     metrics: Arc<ServeMetrics>,
@@ -125,6 +148,21 @@ impl Server {
             ]);
         }
         let trace_mode = cfg.trace.unwrap_or_else(trace::env_mode);
+        // env fallbacks are read per server start (not OnceLock-cached)
+        // so tests can run servers with different dials in one process
+        let default_deadline = cfg
+            .default_deadline_ms
+            .or_else(|| {
+                std::env::var("FLEXOR_DEADLINE_MS").ok().and_then(|v| v.trim().parse().ok())
+            })
+            .filter(|&ms| ms > 0);
+        let max_body = cfg
+            .max_body_bytes
+            .or_else(|| {
+                std::env::var("FLEXOR_MAX_BODY_BYTES").ok().and_then(|v| v.trim().parse().ok())
+            })
+            .filter(|&b| b > 0)
+            .unwrap_or(DEFAULT_MAX_BODY_BYTES);
         let listener = TcpListener::bind(addr).context("binding serve socket")?;
         let local = listener.local_addr()?;
 
@@ -149,8 +187,11 @@ impl Server {
         ]);
 
         let shutdown = Arc::new(AtomicBool::new(false));
+        let draining = Arc::new(AtomicBool::new(false));
+        let workers_alive = workers.alive_handle();
         let accept_handle = {
             let shutdown = shutdown.clone();
+            let draining = draining.clone();
             let registry = registry.clone();
             let metrics = metrics.clone();
             let queue = queue.clone();
@@ -167,7 +208,11 @@ impl Server {
                             metrics: metrics.clone(),
                             queue: queue.clone(),
                             shutdown: shutdown.clone(),
+                            draining: draining.clone(),
+                            workers_alive: workers_alive.clone(),
                             trace_mode,
+                            default_deadline,
+                            max_body,
                         };
                         thread::Builder::new()
                             .name("serve-conn".to_string())
@@ -178,7 +223,16 @@ impl Server {
                 .context("spawning accept thread")?
         };
 
-        Ok(Server { addr: local, shutdown, queue, registry, metrics, accept_handle, workers })
+        Ok(Server {
+            addr: local,
+            shutdown,
+            draining,
+            queue,
+            registry,
+            metrics,
+            accept_handle,
+            workers,
+        })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
@@ -197,9 +251,31 @@ impl Server {
         self.queue.len()
     }
 
-    /// Graceful shutdown: stop accepting, drain admitted requests, join
-    /// the workers.
+    /// Workers currently serving (the `/readyz` signal).
+    pub fn workers_alive(&self) -> usize {
+        self.workers.alive()
+    }
+
+    /// Enter draining: `/readyz` flips to 503 and new `/predict`s get
+    /// `503`/`draining`, while admitted requests keep completing.
+    /// Idempotent; `shutdown` calls it first.
+    pub fn begin_drain(&self) {
+        if !self.draining.swap(true, Ordering::SeqCst) {
+            trace::log(Level::Info, "serve_draining", &[
+                ("addr", Json::str(self.addr.to_string())),
+            ]);
+        }
+    }
+
+    /// Whether [`begin_drain`](Server::begin_drain) has been called.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Graceful shutdown: mark draining, stop accepting, drain admitted
+    /// requests, join the workers.
     pub fn shutdown(self) {
+        self.begin_drain();
         self.shutdown.store(true, Ordering::SeqCst);
         // unblock the accept loop with a wake-up connection
         TcpStream::connect(self.addr).ok();
@@ -217,10 +293,16 @@ struct ConnCtx {
     metrics: Arc<ServeMetrics>,
     queue: Arc<BatchQueue<Request>>,
     shutdown: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
+    workers_alive: Arc<AtomicUsize>,
     trace_mode: trace::TraceMode,
+    /// Deadline applied when the client sends no `X-Deadline-Ms` (ms).
+    default_deadline: Option<u64>,
+    /// Request body byte bound (`413` beyond it).
+    max_body: usize,
 }
 
-const MAX_BODY_BYTES: usize = 8 << 20;
+const DEFAULT_MAX_BODY_BYTES: usize = 8 << 20;
 const MAX_HEADER_LINES: usize = 64;
 const MAX_LINE_BYTES: usize = 8 << 10;
 
@@ -255,6 +337,8 @@ struct HttpRequest {
     keep_alive: bool,
     /// Client-supplied `X-Request-Id`, sanitized; `None` → generate one.
     request_id: Option<String>,
+    /// Client-supplied `X-Deadline-Ms` latency budget.
+    deadline_ms: Option<u64>,
     body: String,
 }
 
@@ -280,24 +364,39 @@ fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
     loop {
-        let req = match read_request(&mut reader) {
+        let req = match read_request(&mut reader, ctx.max_body) {
             Ok(Some(r)) => r,
             Ok(None) => return, // clean EOF / idle timeout
-            Err(msg) => {
+            Err((status, msg)) => {
                 let rid = trace::next_request_id();
+                let code = if status == 413 {
+                    ErrorCode::BodyTooLarge
+                } else {
+                    ErrorCode::BadRequest
+                };
+                ctx.metrics.record_rejected();
                 trace::log(Level::Warn, "bad_request", &[
                     ("request_id", Json::str(rid.clone())),
+                    ("status", Json::num(status as f64)),
                     ("error", Json::str(msg.clone())),
                 ]);
-                write_response(&mut writer, 400, &err_json(&msg, Some(&rid)), CT_JSON, Some(&rid), false)
-                    .ok();
+                write_response(
+                    &mut writer,
+                    status,
+                    &err_json(code, &msg, Some(&rid)),
+                    CT_JSON,
+                    Some(&rid),
+                    None,
+                    false,
+                )
+                .ok();
                 return;
             }
         };
         let rid = req.request_id.clone().unwrap_or_else(trace::next_request_id);
         let keep_alive = req.keep_alive && !ctx.shutdown.load(Ordering::SeqCst);
         let t0 = Instant::now();
-        let (status, body, ctype) = route(&req, ctx, &rid);
+        let (status, body, ctype, retry_after) = route(&req, ctx, &rid);
         let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
         let fields = |extra: &mut Vec<(&'static str, Json)>| {
             let mut f = vec![
@@ -319,7 +418,8 @@ fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
         } else {
             trace::log(Level::Debug, "request", &fields(&mut vec![]));
         }
-        if write_response(&mut writer, status, &body, ctype, Some(&rid), keep_alive).is_err()
+        if write_response(&mut writer, status, &body, ctype, Some(&rid), retry_after, keep_alive)
+            .is_err()
             || !keep_alive
         {
             return;
@@ -327,8 +427,13 @@ fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
     }
 }
 
-/// Parse one request off the wire. `Ok(None)` = connection closed/idle.
-fn read_request<R: BufRead>(r: &mut R) -> std::result::Result<Option<HttpRequest>, String> {
+/// Parse one request off the wire. `Ok(None)` = connection closed/idle;
+/// `Err((status, msg))` = malformed (`400`) or oversized (`413`).
+fn read_request<R: BufRead>(
+    r: &mut R,
+    max_body: usize,
+) -> std::result::Result<Option<HttpRequest>, (u16, String)> {
+    let bad = |msg: String| (400u16, msg);
     let mut line = String::new();
     match read_line_capped(r, &mut line) {
         Ok(0) => return Ok(None),
@@ -336,49 +441,61 @@ fn read_request<R: BufRead>(r: &mut R) -> std::result::Result<Option<HttpRequest
         Err(_) => return Ok(None), // timeout / reset: drop quietly
     }
     if line_truncated(&line) {
-        return Err(format!("request line exceeds {MAX_LINE_BYTES} bytes"));
+        return Err(bad(format!("request line exceeds {MAX_LINE_BYTES} bytes")));
     }
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_ascii_uppercase();
     let path = parts.next().unwrap_or("").to_string();
     let version = parts.next().unwrap_or("");
     if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/") {
-        return Err(format!("malformed request line {:?}", line.trim_end()));
+        return Err(bad(format!("malformed request line {:?}", line.trim_end())));
     }
 
     let mut content_length = 0usize;
     let mut keep_alive = version != "HTTP/1.0";
     let mut request_id: Option<String> = None;
+    let mut deadline_ms: Option<u64> = None;
     for _ in 0..MAX_HEADER_LINES {
         let mut h = String::new();
         match read_line_capped(r, &mut h) {
-            Ok(0) => return Err("connection closed mid-headers".to_string()),
+            Ok(0) => return Err(bad("connection closed mid-headers".to_string())),
             Ok(_) => {}
-            Err(e) => return Err(format!("reading headers: {e}")),
+            Err(e) => return Err(bad(format!("reading headers: {e}"))),
         }
         if line_truncated(&h) {
-            return Err(format!("header line exceeds {MAX_LINE_BYTES} bytes"));
+            return Err(bad(format!("header line exceeds {MAX_LINE_BYTES} bytes")));
         }
         let t = h.trim();
         if t.is_empty() {
             let body = if content_length > 0 {
-                if content_length > MAX_BODY_BYTES {
-                    return Err(format!("body too large ({content_length} bytes)"));
+                if content_length > max_body {
+                    // refuse before buffering: the body is never read
+                    return Err((
+                        413,
+                        format!("body too large ({content_length} bytes, limit {max_body})"),
+                    ));
                 }
                 let mut buf = vec![0u8; content_length];
-                r.read_exact(&mut buf).map_err(|e| format!("reading body: {e}"))?;
-                String::from_utf8(buf).map_err(|_| "body is not utf-8".to_string())?
+                r.read_exact(&mut buf).map_err(|e| bad(format!("reading body: {e}")))?;
+                String::from_utf8(buf).map_err(|_| bad("body is not utf-8".to_string()))?
             } else {
                 String::new()
             };
-            return Ok(Some(HttpRequest { method, path, keep_alive, request_id, body }));
+            return Ok(Some(HttpRequest {
+                method,
+                path,
+                keep_alive,
+                request_id,
+                deadline_ms,
+                body,
+            }));
         }
         let lower = t.to_ascii_lowercase();
         if let Some(v) = lower.strip_prefix("content-length:") {
             content_length = v
                 .trim()
                 .parse()
-                .map_err(|_| format!("bad content-length {:?}", v.trim()))?;
+                .map_err(|_| bad(format!("bad content-length {:?}", v.trim())))?;
         } else if let Some(v) = lower.strip_prefix("connection:") {
             match v.trim() {
                 "close" => keep_alive = false,
@@ -390,38 +507,74 @@ fn read_request<R: BufRead>(r: &mut R) -> std::result::Result<Option<HttpRequest
             // length-preserving for ASCII, so the offset is the same —
             // to keep the client's id case intact
             request_id = sanitize_rid(t["x-request-id:".len()..].trim());
+        } else if let Some(v) = lower.strip_prefix("x-deadline-ms:") {
+            let ms: u64 = v
+                .trim()
+                .parse()
+                .map_err(|_| bad(format!("bad x-deadline-ms {:?}", v.trim())))?;
+            if ms == 0 {
+                return Err(bad("x-deadline-ms must be positive".to_string()));
+            }
+            deadline_ms = Some(ms);
         }
     }
-    Err("too many header lines".to_string())
+    Err(bad("too many header lines".to_string()))
 }
 
-fn route(req: &HttpRequest, ctx: &ConnCtx, rid: &str) -> (u16, String, &'static str) {
+/// Route one request: `(status, body, content-type, Retry-After secs)`.
+fn route(req: &HttpRequest, ctx: &ConnCtx, rid: &str) -> (u16, String, &'static str, Option<u32>) {
     let (path, query) = match req.path.split_once('?') {
         Some((p, q)) => (p, q),
         None => (req.path.as_str(), ""),
     };
-    let json3 = |(status, body): (u16, String)| (status, body, CT_JSON);
+    let json4 = |(status, body, retry): (u16, String, Option<u32>)| (status, body, CT_JSON, retry);
     match (req.method.as_str(), path) {
-        ("POST", "/predict") => json3(handle_predict(&req.body, ctx, rid)),
-        ("GET", "/models") => (200, ctx.registry.to_json().to_string(), CT_JSON),
+        ("POST", "/predict") => json4(handle_predict(req, ctx, rid)),
+        ("GET", "/models") => (200, ctx.registry.to_json().to_string(), CT_JSON, None),
         ("GET", "/metrics") => {
             if query.split('&').any(|kv| kv == "format=prometheus") {
-                (200, prometheus_body(ctx), CT_PROM)
+                (200, prometheus_body(ctx), CT_PROM, None)
             } else {
-                (200, ctx.metrics.snapshot(ctx.queue.len()).to_string(), CT_JSON)
+                (200, ctx.metrics.snapshot(ctx.queue.len()).to_string(), CT_JSON, None)
             }
         }
-        ("GET", "/healthz") => (200, r#"{"status":"ok"}"#.to_string(), CT_JSON),
+        ("GET", "/healthz") => (200, r#"{"status":"ok"}"#.to_string(), CT_JSON, None),
+        ("GET", "/readyz") => {
+            // readiness: reachable AND able to make progress — not
+            // draining, and at least one worker alive to drain the queue
+            let draining = ctx.draining.load(Ordering::SeqCst);
+            let alive = ctx.workers_alive.load(Ordering::Acquire);
+            let ready = !draining && alive > 0;
+            let body = Json::obj(vec![
+                ("ready", Json::Bool(ready)),
+                ("draining", Json::Bool(draining)),
+                ("workers_alive", Json::num(alive as f64)),
+            ])
+            .to_string();
+            (if ready { 200 } else { 503 }, body, CT_JSON, None)
+        }
         ("GET", p) => {
             if let Some(name) =
                 p.strip_prefix("/models/").and_then(|s| s.strip_suffix("/profile"))
             {
-                return json3(handle_profile(name, ctx, rid));
+                let (status, body) = handle_profile(name, ctx, rid);
+                return (status, body, CT_JSON, None);
             }
-            (404, err_json(&format!("no route {p}"), Some(rid)), CT_JSON)
+            (404, err_json(ErrorCode::NoRoute, &format!("no route {p}"), Some(rid)), CT_JSON, None)
         }
-        ("POST", p) => (404, err_json(&format!("no route {p}"), Some(rid)), CT_JSON),
-        _ => (405, err_json(&format!("method {} not allowed", req.method), Some(rid)), CT_JSON),
+        ("POST", p) => {
+            (404, err_json(ErrorCode::NoRoute, &format!("no route {p}"), Some(rid)), CT_JSON, None)
+        }
+        _ => (
+            405,
+            err_json(
+                ErrorCode::MethodNotAllowed,
+                &format!("method {} not allowed", req.method),
+                Some(rid),
+            ),
+            CT_JSON,
+            None,
+        ),
     }
 }
 
@@ -490,6 +643,12 @@ fn prometheus_body(ctx: &ConnCtx) -> String {
         c.shards
     ));
     out.push_str(&format!(
+        "# HELP flexor_pool_shard_panics_total Shards that panicked (contained, DESIGN.md §12).\n\
+         # TYPE flexor_pool_shard_panics_total counter\n\
+         flexor_pool_shard_panics_total {}\n",
+        c.panics
+    ));
+    out.push_str(&format!(
         "# HELP flexor_pool_job_wait_seconds_total Summed submit-to-first-claim wait.\n\
          # TYPE flexor_pool_job_wait_seconds_total counter\n\
          flexor_pool_job_wait_seconds_total {}\n",
@@ -536,26 +695,47 @@ fn handle_profile(name: &str, ctx: &ConnCtx, rid: &str) -> (u16, String) {
             j.set("trace_mode", Json::str(ctx.trace_mode.label()));
             (200, j.to_string())
         }
-        None => (404, err_json(&format!("unknown model '{name}'"), Some(rid))),
+        None => {
+            (404, err_json(ErrorCode::UnknownModel, &format!("unknown model '{name}'"), Some(rid)))
+        }
     }
 }
 
-fn handle_predict(body: &str, ctx: &ConnCtx, rid: &str) -> (u16, String) {
+/// Seconds a shed client should wait before retrying: scale the current
+/// backlog by the observed mean latency, clamped to [1, 30].
+fn retry_after_hint(ctx: &ConnCtx) -> u32 {
+    let backlog_ms = ctx.queue.len() as f64 * ctx.metrics.mean_latency_ms();
+    ((1.0 + backlog_ms / 1000.0) as u32).clamp(1, 30)
+}
+
+fn handle_predict(req: &HttpRequest, ctx: &ConnCtx, rid: &str) -> (u16, String, Option<u32>) {
     // rejections never reach a worker; count + log them so /metrics and
     // the structured log show load shedding and client errors instead of
     // a silent flat line
-    let reject = |status: u16, msg: &str| {
+    let reject = |code: ErrorCode, msg: &str, retry: Option<u32>| {
         ctx.metrics.record_rejected();
+        if retry.is_some() {
+            // 503s with a retry hint are load shedding, not client error
+            ctx.metrics.record_shed();
+        }
         trace::log(Level::Warn, "request_rejected", &[
             ("request_id", Json::str(rid)),
-            ("status", Json::num(status as f64)),
+            ("status", Json::num(code.status() as f64)),
+            ("code", Json::str(code.label())),
             ("reason", Json::str(msg)),
         ]);
-        (status, err_json(msg, Some(rid)))
+        (code.status(), err_json(code, msg, Some(rid)), retry)
     };
-    let parsed = match json::parse(body) {
+    if ctx.draining.load(Ordering::SeqCst) {
+        return reject(
+            ErrorCode::Draining,
+            "server is draining, not accepting new requests",
+            Some(retry_after_hint(ctx)),
+        );
+    }
+    let parsed = match json::parse(&req.body) {
         Ok(v) => v,
-        Err(e) => return reject(400, &format!("bad json body: {e}")),
+        Err(e) => return reject(ErrorCode::BadRequest, &format!("bad json body: {e}"), None),
     };
     let entry = {
         let m = parsed.get("model");
@@ -564,41 +744,61 @@ fn handle_predict(body: &str, ctx: &ConnCtx, rid: &str) -> (u16, String) {
                 Some(e) => e,
                 None => {
                     return reject(
-                        400,
+                        ErrorCode::BadRequest,
                         "field 'model' is required when multiple models are registered",
+                        None,
                     )
                 }
             }
         } else {
             let Some(name) = m.as_str() else {
-                return reject(400, "field 'model' must be a string");
+                return reject(ErrorCode::BadRequest, "field 'model' must be a string", None);
             };
             match ctx.registry.get(name) {
                 Some(e) => e,
-                None => return reject(404, &format!("unknown model '{name}'")),
+                None => {
+                    return reject(
+                        ErrorCode::UnknownModel,
+                        &format!("unknown model '{name}'"),
+                        None,
+                    )
+                }
             }
         }
     };
     let Some(features) = parsed.get("features").as_f32_vec() else {
-        return reject(400, "field 'features' must be an array of numbers");
+        return reject(
+            ErrorCode::BadRequest,
+            "field 'features' must be an array of numbers",
+            None,
+        );
     };
     if features.len() != entry.feature_len {
-        return reject(400, &format!(
-            "expected {} features for model '{}', got {}",
-            entry.feature_len,
-            entry.name,
-            features.len()
-        ));
+        return reject(
+            ErrorCode::BadRequest,
+            &format!(
+                "expected {} features for model '{}', got {}",
+                entry.feature_len,
+                entry.name,
+                features.len()
+            ),
+            None,
+        );
     }
 
+    let enqueued = Instant::now();
+    let deadline = req
+        .deadline_ms
+        .or(ctx.default_deadline)
+        .map(|ms| enqueued + Duration::from_millis(ms));
     let (tx, rx) = mpsc::channel();
-    let request = Request { entry, features, respond: tx, enqueued: Instant::now() };
+    let request = Request { entry, features, respond: tx, enqueued, deadline };
     if let Err((_, e)) = ctx.queue.try_push(request) {
-        let msg = match e {
-            PushError::Full => "admission queue full, retry later",
-            PushError::Closed => "server is shutting down",
+        let (code, msg) = match e {
+            PushError::Full => (ErrorCode::QueueFull, "admission queue full, retry later"),
+            PushError::Closed => (ErrorCode::Draining, "server is shutting down"),
         };
-        return reject(503, msg);
+        return reject(code, msg, Some(retry_after_hint(ctx)));
     }
     match rx.recv_timeout(Duration::from_secs(30)) {
         Ok(Ok(p)) => (
@@ -611,17 +811,32 @@ fn handle_predict(body: &str, ctx: &ConnCtx, rid: &str) -> (u16, String) {
                 ("request_id", Json::str(rid)),
             ])
             .to_string(),
+            None,
         ),
-        Ok(Err(msg)) => (500, err_json(&msg, Some(rid))),
-        Err(mpsc::RecvTimeoutError::Timeout) => (504, err_json("inference timed out", Some(rid))),
-        Err(mpsc::RecvTimeoutError::Disconnected) => {
-            (500, err_json("worker dropped the request", Some(rid)))
+        Ok(Err(e)) => {
+            let retry = if e.code == ErrorCode::DeadlineExceeded {
+                Some(retry_after_hint(ctx))
+            } else {
+                None
+            };
+            (e.status(), err_json(e.code, &e.message, Some(rid)), retry)
         }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            (504, err_json(ErrorCode::Timeout, "inference timed out", Some(rid)), None)
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => (
+            500,
+            err_json(ErrorCode::Internal, "worker dropped the request", Some(rid)),
+            None,
+        ),
     }
 }
 
-fn err_json(msg: &str, rid: Option<&str>) -> String {
-    let mut o = Json::obj(vec![("error", Json::str(msg))]);
+fn err_json(code: ErrorCode, msg: &str, rid: Option<&str>) -> String {
+    let mut o = Json::obj(vec![
+        ("error", Json::str(msg)),
+        ("code", Json::str(code.label())),
+    ]);
     if let Some(r) = rid {
         o.set("request_id", Json::str(r));
     }
@@ -634,6 +849,7 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        413 => "Payload Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         504 => "Gateway Timeout",
@@ -647,6 +863,7 @@ fn write_response<W: Write>(
     body: &str,
     content_type: &str,
     request_id: Option<&str>,
+    retry_after: Option<u32>,
     keep_alive: bool,
 ) -> std::io::Result<()> {
     // one write_all per response: formatting straight into a NODELAY
@@ -654,13 +871,17 @@ fn write_response<W: Write>(
     let rid_header = request_id
         .map(|r| format!("X-Request-Id: {r}\r\n"))
         .unwrap_or_default();
+    let retry_header = retry_after
+        .map(|s| format!("Retry-After: {s}\r\n"))
+        .unwrap_or_default();
     let msg = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{}Connection: {}\r\n\r\n{}",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{}{}Connection: {}\r\n\r\n{}",
         status,
         reason(status),
         content_type,
         body.len(),
         rid_header,
+        retry_header,
         if keep_alive { "keep-alive" } else { "close" },
         body
     );
@@ -749,8 +970,8 @@ mod tests {
     use super::*;
     use std::io::Cursor;
 
-    fn parse_str(s: &str) -> std::result::Result<Option<HttpRequest>, String> {
-        read_request(&mut Cursor::new(s.as_bytes().to_vec()))
+    fn parse_str(s: &str) -> std::result::Result<Option<HttpRequest>, (u16, String)> {
+        read_request(&mut Cursor::new(s.as_bytes().to_vec()), DEFAULT_MAX_BODY_BYTES)
     }
 
     #[test]
@@ -787,6 +1008,7 @@ mod tests {
             .unwrap()
             .unwrap();
         assert_eq!(req.request_id.as_deref(), Some("My-Id.01"));
+        assert_eq!(req.deadline_ms, None);
         // hostile values are stripped, not echoed verbatim
         let req = parse_str(
             "GET /metrics HTTP/1.1\r\nX-Request-Id: a b\"c\u{7f}d\r\n\r\n",
@@ -832,29 +1054,77 @@ mod tests {
     #[test]
     fn response_wire_format() {
         let mut out = Vec::new();
-        write_response(&mut out, 404, r#"{"error":"x"}"#, CT_JSON, Some("rid-1"), false)
+        write_response(&mut out, 404, r#"{"error":"x"}"#, CT_JSON, Some("rid-1"), None, false)
             .unwrap();
         let s = String::from_utf8(out).unwrap();
         assert!(s.starts_with("HTTP/1.1 404 Not Found\r\n"));
         assert!(s.contains("Content-Type: application/json\r\n"));
         assert!(s.contains("Content-Length: 13\r\n"));
         assert!(s.contains("X-Request-Id: rid-1\r\n"));
+        assert!(!s.contains("Retry-After"));
         assert!(s.contains("Connection: close\r\n"));
         assert!(s.ends_with(r#"{"error":"x"}"#));
     }
 
     #[test]
-    fn error_bodies_carry_request_id() {
-        let body = err_json("boom", Some("rid-9"));
+    fn retry_after_header_emitted_on_shed() {
+        let mut out = Vec::new();
+        write_response(&mut out, 503, "{}", CT_JSON, Some("r"), Some(7), false).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(s.contains("Retry-After: 7\r\n"));
+    }
+
+    #[test]
+    fn error_bodies_carry_code_and_request_id() {
+        let body = err_json(ErrorCode::Internal, "boom", Some("rid-9"));
         let j = json::parse(&body).unwrap();
         assert_eq!(j.get("error").as_str(), Some("boom"));
+        assert_eq!(j.get("code").as_str(), Some("internal"));
         assert_eq!(j.get("request_id").as_str(), Some("rid-9"));
-        assert!(json::parse(&err_json("x", None)).unwrap().get("request_id").is_null());
+        let anon = err_json(ErrorCode::BadRequest, "x", None);
+        let j = json::parse(&anon).unwrap();
+        assert_eq!(j.get("code").as_str(), Some("bad_request"));
+        assert!(j.get("request_id").is_null());
+    }
+
+    #[test]
+    fn deadline_header_parsed_and_validated() {
+        let req = parse_str("POST /predict HTTP/1.1\r\nX-Deadline-Ms: 250\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.deadline_ms, Some(250));
+        // zero and garbage deadlines are client errors, not silent no-ops
+        let err = parse_str("POST /predict HTTP/1.1\r\nX-Deadline-Ms: 0\r\n\r\n").unwrap_err();
+        assert_eq!(err.0, 400);
+        let err = parse_str("POST /predict HTTP/1.1\r\nX-Deadline-Ms: soon\r\n\r\n").unwrap_err();
+        assert_eq!(err.0, 400);
+    }
+
+    #[test]
+    fn oversized_body_is_413_before_buffering() {
+        // a tiny max_body: the declared content-length alone must trip
+        // the refusal, without the body being read
+        let req = "POST /predict HTTP/1.1\r\nContent-Length: 100\r\n\r\n";
+        let err = read_request(&mut Cursor::new(req.as_bytes().to_vec()), 64).unwrap_err();
+        assert_eq!(err.0, 413);
+        assert!(err.1.contains("body too large"), "{}", err.1);
+        // at the limit is fine
+        let body = "x".repeat(64);
+        let ok = read_request(
+            &mut Cursor::new(format!("POST /p HTTP/1.1\r\nContent-Length: 64\r\n\r\n{body}")
+                .into_bytes()),
+            64,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(ok.body.len(), 64);
     }
 
     #[test]
     fn status_reasons() {
         assert_eq!(reason(200), "OK");
+        assert_eq!(reason(413), "Payload Too Large");
         assert_eq!(reason(503), "Service Unavailable");
         assert_eq!(reason(599), "Unknown");
     }

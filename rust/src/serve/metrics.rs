@@ -103,6 +103,16 @@ struct Inner {
     /// load-shed 503) — they never reached a worker, so they are counted
     /// separately from served-request errors.
     rejected: u64,
+    /// Overload/lifecycle subset of `rejected`: queue-full and draining
+    /// 503s (explicit load shedding, DESIGN.md §12).
+    shed: u64,
+    /// Requests shed worker-side because their deadline expired while
+    /// queued.
+    expired: u64,
+    /// Batch forwards that panicked (contained by `catch_unwind`).
+    worker_panics: u64,
+    /// Dead workers respawned by the supervisor.
+    worker_restarts: u64,
     /// Admission → dequeue wait per request (ms).
     queue_wait_ms: Moments,
     /// Time `pop_batch` spent coalescing after its first item (ms).
@@ -141,6 +151,28 @@ impl ServeMetrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// One request load-shed (queue full / draining). Callers also
+    /// record a rejection — shed is the overload-attributable subset.
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// One queued request expired past its deadline and was shed by a
+    /// worker before batch assembly.
+    pub fn record_expired(&self) {
+        self.inner.lock().unwrap().expired += 1;
+    }
+
+    /// One batch forward panicked (contained; its requests got 500s).
+    pub fn record_worker_panic(&self) {
+        self.inner.lock().unwrap().worker_panics += 1;
+    }
+
+    /// The supervisor respawned a dead worker.
+    pub fn record_worker_restart(&self) {
+        self.inner.lock().unwrap().worker_restarts += 1;
+    }
+
     /// One request waited `ms` between admission and worker dequeue.
     pub fn record_queue_wait(&self, ms: f64) {
         self.inner.lock().unwrap().queue_wait_ms.push(ms);
@@ -159,6 +191,17 @@ impl ServeMetrics {
     /// Examples served per forward pass, averaged — the coalescing factor.
     pub fn mean_batch_size(&self) -> f64 {
         self.inner.lock().unwrap().global.mean_batch()
+    }
+
+    /// Mean request latency over all completed requests (ms); 0 when
+    /// nothing has been served. Feeds the `Retry-After` hint.
+    pub fn mean_latency_ms(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.global.lat_all.count() == 0 {
+            0.0
+        } else {
+            m.global.lat_all.mean()
+        }
     }
 
     /// Copy the inner state out under the lock (cheap: counters, bounded
@@ -186,6 +229,10 @@ impl ServeMetrics {
             ("requests_total", Json::num(total as f64)),
             ("errors_total", Json::num(m.global.errors as f64)),
             ("rejected_total", Json::num(m.rejected as f64)),
+            ("shed_total", Json::num(m.shed as f64)),
+            ("deadline_expired_total", Json::num(m.expired as f64)),
+            ("worker_panics_total", Json::num(m.worker_panics as f64)),
+            ("worker_restarts_total", Json::num(m.worker_restarts as f64)),
             ("examples_total", Json::num(m.global.examples as f64)),
             ("batches_total", Json::num(m.global.batches as f64)),
             ("mean_batch_size", Json::num(m.global.mean_batch())),
@@ -239,6 +286,18 @@ impl ServeMetrics {
         p.line("flexor_errors_total", &[], m.global.errors as f64);
         p.header("flexor_rejected_total", "Requests refused before admission.", "counter");
         p.line("flexor_rejected_total", &[], m.rejected as f64);
+        p.header("flexor_shed_total", "Requests load-shed (queue full / draining).", "counter");
+        p.line("flexor_shed_total", &[], m.shed as f64);
+        p.header(
+            "flexor_deadline_expired_total",
+            "Requests shed after their deadline expired in the queue.",
+            "counter",
+        );
+        p.line("flexor_deadline_expired_total", &[], m.expired as f64);
+        p.header("flexor_worker_panics_total", "Batch forwards that panicked.", "counter");
+        p.line("flexor_worker_panics_total", &[], m.worker_panics as f64);
+        p.header("flexor_worker_restarts_total", "Workers respawned by the supervisor.", "counter");
+        p.line("flexor_worker_restarts_total", &[], m.worker_restarts as f64);
         p.header("flexor_examples_total", "Examples served across batches.", "counter");
         p.line("flexor_examples_total", &[], m.global.examples as f64);
         p.header("flexor_batches_total", "Forward passes run.", "counter");
@@ -399,6 +458,42 @@ mod tests {
         assert_eq!(j.get("rejected_total").as_usize(), Some(2));
         assert_eq!(j.get("requests_total").as_usize(), Some(1));
         assert_eq!(j.get("errors_total").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn fault_counters_land_in_both_expositions() {
+        let m = ServeMetrics::new();
+        m.record_rejected();
+        m.record_shed();
+        m.record_expired();
+        m.record_expired();
+        m.record_worker_panic();
+        m.record_worker_restart();
+        let j = m.snapshot(0);
+        assert_eq!(j.get("shed_total").as_usize(), Some(1));
+        assert_eq!(j.get("deadline_expired_total").as_usize(), Some(2));
+        assert_eq!(j.get("worker_panics_total").as_usize(), Some(1));
+        assert_eq!(j.get("worker_restarts_total").as_usize(), Some(1));
+        // expired/shed requests never complete, so they are not requests
+        assert_eq!(j.get("requests_total").as_usize(), Some(0));
+        let text = m.prometheus(0);
+        for line in [
+            "flexor_shed_total 1",
+            "flexor_deadline_expired_total 2",
+            "flexor_worker_panics_total 1",
+            "flexor_worker_restarts_total 1",
+        ] {
+            assert!(text.contains(line), "missing {line:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn mean_latency_feeds_retry_hint() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.mean_latency_ms(), 0.0);
+        m.record_request("a", 2.0, true);
+        m.record_request("a", 4.0, true);
+        assert!((m.mean_latency_ms() - 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -28,9 +28,18 @@
 //!   Prometheus text exposition;
 //! * [`http`]     — HTTP/1.1 front-end (`/predict`, `/models`,
 //!   `/metrics` — `?format=prometheus` for the text exposition,
-//!   `/models/<name>/profile`, `/healthz`), `X-Request-Id`
-//!   generation/echo, structured request logging, plus a one-shot
-//!   client for tests/benches.
+//!   `/models/<name>/profile`, `/healthz` liveness, `/readyz`
+//!   readiness), `X-Request-Id` generation/echo, structured request
+//!   logging, plus a one-shot client for tests/benches;
+//! * [`error`]    — the stable error-code vocabulary every non-2xx body
+//!   carries (`code` field), shared between workers and the HTTP layer.
+//!
+//! Fault tolerance (DESIGN.md §12): per-request deadlines
+//! (`X-Deadline-Ms` / `FLEXOR_DEADLINE_MS`) shed expired requests
+//! before batch assembly; bounded admission degrades to `503` +
+//! `Retry-After`; batch forwards run under `catch_unwind` with a
+//! supervisor respawning dead workers; `substrate::fault` injects
+//! faults for the chaos harness (`rust/tests/chaos.rs`).
 //!
 //! Forward passes inside the workers run on the packed parallel compute
 //! engine (`inference::gemm`, DESIGN.md §7); `ServeConfig::intra_threads`
@@ -40,12 +49,14 @@
 //!
 //! Everything is dependency-free `std` (DESIGN.md §5/§6).
 
+pub mod error;
 pub mod http;
 pub mod metrics;
 pub mod queue;
 pub mod registry;
 pub mod worker;
 
+pub use error::{ErrorCode, ServeError};
 pub use http::{ServeConfig, Server};
 pub use metrics::ServeMetrics;
 pub use queue::{BatchQueue, PushError};

@@ -258,6 +258,34 @@ mod tests {
         assert!(dt >= 10 * MS, "assembly {dt:?}");
     }
 
+    /// Overflow + drain interleaving under the shedding contract: a full
+    /// queue rejects with `Full` (returning the item), admits again the
+    /// moment a batch drains, and the drain preserves FIFO order across
+    /// the rejection — shed items simply never existed as far as
+    /// ordering is concerned.
+    #[test]
+    fn overflow_and_timed_pop_preserve_fifo_across_rejections() {
+        let q = BatchQueue::bounded(3);
+        q.try_push(0u32).unwrap();
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        // two rejected while full — both come back intact
+        assert_eq!(q.try_push(3).unwrap_err(), (3, PushError::Full));
+        assert_eq!(q.try_push(4).unwrap_err(), (4, PushError::Full));
+        // drain a partial batch, then interleave new admissions
+        let (b, _) = q.pop_batch_timed(2, Duration::ZERO).unwrap();
+        assert_eq!(b, vec![0, 1]);
+        q.try_push(5).unwrap();
+        q.try_push(6).unwrap();
+        assert_eq!(q.try_push(7).unwrap_err(), (7, PushError::Full));
+        // FIFO over the survivors only: 2 (pre-overflow), then 5, 6
+        let (b, _) = q.pop_batch_timed(8, Duration::ZERO).unwrap();
+        assert_eq!(b, vec![2, 5, 6]);
+        assert!(q.is_empty());
+        q.try_push(7).unwrap();
+        assert_eq!(q.pop_batch(8, Duration::ZERO).unwrap(), vec![7]);
+    }
+
     #[test]
     fn blocking_push_waits_for_space() {
         let q = Arc::new(BatchQueue::bounded(1));

@@ -111,7 +111,14 @@ impl Registry {
     ) -> Result<Arc<ModelEntry>> {
         ensure!(!self.models.contains_key(name), "model '{name}' already registered");
         let t0 = Instant::now();
-        let model = InferenceModel::load_with_policy(dir, stem, policy)?;
+        let model = InferenceModel::load_with_policy(dir, stem, policy)
+            .with_context(|| {
+                format!(
+                    "loading model '{name}' from {} (stem '{stem}') — bundle \
+                     rejected, nothing registered",
+                    dir.display()
+                )
+            })?;
         let load_ms = t0.elapsed().as_secs_f64() * 1e3;
         self.register(name, model, load_ms)
     }

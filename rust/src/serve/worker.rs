@@ -1,17 +1,28 @@
 //! Worker-thread pool: drains the admission queue against the shared
 //! decrypted models and fans results back through per-request channels.
 //!
-//! Each worker loops on [`BatchQueue::pop_batch_timed`], groups the
-//! coalesced requests by target model (a popped batch may interleave
+//! Each worker loops on [`BatchQueue::pop_batch_timed`], sheds requests
+//! whose deadline expired while queued (they get a coded
+//! `deadline_exceeded` error, never a forward pass), groups the
+//! surviving requests by target model (a popped batch may interleave
 //! models), runs **one forward pass per group**, and answers every
 //! request on its own one-shot channel. Workers exit when the queue is
 //! closed and drained, so shutdown never drops an admitted request.
 //!
+//! Fault containment (DESIGN.md §12): every batch forward runs inside
+//! `catch_unwind`, so a panicking shard (or an integrity-check panic in
+//! the Encrypted engine) poisons exactly one batch — its requests get a
+//! coded `500` with the panic message, the worker keeps serving, and
+//! nothing is left blocked on a Condvar. A worker that panics
+//! [`MAX_CONSECUTIVE_PANICS`] times in a row exits and is respawned by
+//! the pool's supervisor thread, which keeps the live-worker count (the
+//! `/readyz` signal) honest.
+//!
 //! Observability: each forward runs inside a [`trace`] scope carrying
 //! the model's [`Profile`](trace::Profile) sink, so (when the server's
 //! [`TraceMode`](trace::TraceMode) samples it in) every pipeline stage
-//! lands in `GET /models/<name>/profile`. Queue wait and batch-assembly
-//! time feed [`ServeMetrics`] per dequeue.
+//! lands in `GET /models/<name>/profile`. Queue wait, batch-assembly
+//! time, deadline sheds, panics, and respawns feed [`ServeMetrics`].
 //!
 //! Thread budget: each forward shards its GEMMs across the shared
 //! intra-op pool (`substrate::pool`, sized by `ServeConfig::intra_threads`
@@ -21,16 +32,24 @@
 //! oversubscription (DESIGN.md §7).
 
 use std::collections::BTreeMap;
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::substrate::trace;
+use crate::substrate::json::Json;
+use crate::substrate::{fault, trace};
 
+use super::error::{ErrorCode, ServeError};
 use super::metrics::ServeMetrics;
 use super::queue::BatchQueue;
 use super::registry::ModelEntry;
+
+/// A worker that panics this many batches in a row exits (and is
+/// respawned fresh by the supervisor): the forward state is assumed
+/// wedged beyond what batch-level containment can fix.
+pub const MAX_CONSECUTIVE_PANICS: u32 = 3;
 
 /// A successfully served prediction.
 #[derive(Clone, Debug)]
@@ -46,7 +65,7 @@ pub struct Prediction {
 }
 
 /// What comes back on a request's response channel.
-pub type Response = std::result::Result<Prediction, String>;
+pub type Response = std::result::Result<Prediction, ServeError>;
 
 /// One admitted inference request.
 pub struct Request {
@@ -58,17 +77,47 @@ pub struct Request {
     pub respond: mpsc::Sender<Response>,
     /// Admission timestamp (latency accounting).
     pub enqueued: Instant,
+    /// Absolute deadline (from `X-Deadline-Ms` / `FLEXOR_DEADLINE_MS`);
+    /// requests still queued past it are shed, not computed.
+    pub deadline: Option<Instant>,
 }
 
-/// Handle over the spawned worker threads.
+/// Everything a worker thread needs; cloned per (re)spawn.
+struct WorkerCfg {
+    queue: Arc<BatchQueue<Request>>,
+    metrics: Arc<ServeMetrics>,
+    max_batch: usize,
+    max_wait: Duration,
+    mode: trace::TraceMode,
+}
+
+impl Clone for WorkerCfg {
+    fn clone(&self) -> Self {
+        WorkerCfg {
+            queue: self.queue.clone(),
+            metrics: self.metrics.clone(),
+            max_batch: self.max_batch,
+            max_wait: self.max_wait,
+            mode: self.mode,
+        }
+    }
+}
+
+/// Handle over the spawned worker threads plus their supervisor.
 pub struct WorkerPool {
-    handles: Vec<thread::JoinHandle<()>>,
+    handles: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+    supervisor: Option<thread::JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    alive: Arc<AtomicUsize>,
+    size: usize,
 }
 
 impl WorkerPool {
-    /// Spawn `n` workers draining `queue` with the given batching policy.
-    /// `trace_mode` decides which forwards get stage-level spans
-    /// (`None` defers to the `FLEXOR_TRACE` env dial).
+    /// Spawn `n` workers draining `queue` with the given batching policy,
+    /// plus a supervisor thread that joins dead workers and respawns
+    /// them while the queue is open. `trace_mode` decides which forwards
+    /// get stage-level spans (`None` defers to the `FLEXOR_TRACE` env
+    /// dial).
     pub fn spawn(
         n: usize,
         queue: Arc<BatchQueue<Request>>,
@@ -79,27 +128,117 @@ impl WorkerPool {
     ) -> WorkerPool {
         assert!(n > 0, "worker pool needs at least one thread");
         let mode = trace_mode.unwrap_or_else(trace::env_mode);
-        let handles = (0..n)
-            .map(|i| {
-                let queue = queue.clone();
-                let metrics = metrics.clone();
-                thread::Builder::new()
-                    .name(format!("serve-worker-{i}"))
-                    .spawn(move || worker_loop(&queue, &metrics, max_batch, max_wait, mode))
-                    .expect("spawning serve worker")
-            })
-            .collect();
-        WorkerPool { handles }
+        let cfg = WorkerCfg { queue, metrics, max_batch, max_wait, mode };
+        let alive = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<thread::JoinHandle<()>> =
+            (0..n).map(|i| spawn_worker(i, cfg.clone(), alive.clone())).collect();
+        let handles = Arc::new(Mutex::new(handles));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let supervisor = {
+            let handles = handles.clone();
+            let stop = stop.clone();
+            let alive = alive.clone();
+            let cfg = cfg.clone();
+            thread::Builder::new()
+                .name("serve-supervisor".into())
+                .spawn(move || supervise(n, &handles, &stop, &alive, &cfg))
+                .expect("spawning serve supervisor")
+        };
+
+        WorkerPool { handles, supervisor: Some(supervisor), stop, alive, size: n }
     }
 
+    /// Configured worker count.
     pub fn size(&self) -> usize {
-        self.handles.len()
+        self.size
     }
 
-    /// Wait for all workers to exit (close the queue first).
-    pub fn join(self) {
-        for h in self.handles {
+    /// Workers currently inside their serve loop.
+    pub fn alive(&self) -> usize {
+        self.alive.load(Ordering::Acquire)
+    }
+
+    /// Shared live-worker counter for `/readyz` reporting.
+    pub fn alive_handle(&self) -> Arc<AtomicUsize> {
+        self.alive.clone()
+    }
+
+    /// Wait for all workers to exit (close the queue first). Stops the
+    /// supervisor before joining so no worker is respawned mid-shutdown.
+    pub fn join(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(s) = self.supervisor.take() {
+            s.join().ok();
+        }
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
             h.join().ok();
+        }
+    }
+}
+
+fn spawn_worker(id: usize, cfg: WorkerCfg, alive: Arc<AtomicUsize>) -> thread::JoinHandle<()> {
+    alive.fetch_add(1, Ordering::AcqRel);
+    let res = thread::Builder::new()
+        .name(format!("serve-worker-{id}"))
+        .spawn(move || {
+            // decrement on every exit path, panic included
+            struct AliveGuard(Arc<AtomicUsize>);
+            impl Drop for AliveGuard {
+                fn drop(&mut self) {
+                    self.0.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
+            let _g = AliveGuard(alive);
+            worker_loop(&cfg.queue, &cfg.metrics, cfg.max_batch, cfg.max_wait, cfg.mode);
+        });
+    res.expect("spawning serve worker")
+}
+
+/// Supervisor loop: poll for finished (dead or exited) workers, join
+/// them, and respawn replacements while the queue is still open.
+fn supervise(
+    n: usize,
+    handles: &Mutex<Vec<thread::JoinHandle<()>>>,
+    stop: &AtomicBool,
+    alive: &Arc<AtomicUsize>,
+    cfg: &WorkerCfg,
+) {
+    let mut next_id = n;
+    while !stop.load(Ordering::Acquire) {
+        thread::sleep(Duration::from_millis(20));
+        let mut dead = Vec::new();
+        {
+            let mut hs = handles.lock().unwrap();
+            let mut i = 0;
+            while i < hs.len() {
+                if hs[i].is_finished() {
+                    dead.push(hs.swap_remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        if dead.is_empty() {
+            continue;
+        }
+        for h in dead {
+            h.join().ok();
+            // a clean exit only happens when the queue closed for
+            // shutdown; everything else is a crash worth replacing
+            if cfg.queue.is_closed() || stop.load(Ordering::Acquire) {
+                continue;
+            }
+            cfg.metrics.record_worker_restart();
+            trace::log(
+                trace::Level::Warn,
+                "worker_respawned",
+                &[("workers_alive", Json::num(alive.load(Ordering::Acquire) as f64))],
+            );
+            let nh = spawn_worker(next_id, cfg.clone(), alive.clone());
+            next_id += 1;
+            handles.lock().unwrap().push(nh);
         }
     }
 }
@@ -111,27 +250,68 @@ fn worker_loop(
     max_wait: Duration,
     mode: trace::TraceMode,
 ) {
+    let mut consecutive_panics: u32 = 0;
     while let Some((batch, assembly)) = queue.pop_batch_timed(max_batch, max_wait) {
         metrics.record_batch_assembly(assembly.as_secs_f64() * 1e3);
+        // fault hook first so `dequeued` (the deadline check's "now")
+        // sees the stalled age — a queue_stall fault must expire
+        // deadlines exactly like a genuinely wedged assembly stage
+        fault::maybe_queue_stall();
         let dequeued = Instant::now();
-        // group by model, preserving arrival order within each group
+        // group by model, preserving arrival order within each group;
+        // shed expired requests before any batch assembly
         let mut groups: BTreeMap<String, Vec<Request>> = BTreeMap::new();
         for r in batch {
             // queue wait = admission → dequeue (assembly linger included,
             // forward excluded)
-            metrics.record_queue_wait(
-                dequeued.saturating_duration_since(r.enqueued).as_secs_f64() * 1e3,
-            );
+            let waited_ms =
+                dequeued.saturating_duration_since(r.enqueued).as_secs_f64() * 1e3;
+            metrics.record_queue_wait(waited_ms);
+            if let Some(deadline) = r.deadline {
+                if deadline < dequeued {
+                    metrics.record_expired();
+                    trace::log(
+                        trace::Level::Warn,
+                        "deadline_expired",
+                        &[
+                            ("model", Json::str(r.entry.name.clone())),
+                            ("queue_wait_ms", Json::num(waited_ms)),
+                        ],
+                    );
+                    r.respond
+                        .send(Err(ServeError::new(
+                            ErrorCode::DeadlineExceeded,
+                            format!("deadline exceeded after {waited_ms:.1} ms in queue"),
+                        )))
+                        .ok();
+                    continue;
+                }
+            }
             groups.entry(r.entry.name.clone()).or_default().push(r);
         }
+        let mut any_panicked = false;
         for (_, reqs) in groups {
-            serve_group(reqs, metrics, mode);
+            any_panicked |= serve_group(reqs, metrics, mode);
+        }
+        if any_panicked {
+            consecutive_panics += 1;
+            if consecutive_panics >= MAX_CONSECUTIVE_PANICS {
+                trace::log(
+                    trace::Level::Error,
+                    "worker_exiting_after_repeated_panics",
+                    &[("consecutive_panics", Json::num(consecutive_panics as f64))],
+                );
+                return; // supervisor respawns a fresh worker
+            }
+        } else {
+            consecutive_panics = 0;
         }
     }
 }
 
-/// Run one batched forward for requests that share a model.
-fn serve_group(reqs: Vec<Request>, metrics: &ServeMetrics, mode: trace::TraceMode) {
+/// Run one batched forward for requests that share a model. Returns
+/// true when the forward panicked (contained by `catch_unwind`).
+fn serve_group(reqs: Vec<Request>, metrics: &ServeMetrics, mode: trace::TraceMode) -> bool {
     let entry = reqs[0].entry.clone();
     let fl = entry.feature_len;
 
@@ -149,22 +329,28 @@ fn serve_group(reqs: Vec<Request>, metrics: &ServeMetrics, mode: trace::TraceMod
                 r.features.len()
             );
             metrics.record_request(&entry.name, elapsed_ms(&r), false);
-            r.respond.send(Err(msg)).ok();
+            r.respond.send(Err(ServeError::new(ErrorCode::BadRequest, msg))).ok();
         }
     }
     if batch.is_empty() {
-        return;
+        return false;
     }
 
     let n = batch.len();
     metrics.record_batch(&entry.name, n);
-    let result = {
+    // catch_unwind contains shard panics: substrate::pool::run re-raises
+    // a shard's panic payload on this (the submitting) thread after all
+    // shards settle, so both direct forward panics and intra-op shard
+    // panics land here instead of wedging the Condvar protocol.
+    let result = catch_unwind(AssertUnwindSafe(|| {
         // scope drops (deactivating tracing) before responses are sent
         let _t = trace::scope_with(mode, Some(entry.profile.clone()));
+        fault::maybe_slow_layer();
+        fault::maybe_panic_shard();
         entry.model.predict(&x, n)
-    };
+    }));
     match result {
-        Ok(preds) => {
+        Ok(Ok(preds)) => {
             for (r, &class) in batch.iter().zip(&preds) {
                 let latency_ms = elapsed_ms(r);
                 metrics.record_request(&entry.name, latency_ms, true);
@@ -177,22 +363,54 @@ fn serve_group(reqs: Vec<Request>, metrics: &ServeMetrics, mode: trace::TraceMod
                     }))
                     .ok();
             }
+            false
         }
-        Err(e) => {
+        Ok(Err(e)) => {
             let msg = format!("forward pass failed: {e:#}");
             trace::log(
                 trace::Level::Error,
                 "forward_failed",
                 &[
-                    ("model", crate::substrate::json::Json::str(entry.name.clone())),
-                    ("batch_size", crate::substrate::json::Json::num(n as f64)),
-                    ("error", crate::substrate::json::Json::str(format!("{e:#}"))),
+                    ("model", Json::str(entry.name.clone())),
+                    ("batch_size", Json::num(n as f64)),
+                    ("error", Json::str(format!("{e:#}"))),
                 ],
             );
             for r in &batch {
                 metrics.record_request(&entry.name, elapsed_ms(r), false);
-                r.respond.send(Err(msg.clone())).ok();
+                r.respond
+                    .send(Err(ServeError::new(ErrorCode::Internal, msg.clone())))
+                    .ok();
             }
+            false
+        }
+        Err(payload) => {
+            let msg = trace::panic_message(payload.as_ref());
+            metrics.record_worker_panic();
+            trace::log(
+                trace::Level::Error,
+                "worker_panic",
+                &[
+                    ("model", Json::str(entry.name.clone())),
+                    ("batch_size", Json::num(n as f64)),
+                    ("panic", Json::str(msg.clone())),
+                ],
+            );
+            // integrity-check panics (Encrypted engine checksum
+            // mismatch) get their own code so clients can tell data
+            // corruption from compute bugs
+            let code = if msg.contains("integrity") {
+                ErrorCode::Integrity
+            } else {
+                ErrorCode::WorkerPanic
+            };
+            for r in &batch {
+                metrics.record_request(&entry.name, elapsed_ms(r), false);
+                r.respond
+                    .send(Err(ServeError::new(code, format!("worker panicked: {msg}"))))
+                    .ok();
+            }
+            true
         }
     }
 }

@@ -1,0 +1,278 @@
+//! Env-driven fault injection for the chaos harness (DESIGN.md §12).
+//!
+//! `FLEXOR_FAULT=panic_shard:p,slow_layer:ms,flip_word:p,queue_stall:ms`
+//! arms a process-global [`FaultPlan`]; the serving stack calls the
+//! `maybe_*` hooks at the seams the plan can perturb:
+//!
+//! - `panic_shard:p`  — each batch forward panics with probability `p`
+//!   (exercises worker supervision / `catch_unwind` containment),
+//! - `slow_layer:ms`  — each batch forward sleeps `ms` milliseconds
+//!   (exercises deadlines racing slow compute),
+//! - `flip_word:p`    — the Encrypted engine's integrity re-hash sees one
+//!   encrypted word XOR-flipped with probability `p` (exercises checksum
+//!   detection; the stored bundle is never mutated),
+//! - `queue_stall:ms` — each dequeued batch stalls `ms` milliseconds
+//!   before the deadline check (exercises queue-wait expiry shedding).
+//!
+//! The hooks are compiled unconditionally but cost one completed-`Once`
+//! check plus one relaxed atomic load when no plan is armed, so
+//! production binaries pay nothing for carrying the harness. Tests can
+//! bypass the env with [`arm`]/[`disarm`]; either call consumes the env
+//! spec so `FLEXOR_FAULT` never overrides an explicit choice afterwards.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once};
+use std::time::Duration;
+
+/// One process-wide fault plan; zeroed fields are inactive.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Probability in [0,1] that a batch forward panics.
+    pub panic_shard_p: f64,
+    /// Milliseconds each batch forward sleeps before computing.
+    pub slow_layer_ms: u64,
+    /// Probability in [0,1] that an integrity re-hash sees a flipped word.
+    pub flip_word_p: f64,
+    /// Milliseconds each dequeued batch stalls before the deadline check.
+    pub queue_stall_ms: u64,
+}
+
+impl FaultPlan {
+    /// True when every fault class is inactive.
+    pub fn is_empty(&self) -> bool {
+        self.panic_shard_p <= 0.0
+            && self.slow_layer_ms == 0
+            && self.flip_word_p <= 0.0
+            && self.queue_stall_ms == 0
+    }
+
+    /// Parse the `FLEXOR_FAULT` grammar: comma-separated `key:value`
+    /// pairs, any subset of `panic_shard:p`, `slow_layer:ms`,
+    /// `flip_word:p`, `queue_stall:ms`.
+    ///
+    /// ```
+    /// use flexor::substrate::fault::FaultPlan;
+    /// let p = FaultPlan::parse("panic_shard:0.5,queue_stall:250").unwrap();
+    /// assert_eq!(p.panic_shard_p, 0.5);
+    /// assert_eq!(p.queue_stall_ms, 250);
+    /// assert!(FaultPlan::parse("panic_shard:2.0").is_err());
+    /// ```
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part
+                .split_once(':')
+                .ok_or_else(|| format!("fault spec '{part}': expected key:value"))?;
+            let prob = |v: &str| -> Result<f64, String> {
+                let p: f64 = v
+                    .parse()
+                    .map_err(|_| format!("fault spec '{part}': bad probability '{v}'"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("fault spec '{part}': probability must be in [0,1]"));
+                }
+                Ok(p)
+            };
+            let millis = |v: &str| -> Result<u64, String> {
+                v.parse()
+                    .map_err(|_| format!("fault spec '{part}': bad millisecond count '{v}'"))
+            };
+            match key.trim() {
+                "panic_shard" => plan.panic_shard_p = prob(val.trim())?,
+                "slow_layer" => plan.slow_layer_ms = millis(val.trim())?,
+                "flip_word" => plan.flip_word_p = prob(val.trim())?,
+                "queue_stall" => plan.queue_stall_ms = millis(val.trim())?,
+                other => {
+                    return Err(format!(
+                        "fault spec: unknown fault class '{other}' \
+                         (expected panic_shard, slow_layer, flip_word, queue_stall)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+static ENV_INIT: Once = Once::new();
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<FaultPlan> = Mutex::new(FaultPlan {
+    panic_shard_p: 0.0,
+    slow_layer_ms: 0,
+    flip_word_p: 0.0,
+    queue_stall_ms: 0,
+});
+/// splitmix64 state for probability draws; fixed seed keeps chaos runs
+/// reproducible for a given request interleaving.
+static RNG: AtomicU64 = AtomicU64::new(0x9E3779B97F4A7C15);
+
+fn env_init() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("FLEXOR_FAULT") {
+            if !spec.trim().is_empty() {
+                match FaultPlan::parse(&spec) {
+                    Ok(plan) if !plan.is_empty() => {
+                        *PLAN.lock().unwrap() = plan;
+                        ARMED.store(true, Ordering::Release);
+                    }
+                    Ok(_) => {}
+                    Err(e) => {
+                        super::trace::log(
+                            super::trace::Level::Warn,
+                            "fault_spec_ignored",
+                            &[("error", super::json::Json::str(e))],
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Arm a fault plan, overriding (and permanently consuming) any
+/// `FLEXOR_FAULT` env spec.
+pub fn arm(plan: FaultPlan) {
+    ENV_INIT.call_once(|| {});
+    *PLAN.lock().unwrap() = plan;
+    ARMED.store(!plan.is_empty(), Ordering::Release);
+}
+
+/// Disarm all faults; also consumes the env spec so it cannot re-arm.
+pub fn disarm() {
+    ENV_INIT.call_once(|| {});
+    *PLAN.lock().unwrap() = FaultPlan::default();
+    ARMED.store(false, Ordering::Release);
+}
+
+/// The armed plan, or `None` when injection is inactive.
+pub fn current() -> Option<FaultPlan> {
+    env_init();
+    if !ARMED.load(Ordering::Acquire) {
+        return None;
+    }
+    let plan = *PLAN.lock().unwrap();
+    if plan.is_empty() {
+        None
+    } else {
+        Some(plan)
+    }
+}
+
+/// One splitmix64 step; uniform draw in [0,1).
+fn draw_unit() -> f64 {
+    let mut x = RNG.fetch_add(0x9E3779B97F4A7C15, Ordering::Relaxed);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^= x >> 31;
+    (x >> 11) as f64 / (1u64 << 53) as f64
+}
+
+fn draw_u64() -> u64 {
+    let mut x = RNG.fetch_add(0x9E3779B97F4A7C15, Ordering::Relaxed);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// Hook: panic with probability `panic_shard_p`. Called inside the
+/// worker's `catch_unwind` envelope, so a fired fault poisons exactly
+/// one batch.
+pub fn maybe_panic_shard() {
+    if let Some(plan) = current() {
+        if plan.panic_shard_p > 0.0 && draw_unit() < plan.panic_shard_p {
+            panic!("injected fault: panic_shard");
+        }
+    }
+}
+
+/// Hook: sleep `slow_layer_ms` before a batch forward.
+pub fn maybe_slow_layer() {
+    if let Some(plan) = current() {
+        if plan.slow_layer_ms > 0 {
+            std::thread::sleep(Duration::from_millis(plan.slow_layer_ms));
+        }
+    }
+}
+
+/// Hook: stall `queue_stall_ms` after a batch is dequeued, before the
+/// worker's deadline check, simulating a wedged assembly stage.
+pub fn maybe_queue_stall() {
+    if let Some(plan) = current() {
+        if plan.queue_stall_ms > 0 {
+            std::thread::sleep(Duration::from_millis(plan.queue_stall_ms));
+        }
+    }
+}
+
+/// Hook: XOR mask for one encrypted word during an integrity re-hash.
+/// Returns 0 (identity) unless `flip_word:p` fires, in which case a
+/// single random bit is set. The stored words are never mutated — the
+/// flip perturbs only the checksum computation, modelling a corrupted
+/// read.
+pub fn flip_word_mask() -> u64 {
+    match current() {
+        Some(plan) if plan.flip_word_p > 0.0 && draw_unit() < plan.flip_word_p => {
+            1u64 << (draw_u64() % 64)
+        }
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: these tests never call arm()/disarm() — fault state is
+    // process-global and the lib test binary runs tests concurrently,
+    // so arming here would perturb unrelated engine tests. Arm/disarm
+    // behaviour is exercised end-to-end in rust/tests/chaos.rs, which
+    // is its own process and serializes via a global mutex.
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse("panic_shard:0.25,slow_layer:40,flip_word:1.0,queue_stall:300")
+            .unwrap();
+        assert_eq!(p.panic_shard_p, 0.25);
+        assert_eq!(p.slow_layer_ms, 40);
+        assert_eq!(p.flip_word_p, 1.0);
+        assert_eq!(p.queue_stall_ms, 300);
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn parse_subset_and_whitespace() {
+        let p = FaultPlan::parse(" slow_layer: 15 , queue_stall:0 ").unwrap();
+        assert_eq!(p.slow_layer_ms, 15);
+        assert_eq!(p.queue_stall_ms, 0);
+        assert_eq!(p.panic_shard_p, 0.0);
+        let empty = FaultPlan::parse("").unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultPlan::parse("panic_shard").is_err());
+        assert!(FaultPlan::parse("panic_shard:1.5").is_err());
+        assert!(FaultPlan::parse("panic_shard:-0.1").is_err());
+        assert!(FaultPlan::parse("slow_layer:abc").is_err());
+        assert!(FaultPlan::parse("warp_core:0.5").is_err());
+    }
+
+    #[test]
+    fn draws_are_uniformish() {
+        // sanity only: the splitmix64 stream should not be constant and
+        // should stay in [0,1).
+        let mut lo = 0usize;
+        for _ in 0..1000 {
+            let u = draw_unit();
+            assert!((0.0..1.0).contains(&u));
+            if u < 0.5 {
+                lo += 1;
+            }
+        }
+        assert!(lo > 350 && lo < 650, "suspicious draw distribution: {lo}/1000 below 0.5");
+    }
+}

@@ -7,6 +7,7 @@ pub mod json;
 pub mod argparse;
 pub mod stats;
 pub mod bench;
+pub mod fault;
 pub mod pool;
 pub mod ptest;
 pub mod trace;

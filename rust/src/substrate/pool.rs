@@ -61,6 +61,9 @@ struct Shared {
 struct PoolCounters {
     jobs: AtomicU64,
     shards: AtomicU64,
+    /// Shards whose closure panicked (contained by `catch_unwind`,
+    /// re-raised on the submitting thread after the job settles).
+    panics: AtomicU64,
     /// Summed submit→first-claim gap across jobs (ns).
     job_wait_ns: AtomicU64,
     /// Per-compute-thread busy ns, only accumulated while a traced scope
@@ -74,6 +77,7 @@ impl PoolCounters {
         PoolCounters {
             jobs: AtomicU64::new(0),
             shards: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
             job_wait_ns: AtomicU64::new(0),
             busy_ns: (0..threads.max(1)).map(|_| AtomicU64::new(0)).collect(),
         }
@@ -88,6 +92,8 @@ pub struct PoolCountersSnapshot {
     pub jobs: u64,
     /// Shards dispatched across all jobs.
     pub shards: u64,
+    /// Shards that panicked (contained and re-raised, DESIGN.md §12).
+    pub panics: u64,
     /// Summed submit→first-claim queue wait across jobs, ns.
     pub job_wait_ns: u64,
     /// Per-thread busy ns (slot 0 = callers, then workers); zeros unless
@@ -145,6 +151,7 @@ impl ThreadPool {
         PoolCountersSnapshot {
             jobs: c.jobs.load(Ordering::Relaxed),
             shards: c.shards.load(Ordering::Relaxed),
+            panics: c.panics.load(Ordering::Relaxed),
             job_wait_ns: c.job_wait_ns.load(Ordering::Relaxed),
             busy_ns: c.busy_ns.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
         }
@@ -285,6 +292,7 @@ fn run_shards(job: &Job, counters: &PoolCounters, slot: usize) {
         // Safety: i < len, so the caller is still inside `run`.
         let f = unsafe { &*job.f };
         if let Err(p) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))) {
+            counters.panics.fetch_add(1, Ordering::Relaxed);
             let mut slot_p = job.payload.lock().unwrap();
             if slot_p.is_none() {
                 *slot_p = Some(p);
@@ -412,6 +420,7 @@ mod tests {
     #[test]
     fn shard_panic_propagates_to_caller() {
         let pool = ThreadPool::new(2);
+        let before = pool.counters().panics;
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             pool.run(8, &|i| {
                 if i == 3 {
@@ -420,12 +429,15 @@ mod tests {
             });
         }));
         assert!(r.is_err());
+        // the contained panic is counted for /metrics
+        assert_eq!(pool.counters().panics - before, 1);
         // the pool survives a panicked job
         let acc = AtomicUsize::new(0);
         pool.run(8, &|_| {
             acc.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(acc.load(Ordering::SeqCst), 8);
+        assert_eq!(pool.counters().panics - before, 1);
     }
 
     #[test]

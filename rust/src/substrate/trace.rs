@@ -571,6 +571,19 @@ pub fn log(level: Level, event: &str, fields: &[(&str, Json)]) {
     eprintln!("{o}");
 }
 
+/// Best-effort text of a `catch_unwind` payload: `panic!` with a string
+/// literal or a formatted message covers essentially every panic in
+/// this codebase (asserts included); anything else gets a placeholder.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,290 @@
+//! Chaos harness (DESIGN.md §12): drive the serving stack over real
+//! loopback sockets while `substrate::fault` injects each fault class,
+//! and assert the contract that matters — **the server keeps answering,
+//! and healthy traffic stays bit-identical to an unfaulted run**.
+//!
+//! Fault state is process-global, so every test serializes on one
+//! poison-safe mutex and disarms via a drop guard; baselines are always
+//! captured before arming.
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use flexor::coordinator::export_synthetic_mlp_bundle;
+use flexor::inference::ComputeMode;
+use flexor::serve::{http, Registry, ServeConfig, Server};
+use flexor::substrate::fault::{self, FaultPlan};
+use flexor::substrate::json::{self, Json};
+
+const D_IN: usize = 16;
+
+/// All chaos tests hold this while armed; poison-safe so one failing
+/// test does not cascade into every other test's lock().unwrap().
+fn chaos_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Disarms on every exit path, panicking assertions included.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+fn arm(plan: FaultPlan) -> Disarm {
+    fault::arm(plan);
+    Disarm
+}
+
+fn bundle_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("flexor_chaos_{tag}_{}", std::process::id()))
+}
+
+fn start_server(tag: &str, cfg: ServeConfig, mode: Option<ComputeMode>) -> (Server, PathBuf) {
+    let dir = bundle_dir(tag);
+    export_synthetic_mlp_bundle(&dir, "served", 7, D_IN, &[32, 24], 10).unwrap();
+    let mut registry = match mode {
+        Some(m) => Registry::with_default_mode(m),
+        None => Registry::new(),
+    };
+    registry.load("served", &dir, "served").unwrap();
+    let server = Server::start("127.0.0.1:0", registry, cfg).unwrap();
+    (server, dir)
+}
+
+fn predict_body(features: &[f32]) -> String {
+    Json::obj(vec![
+        ("model", Json::str("served")),
+        ("features", Json::arr(features.iter().map(|&v| Json::num(v)))),
+    ])
+    .to_string()
+}
+
+fn post_predict(addr: SocketAddr, body: &str) -> (u16, Json) {
+    let (status, resp) = http::client::request(addr, "POST", "/predict", Some(body)).unwrap();
+    (status, json::parse(&resp).unwrap())
+}
+
+/// Deterministic probe inputs + their served classes (the baseline the
+/// faulted runs must reproduce bit-identically).
+fn baseline(addr: SocketAddr) -> Vec<(Vec<f32>, i64)> {
+    (0..4u32)
+        .map(|i| {
+            let x: Vec<f32> =
+                (0..D_IN).map(|j| ((i as f32 + 1.0) * 0.3 + j as f32 * 0.17).sin()).collect();
+            let (status, v) = post_predict(addr, &predict_body(&x));
+            assert_eq!(status, 200, "baseline request failed: {v}");
+            (x, v.get("prediction").as_i64().unwrap())
+        })
+        .collect()
+}
+
+fn assert_matches_baseline(addr: SocketAddr, base: &[(Vec<f32>, i64)], ctx: &str) {
+    for (i, (x, want)) in base.iter().enumerate() {
+        let (status, v) = post_predict(addr, &predict_body(x));
+        assert_eq!(status, 200, "{ctx}: probe {i} failed: {v}");
+        assert_eq!(
+            v.get("prediction").as_i64(),
+            Some(*want),
+            "{ctx}: probe {i} diverged from the unfaulted baseline: {v}"
+        );
+    }
+}
+
+fn metrics_json(addr: SocketAddr) -> Json {
+    let (status, m) = http::client::request(addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    json::parse(&m).unwrap()
+}
+
+/// `panic_shard:1.0`: every batch forward panics. Each faulted request
+/// gets a coded `500 worker_panic` (no hangs, no dropped channels), the
+/// worker that panics [`MAX_CONSECUTIVE_PANICS`] times in a row is
+/// respawned by the supervisor, and after disarming the same server
+/// serves the baseline bit-identically.
+#[test]
+fn panic_storm_is_contained_and_workers_respawn() {
+    let _l = chaos_lock();
+    let cfg = ServeConfig { workers: 1, ..ServeConfig::default() };
+    let (server, dir) = start_server("panic", cfg, None);
+    let addr = server.local_addr();
+    let base = baseline(addr);
+
+    {
+        let _g = arm(FaultPlan { panic_shard_p: 1.0, ..FaultPlan::default() });
+        for i in 0..5 {
+            let (status, v) = post_predict(addr, &predict_body(&base[0].0));
+            assert_eq!(status, 500, "faulted request {i}: {v}");
+            assert_eq!(v.get("code").as_str(), Some("worker_panic"), "{v}");
+            assert!(
+                v.get("error").as_str().unwrap_or("").contains("injected fault"),
+                "{v}"
+            );
+        }
+    } // disarmed here
+
+    // the panic storm killed ≥ one worker; wait for the supervisor to
+    // bring readiness back before probing
+    let t0 = Instant::now();
+    loop {
+        let (status, _) = http::client::request(addr, "GET", "/readyz", None).unwrap();
+        if status == 200 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "server never became ready again");
+        thread::sleep(Duration::from_millis(20));
+    }
+    assert_matches_baseline(addr, &base, "after panic storm");
+
+    let m = metrics_json(addr);
+    assert!(m.get("worker_panics_total").as_usize().unwrap() >= 5, "{m}");
+    assert!(m.get("worker_restarts_total").as_usize().unwrap() >= 1, "{m}");
+
+    // the fault counters are on the Prometheus exposition too
+    let (status, prom) =
+        http::client::request(addr, "GET", "/metrics?format=prometheus", None).unwrap();
+    assert_eq!(status, 200);
+    for name in [
+        "flexor_worker_panics_total",
+        "flexor_worker_restarts_total",
+        "flexor_shed_total",
+        "flexor_deadline_expired_total",
+    ] {
+        assert!(prom.contains(name), "prometheus exposition missing {name}");
+    }
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `slow_layer`: forwards get slower but stay correct — bit-identical
+/// to the baseline while the fault fires.
+#[test]
+fn slow_layers_do_not_change_answers() {
+    let _l = chaos_lock();
+    let (server, dir) = start_server("slow", ServeConfig::default(), None);
+    let addr = server.local_addr();
+    let base = baseline(addr);
+
+    let _g = arm(FaultPlan { slow_layer_ms: 25, ..FaultPlan::default() });
+    assert_matches_baseline(addr, &base, "under slow_layer");
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `queue_stall` races deadlines: a request with a short `X-Deadline-Ms`
+/// is shed with a coded `503 deadline_exceeded` + `Retry-After` once the
+/// stall outlives it, while deadline-less traffic through the same stall
+/// still serves the baseline answer.
+#[test]
+fn queue_stall_sheds_deadlined_requests_only() {
+    let _l = chaos_lock();
+    let cfg = ServeConfig { workers: 1, ..ServeConfig::default() };
+    let (server, dir) = start_server("stall", cfg, None);
+    let addr = server.local_addr();
+    let base = baseline(addr);
+
+    let _g = arm(FaultPlan { queue_stall_ms: 120, ..FaultPlan::default() });
+    let (status, headers, resp) = http::client::request_with_headers(
+        addr,
+        "POST",
+        "/predict",
+        &[("X-Deadline-Ms", "20")],
+        Some(&predict_body(&base[0].0)),
+    )
+    .unwrap();
+    assert_eq!(status, 503, "{resp}");
+    let v = json::parse(&resp).unwrap();
+    assert_eq!(v.get("code").as_str(), Some("deadline_exceeded"), "{v}");
+    assert!(
+        headers.iter().any(|(k, _)| k == "retry-after"),
+        "shed response missing Retry-After: {headers:?}"
+    );
+
+    // no deadline → the stall is just latency
+    assert_matches_baseline(addr, &base, "under queue_stall without deadline");
+
+    let m = metrics_json(addr);
+    assert!(m.get("deadline_expired_total").as_usize().unwrap() >= 1, "{m}");
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `flip_word:1.0` on the Encrypted engine: the integrity re-hash sees a
+/// corrupted panel word, the forward panics into the worker's
+/// `catch_unwind`, and the client gets a coded `500 integrity` — never a
+/// silently wrong prediction. Disarmed, the same server serves the same
+/// bits as before.
+#[test]
+fn flipped_words_surface_as_integrity_errors_not_wrong_answers() {
+    let _l = chaos_lock();
+    let cfg = ServeConfig { workers: 1, ..ServeConfig::default() };
+    let (server, dir) = start_server("flip", cfg, Some(ComputeMode::encrypted()));
+    let addr = server.local_addr();
+    let base = baseline(addr);
+
+    {
+        let _g = arm(FaultPlan { flip_word_p: 1.0, ..FaultPlan::default() });
+        let (status, v) = post_predict(addr, &predict_body(&base[0].0));
+        assert_eq!(status, 500, "{v}");
+        assert_eq!(v.get("code").as_str(), Some("integrity"), "{v}");
+        assert!(v.get("error").as_str().unwrap_or("").contains("integrity"), "{v}");
+    }
+
+    // stored panels were never mutated — recovery is immediate
+    let t0 = Instant::now();
+    loop {
+        let (status, _) = http::client::request(addr, "GET", "/readyz", None).unwrap();
+        if status == 200 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "server never became ready again");
+        thread::sleep(Duration::from_millis(20));
+    }
+    assert_matches_baseline(addr, &base, "after flip_word disarm");
+
+    let m = metrics_json(addr);
+    assert!(m.get("worker_panics_total").as_usize().unwrap() >= 1, "{m}");
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A bundle corrupted on disk is rejected at load with a structured
+/// integrity error naming the damaged section — it never reaches the
+/// registry, so it can never be served.
+#[test]
+fn corrupted_bundle_is_rejected_at_load() {
+    let _l = chaos_lock();
+    let dir = bundle_dir("corrupt");
+    export_synthetic_mlp_bundle(&dir, "served", 7, D_IN, &[32, 24], 10).unwrap();
+    let path = dir.join("served.fxr");
+    let mut bytes = std::fs::read(&path).unwrap();
+    // flip a byte inside layer[0]'s body: past the 20-byte header, the
+    // meta json, and the layer's own 8-byte len+crc prefix — so the
+    // failure is deterministically a section-checksum mismatch, not a
+    // parse error on a damaged length field
+    let meta_len = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    let target = 20 + meta_len + 8 + 4;
+    bytes[target] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let mut registry = Registry::new();
+    let err = registry.load("served", &dir, "served").unwrap_err();
+    let chain = format!("{err:#}");
+    assert!(chain.contains("integrity"), "error does not name corruption: {chain}");
+    assert!(chain.contains("crc32"), "error does not name the checksum: {chain}");
+    assert!(chain.contains("served"), "error does not name the model: {chain}");
+    assert!(registry.is_empty(), "corrupt bundle must not register");
+
+    // and a server cannot start on the (empty) registry
+    assert!(Server::start("127.0.0.1:0", registry, ServeConfig::default()).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -6,13 +6,18 @@
 
 use std::net::SocketAddr;
 use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
 use std::thread;
+use std::time::{Duration, Instant};
 
 use flexor::coordinator::{export_synthetic_mlp_bundle, export_synthetic_resnet_bundle};
 use flexor::inference::InferenceModel;
-use flexor::serve::{http, Registry, ServeConfig, Server};
+use flexor::serve::{
+    http, BatchQueue, Registry, Request, ServeConfig, ServeMetrics, Server, WorkerPool,
+};
 use flexor::substrate::json::{self, Json};
 use flexor::substrate::prng::Pcg32;
+use flexor::substrate::trace::TraceMode;
 
 const D_IN: usize = 16;
 
@@ -244,6 +249,201 @@ fn malformed_requests_get_4xx_not_hangs() {
     assert_eq!(mj.get("errors_total").as_usize(), Some(0));
 
     server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Graceful drain: a request admitted *before* `begin_drain` completes
+/// normally (the queue keeps draining), late arrivals get a coded
+/// `503 draining`, `/readyz` flips to not-ready, and `/healthz` stays
+/// `200` (the process is alive, just not accepting work).
+#[test]
+fn drain_completes_inflight_and_rejects_late_arrivals() {
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 32,
+        max_wait_us: 300_000, // long linger: the in-flight request stays queued
+        ..ServeConfig::default()
+    };
+    let (server, dir) = start_server("drain", cfg);
+    let addr = server.local_addr();
+    let good: Vec<f32> = vec![0.5; D_IN];
+
+    // in-flight request: admitted now, served after the linger window
+    let body = predict_body("served", &good);
+    let inflight = thread::spawn(move || post_predict(addr, &body));
+    thread::sleep(Duration::from_millis(60));
+
+    server.begin_drain();
+    assert!(server.is_draining());
+
+    // late arrival → 503 with the stable "draining" code
+    let (status, v) = post_predict(addr, &predict_body("served", &good));
+    assert_eq!(status, 503, "{v}");
+    assert_eq!(v.get("code").as_str(), Some("draining"), "{v}");
+
+    // readiness flips; liveness does not
+    let (status, body) = http::client::request(addr, "GET", "/readyz", None).unwrap();
+    assert_eq!(status, 503);
+    let r = json::parse(&body).unwrap();
+    assert_eq!(r.get("ready").as_bool(), Some(false), "{r}");
+    assert_eq!(r.get("draining").as_bool(), Some(true), "{r}");
+    let (status, _) = http::client::request(addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+
+    // the pre-drain request still completes with a real prediction
+    let (status, v) = inflight.join().unwrap();
+    assert_eq!(status, 200, "in-flight request dropped during drain: {v}");
+    assert!(v.get("prediction").as_i64().is_some(), "{v}");
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Bodies over the configured bound get `413` + the stable
+/// `body_too_large` code without the server buffering them; right-sized
+/// traffic is unaffected.
+#[test]
+fn oversized_body_rejected_with_413() {
+    let cfg = ServeConfig { max_body_bytes: Some(256), ..ServeConfig::default() };
+    let (server, dir) = start_server("bodycap", cfg);
+    let addr = server.local_addr();
+
+    let huge = "x".repeat(300);
+    let (status, resp) =
+        http::client::request(addr, "POST", "/predict", Some(&huge)).unwrap();
+    assert_eq!(status, 413, "{resp}");
+    let v = json::parse(&resp).unwrap();
+    assert_eq!(v.get("code").as_str(), Some("body_too_large"), "{v}");
+    assert!(!v.get("request_id").as_str().unwrap_or("").is_empty(), "{v}");
+
+    // a normal-sized request on the same server still serves
+    let good: Vec<f32> = vec![0.5; D_IN];
+    let (status, _) = post_predict(addr, &predict_body("served", &good));
+    assert_eq!(status, 200);
+
+    let (_, m) = http::client::request(addr, "GET", "/metrics", None).unwrap();
+    let mj = json::parse(&m).unwrap();
+    assert_eq!(mj.get("rejected_total").as_usize(), Some(1));
+    assert_eq!(mj.get("requests_total").as_usize(), Some(1));
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Every 4xx body is structured — stable `code`, human `error`, and the
+/// client's `X-Request-Id` echoed back so failures correlate across
+/// client and server logs.
+#[test]
+fn error_bodies_are_structured_and_echo_request_id() {
+    let (server, dir) = start_server("errbody", ServeConfig::default());
+    let addr = server.local_addr();
+
+    let cases: &[(&str, u16, &str)] = &[
+        ("{not json", 400, "bad_request"),
+        (r#"{"model":"ghost","features":[1.0]}"#, 404, "unknown_model"),
+        (r#"{"model":"served"}"#, 400, "bad_request"),
+        (r#"{"model":"served","features":[1,"x"]}"#, 400, "bad_request"),
+    ];
+    for (i, (body, want_status, want_code)) in cases.iter().enumerate() {
+        let rid = format!("case-{i}.test");
+        let (status, headers, resp) = http::client::request_with_headers(
+            addr,
+            "POST",
+            "/predict",
+            &[("X-Request-Id", &rid)],
+            Some(body),
+        )
+        .unwrap();
+        assert_eq!(status, *want_status, "case {i}: {resp}");
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("code").as_str(), Some(*want_code), "case {i}: {v}");
+        assert!(!v.get("error").as_str().unwrap_or("").is_empty(), "case {i}: {v}");
+        assert_eq!(v.get("request_id").as_str(), Some(rid.as_str()), "case {i}: {v}");
+        let echoed = headers
+            .iter()
+            .find(|(k, _)| k == "x-request-id")
+            .map(|(_, v)| v.as_str());
+        assert_eq!(echoed, Some(rid.as_str()), "case {i}: header not echoed");
+    }
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Worker-level deadline semantics with a full queue: expired and live
+/// requests interleaved in one popped batch — the expired ones are shed
+/// with `deadline_exceeded` (no forward pass), the live ones are served,
+/// and the shed/served split lands in the metrics counters.
+#[test]
+fn worker_sheds_expired_requests_and_serves_the_rest() {
+    let dir = bundle_dir("expiry");
+    export_synthetic_mlp_bundle(&dir, "served", 7, D_IN, &[32, 24], 10).unwrap();
+    let mut registry = Registry::new();
+    let entry = registry.load("served", &dir, "served").unwrap();
+
+    let queue: Arc<BatchQueue<Request>> = Arc::new(BatchQueue::bounded(4));
+    let metrics = Arc::new(ServeMetrics::new());
+    let x: Vec<f32> = vec![0.5; D_IN];
+
+    // interleave expired / live / expired / live, then overflow
+    let now = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..4 {
+        let (tx, rx) = mpsc::channel();
+        let expired = i % 2 == 0;
+        queue
+            .try_push(Request {
+                entry: entry.clone(),
+                features: x.clone(),
+                respond: tx,
+                enqueued: now,
+                // `now` is already in the past by the time a worker pops
+                deadline: expired.then_some(now),
+            })
+            .map_err(|_| ())
+            .unwrap();
+        rxs.push((expired, rx));
+    }
+    let (tx, _rx) = mpsc::channel();
+    let overflow = Request {
+        entry: entry.clone(),
+        features: x.clone(),
+        respond: tx,
+        enqueued: Instant::now(),
+        deadline: None,
+    };
+    assert!(queue.try_push(overflow).is_err(), "queue should be full");
+
+    // tiny sleep so the pop timestamp is strictly past the deadlines
+    thread::sleep(Duration::from_millis(5));
+    let pool = WorkerPool::spawn(
+        1,
+        queue.clone(),
+        metrics.clone(),
+        8,
+        Duration::ZERO,
+        Some(TraceMode::Off),
+    );
+
+    for (i, (expired, rx)) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        if expired {
+            let e = resp.expect_err("expired request must not be served");
+            assert_eq!(e.code.label(), "deadline_exceeded", "request {i}: {e}");
+        } else {
+            let p = resp.unwrap_or_else(|e| panic!("request {i} failed: {e}"));
+            assert_eq!(p.model, "served");
+            assert_eq!(p.batch_size, 2, "only the two live requests share the forward");
+        }
+    }
+
+    let snap = metrics.snapshot(queue.len());
+    assert_eq!(snap.get("deadline_expired_total").as_usize(), Some(2), "{snap}");
+    assert_eq!(snap.get("requests_total").as_usize(), Some(2), "{snap}");
+    assert_eq!(snap.get("errors_total").as_usize(), Some(0), "{snap}");
+
+    queue.close();
+    pool.join();
     std::fs::remove_dir_all(&dir).ok();
 }
 
