@@ -96,7 +96,7 @@ fn main() -> Result<()> {
     //    Bit-plane layers stay packed bit-plane panels for their whole
     //    serving lifetime (DESIGN.md §8/§9); a mixed policy keeps small
     //    layers FP-exact.
-    let mut registry = Registry::with_default_policy(policy);
+    let registry = Registry::with_default_policy(policy);
     let entry = registry.load("served", dir, "served")?;
     println!(
         "loaded + decrypted in {:.1} ms  ({:.2} b/w, {:.1}× compression)",

@@ -11,10 +11,12 @@
 //! ```
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::thread;
+use std::time::{Duration, Instant};
 
 use flexor::coordinator::export_synthetic_mlp_bundle;
 use flexor::inference::InferenceModel;
+use flexor::repo::BundleRepo;
 use flexor::serve::{http, BatchQueue, Registry, ServeConfig, Server};
 use flexor::substrate::bench::{black_box, merge_bench_history, merge_bench_json, Bench, CaseMeta};
 use flexor::substrate::fault::{self, FaultPlan};
@@ -65,7 +67,7 @@ fn main() {
 
     // 3. end-to-end HTTP round-trip (single sequential client: the
     //    per-request floor; concurrency numbers live in the example)
-    let mut registry = Registry::new();
+    let registry = Registry::new();
     registry.load("bench", &dir, "bench").unwrap();
     let cfg = ServeConfig { max_wait_us: 0, ..ServeConfig::default() };
     let server = Server::start("127.0.0.1:0", registry, cfg).expect("server start");
@@ -108,7 +110,7 @@ fn main() {
     // 5. panic containment → recovery: one injected batch panic (coded
     //    500, caught by the worker's catch_unwind), then the first
     //    healthy answer on the same worker — the per-fault recovery cost
-    let mut registry = Registry::new();
+    let registry = Registry::new();
     registry.load("bench", &dir, "bench").unwrap();
     let cfg = ServeConfig { workers: 1, max_wait_us: 0, ..ServeConfig::default() };
     let server = Server::start("127.0.0.1:0", registry, cfg).expect("server start");
@@ -133,10 +135,71 @@ fn main() {
     fault::disarm();
     server.shutdown();
 
-    println!("\n{}", b.to_json().to_string_pretty());
-    merge_bench_json(std::path::Path::new("BENCH_infer.json"), "serve", b.to_json())
+    // 6. hot-swap under load: per-request p99 over a steady window vs a
+    //    window containing a `POST /models` drain-then-swap (DESIGN.md
+    //    §13) — the control plane's latency tax on in-flight traffic
+    let repo_root = dir.join("repo");
+    let repo = BundleRepo::init(&repo_root, b"bench-repo-key").expect("repo init");
+    repo.publish("bench", "v1", &dir, "bench").expect("publish v1");
+    repo.publish("bench", "v2", &dir, "bench").expect("publish v2");
+    let mut registry = Registry::new();
+    registry.set_repo(repo);
+    registry.admit_from_repo("bench@v1", false).expect("admit v1");
+    let cfg = ServeConfig { max_wait_us: 0, ..ServeConfig::default() };
+    let server = Server::start("127.0.0.1:0", registry, cfg).expect("server start");
+    let addr = server.local_addr();
+    let window = if quick { 100 } else { 400 };
+    let measure_window = |swap_at: Option<usize>| -> Vec<f64> {
+        let mut lat_ms = Vec::with_capacity(window);
+        let mut swapper: Option<thread::JoinHandle<()>> = None;
+        for i in 0..window {
+            if swap_at == Some(i) {
+                swapper = Some(thread::spawn(move || {
+                    let (status, resp) = http::client::request(
+                        addr,
+                        "POST",
+                        "/models",
+                        Some(r#"{"name":"bench@v2"}"#),
+                    )
+                    .unwrap();
+                    assert_eq!(status, 200, "swap failed: {resp}");
+                }));
+            }
+            let t0 = Instant::now();
+            let (status, resp) =
+                http::client::request(addr, "POST", "/predict", Some(&body)).unwrap();
+            assert_eq!(status, 200, "{resp}");
+            lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        if let Some(h) = swapper {
+            h.join().unwrap();
+        }
+        lat_ms
+    };
+    let p99 = |mut v: Vec<f64>| -> f64 {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[((v.len() as f64 * 0.99).ceil() as usize).clamp(1, v.len()) - 1]
+    };
+    let steady_p99_ms = p99(measure_window(None));
+    let swap_p99_ms = p99(measure_window(Some(window / 4)));
+    println!(
+        "hot-swap window: steady p99 {steady_p99_ms:.3} ms, swap-window p99 {swap_p99_ms:.3} ms"
+    );
+    server.shutdown();
+
+    let mut records = b.to_json().as_arr().unwrap_or_default().to_vec();
+    records.push(Json::obj(vec![
+        ("name", Json::str("http predict p99 across hot-swap")),
+        ("op", Json::str("swap_under_load")),
+        ("shape", Json::str(format!("{window}x1x{D_IN}"))),
+        ("steady_p99_ms", Json::num(steady_p99_ms)),
+        ("swap_under_load_p99_ms", Json::num(swap_p99_ms)),
+    ]));
+    let records = Json::Arr(records);
+    println!("\n{}", records.to_string_pretty());
+    merge_bench_json(std::path::Path::new("BENCH_infer.json"), "serve", records.clone())
         .expect("writing BENCH_infer.json");
-    merge_bench_history("serve", b.to_json()).expect("writing bench_history snapshot");
+    merge_bench_history("serve", records).expect("writing bench_history snapshot");
     println!("wrote BENCH_infer.json (source=serve, mirrored to bench_history/)");
     std::fs::remove_dir_all(&dir).ok();
 }

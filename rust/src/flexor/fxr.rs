@@ -212,6 +212,27 @@ impl Container {
         b
     }
 
+    /// Serialize in the legacy v1 layout: no per-section checksums, the
+    /// whole-payload CRC trailer only. Kept as a real writer (not just
+    /// test scaffolding) so compatibility fixtures — old-format bundles
+    /// pushed through the signed repo and the serving stack — can be
+    /// minted anywhere.
+    pub fn to_bytes_v1(&self) -> Vec<u8> {
+        let mut b: Vec<u8> = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
+        let meta = self.meta.to_string();
+        b.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        b.extend_from_slice(meta.as_bytes());
+        for l in &self.layers {
+            b.extend_from_slice(&layer_bytes(l));
+        }
+        let crc = crc32(&b[4..]);
+        b.extend_from_slice(&crc.to_le_bytes());
+        b
+    }
+
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         ensure!(bytes.len() >= 16, "truncated fxr");
         ensure!(&bytes[..4] == MAGIC, "bad magic");
@@ -610,25 +631,17 @@ mod tests {
     }
 
     /// v1 files (no per-section checksums, whole-payload trailer only)
-    /// must keep loading; mirror the old writer by hand.
+    /// must keep loading, via the legacy writer itself.
     #[test]
     fn v1_files_still_load() {
         let mut rng = Pcg32::seeded(9);
         let mut c = Container::new(Json::obj(vec![("model", Json::str("old"))]));
         c.push(sample_layer(&mut rng, "conv1", 2, 123)).unwrap();
 
-        let mut b: Vec<u8> = Vec::new();
-        b.extend_from_slice(MAGIC);
-        b.extend_from_slice(&1u32.to_le_bytes());
-        b.extend_from_slice(&(c.layers.len() as u32).to_le_bytes());
-        let meta = c.meta.to_string();
-        b.extend_from_slice(&(meta.len() as u32).to_le_bytes());
-        b.extend_from_slice(meta.as_bytes());
-        for l in &c.layers {
-            b.extend_from_slice(&layer_bytes(l));
-        }
-        let crc = crc32(&b[4..]);
-        b.extend_from_slice(&crc.to_le_bytes());
+        let b = c.to_bytes_v1();
+        // v1 payloads are strictly smaller: no meta crc, no per-layer
+        // len+crc prefixes
+        assert!(b.len() < c.to_bytes().len());
 
         let back = Container::from_bytes(&b).unwrap();
         assert_eq!(back.meta.get("model").as_str(), Some("old"));

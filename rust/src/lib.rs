@@ -57,6 +57,7 @@ pub mod coordinator;
 pub mod data;
 pub mod inference;
 pub mod serve;
+pub mod repo;
 pub mod config;
 
 /// Crate version (mirrors Cargo.toml).

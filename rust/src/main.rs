@@ -7,6 +7,9 @@
 //! flexor infer <bundle-dir> <stem>    load a bundle, run a smoke batch
 //! flexor profile <bundle-dir> <stem>  per-layer stage timing table
 //! flexor serve <bundle-dir> <stem>    host a bundle over HTTP until killed
+//! flexor synth <dir> <stem>           synthesize a quantized-MLP bundle
+//! flexor repo <init|publish|list|verify|fetch>
+//!                                     signed bundle repository (DESIGN.md §13)
 //! ```
 
 use std::path::Path;
@@ -32,7 +35,7 @@ fn run() -> Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
         println!("flexor {} — FleXOR trainable fractional quantization", flexor::VERSION);
-        println!("subcommands: list | train | analyze | infer | profile | serve  (--help per command)");
+        println!("subcommands: list | train | analyze | infer | profile | serve | synth | repo  (--help per command)");
         return Ok(());
     }
     let cmd = argv.remove(0);
@@ -43,8 +46,10 @@ fn run() -> Result<()> {
         "infer" => cmd_infer(argv),
         "profile" => cmd_profile(argv),
         "serve" => cmd_serve(argv),
+        "synth" => cmd_synth(argv),
+        "repo" => cmd_repo(argv),
         other => {
-            bail!("unknown subcommand '{other}' (try: list, train, analyze, infer, profile, serve)")
+            bail!("unknown subcommand '{other}' (try: list, train, analyze, infer, profile, serve, synth, repo)")
         }
     }
 }
@@ -237,6 +242,22 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         "policy: <mode>[@min=<weights>][,<idx>=<mode>]* with mode = dense | bitplane[:<m>] | encrypted[:<m>] (default: FLEXOR_COMPUTE env, else dense)",
         Some(""),
     )
+    .flag(
+        "repo",
+        "attach a signed bundle repo root — enables POST /models hot-swap and lazy reload (DESIGN.md §13)",
+        Some(""),
+    )
+    .flag("key", "repo signing key (default: FLEXOR_REPO_KEY env)", Some(""))
+    .flag(
+        "max-resident-bytes",
+        "LRU-evict repo-backed models beyond this resident-weight budget (0 = FLEXOR_MAX_RESIDENT_BYTES env, else unbounded)",
+        Some("0"),
+    )
+    .flag(
+        "preload",
+        "comma-separated name@version specs admitted from the repo before serving",
+        Some(""),
+    )
     .parse_from(argv)
     .map_err(|m| anyhow::anyhow!("{m}"))?;
 
@@ -260,6 +281,23 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     // a corrupt bundle is rejected here with the failing section named
     // (DESIGN.md §12) — the server never starts on bad weights
     let mut registry = Registry::with_default_policy(policy);
+    let budget = match a.get_usize("max-resident-bytes") {
+        0 => std::env::var("FLEXOR_MAX_RESIDENT_BYTES")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(0),
+        b => b,
+    };
+    if budget > 0 {
+        registry.set_resident_budget(Some(budget));
+    }
+    match a.get("repo") {
+        "" => {}
+        root => {
+            let repo = flexor::repo::BundleRepo::open(Path::new(root), &repo_key(&a)?)?;
+            registry.set_repo(repo);
+        }
+    }
     let entry = registry.load(
         a.get("name"),
         Path::new(a.pos(0).unwrap()),
@@ -270,6 +308,12 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         entry.name, entry.load_ms, entry.model.bits_per_weight,
         entry.model.compression_ratio, entry.model.mode_label()
     );
+    for spec in a.get("preload").split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let report = registry
+            .admit_from_repo(spec, false)
+            .map_err(|e| anyhow::anyhow!("preloading {spec}: {e}"))?;
+        println!("preloaded '{}' from repo in {:.1} ms", report.name, report.load_ms);
+    }
 
     let server = Server::start(a.get("addr"), registry, cfg)?;
     println!(
@@ -283,10 +327,160 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             None => "env/none".to_string(),
         }
     );
-    println!("endpoints: POST /predict | GET /models /metrics /healthz /readyz  (ctrl-c to stop)");
+    println!("endpoints: POST /predict | GET|POST /models | DELETE /models/<name> | GET /metrics /healthz /readyz  (ctrl-c to stop)");
     loop {
         std::thread::park();
     }
+}
+
+/// Resolve the repo signing key: `--key` flag, else `FLEXOR_REPO_KEY`.
+fn repo_key(a: &Args) -> Result<Vec<u8>> {
+    match a.get("key") {
+        "" => match std::env::var("FLEXOR_REPO_KEY") {
+            Ok(k) if !k.is_empty() => Ok(k.into_bytes()),
+            _ => bail!("no repo key: pass --key or set FLEXOR_REPO_KEY"),
+        },
+        k => Ok(k.as_bytes().to_vec()),
+    }
+}
+
+fn cmd_synth(argv: Vec<String>) -> Result<()> {
+    let a = Args::new(
+        "flexor synth",
+        "synthesize a quantized-MLP deployment bundle (seeded; no artifacts or runtime needed)",
+    )
+    .positional("dir", "output directory")
+    .positional("stem", "bundle stem (config name)")
+    .flag("seed", "rng seed", Some("7"))
+    .flag("d-in", "input feature width", Some("64"))
+    .flag("hidden", "comma-separated hidden widths", Some("32,24"))
+    .flag("classes", "output classes", Some("10"))
+    .parse_from(argv)
+    .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let hidden: Vec<usize> = a
+        .get("hidden")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().context("--hidden expects integers"))
+        .collect::<Result<_>>()?;
+    let dir = Path::new(a.pos(0).unwrap());
+    let stem = a.pos(1).unwrap();
+    std::fs::create_dir_all(dir)?;
+    flexor::coordinator::export_synthetic_mlp_bundle(
+        dir,
+        stem,
+        a.get_u64("seed"),
+        a.get_usize("d-in"),
+        &hidden,
+        a.get_usize("classes"),
+    )?;
+    println!("synthesized bundle {}/{stem}.*", dir.display());
+    Ok(())
+}
+
+fn cmd_repo(mut argv: Vec<String>) -> Result<()> {
+    use flexor::repo::{parse_spec, BundleRepo};
+
+    let usage = "usage: flexor repo <init|publish|list|verify|fetch> ... (--help per action)";
+    if argv.is_empty() {
+        bail!("{usage}");
+    }
+    let action = argv.remove(0);
+    match action.as_str() {
+        "init" => {
+            let a = Args::new("flexor repo init", "create an empty signed bundle repository")
+                .positional("root", "repository root directory")
+                .flag("key", "repo signing key (default: FLEXOR_REPO_KEY env)", Some(""))
+                .parse_from(argv)
+                .map_err(|m| anyhow::anyhow!("{m}"))?;
+            let root = Path::new(a.pos(0).unwrap());
+            BundleRepo::init(root, &repo_key(&a)?)?;
+            println!("initialized bundle repo at {}", root.display());
+        }
+        "publish" => {
+            let a = Args::new(
+                "flexor repo publish",
+                "hash, sign and copy a bundle triple into the repository",
+            )
+            .positional("root", "repository root directory")
+            .positional("spec", "bundle spec, name@version (e.g. resnet20@v2)")
+            .positional("src-dir", "directory holding <stem>.fxr/.fp.bin/.bundle.json")
+            .positional("stem", "bundle stem (config name)")
+            .flag("key", "repo signing key (default: FLEXOR_REPO_KEY env)", Some(""))
+            .parse_from(argv)
+            .map_err(|m| anyhow::anyhow!("{m}"))?;
+            let (name, version) = parse_spec(a.pos(1).unwrap())?;
+            let repo = BundleRepo::open(Path::new(a.pos(0).unwrap()), &repo_key(&a)?)?;
+            let rec = repo.publish(&name, &version, Path::new(a.pos(2).unwrap()), a.pos(3).unwrap())?;
+            let total: u64 = rec.files.iter().map(|f| f.bytes).sum();
+            println!(
+                "published {}@{} ({} files, {} bytes, sig {}…)",
+                rec.name,
+                rec.version,
+                rec.files.len(),
+                total,
+                &rec.signature[..16.min(rec.signature.len())]
+            );
+        }
+        "list" => {
+            let a = Args::new("flexor repo list", "list published bundles")
+                .positional("root", "repository root directory")
+                .flag("key", "repo signing key (default: FLEXOR_REPO_KEY env)", Some(""))
+                .parse_from(argv)
+                .map_err(|m| anyhow::anyhow!("{m}"))?;
+            let repo = BundleRepo::open(Path::new(a.pos(0).unwrap()), &repo_key(&a)?)?;
+            for r in repo.list()? {
+                let total: u64 = r.files.iter().map(|f| f.bytes).sum();
+                println!(
+                    "{:32} stem {:16} {:3} files {:>10} bytes",
+                    format!("{}@{}", r.name, r.version),
+                    r.stem,
+                    r.files.len(),
+                    total
+                );
+            }
+        }
+        "verify" => {
+            let a = Args::new(
+                "flexor repo verify",
+                "check a bundle's HMAC signature and per-file SHA-256 digests",
+            )
+            .positional("root", "repository root directory")
+            .positional("spec", "bundle spec, name@version")
+            .flag("key", "repo signing key (default: FLEXOR_REPO_KEY env)", Some(""))
+            .parse_from(argv)
+            .map_err(|m| anyhow::anyhow!("{m}"))?;
+            let (name, version) = parse_spec(a.pos(1).unwrap())?;
+            let repo = BundleRepo::open(Path::new(a.pos(0).unwrap()), &repo_key(&a)?)?;
+            let v = repo.verify(&name, &version)?;
+            println!(
+                "verified {name}@{version}: signature + {} file digests ok",
+                v.record.files.len()
+            );
+        }
+        "fetch" => {
+            let a = Args::new(
+                "flexor repo fetch",
+                "verify a bundle, then copy its files into a destination directory",
+            )
+            .positional("root", "repository root directory")
+            .positional("spec", "bundle spec, name@version")
+            .positional("dest", "destination directory")
+            .flag("key", "repo signing key (default: FLEXOR_REPO_KEY env)", Some(""))
+            .parse_from(argv)
+            .map_err(|m| anyhow::anyhow!("{m}"))?;
+            let (name, version) = parse_spec(a.pos(1).unwrap())?;
+            let dest = Path::new(a.pos(2).unwrap());
+            let repo = BundleRepo::open(Path::new(a.pos(0).unwrap()), &repo_key(&a)?)?;
+            let v = repo.fetch(&name, &version, dest)?;
+            println!(
+                "fetched {name}@{version} (stem {}) into {}",
+                v.stem,
+                dest.display()
+            );
+        }
+        other => bail!("unknown repo action '{other}'\n{usage}"),
+    }
+    Ok(())
 }
 
 fn cmd_profile(argv: Vec<String>) -> Result<()> {

@@ -1,0 +1,512 @@
+//! Signed on-disk bundle repository — the control plane's artifact store.
+//!
+//! FleXOR's deployable unit is the encrypted bundle triple
+//! (`<stem>.fxr` + `<stem>.fp.bin` + `<stem>.bundle.json`, DESIGN.md §4);
+//! at sub-1-bit-per-weight it is cheap enough to publish per model
+//! *version* and swap under live traffic. This module gives those
+//! bundles provenance on top of the fxr container's corruption checks:
+//!
+//! * a JSON `manifest.json` at the repo root lists every published
+//!   `name@version` with per-file SHA-256 digests and byte sizes;
+//! * each record carries an HMAC-SHA256 **signature** over a canonical
+//!   encoding of (name, version, stem, file digests), keyed by the repo
+//!   key (`FLEXOR_REPO_KEY` / `--key`);
+//! * [`BundleRepo::verify`] checks the signature **first**, then each
+//!   file's size and SHA-256 — all before the decryptor or the fxr
+//!   parser ever touches a byte. The PR 8 integrity chain ("did the
+//!   bytes rot?") extends to provenance ("are these the bytes the
+//!   publisher signed?").
+//!
+//! Storage layout: `<root>/<name>/<version>/<stem>.{fxr,fp.bin,bundle.json}`.
+//! Names and versions are restricted to `[A-Za-z0-9._-]` so a manifest
+//! entry can never escape the repo root.
+//!
+//! Everything is dependency-free `std` (DESIGN.md §5): SHA-256 and HMAC
+//! are vendored in [`sha`], like the CRC-32 in `flexor::fxr`.
+
+pub mod sha;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::substrate::json::{self, Json};
+
+/// Manifest schema version.
+pub const REPO_VERSION: u64 = 1;
+const MANIFEST: &str = "manifest.json";
+/// Domain-separation prefix of the canonical signing encoding.
+const SIGNING_CONTEXT: &str = "flexor-bundle-v1";
+
+/// One file of a published bundle: name, content digest, size.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FileRecord {
+    pub file: String,
+    pub sha256: String,
+    pub bytes: u64,
+}
+
+/// One published `name@version` with its signature.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BundleRecord {
+    pub name: String,
+    pub version: String,
+    pub stem: String,
+    pub files: Vec<FileRecord>,
+    /// HMAC-SHA256 (hex) over [`BundleRecord::signing_bytes`].
+    pub signature: String,
+}
+
+impl BundleRecord {
+    /// Canonical byte encoding the signature covers. Files are sorted by
+    /// name so the encoding is independent of manifest ordering.
+    pub fn signing_bytes(&self) -> Vec<u8> {
+        let mut files = self.files.clone();
+        files.sort_by(|a, b| a.file.cmp(&b.file));
+        let mut s = format!(
+            "{SIGNING_CONTEXT}\n{}\n{}\n{}\n",
+            self.name, self.version, self.stem
+        );
+        for f in &files {
+            s.push_str(&format!("{}:{}:{}\n", f.file, f.sha256, f.bytes));
+        }
+        s.into_bytes()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("version", Json::str(self.version.clone())),
+            ("stem", Json::str(self.stem.clone())),
+            (
+                "files",
+                Json::arr(self.files.iter().map(|f| {
+                    Json::obj(vec![
+                        ("file", Json::str(f.file.clone())),
+                        ("sha256", Json::str(f.sha256.clone())),
+                        ("bytes", Json::num(f.bytes as f64)),
+                    ])
+                })),
+            ),
+            ("signature", Json::str(self.signature.clone())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let field = |k: &str| {
+            j.get(k)
+                .as_str()
+                .map(str::to_string)
+                .with_context(|| format!("manifest bundle record missing '{k}'"))
+        };
+        let files = j
+            .get("files")
+            .as_arr()
+            .context("manifest bundle record missing 'files'")?
+            .iter()
+            .map(|f| {
+                Ok(FileRecord {
+                    file: f.get("file").as_str().context("file record missing 'file'")?.to_string(),
+                    sha256: f
+                        .get("sha256")
+                        .as_str()
+                        .context("file record missing 'sha256'")?
+                        .to_string(),
+                    bytes: f.get("bytes").as_f64().context("file record missing 'bytes'")? as u64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BundleRecord {
+            name: field("name")?,
+            version: field("version")?,
+            stem: field("stem")?,
+            files,
+            signature: field("signature")?,
+        })
+    }
+}
+
+/// A bundle that passed signature + digest verification: safe to hand to
+/// the fxr parser / registry loader.
+#[derive(Clone, Debug)]
+pub struct VerifiedBundle {
+    /// Directory holding the verified files (inside the repo store).
+    pub dir: PathBuf,
+    pub stem: String,
+    pub record: BundleRecord,
+}
+
+/// An on-disk signed bundle repository.
+#[derive(Clone, Debug)]
+pub struct BundleRepo {
+    root: PathBuf,
+    key: Vec<u8>,
+}
+
+/// Reject anything that could traverse out of the repo root; the same
+/// grammar request ids use, so names are also log- and URL-safe.
+pub fn validate_component(kind: &str, s: &str) -> Result<()> {
+    ensure!(!s.is_empty(), "{kind} must not be empty");
+    ensure!(s.len() <= 64, "{kind} '{s}' exceeds 64 chars");
+    ensure!(
+        s.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')),
+        "{kind} '{s}' has characters outside [A-Za-z0-9._-]"
+    );
+    ensure!(s != "." && s != "..", "{kind} '{s}' is reserved");
+    Ok(())
+}
+
+/// The three files a bundle triple consists of.
+fn bundle_files(stem: &str) -> [String; 3] {
+    [
+        format!("{stem}.fxr"),
+        format!("{stem}.fp.bin"),
+        format!("{stem}.bundle.json"),
+    ]
+}
+
+impl BundleRepo {
+    /// Create a fresh repo at `root` (fails if one already exists there).
+    pub fn init(root: &Path, key: &[u8]) -> Result<Self> {
+        ensure!(!key.is_empty(), "repo key must not be empty (FLEXOR_REPO_KEY / --key)");
+        let manifest = root.join(MANIFEST);
+        ensure!(
+            !manifest.exists(),
+            "repo already initialized at {} ({MANIFEST} exists)",
+            root.display()
+        );
+        std::fs::create_dir_all(root)
+            .with_context(|| format!("creating repo root {}", root.display()))?;
+        let repo = BundleRepo { root: root.to_path_buf(), key: key.to_vec() };
+        repo.write_manifest(&[])?;
+        Ok(repo)
+    }
+
+    /// Open an existing repo (its `manifest.json` must exist).
+    pub fn open(root: &Path, key: &[u8]) -> Result<Self> {
+        ensure!(!key.is_empty(), "repo key must not be empty (FLEXOR_REPO_KEY / --key)");
+        ensure!(
+            root.join(MANIFEST).exists(),
+            "no bundle repo at {} (missing {MANIFEST}; run `flexor repo init` first)",
+            root.display()
+        );
+        Ok(BundleRepo { root: root.to_path_buf(), key: key.to_vec() })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Where `name@version`'s files live inside the store.
+    pub fn bundle_dir(&self, name: &str, version: &str) -> PathBuf {
+        self.root.join(name).join(version)
+    }
+
+    /// All published records, manifest order.
+    pub fn list(&self) -> Result<Vec<BundleRecord>> {
+        self.read_manifest()
+    }
+
+    /// Copy `src_dir/<stem>.*` into the store, record per-file SHA-256,
+    /// sign the record, and update the manifest. Republishing the same
+    /// `name@version` replaces the record (and its files).
+    pub fn publish(
+        &self,
+        name: &str,
+        version: &str,
+        src_dir: &Path,
+        stem: &str,
+    ) -> Result<BundleRecord> {
+        validate_component("bundle name", name)?;
+        validate_component("bundle version", version)?;
+        validate_component("bundle stem", stem)?;
+        let mut files = Vec::new();
+        let mut contents = Vec::new();
+        for file in bundle_files(stem) {
+            let path = src_dir.join(&file);
+            let bytes = std::fs::read(&path).with_context(|| {
+                format!("reading bundle file {} for publish", path.display())
+            })?;
+            files.push(FileRecord {
+                file: file.clone(),
+                sha256: sha::hex(&sha::sha256(&bytes)),
+                bytes: bytes.len() as u64,
+            });
+            contents.push((file, bytes));
+        }
+        let mut record = BundleRecord {
+            name: name.to_string(),
+            version: version.to_string(),
+            stem: stem.to_string(),
+            files,
+            signature: String::new(),
+        };
+        record.signature = sha::hex(&sha::hmac_sha256(&self.key, &record.signing_bytes()));
+
+        // files land before the manifest points at them, so a crash
+        // between the two leaves no record of a half-published bundle
+        let dir = self.bundle_dir(name, version);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating bundle dir {}", dir.display()))?;
+        for (file, bytes) in &contents {
+            std::fs::write(dir.join(file), bytes)
+                .with_context(|| format!("writing {} into the repo store", file))?;
+        }
+        let mut records = self.read_manifest()?;
+        records.retain(|r| !(r.name == name && r.version == version));
+        records.push(record.clone());
+        self.write_manifest(&records)?;
+        Ok(record)
+    }
+
+    /// Verify `name@version`: HMAC signature over the manifest record
+    /// first (provenance), then each stored file's size and SHA-256
+    /// (content) — all **before** any parser touches the bytes. Errors
+    /// name the bundle so a `POST /models` 409 body is actionable.
+    pub fn verify(&self, name: &str, version: &str) -> Result<VerifiedBundle> {
+        validate_component("bundle name", name)?;
+        validate_component("bundle version", version)?;
+        let records = self.read_manifest()?;
+        let record = records
+            .into_iter()
+            .find(|r| r.name == name && r.version == version)
+            .with_context(|| format!("bundle {name}@{version} is not in the repo manifest"))?;
+        let expect = sha::hex(&sha::hmac_sha256(&self.key, &record.signing_bytes()));
+        ensure!(
+            sha::ct_eq(&expect, &record.signature),
+            "signature mismatch for bundle {name}@{version} — manifest record was not signed \
+             by this repo key; refusing to load"
+        );
+        let dir = self.bundle_dir(name, version);
+        for f in &record.files {
+            validate_component("bundle file", &f.file)?;
+            let path = dir.join(&f.file);
+            let bytes = std::fs::read(&path).with_context(|| {
+                format!("reading {} of bundle {name}@{version}", path.display())
+            })?;
+            ensure!(
+                bytes.len() as u64 == f.bytes,
+                "size mismatch for {} of bundle {name}@{version}: manifest says {} bytes, \
+                 store has {}",
+                f.file,
+                f.bytes,
+                bytes.len()
+            );
+            let got = sha::hex(&sha::sha256(&bytes));
+            ensure!(
+                sha::ct_eq(&got, &f.sha256),
+                "sha256 mismatch for {} of bundle {name}@{version} — stored bytes do not \
+                 match the signed digest; refusing to load",
+                f.file
+            );
+        }
+        Ok(VerifiedBundle { dir, stem: record.stem.clone(), record })
+    }
+
+    /// Verify, then copy the bundle triple into `dest`.
+    pub fn fetch(&self, name: &str, version: &str, dest: &Path) -> Result<VerifiedBundle> {
+        let v = self.verify(name, version)?;
+        std::fs::create_dir_all(dest)
+            .with_context(|| format!("creating fetch dest {}", dest.display()))?;
+        for f in &v.record.files {
+            std::fs::copy(v.dir.join(&f.file), dest.join(&f.file))
+                .with_context(|| format!("fetching {} to {}", f.file, dest.display()))?;
+        }
+        Ok(VerifiedBundle { dir: dest.to_path_buf(), stem: v.stem.clone(), record: v.record })
+    }
+
+    fn read_manifest(&self) -> Result<Vec<BundleRecord>> {
+        let path = self.root.join(MANIFEST);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = json::parse(&text).context("parsing repo manifest json")?;
+        let v = j.get("repo_version").as_f64().context("manifest missing repo_version")? as u64;
+        ensure!(v == REPO_VERSION, "unsupported repo_version {v} (this build reads {REPO_VERSION})");
+        j.get("bundles")
+            .as_arr()
+            .context("manifest missing 'bundles'")?
+            .iter()
+            .map(BundleRecord::from_json)
+            .collect()
+    }
+
+    fn write_manifest(&self, records: &[BundleRecord]) -> Result<()> {
+        let j = Json::obj(vec![
+            ("repo_version", Json::num(REPO_VERSION as f64)),
+            ("bundles", Json::arr(records.iter().map(|r| r.to_json()))),
+        ]);
+        let path = self.root.join(MANIFEST);
+        std::fs::write(&path, j.to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// Split a `name@version` spec; both halves must be present and valid.
+pub fn parse_spec(spec: &str) -> Result<(String, String)> {
+    match spec.split_once('@') {
+        Some((n, v)) => {
+            validate_component("bundle name", n)?;
+            validate_component("bundle version", v)?;
+            Ok((n.to_string(), v.to_string()))
+        }
+        None => bail!("bundle spec '{spec}' must be name@version (e.g. resnet20@v2)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_root(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("flexor_repo_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        p
+    }
+
+    /// The repo layer never parses bundle contents, so unit tests can
+    /// publish arbitrary bytes under the right file names; real-bundle
+    /// flows live in `rust/tests/control_plane.rs`.
+    fn fake_bundle(dir: &Path, stem: &str, seed: u8) {
+        std::fs::create_dir_all(dir).unwrap();
+        for (i, file) in bundle_files(stem).iter().enumerate() {
+            let body: Vec<u8> = (0..64u8).map(|b| b ^ seed ^ (i as u8)).collect();
+            std::fs::write(dir.join(file), body).unwrap();
+        }
+    }
+
+    #[test]
+    fn publish_verify_fetch_roundtrip() {
+        let root = temp_root("roundtrip");
+        let src = root.join("src");
+        fake_bundle(&src, "m", 1);
+        let repo = BundleRepo::init(&root.join("store"), b"secret").unwrap();
+        let rec = repo.publish("demo", "v1", &src, "m").unwrap();
+        assert_eq!(rec.files.len(), 3);
+        assert_eq!(rec.signature.len(), 64);
+        assert_eq!(repo.list().unwrap().len(), 1);
+
+        let v = repo.verify("demo", "v1").unwrap();
+        assert_eq!(v.stem, "m");
+        let dest = root.join("fetched");
+        let f = repo.fetch("demo", "v1", &dest).unwrap();
+        assert_eq!(f.dir, dest);
+        for file in bundle_files("m") {
+            assert_eq!(
+                std::fs::read(src.join(&file)).unwrap(),
+                std::fs::read(dest.join(&file)).unwrap()
+            );
+        }
+        // reopen with the same key: still verifies
+        let again = BundleRepo::open(repo.root(), b"secret").unwrap();
+        again.verify("demo", "v1").unwrap();
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn tampered_file_rejected_naming_bundle() {
+        let root = temp_root("tamper");
+        let src = root.join("src");
+        fake_bundle(&src, "m", 2);
+        let repo = BundleRepo::init(&root.join("store"), b"secret").unwrap();
+        repo.publish("demo", "v1", &src, "m").unwrap();
+        // flip one byte of the stored .fxr
+        let path = repo.bundle_dir("demo", "v1").join("m.fxr");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[10] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+        let err = repo.verify("demo", "v1").unwrap_err().to_string();
+        assert!(err.contains("sha256 mismatch"), "{err}");
+        assert!(err.contains("demo@v1"), "{err}");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn wrong_key_and_tampered_manifest_rejected() {
+        let root = temp_root("sig");
+        let src = root.join("src");
+        fake_bundle(&src, "m", 3);
+        let repo = BundleRepo::init(&root.join("store"), b"secret").unwrap();
+        repo.publish("demo", "v1", &src, "m").unwrap();
+
+        // wrong key: signature check fails before any file is hashed
+        let wrong = BundleRepo::open(repo.root(), b"not-the-key").unwrap();
+        let err = wrong.verify("demo", "v1").unwrap_err().to_string();
+        assert!(err.contains("signature mismatch"), "{err}");
+        assert!(err.contains("demo@v1"), "{err}");
+
+        // manifest edited after signing (size bumped): signature breaks
+        let mpath = repo.root().join(MANIFEST);
+        let text = std::fs::read_to_string(&mpath).unwrap().replace("64", "65");
+        std::fs::write(&mpath, text).unwrap();
+        let err = repo.verify("demo", "v1").unwrap_err().to_string();
+        assert!(err.contains("signature mismatch"), "{err}");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn republish_replaces_and_versions_coexist() {
+        let root = temp_root("versions");
+        let (s1, s2) = (root.join("s1"), root.join("s2"));
+        fake_bundle(&s1, "m", 4);
+        fake_bundle(&s2, "m", 5);
+        let repo = BundleRepo::init(&root.join("store"), b"k").unwrap();
+        repo.publish("demo", "v1", &s1, "m").unwrap();
+        repo.publish("demo", "v2", &s2, "m").unwrap();
+        assert_eq!(repo.list().unwrap().len(), 2);
+        // republish v1 from the v2 source: replaced, not duplicated
+        repo.publish("demo", "v1", &s2, "m").unwrap();
+        let list = repo.list().unwrap();
+        assert_eq!(list.len(), 2);
+        repo.verify("demo", "v1").unwrap();
+        repo.verify("demo", "v2").unwrap();
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn bad_names_and_specs_rejected() {
+        let root = temp_root("names");
+        let repo = BundleRepo::init(&root, b"k").unwrap();
+        assert!(repo.verify("../escape", "v1").is_err());
+        assert!(repo.verify("ok", "v/1").is_err());
+        assert!(repo.verify("", "v1").is_err());
+        assert!(parse_spec("noversion").is_err());
+        assert!(parse_spec("a@b@c").is_err());
+        assert!(parse_spec("a@..").is_err());
+        let (n, v) = parse_spec("resnet20@v2").unwrap();
+        assert_eq!((n.as_str(), v.as_str()), ("resnet20", "v2"));
+        assert!(BundleRepo::init(&root, b"k").is_err(), "double init must fail");
+        assert!(BundleRepo::open(&root.join("missing"), b"k").is_err());
+        assert!(BundleRepo::open(&root, b"").is_err(), "empty key must fail");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn missing_bundle_is_a_clear_error() {
+        let root = temp_root("missing");
+        let repo = BundleRepo::init(&root, b"k").unwrap();
+        let err = repo.verify("ghost", "v9").unwrap_err().to_string();
+        assert!(err.contains("ghost@v9"), "{err}");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn signing_bytes_are_order_independent() {
+        let mk = |order_swapped: bool| {
+            let mut files = vec![
+                FileRecord { file: "a.fxr".into(), sha256: "aa".into(), bytes: 1 },
+                FileRecord { file: "b.bin".into(), sha256: "bb".into(), bytes: 2 },
+            ];
+            if order_swapped {
+                files.reverse();
+            }
+            BundleRecord {
+                name: "n".into(),
+                version: "v".into(),
+                stem: "s".into(),
+                files,
+                signature: String::new(),
+            }
+        };
+        assert_eq!(mk(false).signing_bytes(), mk(true).signing_bytes());
+    }
+}

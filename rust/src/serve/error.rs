@@ -19,6 +19,11 @@ pub enum ErrorCode {
     NoRoute,
     /// 405 — route exists, method does not.
     MethodNotAllowed,
+    /// 409 — a model swap is already in progress for the alias.
+    SwapInProgress,
+    /// 409 — bundle failed signature/digest/parse checks; nothing was
+    /// registered.
+    BundleRejected,
     /// 413 — request body exceeds the configured byte bound.
     BodyTooLarge,
     /// 500 — forward pass returned an error.
@@ -44,6 +49,7 @@ impl ErrorCode {
             ErrorCode::BadRequest => 400,
             ErrorCode::UnknownModel | ErrorCode::NoRoute => 404,
             ErrorCode::MethodNotAllowed => 405,
+            ErrorCode::SwapInProgress | ErrorCode::BundleRejected => 409,
             ErrorCode::BodyTooLarge => 413,
             ErrorCode::Internal | ErrorCode::WorkerPanic | ErrorCode::Integrity => 500,
             ErrorCode::QueueFull | ErrorCode::Draining | ErrorCode::DeadlineExceeded => 503,
@@ -58,6 +64,8 @@ impl ErrorCode {
             ErrorCode::UnknownModel => "unknown_model",
             ErrorCode::NoRoute => "no_route",
             ErrorCode::MethodNotAllowed => "method_not_allowed",
+            ErrorCode::SwapInProgress => "swap_in_progress",
+            ErrorCode::BundleRejected => "bundle_rejected",
             ErrorCode::BodyTooLarge => "body_too_large",
             ErrorCode::Internal => "internal",
             ErrorCode::WorkerPanic => "worker_panic",
@@ -102,6 +110,8 @@ mod tests {
     fn codes_map_to_statuses() {
         assert_eq!(ErrorCode::BadRequest.status(), 400);
         assert_eq!(ErrorCode::UnknownModel.status(), 404);
+        assert_eq!(ErrorCode::SwapInProgress.status(), 409);
+        assert_eq!(ErrorCode::BundleRejected.status(), 409);
         assert_eq!(ErrorCode::BodyTooLarge.status(), 413);
         assert_eq!(ErrorCode::WorkerPanic.status(), 500);
         assert_eq!(ErrorCode::QueueFull.status(), 503);
@@ -115,6 +125,8 @@ mod tests {
         assert_eq!(ErrorCode::Draining.label(), "draining");
         assert_eq!(ErrorCode::QueueFull.label(), "queue_full");
         assert_eq!(ErrorCode::Integrity.label(), "integrity");
+        assert_eq!(ErrorCode::SwapInProgress.label(), "swap_in_progress");
+        assert_eq!(ErrorCode::BundleRejected.label(), "bundle_rejected");
         let e = ServeError::new(ErrorCode::Timeout, "inference timed out");
         assert_eq!(e.to_string(), "timeout: inference timed out");
         assert_eq!(e.status(), 504);

@@ -6,7 +6,18 @@
 //!   is admitted to the batching queue and the handler blocks on its
 //!   one-shot channel; reply `{"model", "prediction", "batch_size",
 //!   "latency_ms", "request_id"}`.
-//! * `GET /models`  — registry listing with storage stats.
+//! * `GET /models`  — registry listing with storage stats, alias/version
+//!   fields and swap/eviction totals.
+//! * `POST /models` — control plane (DESIGN.md §13): body
+//!   `{"name": "alias@version", "lazy": false}` verifies the bundle's
+//!   HMAC signature + per-file sha256 through the attached repo, loads
+//!   it, and repoints the alias (drain-then-swap: in-flight requests
+//!   finish on the old version). `409`/`bundle_rejected` on any
+//!   signature/digest/parse failure — nothing registers;
+//!   `409`/`swap_in_progress` while another swap owns the alias.
+//! * `DELETE /models/<name>` — drop an alias (or one `alias@version`
+//!   slot); in-flight requests drain on their `Arc`, memory frees when
+//!   the last reference drops. `409` while a swap is in progress.
 //! * `GET /metrics` — latency percentiles, queue depth, served-batch-size
 //!   histogram, throughput ([`ServeMetrics::snapshot`]); add
 //!   `?format=prometheus` for the text exposition
@@ -52,7 +63,7 @@ use anyhow::{Context, Result};
 use super::error::ErrorCode;
 use super::metrics::ServeMetrics;
 use super::queue::{BatchQueue, PushError};
-use super::registry::Registry;
+use super::registry::{ControlError, Registry};
 use super::worker::{Request, WorkerPool};
 use crate::inference::bitslice::popcount;
 use crate::substrate::json::{self, Json};
@@ -128,7 +139,12 @@ impl Server {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port), spawn the
     /// worker pool and the accept loop, and return immediately.
     pub fn start<A: ToSocketAddrs>(addr: A, registry: Registry, cfg: ServeConfig) -> Result<Server> {
-        anyhow::ensure!(!registry.is_empty(), "registry has no models to serve");
+        // an empty registry is fine when a bundle repo is attached: the
+        // control plane (`POST /models`) populates it at runtime
+        anyhow::ensure!(
+            !registry.is_empty() || registry.has_repo(),
+            "registry has no models to serve and no bundle repo to load from"
+        );
         anyhow::ensure!(cfg.workers > 0 && cfg.max_batch > 0 && cfg.queue_capacity > 0,
                         "serve config must be positive: {cfg:?}");
         // size the intra-op compute pool before the first forward builds
@@ -387,6 +403,7 @@ fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
                     CT_JSON,
                     Some(&rid),
                     None,
+                    None,
                     false,
                 )
                 .ok();
@@ -396,7 +413,7 @@ fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
         let rid = req.request_id.clone().unwrap_or_else(trace::next_request_id);
         let keep_alive = req.keep_alive && !ctx.shutdown.load(Ordering::SeqCst);
         let t0 = Instant::now();
-        let (status, body, ctype, retry_after) = route(&req, ctx, &rid);
+        let (status, body, ctype, retry_after, allow) = route(&req, ctx, &rid);
         let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
         let fields = |extra: &mut Vec<(&'static str, Json)>| {
             let mut f = vec![
@@ -418,8 +435,10 @@ fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
         } else {
             trace::log(Level::Debug, "request", &fields(&mut vec![]));
         }
-        if write_response(&mut writer, status, &body, ctype, Some(&rid), retry_after, keep_alive)
-            .is_err()
+        if write_response(
+            &mut writer, status, &body, ctype, Some(&rid), retry_after, allow, keep_alive,
+        )
+        .is_err()
             || !keep_alive
         {
             return;
@@ -521,24 +540,56 @@ fn read_request<R: BufRead>(
     Err(bad("too many header lines".to_string()))
 }
 
-/// Route one request: `(status, body, content-type, Retry-After secs)`.
-fn route(req: &HttpRequest, ctx: &ConnCtx, rid: &str) -> (u16, String, &'static str, Option<u32>) {
+/// Route one request:
+/// `(status, body, content-type, Retry-After secs, Allow header)`.
+///
+/// Known paths hit with the wrong method answer `405` with an `Allow`
+/// header naming the methods that would have worked; only genuinely
+/// unknown paths get `404`/`no_route`.
+fn route(
+    req: &HttpRequest,
+    ctx: &ConnCtx,
+    rid: &str,
+) -> (u16, String, &'static str, Option<u32>, Option<&'static str>) {
     let (path, query) = match req.path.split_once('?') {
         Some((p, q)) => (p, q),
         None => (req.path.as_str(), ""),
     };
-    let json4 = |(status, body, retry): (u16, String, Option<u32>)| (status, body, CT_JSON, retry);
-    match (req.method.as_str(), path) {
-        ("POST", "/predict") => json4(handle_predict(req, ctx, rid)),
-        ("GET", "/models") => (200, ctx.registry.to_json().to_string(), CT_JSON, None),
+    let method = req.method.as_str();
+    let json5 =
+        |(status, body, retry): (u16, String, Option<u32>)| (status, body, CT_JSON, retry, None);
+    let not_allowed = |allow: &'static str| {
+        (
+            405,
+            err_json(
+                ErrorCode::MethodNotAllowed,
+                &format!("method {} not allowed for {path} (allow: {allow})", req.method),
+                Some(rid),
+            ),
+            CT_JSON,
+            None,
+            Some(allow),
+        )
+    };
+    match (method, path) {
+        ("POST", "/predict") => json5(handle_predict(req, ctx, rid)),
+        (_, "/predict") => not_allowed("POST"),
+        ("GET", "/models") => (200, ctx.registry.to_json().to_string(), CT_JSON, None, None),
+        ("POST", "/models") => {
+            let (status, body) = handle_admit(req, ctx, rid);
+            (status, body, CT_JSON, None, None)
+        }
+        (_, "/models") => not_allowed("GET, POST"),
         ("GET", "/metrics") => {
             if query.split('&').any(|kv| kv == "format=prometheus") {
-                (200, prometheus_body(ctx), CT_PROM, None)
+                (200, prometheus_body(ctx), CT_PROM, None, None)
             } else {
-                (200, ctx.metrics.snapshot(ctx.queue.len()).to_string(), CT_JSON, None)
+                (200, ctx.metrics.snapshot(ctx.queue.len()).to_string(), CT_JSON, None, None)
             }
         }
-        ("GET", "/healthz") => (200, r#"{"status":"ok"}"#.to_string(), CT_JSON, None),
+        (_, "/metrics") => not_allowed("GET"),
+        ("GET", "/healthz") => (200, r#"{"status":"ok"}"#.to_string(), CT_JSON, None, None),
+        (_, "/healthz") => not_allowed("GET"),
         ("GET", "/readyz") => {
             // readiness: reachable AND able to make progress — not
             // draining, and at least one worker alive to drain the queue
@@ -551,30 +602,35 @@ fn route(req: &HttpRequest, ctx: &ConnCtx, rid: &str) -> (u16, String, &'static 
                 ("workers_alive", Json::num(alive as f64)),
             ])
             .to_string();
-            (if ready { 200 } else { 503 }, body, CT_JSON, None)
+            (if ready { 200 } else { 503 }, body, CT_JSON, None, None)
         }
-        ("GET", p) => {
-            if let Some(name) =
-                p.strip_prefix("/models/").and_then(|s| s.strip_suffix("/profile"))
-            {
-                let (status, body) = handle_profile(name, ctx, rid);
-                return (status, body, CT_JSON, None);
+        (_, "/readyz") => not_allowed("GET"),
+        (m, p) => {
+            if let Some(rest) = p.strip_prefix("/models/") {
+                if rest.is_empty() {
+                    // "/models/" names no model — fall through to 404
+                } else if let Some(name) = rest.strip_suffix("/profile") {
+                    if m == "GET" {
+                        let (status, body) = handle_profile(name, ctx, rid);
+                        return (status, body, CT_JSON, None, None);
+                    }
+                    return not_allowed("GET");
+                } else if !rest.contains('/') {
+                    if m == "DELETE" {
+                        let (status, body) = handle_delete(rest, ctx, rid);
+                        return (status, body, CT_JSON, None, None);
+                    }
+                    return not_allowed("DELETE");
+                }
             }
-            (404, err_json(ErrorCode::NoRoute, &format!("no route {p}"), Some(rid)), CT_JSON, None)
+            (
+                404,
+                err_json(ErrorCode::NoRoute, &format!("no route {p}"), Some(rid)),
+                CT_JSON,
+                None,
+                None,
+            )
         }
-        ("POST", p) => {
-            (404, err_json(ErrorCode::NoRoute, &format!("no route {p}"), Some(rid)), CT_JSON, None)
-        }
-        _ => (
-            405,
-            err_json(
-                ErrorCode::MethodNotAllowed,
-                &format!("method {} not allowed", req.method),
-                Some(rid),
-            ),
-            CT_JSON,
-            None,
-        ),
     }
 }
 
@@ -586,42 +642,52 @@ fn prometheus_body(ctx: &ConnCtx) -> String {
     // per-model engine + residency gauges off the registry: the mode
     // label each entry serves under and the storage it actually keeps
     // resident (sub-1-bit/weight on the Encrypted engine)
+    let resident = ctx.registry.resident_entries();
     out.push_str(
         "# HELP flexor_model_compute_mode Engine the model serves on (1 = this mode).\n\
          # TYPE flexor_model_compute_mode gauge\n",
     );
-    for name in ctx.registry.names() {
-        if let Some(e) = ctx.registry.get(name) {
-            out.push_str(&format!(
-                "flexor_model_compute_mode{{model=\"{name}\",mode=\"{}\"}} 1\n",
-                e.model.mode_label()
-            ));
-        }
+    for e in &resident {
+        out.push_str(&format!(
+            "flexor_model_compute_mode{{model=\"{}\",mode=\"{}\"}} 1\n",
+            e.name,
+            e.model.mode_label()
+        ));
     }
     out.push_str(
         "# HELP flexor_model_resident_bytes Resident weight bytes (quantized + FP residue).\n\
          # TYPE flexor_model_resident_bytes gauge\n",
     );
-    for name in ctx.registry.names() {
-        if let Some(e) = ctx.registry.get(name) {
-            out.push_str(&format!(
-                "flexor_model_resident_bytes{{model=\"{name}\"}} {}\n",
-                e.model.resident_bytes()
-            ));
-        }
+    for e in &resident {
+        out.push_str(&format!(
+            "flexor_model_resident_bytes{{model=\"{}\"}} {}\n",
+            e.name,
+            e.model.resident_bytes()
+        ));
     }
     out.push_str(
         "# HELP flexor_model_resident_bits_per_weight Resident bits per quantized weight under the active modes.\n\
          # TYPE flexor_model_resident_bits_per_weight gauge\n",
     );
-    for name in ctx.registry.names() {
-        if let Some(e) = ctx.registry.get(name) {
-            out.push_str(&format!(
-                "flexor_model_resident_bits_per_weight{{model=\"{name}\"}} {}\n",
-                e.model.resident_bits_per_weight()
-            ));
-        }
+    for e in &resident {
+        out.push_str(&format!(
+            "flexor_model_resident_bits_per_weight{{model=\"{}\"}} {}\n",
+            e.name,
+            e.model.resident_bits_per_weight()
+        ));
     }
+    out.push_str(&format!(
+        "# HELP flexor_model_swaps_total Alias repoints performed by the control plane.\n\
+         # TYPE flexor_model_swaps_total counter\n\
+         flexor_model_swaps_total {}\n",
+        ctx.registry.swaps_total()
+    ));
+    out.push_str(&format!(
+        "# HELP flexor_model_evictions_total Resident models evicted to stay under the byte budget.\n\
+         # TYPE flexor_model_evictions_total counter\n\
+         flexor_model_evictions_total {}\n",
+        ctx.registry.evictions_total()
+    ));
     let p = pool::global();
     let c = p.counters();
     out.push_str(&format!(
@@ -701,6 +767,117 @@ fn handle_profile(name: &str, ctx: &ConnCtx, rid: &str) -> (u16, String) {
     }
 }
 
+/// Map a control-plane failure onto the HTTP error contract. The
+/// acceptance-critical arm: any signature/digest/parse rejection is
+/// `409`/`bundle_rejected` — by the time the error reaches here the
+/// registry is guaranteed unchanged ([`Registry::admit_from_repo`]).
+fn control_error(e: &ControlError) -> (ErrorCode, String) {
+    match e {
+        ControlError::SwapInProgress(_) => (ErrorCode::SwapInProgress, e.to_string()),
+        ControlError::Rejected(_) => (ErrorCode::BundleRejected, e.to_string()),
+        ControlError::BadSpec(_) | ControlError::NoRepo => (ErrorCode::BadRequest, e.to_string()),
+        ControlError::Unknown(_) => (ErrorCode::UnknownModel, e.to_string()),
+    }
+}
+
+/// `POST /models`: verify + load `alias@version` from the attached
+/// bundle repo and repoint the alias (drain-then-swap, DESIGN.md §13).
+fn handle_admit(req: &HttpRequest, ctx: &ConnCtx, rid: &str) -> (u16, String) {
+    let parsed = match json::parse(&req.body) {
+        Ok(v) => v,
+        Err(e) => {
+            return (
+                400,
+                err_json(ErrorCode::BadRequest, &format!("bad json body: {e}"), Some(rid)),
+            )
+        }
+    };
+    let Some(spec) = parsed.get("name").as_str() else {
+        return (
+            400,
+            err_json(
+                ErrorCode::BadRequest,
+                "field 'name' must be a string like \"resnet20@v2\"",
+                Some(rid),
+            ),
+        );
+    };
+    let lazy = parsed.get("lazy").as_bool().unwrap_or(false);
+    match ctx.registry.admit_from_repo(spec, lazy) {
+        Ok(report) => {
+            trace::log(Level::Info, "model_admitted", &[
+                ("request_id", Json::str(rid)),
+                ("name", Json::str(report.name.clone())),
+                ("swapped_from", match &report.swapped_from {
+                    Some(f) => Json::str(f.clone()),
+                    None => Json::Null,
+                }),
+                ("lazy", Json::Bool(report.lazy)),
+            ]);
+            (
+                200,
+                Json::obj(vec![
+                    ("name", Json::str(report.name)),
+                    ("alias", Json::str(report.alias)),
+                    ("version", Json::str(report.version)),
+                    ("swapped_from", match report.swapped_from {
+                        Some(f) => Json::str(f),
+                        None => Json::Null,
+                    }),
+                    ("load_ms", Json::num(report.load_ms)),
+                    ("lazy", Json::Bool(report.lazy)),
+                    ("request_id", Json::str(rid)),
+                ])
+                .to_string(),
+            )
+        }
+        Err(e) => {
+            let (code, msg) = control_error(&e);
+            trace::log(Level::Warn, "model_admit_rejected", &[
+                ("request_id", Json::str(rid)),
+                ("spec", Json::str(spec)),
+                ("code", Json::str(code.label())),
+                ("error", Json::str(msg.clone())),
+            ]);
+            (code.status(), err_json(code, &msg, Some(rid)))
+        }
+    }
+}
+
+/// `DELETE /models/<name>`: drop an alias (all versions) or a single
+/// `alias@version` slot. In-flight requests hold their `Arc` and drain;
+/// memory frees when the last clone drops.
+fn handle_delete(name: &str, ctx: &ConnCtx, rid: &str) -> (u16, String) {
+    match ctx.registry.remove(name) {
+        Ok(removed) => {
+            trace::log(Level::Info, "model_deleted", &[
+                ("request_id", Json::str(rid)),
+                ("name", Json::str(name)),
+                ("removed_versions", Json::num(removed as f64)),
+            ]);
+            (
+                200,
+                Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("removed_versions", Json::num(removed as f64)),
+                    ("request_id", Json::str(rid)),
+                ])
+                .to_string(),
+            )
+        }
+        Err(e) => {
+            let (code, msg) = control_error(&e);
+            trace::log(Level::Warn, "model_delete_rejected", &[
+                ("request_id", Json::str(rid)),
+                ("name", Json::str(name)),
+                ("code", Json::str(code.label())),
+                ("error", Json::str(msg.clone())),
+            ]);
+            (code.status(), err_json(code, &msg, Some(rid)))
+        }
+    }
+}
+
 /// Seconds a shed client should wait before retrying: scale the current
 /// backlog by the observed mean latency, clamped to [1, 30].
 fn retry_after_hint(ctx: &ConnCtx) -> u32 {
@@ -737,31 +914,40 @@ fn handle_predict(req: &HttpRequest, ctx: &ConnCtx, rid: &str) -> (u16, String, 
         Ok(v) => v,
         Err(e) => return reject(ErrorCode::BadRequest, &format!("bad json body: {e}"), None),
     };
+    // resolution may lazily (re)load an evicted or lazily-admitted
+    // bundle from the repo — a load/verify failure there is a server
+    // fault, not a client error
     let entry = {
         let m = parsed.get("model");
         if m.is_null() {
-            match ctx.registry.sole() {
-                Some(e) => e,
-                None => {
+            match ctx.registry.resolve_sole() {
+                Ok(Some(e)) => e,
+                Ok(None) => {
                     return reject(
                         ErrorCode::BadRequest,
                         "field 'model' is required when multiple models are registered",
                         None,
                     )
                 }
+                Err(e) => {
+                    return reject(ErrorCode::Internal, &format!("model load failed: {e:#}"), None)
+                }
             }
         } else {
             let Some(name) = m.as_str() else {
                 return reject(ErrorCode::BadRequest, "field 'model' must be a string", None);
             };
-            match ctx.registry.get(name) {
-                Some(e) => e,
-                None => {
+            match ctx.registry.resolve(name) {
+                Ok(Some(e)) => e,
+                Ok(None) => {
                     return reject(
                         ErrorCode::UnknownModel,
                         &format!("unknown model '{name}'"),
                         None,
                     )
+                }
+                Err(e) => {
+                    return reject(ErrorCode::Internal, &format!("model load failed: {e:#}"), None)
                 }
             }
         }
@@ -849,6 +1035,7 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        409 => "Conflict",
         413 => "Payload Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
@@ -857,6 +1044,7 @@ fn reason(status: u16) -> &'static str {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn write_response<W: Write>(
     w: &mut W,
     status: u16,
@@ -864,6 +1052,7 @@ fn write_response<W: Write>(
     content_type: &str,
     request_id: Option<&str>,
     retry_after: Option<u32>,
+    allow: Option<&'static str>,
     keep_alive: bool,
 ) -> std::io::Result<()> {
     // one write_all per response: formatting straight into a NODELAY
@@ -874,14 +1063,18 @@ fn write_response<W: Write>(
     let retry_header = retry_after
         .map(|s| format!("Retry-After: {s}\r\n"))
         .unwrap_or_default();
+    let allow_header = allow
+        .map(|a| format!("Allow: {a}\r\n"))
+        .unwrap_or_default();
     let msg = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{}{}Connection: {}\r\n\r\n{}",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{}{}{}Connection: {}\r\n\r\n{}",
         status,
         reason(status),
         content_type,
         body.len(),
         rid_header,
         retry_header,
+        allow_header,
         if keep_alive { "keep-alive" } else { "close" },
         body
     );
@@ -1054,7 +1247,7 @@ mod tests {
     #[test]
     fn response_wire_format() {
         let mut out = Vec::new();
-        write_response(&mut out, 404, r#"{"error":"x"}"#, CT_JSON, Some("rid-1"), None, false)
+        write_response(&mut out, 404, r#"{"error":"x"}"#, CT_JSON, Some("rid-1"), None, None, false)
             .unwrap();
         let s = String::from_utf8(out).unwrap();
         assert!(s.starts_with("HTTP/1.1 404 Not Found\r\n"));
@@ -1062,6 +1255,7 @@ mod tests {
         assert!(s.contains("Content-Length: 13\r\n"));
         assert!(s.contains("X-Request-Id: rid-1\r\n"));
         assert!(!s.contains("Retry-After"));
+        assert!(!s.contains("Allow:"));
         assert!(s.contains("Connection: close\r\n"));
         assert!(s.ends_with(r#"{"error":"x"}"#));
     }
@@ -1069,10 +1263,25 @@ mod tests {
     #[test]
     fn retry_after_header_emitted_on_shed() {
         let mut out = Vec::new();
-        write_response(&mut out, 503, "{}", CT_JSON, Some("r"), Some(7), false).unwrap();
+        write_response(&mut out, 503, "{}", CT_JSON, Some("r"), Some(7), None, false).unwrap();
         let s = String::from_utf8(out).unwrap();
         assert!(s.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
         assert!(s.contains("Retry-After: 7\r\n"));
+    }
+
+    #[test]
+    fn allow_header_emitted_on_405() {
+        let mut out = Vec::new();
+        write_response(&mut out, 405, "{}", CT_JSON, Some("r"), None, Some("GET, POST"), false)
+            .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 405 Method Not Allowed\r\n"));
+        assert!(s.contains("Allow: GET, POST\r\n"));
+    }
+
+    #[test]
+    fn conflict_reason_phrase() {
+        assert_eq!(reason(409), "Conflict");
     }
 
     #[test]

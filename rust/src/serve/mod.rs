@@ -17,7 +17,12 @@
 //! * [`registry`] — named `.fxr` bundle hosting, decrypt-once-at-load,
 //!   per-model compute mode (DenseF32 packed-FP engine or BitPlane
 //!   XNOR/popcount engine — DESIGN.md §8), per-model storage stats and
-//!   resident-bytes accounting, `unload` to release memory;
+//!   resident-bytes accounting, `unload` to release memory. Names are
+//!   versioned aliases (`resnet20@v2`; the bare alias resolves the
+//!   serving version), swapped atomically by the control plane
+//!   (drain-then-swap on `Arc`s, DESIGN.md §13) with lazy
+//!   load-on-first-request and LRU eviction under a
+//!   `FLEXOR_MAX_RESIDENT_BYTES` budget;
 //! * [`queue`]    — bounded admission + micro-batch coalescing
 //!   (`max_batch` / `max_wait_us`) on `std::sync::{Mutex, Condvar}`;
 //! * [`worker`]   — thread pool draining the queue, one forward pass per
@@ -26,11 +31,11 @@
 //! * [`metrics`]  — latency percentiles (global + per model), batch-size
 //!   histogram, queue depth/wait and batch-assembly timing, JSON and
 //!   Prometheus text exposition;
-//! * [`http`]     — HTTP/1.1 front-end (`/predict`, `/models`,
-//!   `/metrics` — `?format=prometheus` for the text exposition,
-//!   `/models/<name>/profile`, `/healthz` liveness, `/readyz`
-//!   readiness), `X-Request-Id` generation/echo, structured request
-//!   logging, plus a one-shot client for tests/benches;
+//! * [`http`]     — HTTP/1.1 front-end (`/predict`, `GET|POST /models`,
+//!   `DELETE /models/<name>`, `/metrics` — `?format=prometheus` for the
+//!   text exposition, `/models/<name>/profile`, `/healthz` liveness,
+//!   `/readyz` readiness), `X-Request-Id` generation/echo, structured
+//!   request logging, plus a one-shot client for tests/benches;
 //! * [`error`]    — the stable error-code vocabulary every non-2xx body
 //!   carries (`code` field), shared between workers and the HTTP layer.
 //!
@@ -60,5 +65,5 @@ pub use error::{ErrorCode, ServeError};
 pub use http::{ServeConfig, Server};
 pub use metrics::ServeMetrics;
 pub use queue::{BatchQueue, PushError};
-pub use registry::{ModelEntry, Registry};
+pub use registry::{ControlError, ModelEntry, Registry, SwapReport};
 pub use worker::{Prediction, Request, Response, WorkerPool};

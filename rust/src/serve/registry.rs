@@ -1,35 +1,63 @@
-//! Model registry: named, decrypt-once-at-load model hosting.
+//! Model registry: versioned, decrypt-once-at-load model hosting with
+//! drain-then-swap semantics.
 //!
 //! The paper's deployment story (Fig. 1, Algorithm 1) pays the XOR
 //! decryption cost **once**, when the encrypted `.fxr` bundle is loaded;
 //! after that the resident weights serve every request. The registry
-//! owns that step for any number of bundles, keyed by name, each on its
-//! own [`ModePolicy`] — a single server mixes FP-exact DenseF32 models,
-//! high-density BitPlane models, sub-1-bit Encrypted models (which skip
-//! the decrypt-at-load step entirely and decrypt panels inside the GEMM
-//! tile loop), and per-layer mixed-mode entries (big convs on
-//! XNOR/popcount, tiny layers FP-exact). `GET /models` reports
-//! per-model storage stats (`bits/weight`, compression ratio), the
-//! resident bytes each entry actually keeps under its modes (quantized
-//! vs FP residue, plus `resident_bits_per_weight` — sub-1.0 on the
-//! Encrypted engine), and the per-layer `layer_modes` assignment;
-//! [`Registry::unload`] releases a model's memory.
+//! owns that step for any number of bundles, keyed by **versioned
+//! alias** (`resnet20@v2`; the bare alias resolves the latest version),
+//! each on its own [`ModePolicy`].
+//!
+//! Control plane (DESIGN.md §13):
+//! * **Swap**: [`Registry::admit_from_repo`] verifies a bundle's HMAC
+//!   signature and per-file SHA-256 through the attached
+//!   [`BundleRepo`] *before* the fxr parser touches a byte, loads it,
+//!   and atomically repoints the alias. In-flight requests hold an
+//!   `Arc<ModelEntry>` resolved at admission, so they finish on the old
+//!   version while new admissions route to the new one — drain-then-swap
+//!   for free. A rejected bundle (bad signature, bad digest, parse
+//!   failure) registers **nothing**.
+//! * **Lazy load**: a slot admitted with `lazy` (or evicted) keeps only
+//!   its source; the first [`Registry::resolve`] re-verifies and reloads.
+//! * **LRU eviction**: when total [`resident_bytes`] exceed the budget
+//!   (`FLEXOR_MAX_RESIDENT_BYTES` / [`Registry::set_resident_budget`]),
+//!   the least-recently-used reloadable slot drops its weights; the slot
+//!   stays registered and reloads bit-identically on next use.
+//!
+//! `GET /models` reports per-version storage stats (`bits/weight`,
+//! compression ratio, resident bytes under the active modes, per-layer
+//! `layer_modes`) plus `alias`/`version`/`serving`/`resident` fields and
+//! the swap/eviction totals; [`Registry::unload`] releases memory
+//! in-process, `DELETE /models/<name>` does it over HTTP.
+//!
+//! [`resident_bytes`]: crate::inference::InferenceModel::resident_bytes
 
 use std::collections::BTreeMap;
-use std::path::Path;
-use std::sync::Arc;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
-use anyhow::{Context, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::inference::{ComputeMode, InferenceModel, ModePolicy};
+use crate::repo::BundleRepo;
 use crate::substrate::json::Json;
-use crate::substrate::trace;
+use crate::substrate::trace::{self, Level};
 
-/// One hosted model plus its serving metadata.
+/// Version assumed when a model is registered or addressed without `@`.
+pub const IMPLICIT_VERSION: &str = "v1";
+
+/// One hosted model version plus its serving metadata.
 pub struct ModelEntry {
-    /// Registry key (what requests address the model by).
+    /// Full registered name, exactly as passed to `load`/`register`/
+    /// admitted from the repo (`"alpha"`, `"resnet20@v2"`) — the
+    /// per-model metrics label and the `model` field of predict bodies.
     pub name: String,
+    /// Alias half of the name (`"resnet20"` for `"resnet20@v2"`).
+    pub alias: String,
+    /// Version half (`"v2"`; [`IMPLICIT_VERSION`] when unversioned).
+    pub version: String,
     pub model: InferenceModel,
     /// Flat features per example (`input_dims` product) — requests in a
     /// coalesced batch must all match this.
@@ -42,13 +70,121 @@ pub struct ModelEntry {
     pub profile: Arc<trace::Profile>,
 }
 
-/// Name → model map shared between the HTTP front-end and the workers.
+/// Where a slot's bundle came from — enough to reload it after eviction
+/// or a lazy admit, re-verified through the repo when it came from one.
+#[derive(Clone)]
+struct Source {
+    dir: PathBuf,
+    stem: String,
+    policy: ModePolicy,
+    /// `(repo bundle name, version)` re-verified (signature + sha256)
+    /// before every (re)load when the slot was admitted from the repo.
+    verify: Option<(String, String)>,
+}
+
+/// One version slot under an alias.
+struct Slot {
+    /// Full registered name (what reloads resurrect the entry as).
+    name: String,
+    /// `None` while lazy/evicted; the weights live only here.
+    resident: Option<Arc<ModelEntry>>,
+    source: Option<Source>,
+    last_used: u64,
+    installed: u64,
+}
+
+/// A named model with one or more version slots.
+struct Alias {
+    versions: BTreeMap<String, Slot>,
+    /// Version the bare alias resolves to (most recently installed).
+    latest: String,
+    /// A `POST /models` swap is mid-flight: concurrent swaps/removals
+    /// answer 409 instead of interleaving.
+    swapping: bool,
+}
+
+struct Inner {
+    aliases: BTreeMap<String, Alias>,
+    /// LRU clock: bumped on every resolve/install, stamped into
+    /// `Slot::last_used`.
+    clock: u64,
+}
+
+/// Control-plane failures with distinct HTTP mappings (the `POST
+/// /models` / `DELETE /models/<name>` contract).
+#[derive(Debug)]
+pub enum ControlError {
+    /// 409 `swap_in_progress` — another swap owns the alias right now.
+    SwapInProgress(String),
+    /// 409 `bundle_rejected` — signature/digest/parse failure; nothing
+    /// was registered.
+    Rejected(String),
+    /// 400 — malformed `name@version` spec.
+    BadSpec(String),
+    /// 400 — no bundle repo attached to the registry.
+    NoRepo,
+    /// 404 — alias/version not registered.
+    Unknown(String),
+}
+
+impl std::fmt::Display for ControlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ControlError::SwapInProgress(n) => {
+                write!(f, "a swap is already in progress for '{n}'")
+            }
+            ControlError::Rejected(msg) => write!(f, "bundle rejected: {msg}"),
+            ControlError::BadSpec(msg) => write!(f, "{msg}"),
+            ControlError::NoRepo => write!(
+                f,
+                "no bundle repo attached (serve with --repo / Registry::set_repo)"
+            ),
+            ControlError::Unknown(n) => write!(f, "model '{n}' is not registered"),
+        }
+    }
+}
+
+impl std::error::Error for ControlError {}
+
+/// What a successful [`Registry::admit_from_repo`] did.
+#[derive(Clone, Debug)]
+pub struct SwapReport {
+    /// Full name of the admitted version (`alias@version`).
+    pub name: String,
+    pub alias: String,
+    pub version: String,
+    /// Full name the alias served before this admit, when it changed.
+    pub swapped_from: Option<String>,
+    /// Load + decrypt wall time (0 for lazy admits).
+    pub load_ms: f64,
+    pub lazy: bool,
+}
+
+/// Alias → versions map shared between the HTTP front-end and the
+/// workers. Interior-mutable: every method takes `&self`, so the
+/// control plane mutates the registry behind the same `Arc` the serving
+/// path reads.
 pub struct Registry {
-    models: BTreeMap<String, Arc<ModelEntry>>,
+    inner: Mutex<Inner>,
     /// Policy [`Registry::load`] puts new entries on (per-call overrides
     /// go through [`Registry::load_with_mode`] /
     /// [`Registry::load_with_policy`]).
     default_policy: ModePolicy,
+    /// Signed bundle store `admit_from_repo` verifies against.
+    repo: Option<BundleRepo>,
+    /// Total resident-bytes budget LRU eviction enforces (`None` = no
+    /// bound). Seeded from `FLEXOR_MAX_RESIDENT_BYTES` at construction.
+    max_resident_bytes: Option<usize>,
+    swaps: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// `"resnet20@v2"` → `("resnet20", Some("v2"))`; `"alpha"` → `("alpha", None)`.
+fn split_name(name: &str) -> (&str, Option<&str>) {
+    match name.split_once('@') {
+        Some((a, v)) => (a, Some(v)),
+        None => (name, None),
+    }
 }
 
 impl Registry {
@@ -67,7 +203,18 @@ impl Registry {
     /// builds the registry it hands to `Server::start` (see
     /// `examples/serve.rs`).
     pub fn with_default_policy(policy: ModePolicy) -> Self {
-        Registry { models: BTreeMap::new(), default_policy: policy }
+        let max_resident_bytes = std::env::var("FLEXOR_MAX_RESIDENT_BYTES")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&b| b > 0);
+        Registry {
+            inner: Mutex::new(Inner { aliases: BTreeMap::new(), clock: 0 }),
+            default_policy: policy,
+            repo: None,
+            max_resident_bytes,
+            swaps: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
     }
 
     /// The base engine of the registry's default policy.
@@ -80,9 +227,63 @@ impl Registry {
         &self.default_policy
     }
 
-    /// Load `<stem>.fxr` + sidecars from `dir` and register as `name` on
-    /// the registry's default policy, timing the decrypt-at-load step.
-    pub fn load(&mut self, name: &str, dir: &Path, stem: &str) -> Result<Arc<ModelEntry>> {
+    /// Attach the signed bundle repo `admit_from_repo` loads from.
+    pub fn set_repo(&mut self, repo: BundleRepo) {
+        self.repo = Some(repo);
+    }
+
+    pub fn has_repo(&self) -> bool {
+        self.repo.is_some()
+    }
+
+    /// Override the resident-bytes budget (`None` = unbounded). Eviction
+    /// runs at the next install/reload, not retroactively here.
+    pub fn set_resident_budget(&mut self, bytes: Option<usize>) {
+        self.max_resident_bytes = bytes.filter(|&b| b > 0);
+    }
+
+    pub fn resident_budget(&self) -> Option<usize> {
+        self.max_resident_bytes
+    }
+
+    pub fn swaps_total(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions_total(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        // a panic while holding the registry lock must not wedge the
+        // whole control plane; the state transitions are all small and
+        // self-consistent, so recover the guard
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn make_entry(
+        name: &str,
+        alias: &str,
+        version: &str,
+        model: InferenceModel,
+        load_ms: f64,
+    ) -> Arc<ModelEntry> {
+        let feature_len = model.input_dims.iter().product::<usize>().max(1);
+        Arc::new(ModelEntry {
+            name: name.to_string(),
+            alias: alias.to_string(),
+            version: version.to_string(),
+            model,
+            feature_len,
+            load_ms,
+            profile: Arc::new(trace::Profile::default()),
+        })
+    }
+
+    /// Load `<stem>.fxr` + sidecars from `dir` and register as `name`
+    /// (`alias[@version]`) on the registry's default policy, timing the
+    /// decrypt-at-load step.
+    pub fn load(&self, name: &str, dir: &Path, stem: &str) -> Result<Arc<ModelEntry>> {
         self.load_with_policy(name, dir, stem, self.default_policy.clone())
     }
 
@@ -90,7 +291,7 @@ impl Registry {
     /// entries keep their quantized layers as packed bit-planes — see
     /// `inference::bitslice`).
     pub fn load_with_mode(
-        &mut self,
+        &self,
         name: &str,
         dir: &Path,
         stem: &str,
@@ -101,17 +302,18 @@ impl Registry {
 
     /// Load and register under a per-layer compute policy (mixed
     /// entries run big layers on XNOR/popcount and small ones FP-exact;
-    /// `GET /models` reports the per-layer assignment).
+    /// `GET /models` reports the per-layer assignment). The source is
+    /// remembered, so the entry is evictable and lazily reloadable.
     pub fn load_with_policy(
-        &mut self,
+        &self,
         name: &str,
         dir: &Path,
         stem: &str,
         policy: ModePolicy,
     ) -> Result<Arc<ModelEntry>> {
-        ensure!(!self.models.contains_key(name), "model '{name}' already registered");
+        self.ensure_unregistered(name)?;
         let t0 = Instant::now();
-        let model = InferenceModel::load_with_policy(dir, stem, policy)
+        let model = InferenceModel::load_with_policy(dir, stem, policy.clone())
             .with_context(|| {
                 format!(
                     "loading model '{name}' from {} (stem '{stem}') — bundle \
@@ -120,107 +322,549 @@ impl Registry {
                 )
             })?;
         let load_ms = t0.elapsed().as_secs_f64() * 1e3;
-        self.register(name, model, load_ms)
+        let source = Source {
+            dir: dir.to_path_buf(),
+            stem: stem.to_string(),
+            policy,
+            verify: None,
+        };
+        self.install(name, model, load_ms, Some(source))
     }
 
-    /// Register an already-loaded model (tests, warm handoff).
+    /// Register an already-loaded model (tests, warm handoff). No source
+    /// is remembered, so the entry is never evicted.
     pub fn register(
-        &mut self,
+        &self,
         name: &str,
         model: InferenceModel,
         load_ms: f64,
     ) -> Result<Arc<ModelEntry>> {
+        self.install(name, model, load_ms, None)
+    }
+
+    fn ensure_unregistered(&self, name: &str) -> Result<()> {
         ensure!(!name.is_empty(), "empty model name");
-        ensure!(!self.models.contains_key(name), "model '{name}' already registered");
-        let feature_len = model.input_dims.iter().product::<usize>().max(1);
-        let entry = Arc::new(ModelEntry {
-            name: name.to_string(),
-            model,
-            feature_len,
-            load_ms,
-            profile: Arc::new(trace::Profile::default()),
+        let (alias, ver) = split_name(name);
+        ensure!(!alias.is_empty(), "empty model alias in '{name}'");
+        let version = ver.unwrap_or(IMPLICIT_VERSION);
+        ensure!(!version.is_empty(), "empty version in '{name}'");
+        let inner = self.lock();
+        if let Some(a) = inner.aliases.get(alias) {
+            ensure!(
+                !a.versions.contains_key(version),
+                "model '{name}' already registered"
+            );
+        }
+        Ok(())
+    }
+
+    fn install(
+        &self,
+        name: &str,
+        model: InferenceModel,
+        load_ms: f64,
+        source: Option<Source>,
+    ) -> Result<Arc<ModelEntry>> {
+        self.ensure_unregistered(name)?;
+        let (alias, ver) = split_name(name);
+        let version = ver.unwrap_or(IMPLICIT_VERSION);
+        let entry = Self::make_entry(name, alias, version, model, load_ms);
+        let mut inner = self.lock();
+        inner.clock += 1;
+        let tick = inner.clock;
+        let a = inner.aliases.entry(alias.to_string()).or_insert_with(|| Alias {
+            versions: BTreeMap::new(),
+            latest: String::new(),
+            swapping: false,
         });
-        self.models.insert(name.to_string(), entry.clone());
+        ensure!(
+            !a.versions.contains_key(version),
+            "model '{name}' already registered"
+        );
+        a.versions.insert(
+            version.to_string(),
+            Slot {
+                name: name.to_string(),
+                resident: Some(entry.clone()),
+                source,
+                last_used: tick,
+                installed: tick,
+            },
+        );
+        a.latest = version.to_string();
+        self.evict_to_budget(&mut inner, (alias, version));
         Ok(entry)
     }
 
-    /// Remove `name` from the registry and return its entry. In-flight
-    /// requests holding the `Arc` finish normally; the model's resident
-    /// weights are freed once the last reference drops — the registry is
-    /// no longer grow-only.
-    pub fn unload(&mut self, name: &str) -> Result<Arc<ModelEntry>> {
-        self.models
-            .remove(name)
-            .with_context(|| format!("model '{name}' is not registered"))
-    }
-
-    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
-        self.models.get(name).cloned()
-    }
-
-    /// The single registered model, if exactly one — the default target
-    /// for requests that omit the `model` field.
-    pub fn sole(&self) -> Option<Arc<ModelEntry>> {
-        if self.models.len() == 1 {
-            self.models.values().next().cloned()
-        } else {
-            None
+    /// Remove `name` from the registry and return its entry. A bare
+    /// alias removes every version; `alias@version` removes one slot.
+    /// In-flight requests holding the `Arc` finish normally; the model's
+    /// resident weights are freed once the last reference drops.
+    pub fn unload(&self, name: &str) -> Result<Arc<ModelEntry>> {
+        let (alias, ver) = split_name(name);
+        let mut inner = self.lock();
+        let Some(a) = inner.aliases.get(alias) else {
+            bail!("model '{name}' is not registered");
+        };
+        ensure!(!a.swapping, "model '{name}' has a swap in progress; retry");
+        match ver {
+            Some(v) => {
+                let Some(slot) = a.versions.get(v) else {
+                    bail!("model '{name}' is not registered");
+                };
+                let Some(entry) = slot.resident.clone() else {
+                    bail!("model '{name}' is not resident (evicted); use remove()");
+                };
+                let a = inner.aliases.get_mut(alias).unwrap();
+                a.versions.remove(v);
+                if a.versions.is_empty() {
+                    inner.aliases.remove(alias);
+                } else if a.latest == v {
+                    // repoint the bare alias at the most recent survivor
+                    a.latest = a
+                        .versions
+                        .iter()
+                        .max_by_key(|(_, s)| s.installed)
+                        .map(|(ver, _)| ver.clone())
+                        .unwrap_or_default();
+                }
+                Ok(entry)
+            }
+            None => {
+                let entry = a
+                    .versions
+                    .get(&a.latest)
+                    .and_then(|s| s.resident.clone())
+                    .or_else(|| a.versions.values().find_map(|s| s.resident.clone()));
+                let Some(entry) = entry else {
+                    bail!("model '{name}' has no resident versions; use remove()");
+                };
+                inner.aliases.remove(alias);
+                Ok(entry)
+            }
         }
     }
 
-    pub fn names(&self) -> Vec<&str> {
-        self.models.keys().map(String::as_str).collect()
+    /// `DELETE /models/<name>`: drop the alias (or one version) entirely,
+    /// resident or not. Returns the number of version slots removed.
+    pub fn remove(&self, name: &str) -> std::result::Result<usize, ControlError> {
+        let (alias, ver) = split_name(name);
+        let mut inner = self.lock();
+        let Some(a) = inner.aliases.get_mut(alias) else {
+            return Err(ControlError::Unknown(name.to_string()));
+        };
+        if a.swapping {
+            return Err(ControlError::SwapInProgress(alias.to_string()));
+        }
+        match ver {
+            Some(v) => {
+                if a.versions.remove(v).is_none() {
+                    return Err(ControlError::Unknown(name.to_string()));
+                }
+                if a.versions.is_empty() {
+                    inner.aliases.remove(alias);
+                } else if a.latest == v {
+                    a.latest = a
+                        .versions
+                        .iter()
+                        .max_by_key(|(_, s)| s.installed)
+                        .map(|(ver, _)| ver.clone())
+                        .unwrap_or_default();
+                }
+                Ok(1)
+            }
+            None => {
+                let n = a.versions.len();
+                inner.aliases.remove(alias);
+                Ok(n)
+            }
+        }
     }
 
+    /// Resident peek — no lazy load, no error. Bare aliases resolve the
+    /// latest version; `alias@version` is exact.
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        let (alias, ver) = split_name(name);
+        let mut inner = self.lock();
+        inner.clock += 1;
+        let tick = inner.clock;
+        let a = inner.aliases.get_mut(alias)?;
+        let version = match ver {
+            Some(v) => v.to_string(),
+            None => a.latest.clone(),
+        };
+        let slot = a.versions.get_mut(&version)?;
+        let e = slot.resident.clone()?;
+        slot.last_used = tick;
+        Some(e)
+    }
+
+    /// Resolve for serving: like [`Registry::get`], but a known slot
+    /// whose weights are not resident (lazy admit / evicted) is
+    /// re-verified through the repo (when repo-sourced) and reloaded
+    /// first. `Ok(None)` = not registered; `Err` = the reload failed.
+    ///
+    /// The reload runs under the registry lock: concurrent resolves of
+    /// the same cold model load once, and the resident fast path is a
+    /// few map lookups.
+    pub fn resolve(&self, name: &str) -> Result<Option<Arc<ModelEntry>>> {
+        let mut inner = self.lock();
+        inner.clock += 1;
+        let tick = inner.clock;
+        let (alias, ver) = split_name(name);
+        let Some(a) = inner.aliases.get_mut(alias) else {
+            return Ok(None);
+        };
+        let version = match ver {
+            Some(v) => v.to_string(),
+            None => {
+                if a.latest.is_empty() {
+                    return Ok(None);
+                }
+                a.latest.clone()
+            }
+        };
+        let Some(slot) = a.versions.get_mut(&version) else {
+            return Ok(None);
+        };
+        if let Some(e) = &slot.resident {
+            slot.last_used = tick;
+            return Ok(Some(e.clone()));
+        }
+        let Some(src) = slot.source.clone() else {
+            return Ok(None);
+        };
+        let slot_name = slot.name.clone();
+        if let Some((rn, rv)) = &src.verify {
+            let repo = self.repo.as_ref().with_context(|| {
+                format!("model '{slot_name}' needs repo re-verification but no repo is attached")
+            })?;
+            repo.verify(rn, rv)
+                .with_context(|| format!("re-verifying '{slot_name}' before reload"))?;
+        }
+        let t0 = Instant::now();
+        let model = InferenceModel::load_with_policy(&src.dir, &src.stem, src.policy.clone())
+            .with_context(|| format!("lazily reloading model '{slot_name}'"))?;
+        let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let entry = Self::make_entry(&slot_name, alias, &version, model, load_ms);
+        let slot = inner
+            .aliases
+            .get_mut(alias)
+            .and_then(|a| a.versions.get_mut(&version))
+            .expect("slot vanished under the registry lock");
+        slot.resident = Some(entry.clone());
+        slot.last_used = tick;
+        trace::log(Level::Info, "model_reloaded", &[
+            ("model", Json::str(slot_name)),
+            ("load_ms", Json::num(load_ms)),
+        ]);
+        self.evict_to_budget(&mut inner, (alias, &version));
+        Ok(Some(entry))
+    }
+
+    /// Verify `spec` (`name@version`) against the attached repo, load
+    /// it (unless `lazy`), and repoint the alias — the `POST /models`
+    /// entry point. On any failure nothing is registered and the
+    /// previous version keeps serving. Concurrent swaps of the same
+    /// alias are rejected with [`ControlError::SwapInProgress`].
+    pub fn admit_from_repo(
+        &self,
+        spec: &str,
+        lazy: bool,
+    ) -> std::result::Result<SwapReport, ControlError> {
+        let (name, version) = crate::repo::parse_spec(spec)
+            .map_err(|e| ControlError::BadSpec(format!("{e:#}")))?;
+        let repo = self.repo.as_ref().ok_or(ControlError::NoRepo)?;
+        let full_name = format!("{name}@{version}");
+
+        // phase 1: claim the alias (create a placeholder if new)
+        let swapped_from = {
+            let mut inner = self.lock();
+            let a = inner.aliases.entry(name.clone()).or_insert_with(|| Alias {
+                versions: BTreeMap::new(),
+                latest: String::new(),
+                swapping: false,
+            });
+            if a.swapping {
+                // a freshly created placeholder can't be swapping, so
+                // this only fires for pre-existing aliases — nothing to
+                // clean up
+                return Err(ControlError::SwapInProgress(name));
+            }
+            a.swapping = true;
+            (!a.latest.is_empty() && a.latest != version)
+                .then(|| a.versions.get(&a.latest).map(|s| s.name.clone()))
+                .flatten()
+        };
+
+        // phase 2: verify + load with the lock released — the serving
+        // path keeps resolving the old version throughout
+        let verified = match repo.verify(&name, &version) {
+            Ok(v) => v,
+            Err(e) => {
+                self.abort_swap(&name);
+                return Err(ControlError::Rejected(format!("{e:#}")));
+            }
+        };
+        let (resident, load_ms) = if lazy {
+            (None, 0.0)
+        } else {
+            let t0 = Instant::now();
+            match InferenceModel::load_with_policy(
+                &verified.dir,
+                &verified.stem,
+                self.default_policy.clone(),
+            ) {
+                Ok(model) => {
+                    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    (
+                        Some(Self::make_entry(&full_name, &name, &version, model, load_ms)),
+                        load_ms,
+                    )
+                }
+                Err(e) => {
+                    self.abort_swap(&name);
+                    return Err(ControlError::Rejected(format!("{e:#}")));
+                }
+            }
+        };
+
+        // phase 3: install the slot and repoint the alias atomically
+        let source = Source {
+            dir: verified.dir.clone(),
+            stem: verified.stem.clone(),
+            policy: self.default_policy.clone(),
+            verify: Some((name.clone(), version.clone())),
+        };
+        {
+            let mut inner = self.lock();
+            inner.clock += 1;
+            let tick = inner.clock;
+            let a = inner
+                .aliases
+                .get_mut(&name)
+                .expect("alias held by the swapping flag vanished");
+            let had_versions = !a.latest.is_empty();
+            a.versions.insert(
+                version.clone(),
+                Slot {
+                    name: full_name.clone(),
+                    resident,
+                    source: Some(source),
+                    last_used: tick,
+                    installed: tick,
+                },
+            );
+            a.latest = version.clone();
+            a.swapping = false;
+            if had_versions {
+                self.swaps.fetch_add(1, Ordering::Relaxed);
+            }
+            self.evict_to_budget(&mut inner, (&name, &version));
+        }
+        trace::log(Level::Info, "model_swapped", &[
+            ("model", Json::str(full_name.clone())),
+            ("swapped_from", swapped_from.clone().map(Json::str).unwrap_or(Json::Null)),
+            ("lazy", Json::Bool(lazy)),
+            ("load_ms", Json::num(load_ms)),
+        ]);
+        Ok(SwapReport {
+            name: full_name,
+            alias: name,
+            version,
+            swapped_from,
+            load_ms,
+            lazy,
+        })
+    }
+
+    /// Clear the swapping flag after a failed admit, dropping the
+    /// placeholder if the alias never had a version.
+    fn abort_swap(&self, alias: &str) {
+        let mut inner = self.lock();
+        if let Some(a) = inner.aliases.get_mut(alias) {
+            a.swapping = false;
+            if a.versions.is_empty() {
+                inner.aliases.remove(alias);
+            }
+        }
+    }
+
+    /// Evict least-recently-used reloadable slots until resident bytes
+    /// fit the budget. The slot named by `protect` (the one just
+    /// installed) is never evicted, so a single oversized model still
+    /// serves. Entries without a source (plain `register`) are pinned.
+    fn evict_to_budget(&self, inner: &mut Inner, protect: (&str, &str)) {
+        let Some(budget) = self.max_resident_bytes else { return };
+        loop {
+            let total: usize = inner
+                .aliases
+                .values()
+                .flat_map(|a| a.versions.values())
+                .filter_map(|s| s.resident.as_ref())
+                .map(|e| e.model.resident_bytes())
+                .sum();
+            if total <= budget {
+                return;
+            }
+            let mut victim: Option<(String, String, u64)> = None;
+            for (an, a) in &inner.aliases {
+                for (vn, s) in &a.versions {
+                    if s.resident.is_none() || s.source.is_none() {
+                        continue;
+                    }
+                    if (an.as_str(), vn.as_str()) == protect {
+                        continue;
+                    }
+                    if victim.as_ref().map_or(true, |(_, _, lu)| s.last_used < *lu) {
+                        victim = Some((an.clone(), vn.clone(), s.last_used));
+                    }
+                }
+            }
+            let Some((an, vn, _)) = victim else { return };
+            let slot = inner
+                .aliases
+                .get_mut(&an)
+                .and_then(|a| a.versions.get_mut(&vn))
+                .expect("victim slot vanished");
+            let freed = slot.resident.as_ref().map_or(0, |e| e.model.resident_bytes());
+            slot.resident = None;
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            trace::log(Level::Info, "model_evicted", &[
+                ("model", Json::str(slot.name.clone())),
+                ("freed_bytes", Json::num(freed as f64)),
+                ("budget_bytes", Json::num(budget as f64)),
+            ]);
+        }
+    }
+
+    /// The single registered alias's latest resident entry, if exactly
+    /// one alias exists — the default target for requests that omit the
+    /// `model` field.
+    pub fn sole(&self) -> Option<Arc<ModelEntry>> {
+        let inner = self.lock();
+        if inner.aliases.len() != 1 {
+            return None;
+        }
+        let a = inner.aliases.values().next()?;
+        a.versions.get(&a.latest).and_then(|s| s.resident.clone())
+    }
+
+    /// [`Registry::sole`] with lazy reload: the single alias resolves
+    /// even when its latest slot was evicted or admitted lazily.
+    pub fn resolve_sole(&self) -> Result<Option<Arc<ModelEntry>>> {
+        let name = {
+            let inner = self.lock();
+            if inner.aliases.len() != 1 {
+                return Ok(None);
+            }
+            inner.aliases.keys().next().cloned()
+        };
+        match name {
+            Some(n) => self.resolve(&n),
+            None => Ok(None),
+        }
+    }
+
+    /// Full names of every registered version slot (resident or not).
+    pub fn names(&self) -> Vec<String> {
+        let inner = self.lock();
+        inner
+            .aliases
+            .values()
+            .flat_map(|a| a.versions.values())
+            .map(|s| s.name.clone())
+            .collect()
+    }
+
+    /// Every resident entry (what `/metrics` reports gauges for).
+    pub fn resident_entries(&self) -> Vec<Arc<ModelEntry>> {
+        let inner = self.lock();
+        inner
+            .aliases
+            .values()
+            .flat_map(|a| a.versions.values())
+            .filter_map(|s| s.resident.clone())
+            .collect()
+    }
+
+    /// Total bytes the resident entries keep loaded — what the eviction
+    /// budget bounds.
+    pub fn resident_bytes_total(&self) -> usize {
+        self.resident_entries()
+            .iter()
+            .map(|e| e.model.resident_bytes())
+            .sum()
+    }
+
+    /// Registered version slots (resident or not).
     pub fn len(&self) -> usize {
-        self.models.len()
+        let inner = self.lock();
+        inner.aliases.values().map(|a| a.versions.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.models.is_empty()
+        self.len() == 0
     }
 
-    /// The `GET /models` body.
+    /// The `GET /models` body: one record per version slot (full stats
+    /// for resident ones), plus control-plane totals.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![(
-            "models",
-            Json::arr(self.models.values().map(|e| {
-                Json::obj(vec![
-                    ("name", Json::str(e.name.clone())),
-                    ("model", Json::str(e.model.model.clone())),
-                    ("num_classes", Json::num(e.model.num_classes as f64)),
-                    ("input_dims",
-                     Json::arr(e.model.input_dims.iter().map(|&d| Json::num(d as f64)))),
-                    ("feature_len", Json::num(e.feature_len as f64)),
-                    ("bits_per_weight", Json::num(e.model.bits_per_weight)),
-                    ("compression_ratio", Json::num(e.model.compression_ratio)),
-                    ("compute_mode", Json::str(e.model.mode_label())),
-                    ("layer_modes",
-                     Json::arr(e.model.layer_modes().into_iter().map(|lm| {
-                         Json::obj(vec![
-                             ("idx", Json::num(lm.idx as f64)),
-                             ("mode", Json::str(lm.mode.label())),
-                             ("act_planes",
-                              lm.mode
-                                  .act_planes()
-                                  .map_or(Json::Null, |m| Json::num(m as f64))),
-                             ("weights", Json::num(lm.weights as f64)),
-                         ])
-                     }))),
-                    ("quantized_weight_bytes",
-                     Json::num(e.model.quantized_resident_bytes() as f64)),
-                    ("fp_weight_bytes",
-                     Json::num(e.model.fp_resident_bytes() as f64)),
-                    ("resident_bytes", Json::num(e.model.resident_bytes() as f64)),
-                    // serving-time storage rate over the quantized layers
-                    // (sub-1.0 on the Encrypted engine) — the headline
-                    // the decrypt-on-demand path exists to deliver
-                    ("resident_bits_per_weight",
-                     Json::num(e.model.resident_bits_per_weight())),
-                    ("load_ms", Json::num(e.load_ms)),
-                ])
-            })),
-        )])
+        let inner = self.lock();
+        let mut models = Vec::new();
+        for (an, a) in &inner.aliases {
+            for (vn, s) in &a.versions {
+                let serving = *vn == a.latest;
+                let mut fields = vec![
+                    ("name", Json::str(s.name.clone())),
+                    ("alias", Json::str(an.clone())),
+                    ("version", Json::str(vn.clone())),
+                    ("serving", Json::Bool(serving)),
+                    ("resident", Json::Bool(s.resident.is_some())),
+                ];
+                if let Some(e) = &s.resident {
+                    fields.extend(vec![
+                        ("model", Json::str(e.model.model.clone())),
+                        ("num_classes", Json::num(e.model.num_classes as f64)),
+                        ("input_dims",
+                         Json::arr(e.model.input_dims.iter().map(|&d| Json::num(d as f64)))),
+                        ("feature_len", Json::num(e.feature_len as f64)),
+                        ("bits_per_weight", Json::num(e.model.bits_per_weight)),
+                        ("compression_ratio", Json::num(e.model.compression_ratio)),
+                        ("compute_mode", Json::str(e.model.mode_label())),
+                        ("layer_modes",
+                         Json::arr(e.model.layer_modes().into_iter().map(|lm| {
+                             Json::obj(vec![
+                                 ("idx", Json::num(lm.idx as f64)),
+                                 ("mode", Json::str(lm.mode.label())),
+                                 ("act_planes",
+                                  lm.mode
+                                      .act_planes()
+                                      .map_or(Json::Null, |m| Json::num(m as f64))),
+                                 ("weights", Json::num(lm.weights as f64)),
+                             ])
+                         }))),
+                        ("quantized_weight_bytes",
+                         Json::num(e.model.quantized_resident_bytes() as f64)),
+                        ("fp_weight_bytes",
+                         Json::num(e.model.fp_resident_bytes() as f64)),
+                        ("resident_bytes", Json::num(e.model.resident_bytes() as f64)),
+                        // serving-time storage rate over the quantized layers
+                        // (sub-1.0 on the Encrypted engine) — the headline
+                        // the decrypt-on-demand path exists to deliver
+                        ("resident_bits_per_weight",
+                         Json::num(e.model.resident_bits_per_weight())),
+                        ("load_ms", Json::num(e.load_ms)),
+                    ]);
+                }
+                models.push(Json::obj(fields));
+            }
+        }
+        Json::obj(vec![
+            ("models", Json::Arr(models)),
+            ("swaps_total", Json::num(self.swaps_total() as f64)),
+            ("evictions_total", Json::num(self.evictions_total() as f64)),
+        ])
     }
 }
 
@@ -233,8 +877,9 @@ impl Default for Registry {
 #[cfg(test)]
 mod tests {
     //! Registry tests that need a real model go through a synthetic bundle
-    //! in `rust/tests/serve.rs` (InferenceModel is only constructible via
-    //! `load`). Here: empty-registry behavior.
+    //! in `rust/tests/serve.rs` / `rust/tests/control_plane.rs`
+    //! (InferenceModel is only constructible via `load`). Here:
+    //! empty-registry behavior and name grammar.
     use super::*;
 
     #[test]
@@ -245,24 +890,68 @@ mod tests {
         assert!(r.get("x").is_none());
         assert!(r.sole().is_none());
         assert!(r.names().is_empty());
+        assert!(r.resolve("x").unwrap().is_none());
+        assert!(r.resolve_sole().unwrap().is_none());
         assert_eq!(r.to_json().get("models").as_arr().map(|a| a.len()), Some(0));
+        assert_eq!(r.swaps_total(), 0);
+        assert_eq!(r.evictions_total(), 0);
+        assert_eq!(r.resident_bytes_total(), 0);
+    }
+
+    #[test]
+    fn split_name_grammar() {
+        assert_eq!(split_name("alpha"), ("alpha", None));
+        assert_eq!(split_name("resnet20@v2"), ("resnet20", Some("v2")));
+        assert_eq!(split_name("a@b@c"), ("a", Some("b@c")));
     }
 
     #[test]
     fn unload_unknown_model_fails() {
         // full load → unload → reload round trips live in
         // rust/tests/bitslice.rs (they need a real bundle)
-        let mut r = Registry::new();
+        let r = Registry::new();
         let err = r.unload("ghost").unwrap_err();
         assert!(err.to_string().contains("ghost"), "{err}");
+        let err = r.unload("ghost@v3").unwrap_err();
+        assert!(err.to_string().contains("ghost@v3"), "{err}");
+    }
+
+    #[test]
+    fn remove_unknown_is_a_control_error() {
+        let r = Registry::new();
+        match r.remove("ghost") {
+            Err(ControlError::Unknown(n)) => assert_eq!(n, "ghost"),
+            other => panic!("expected Unknown, got {other:?}"),
+        }
     }
 
     #[test]
     fn load_missing_bundle_fails() {
-        let mut r = Registry::new();
+        let r = Registry::new();
         let err = r
             .load("ghost", Path::new("/nonexistent/dir"), "nope")
             .unwrap_err();
         assert!(!err.to_string().is_empty());
+        assert!(r.is_empty(), "failed load must register nothing");
+    }
+
+    #[test]
+    fn admit_without_repo_is_rejected() {
+        let r = Registry::new();
+        match r.admit_from_repo("m@v1", false) {
+            Err(ControlError::NoRepo) => {}
+            other => panic!("expected NoRepo, got {other:?}"),
+        }
+        match r.admit_from_repo("bare-name", false) {
+            Err(ControlError::BadSpec(m)) => assert!(m.contains("name@version"), "{m}"),
+            other => panic!("expected BadSpec, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_error_messages() {
+        assert!(ControlError::SwapInProgress("m".into()).to_string().contains("in progress"));
+        assert!(ControlError::Unknown("m".into()).to_string().contains("not registered"));
+        assert!(ControlError::NoRepo.to_string().contains("repo"));
     }
 }

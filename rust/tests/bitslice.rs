@@ -150,7 +150,7 @@ fn mixed_mode_policy_assigns_layers_and_serves() {
     let feat = 8 * 8 * 3;
     let mut rng = Pcg32::seeded(55);
     let x: Vec<f32> = (0..2 * feat).map(|_| rng.normal()).collect();
-    let mut registry = Registry::new();
+    let registry = Registry::new();
     registry.load_with_policy("mix", &dir, "rn", policy).unwrap();
     let server = Server::start(
         "127.0.0.1:0",
@@ -200,7 +200,7 @@ fn bitplane_serving_agrees_with_dense_and_saves_memory() {
     let dir = bundle_dir("serve");
     export_synthetic_resnet_bundle(&dir, "rn", 33, "resnet8", 8, 10).unwrap();
 
-    let mut registry = Registry::new();
+    let registry = Registry::new();
     registry.load("dense", &dir, "rn").unwrap();
     registry
         .load_with_mode("bp", &dir, "rn", ComputeMode::BitPlane { act_planes: 24 })
@@ -300,7 +300,7 @@ fn registry_unload_and_reload() {
     let d_in = 12usize;
     export_synthetic_mlp_bundle(&dir, "m", 35, d_in, &[24, 16], 10).unwrap();
 
-    let mut registry = Registry::new();
+    let registry = Registry::new();
     registry.load("a", &dir, "m").unwrap();
     registry
         .load_with_mode("b", &dir, "m", ComputeMode::bit_plane())

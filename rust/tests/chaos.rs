@@ -48,7 +48,7 @@ fn bundle_dir(tag: &str) -> PathBuf {
 fn start_server(tag: &str, cfg: ServeConfig, mode: Option<ComputeMode>) -> (Server, PathBuf) {
     let dir = bundle_dir(tag);
     export_synthetic_mlp_bundle(&dir, "served", 7, D_IN, &[32, 24], 10).unwrap();
-    let mut registry = match mode {
+    let registry = match mode {
         Some(m) => Registry::with_default_mode(m),
         None => Registry::new(),
     };
@@ -276,7 +276,7 @@ fn corrupted_bundle_is_rejected_at_load() {
     bytes[target] ^= 0xFF;
     std::fs::write(&path, &bytes).unwrap();
 
-    let mut registry = Registry::new();
+    let registry = Registry::new();
     let err = registry.load("served", &dir, "served").unwrap_err();
     let chain = format!("{err:#}");
     assert!(chain.contains("integrity"), "error does not name corruption: {chain}");

@@ -1,0 +1,426 @@
+//! Control-plane integration tests (DESIGN.md §13): signed bundle repo
+//! round trips, tamper/signature rejection over HTTP, drain-then-swap
+//! under concurrent traffic, versioned delete, lazy admits, LRU
+//! eviction, and the 405 + `Allow` method table — all against synthetic
+//! encrypted bundles over real loopback sockets.
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use flexor::coordinator::export_synthetic_mlp_bundle;
+use flexor::flexor::fxr::Container;
+use flexor::inference::InferenceModel;
+use flexor::repo::BundleRepo;
+use flexor::serve::{http, ControlError, Registry, ServeConfig, Server};
+use flexor::substrate::json::{self, Json};
+use flexor::substrate::prng::Pcg32;
+
+const D_IN: usize = 16;
+const KEY: &[u8] = b"control-plane-test-key";
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("flexor_ctl_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Export a seeded bundle under `root/src_<name>` and publish it as
+/// `name@version`; returns the source dir (kept for reference loads).
+fn publish_bundle(repo: &BundleRepo, root: &PathBuf, name: &str, version: &str, seed: u64) -> PathBuf {
+    let src = root.join(format!("src_{name}_{version}"));
+    export_synthetic_mlp_bundle(&src, name, seed, D_IN, &[32, 24], 10).unwrap();
+    repo.publish(name, version, &src, name).unwrap();
+    src
+}
+
+fn predict_body(model: &str, features: &[f32]) -> String {
+    Json::obj(vec![
+        ("model", Json::str(model)),
+        ("features", Json::arr(features.iter().map(|&v| Json::num(v)))),
+    ])
+    .to_string()
+}
+
+fn inputs(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| (0..D_IN).map(|_| rng.normal()).collect()).collect()
+}
+
+fn post_json(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let (status, resp) = http::client::request(addr, method, path, Some(body)).unwrap();
+    (status, json::parse(&resp).unwrap())
+}
+
+/// `GET /models` record for a full slot name, if present.
+fn model_record(addr: SocketAddr, name: &str) -> Option<Json> {
+    let (status, body) = http::client::request(addr, "GET", "/models", None).unwrap();
+    assert_eq!(status, 200);
+    let j = json::parse(&body).unwrap();
+    let arr = j.get("models").as_arr().unwrap().to_vec();
+    arr.into_iter().find(|m| m.get("name").as_str() == Some(name))
+}
+
+/// Publish (in both fxr container formats), verify, fetch, and load
+/// through the repo — predictions must be bit-identical to loading the
+/// source directory straight into a registry.
+#[test]
+fn repo_roundtrip_is_bit_identical_for_v1_and_v2_fxr() {
+    let root = scratch("roundtrip");
+    let repo = BundleRepo::init(&root.join("repo"), KEY).unwrap();
+
+    // modern (v2) container
+    let src_v2 = publish_bundle(&repo, &root, "m2", "v1", 41);
+    // legacy (v1) container: rewrite the .fxr in place *before* publish,
+    // so the repo hashes and serves the old format
+    let src_v1 = root.join("src_legacy");
+    export_synthetic_mlp_bundle(&src_v1, "m1", 42, D_IN, &[32, 24], 10).unwrap();
+    let fxr_path = src_v1.join("m1.fxr");
+    let container = Container::load(&fxr_path).unwrap();
+    std::fs::write(&fxr_path, container.to_bytes_v1()).unwrap();
+    repo.publish("m1", "v1", &src_v1, "m1").unwrap();
+
+    let xs = inputs(8, 7);
+    for (name, src) in [("m2", &src_v2), ("m1", &src_v1)] {
+        let v = repo.verify(name, "v1").unwrap();
+        assert_eq!(v.stem, name);
+
+        // fetch to a fresh dir and load the copy
+        let dest = root.join(format!("fetched_{name}"));
+        repo.fetch(name, "v1", &dest).unwrap();
+        let fetched = InferenceModel::load(&dest, name).unwrap();
+
+        // admit through the registry control plane
+        let mut registry = Registry::new();
+        registry.set_repo(repo.clone());
+        let report = registry.admit_from_repo(&format!("{name}@v1"), false).unwrap();
+        assert_eq!(report.name, format!("{name}@v1"));
+        assert_eq!(report.swapped_from, None);
+        assert!(!report.lazy);
+        let admitted = registry.resolve(name).unwrap().unwrap();
+        assert_eq!(admitted.version, "v1");
+
+        // straight load of the source dir — the baseline
+        let direct_reg = Registry::new();
+        let direct = direct_reg.load(name, src, name).unwrap();
+
+        for x in &xs {
+            let want = direct.model.predict(x, 1).unwrap();
+            assert_eq!(fetched.predict(x, 1).unwrap(), want, "fetched {name} diverged");
+            assert_eq!(admitted.model.predict(x, 1).unwrap(), want, "admitted {name} diverged");
+        }
+    }
+}
+
+/// One flipped byte in a stored bundle file must fail verification with
+/// the bundle named, answer `409`/`bundle_rejected` over HTTP (echoing
+/// the client's request id), and leave the registry untouched. A wrong
+/// signing key is rejected the same way before any file is read.
+#[test]
+fn tampered_or_miskeyed_bundle_never_registers() {
+    let root = scratch("tamper");
+    let repo = BundleRepo::init(&root.join("repo"), KEY).unwrap();
+    publish_bundle(&repo, &root, "good", "v1", 51);
+    publish_bundle(&repo, &root, "bad", "v1", 52);
+
+    // flip one byte of bad@v1's stored weights
+    let stored = repo.bundle_dir("bad", "v1").join("bad.fxr");
+    let mut bytes = std::fs::read(&stored).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&stored, bytes).unwrap();
+
+    let err = repo.verify("bad", "v1").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bad@v1"), "error must name the bundle: {msg}");
+    assert!(msg.contains("sha256 mismatch"), "{msg}");
+
+    // wrong key: signature check fires before any file content is read
+    let wrong = BundleRepo::open(repo.root(), b"not-the-key").unwrap();
+    let err = wrong.verify("good", "v1").unwrap_err();
+    assert!(format!("{err:#}").contains("signature mismatch"), "{err:#}");
+    let mut miskeyed = Registry::new();
+    miskeyed.set_repo(wrong);
+    match miskeyed.admit_from_repo("good@v1", false) {
+        Err(ControlError::Rejected(m)) => assert!(m.contains("signature mismatch"), "{m}"),
+        other => panic!("expected Rejected, got {other:?}"),
+    }
+    assert!(miskeyed.is_empty(), "rejected admit must register nothing");
+
+    // ...and over HTTP: 409, coded, request id echoed, registry unchanged
+    let mut registry = Registry::new();
+    registry.set_repo(repo.clone());
+    registry.admit_from_repo("good@v1", false).unwrap();
+    let server = Server::start("127.0.0.1:0", registry, ServeConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    let before = http::client::request(addr, "GET", "/models", None).unwrap().1;
+    let (status, headers, body) = http::client::request_with_headers(
+        addr,
+        "POST",
+        "/models",
+        &[("X-Request-Id", "tamper-rid-7")],
+        Some(r#"{"name":"bad@v1"}"#),
+    )
+    .unwrap();
+    assert_eq!(status, 409, "{body}");
+    let j = json::parse(&body).unwrap();
+    assert_eq!(j.get("code").as_str(), Some("bundle_rejected"));
+    assert_eq!(j.get("request_id").as_str(), Some("tamper-rid-7"));
+    assert!(j.get("error").as_str().unwrap().contains("bad@v1"), "{body}");
+    let echoed = headers.iter().find(|(k, _)| k == "x-request-id").map(|(_, v)| v.as_str());
+    assert_eq!(echoed, Some("tamper-rid-7"), "request id must round-trip on the 409");
+
+    let after = http::client::request(addr, "GET", "/models", None).unwrap().1;
+    assert_eq!(before, after, "rejected bundle must leave the registry unchanged");
+    assert!(model_record(addr, "bad@v1").is_none());
+
+    server.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Hot-swap `resnet20@v1 → @v2` while concurrent `/predict` traffic is
+/// in flight: every healthy request answers 2xx throughout, in-flight
+/// requests drain on the old version, and admissions after the swap
+/// serve the new one.
+#[test]
+fn hot_swap_under_concurrent_traffic_drains_cleanly() {
+    let root = scratch("swap");
+    let repo = BundleRepo::init(&root.join("repo"), KEY).unwrap();
+    publish_bundle(&repo, &root, "resnet20", "v1", 61);
+    publish_bundle(&repo, &root, "resnet20", "v2", 62);
+
+    let mut registry = Registry::new();
+    registry.set_repo(repo);
+    registry.admit_from_repo("resnet20@v1", false).unwrap();
+    let cfg = ServeConfig { workers: 2, queue_capacity: 1024, ..ServeConfig::default() };
+    let server = Server::start("127.0.0.1:0", registry, cfg).unwrap();
+    let addr = server.local_addr();
+
+    let x0 = inputs(1, 3).remove(0);
+    let (status, v) = post_json(addr, "POST", "/predict", &predict_body("resnet20", &x0));
+    assert_eq!(status, 200, "{v}");
+    assert_eq!(v.get("model").as_str(), Some("resnet20@v1"));
+
+    const CLIENTS: usize = 4;
+    let stop = Arc::new(AtomicBool::new(false));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let stop = stop.clone();
+            thread::spawn(move || -> Vec<(u16, String)> {
+                let xs = inputs(8, 100 + c as u64);
+                let mut seen = Vec::new();
+                let mut i = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let body = predict_body("resnet20", &xs[i % xs.len()]);
+                    let (status, v) = post_json(addr, "POST", "/predict", &body);
+                    let model = v.get("model").as_str().unwrap_or("").to_string();
+                    seen.push((status, model));
+                    i += 1;
+                }
+                seen
+            })
+        })
+        .collect();
+
+    thread::sleep(Duration::from_millis(100));
+    let (status, report) = post_json(addr, "POST", "/models", r#"{"name":"resnet20@v2"}"#);
+    assert_eq!(status, 200, "{report}");
+    assert_eq!(report.get("name").as_str(), Some("resnet20@v2"));
+    assert_eq!(report.get("swapped_from").as_str(), Some("resnet20@v1"));
+    assert!(!report.get("lazy").as_bool().unwrap());
+
+    // an admission after the swap must serve v2
+    let (status, v) = post_json(addr, "POST", "/predict", &predict_body("resnet20", &x0));
+    assert_eq!(status, 200, "{v}");
+    assert_eq!(v.get("model").as_str(), Some("resnet20@v2"));
+
+    thread::sleep(Duration::from_millis(100));
+    stop.store(true, Ordering::Relaxed);
+    let mut total = 0usize;
+    let mut versions = std::collections::BTreeSet::new();
+    for h in handles {
+        for (status, model) in h.join().unwrap() {
+            assert_eq!(status, 200, "a healthy request failed during the swap ({model})");
+            assert!(
+                model == "resnet20@v1" || model == "resnet20@v2",
+                "unexpected serving version {model}"
+            );
+            versions.insert(model);
+            total += 1;
+        }
+    }
+    assert!(total > 0, "no concurrent traffic was generated");
+    assert!(versions.contains("resnet20@v1"), "no request landed before the swap");
+
+    // the swap is visible in the listing and the counters
+    let (_, listing) = http::client::request(addr, "GET", "/models", None).unwrap();
+    let j = json::parse(&listing).unwrap();
+    assert_eq!(j.get("swaps_total").as_usize(), Some(1));
+    let v2 = model_record(addr, "resnet20@v2").unwrap();
+    assert_eq!(v2.get("serving").as_bool(), Some(true));
+    let v1 = model_record(addr, "resnet20@v1").unwrap();
+    assert_eq!(v1.get("serving").as_bool(), Some(false));
+    let (_, prom) =
+        http::client::request(addr, "GET", "/metrics?format=prometheus", None).unwrap();
+    assert!(prom.contains("flexor_model_swaps_total 1"), "{prom}");
+    assert!(prom.contains("flexor_model_evictions_total 0"), "{prom}");
+
+    server.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Wrong-method requests on known paths answer `405` with an `Allow`
+/// header instead of `404`/`no_route`; unknown paths still 404. Runs on
+/// a repo-backed empty registry — the control plane makes that a legal
+/// server configuration.
+#[test]
+fn known_paths_answer_405_with_allow_header() {
+    let root = scratch("methods");
+    let repo = BundleRepo::init(&root.join("repo"), KEY).unwrap();
+    let mut registry = Registry::new();
+    registry.set_repo(repo);
+    let server = Server::start("127.0.0.1:0", registry, ServeConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    for (method, path, allow) in [
+        ("GET", "/predict", "POST"),
+        ("DELETE", "/models", "GET, POST"),
+        ("PUT", "/models", "GET, POST"),
+        ("POST", "/metrics", "GET"),
+        ("POST", "/healthz", "GET"),
+        ("DELETE", "/readyz", "GET"),
+        ("POST", "/models/x/profile", "GET"),
+        ("PUT", "/models/x", "DELETE"),
+    ] {
+        let (status, headers, body) =
+            http::client::request_with_headers(addr, method, path, &[], None).unwrap();
+        assert_eq!(status, 405, "{method} {path}: {body}");
+        let j = json::parse(&body).unwrap();
+        assert_eq!(j.get("code").as_str(), Some("method_not_allowed"), "{method} {path}");
+        assert!(!j.get("request_id").is_null(), "{method} {path}");
+        let got = headers.iter().find(|(k, _)| k == "allow").map(|(_, v)| v.as_str());
+        assert_eq!(got, Some(allow), "{method} {path}");
+    }
+
+    // unknown paths are still 404/no_route, with no Allow header
+    let (status, headers, body) =
+        http::client::request_with_headers(addr, "GET", "/nope", &[], None).unwrap();
+    assert_eq!(status, 404);
+    assert_eq!(json::parse(&body).unwrap().get("code").as_str(), Some("no_route"));
+    assert!(headers.iter().all(|(k, _)| k != "allow"));
+
+    server.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Lazy admits register without loading; the first `/predict` resolves
+/// (loads) the bundle. `DELETE` drops one version (repointing the bare
+/// alias) or the whole alias, and unknown names answer 404.
+#[test]
+fn lazy_admit_and_versioned_delete() {
+    let root = scratch("lazy");
+    let repo = BundleRepo::init(&root.join("repo"), KEY).unwrap();
+    publish_bundle(&repo, &root, "a", "v1", 71);
+    publish_bundle(&repo, &root, "a", "v2", 72);
+
+    let mut registry = Registry::new();
+    registry.set_repo(repo);
+    let server = Server::start("127.0.0.1:0", registry, ServeConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    let (status, report) = post_json(addr, "POST", "/models", r#"{"name":"a@v1","lazy":true}"#);
+    assert_eq!(status, 200, "{report}");
+    assert!(report.get("lazy").as_bool().unwrap());
+    let rec = model_record(addr, "a@v1").unwrap();
+    assert_eq!(rec.get("resident").as_bool(), Some(false), "lazy admit must not load");
+    assert_eq!(rec.get("serving").as_bool(), Some(true));
+
+    // first predict forces the load
+    let x0 = inputs(1, 5).remove(0);
+    let (status, v) = post_json(addr, "POST", "/predict", &predict_body("a", &x0));
+    assert_eq!(status, 200, "{v}");
+    assert_eq!(v.get("model").as_str(), Some("a@v1"));
+    let rec = model_record(addr, "a@v1").unwrap();
+    assert_eq!(rec.get("resident").as_bool(), Some(true));
+
+    // second version, then delete it: the bare alias repoints back to v1
+    let (status, _) = post_json(addr, "POST", "/models", r#"{"name":"a@v2"}"#);
+    assert_eq!(status, 200);
+    let (status, v) = post_json(addr, "POST", "/predict", &predict_body("a", &x0));
+    assert_eq!(status, 200, "{v}");
+    assert_eq!(v.get("model").as_str(), Some("a@v2"));
+    let (status, del) = post_json(addr, "DELETE", "/models/a@v2", "");
+    assert_eq!(status, 200, "{del}");
+    assert_eq!(del.get("removed_versions").as_usize(), Some(1));
+    assert!(model_record(addr, "a@v2").is_none());
+    let (status, v) = post_json(addr, "POST", "/predict", &predict_body("a", &x0));
+    assert_eq!(status, 200, "{v}");
+    assert_eq!(v.get("model").as_str(), Some("a@v1"));
+
+    // drop the whole alias; predicts now 404
+    let (status, del) = post_json(addr, "DELETE", "/models/a", "");
+    assert_eq!(status, 200, "{del}");
+    assert_eq!(del.get("removed_versions").as_usize(), Some(1));
+    let (status, v) = post_json(addr, "POST", "/predict", &predict_body("a", &x0));
+    assert_eq!(status, 404, "{v}");
+    assert_eq!(v.get("code").as_str(), Some("unknown_model"));
+    let (status, v) = post_json(addr, "DELETE", "/models/a", "");
+    assert_eq!(status, 404, "{v}");
+    assert_eq!(v.get("code").as_str(), Some("unknown_model"));
+
+    server.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// With a resident-bytes budget that fits one model, admitting a second
+/// evicts the least-recently-used one; the evicted slot stays registered
+/// and reloads bit-identically on the next resolve, still under budget.
+#[test]
+fn lru_eviction_keeps_budget_and_reloads_bit_identically() {
+    let root = scratch("evict");
+    let repo = BundleRepo::init(&root.join("repo"), KEY).unwrap();
+    let src_a = publish_bundle(&repo, &root, "a", "v1", 81);
+    publish_bundle(&repo, &root, "b", "v1", 82);
+
+    let mut registry = Registry::new();
+    registry.set_repo(repo);
+    registry.admit_from_repo("a@v1", false).unwrap();
+    let one = registry.resident_bytes_total();
+    assert!(one > 0);
+    // budget fits one resident model but not two (same geometry → same size)
+    let budget = one + one / 2;
+    registry.set_resident_budget(Some(budget));
+
+    let xs = inputs(6, 9);
+    let reference = InferenceModel::load(&src_a, "a").unwrap();
+    let expected: Vec<Vec<i32>> =
+        xs.iter().map(|x| reference.predict(x, 1).unwrap()).collect();
+
+    registry.admit_from_repo("b@v1", false).unwrap();
+    assert_eq!(registry.evictions_total(), 1, "admitting b must evict a");
+    assert!(
+        registry.resident_bytes_total() <= budget,
+        "resident {} exceeds budget {budget}",
+        registry.resident_bytes_total()
+    );
+    assert!(registry.get("a@v1").is_none(), "a must be non-resident");
+    assert!(registry.names().contains(&"a@v1".to_string()), "a must stay registered");
+
+    // resolving a re-verifies + reloads it (evicting b in turn) and the
+    // answers are bit-identical to the pre-eviction reference
+    let back = registry.resolve("a").unwrap().expect("evicted slot must lazily reload");
+    for (x, want) in xs.iter().zip(&expected) {
+        assert_eq!(&back.model.predict(x, 1).unwrap(), want, "reloaded model diverged");
+    }
+    assert_eq!(registry.evictions_total(), 2, "reloading a must evict b");
+    assert!(registry.resident_bytes_total() <= budget);
+    assert!(registry.get("b@v1").is_none());
+    assert_eq!(registry.len(), 2, "eviction must never unregister slots");
+
+    std::fs::remove_dir_all(&root).ok();
+}

@@ -265,7 +265,7 @@ fn encrypted_resident_bytes_hand_computed_on_mlp_fixture() {
     );
 
     // ...and the serving surface reports the same numbers
-    let mut registry = Registry::with_default_mode(ComputeMode::encrypted());
+    let registry = Registry::with_default_mode(ComputeMode::encrypted());
     registry.load("m", &dir, "m").unwrap();
     let server = Server::start("127.0.0.1:0", registry, ServeConfig::default()).unwrap();
     let (status, body) =
@@ -293,7 +293,7 @@ fn encrypted_serving_agrees_with_dense_and_beats_bitplane_residency() {
     let dir = bundle_dir("serve");
     export_synthetic_resnet_bundle(&dir, "rn", 33, "resnet8", 8, 10).unwrap();
 
-    let mut registry = Registry::new();
+    let registry = Registry::new();
     registry.load("dense", &dir, "rn").unwrap();
     registry
         .load_with_mode("bp", &dir, "rn", ComputeMode::BitPlane { act_planes: 24 })

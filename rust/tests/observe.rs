@@ -43,7 +43,7 @@ fn per_model_metrics_are_isolated() {
     let dir_b = bundle_dir("iso_b");
     export_synthetic_mlp_bundle(&dir_a, "alpha", 7, D_IN, &[32, 24], 10).unwrap();
     export_synthetic_mlp_bundle(&dir_b, "beta", 8, D_IN, &[24], 10).unwrap();
-    let mut registry = Registry::new();
+    let registry = Registry::new();
     registry.load("alpha", &dir_a, "alpha").unwrap();
     registry.load("beta", &dir_b, "beta").unwrap();
     let server = Server::start("127.0.0.1:0", registry, ServeConfig::default()).unwrap();
@@ -97,7 +97,7 @@ fn valid_metric_name(s: &str) -> bool {
 fn prometheus_exposition_is_parseable() {
     let dir = bundle_dir("prom");
     export_synthetic_mlp_bundle(&dir, "served", 7, D_IN, &[32], 10).unwrap();
-    let mut registry = Registry::new();
+    let registry = Registry::new();
     registry.load("served", &dir, "served").unwrap();
     let server = Server::start("127.0.0.1:0", registry, ServeConfig::default()).unwrap();
     let addr = server.local_addr();
@@ -183,7 +183,7 @@ fn prometheus_exposition_is_parseable() {
 fn profile_endpoint_reports_stage_timing() {
     let dir = bundle_dir("profile");
     export_synthetic_mlp_bundle(&dir, "served", 7, D_IN, &[32, 24], 10).unwrap();
-    let mut registry = Registry::new();
+    let registry = Registry::new();
     registry.load("served", &dir, "served").unwrap();
     let cfg = ServeConfig { trace: Some(trace::TraceMode::All), ..ServeConfig::default() };
     let server = Server::start("127.0.0.1:0", registry, cfg).unwrap();
@@ -285,7 +285,7 @@ fn profile_stage_sums_track_forward_latency() {
 fn request_ids_round_trip_end_to_end() {
     let dir = bundle_dir("rid");
     export_synthetic_mlp_bundle(&dir, "served", 7, D_IN, &[24], 10).unwrap();
-    let mut registry = Registry::new();
+    let registry = Registry::new();
     registry.load("served", &dir, "served").unwrap();
     let server = Server::start("127.0.0.1:0", registry, ServeConfig::default()).unwrap();
     let addr = server.local_addr();

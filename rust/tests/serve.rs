@@ -28,7 +28,7 @@ fn bundle_dir(tag: &str) -> PathBuf {
 fn start_server(tag: &str, cfg: ServeConfig) -> (Server, PathBuf) {
     let dir = bundle_dir(tag);
     export_synthetic_mlp_bundle(&dir, "served", 7, D_IN, &[32, 24], 10).unwrap();
-    let mut registry = Registry::new();
+    let registry = Registry::new();
     registry.load("served", &dir, "served").unwrap();
     let server = Server::start("127.0.0.1:0", registry, cfg).unwrap();
     (server, dir)
@@ -378,7 +378,7 @@ fn error_bodies_are_structured_and_echo_request_id() {
 fn worker_sheds_expired_requests_and_serves_the_rest() {
     let dir = bundle_dir("expiry");
     export_synthetic_mlp_bundle(&dir, "served", 7, D_IN, &[32, 24], 10).unwrap();
-    let mut registry = Registry::new();
+    let registry = Registry::new();
     let entry = registry.load("served", &dir, "served").unwrap();
 
     let queue: Arc<BatchQueue<Request>> = Arc::new(BatchQueue::bounded(4));
