@@ -23,6 +23,7 @@ use flexor::inference::ModePolicy;
 use flexor::runtime::{Manifest, Runtime};
 use flexor::serve::{http, Registry, ServeConfig, Server};
 use flexor::substrate::argparse::Args;
+use flexor::substrate::bench::{merge_bench_history, merge_bench_json};
 use flexor::substrate::json::{self, Json};
 use flexor::substrate::stats::percentiles;
 
@@ -31,6 +32,7 @@ fn main() -> Result<()> {
         .flag("train-steps", "steps before export (with artifacts)", Some("200"))
         .flag("requests", "total single-example requests", Some("256"))
         .flag("clients", "concurrent client threads", Some("8"))
+        .switch("keep-alive", "one persistent connection per client (event-loop concurrency smoke)")
         .flag("workers", "server worker threads", Some("2"))
         .flag("intra-threads", "GEMM threads per forward (0 = auto)", Some("0"))
         .flag("max-batch", "max coalesced batch size", Some("16"))
@@ -126,7 +128,12 @@ fn main() -> Result<()> {
         cfg.max_wait_us
     );
 
-    // 4. concurrent clients fire single-example POST /predict requests
+    // 4. concurrent clients fire single-example POST /predict requests.
+    //    With --keep-alive each client holds ONE persistent connection for
+    //    all its requests — `clients` sockets stay simultaneously open
+    //    against the event-loop front-end (the CI concurrency smoke runs
+    //    this with 512 clients).
+    let keep_alive = a.get_bool("keep-alive");
     let clients = a.get_usize("clients").max(1);
     let per_client = (a.get_usize("requests") / clients).max(1);
     let total = clients * per_client;
@@ -142,6 +149,8 @@ fn main() -> Result<()> {
                 .collect();
             let labels = ys[lo..lo + per_client].to_vec();
             thread::spawn(move || -> Result<(Vec<f64>, usize)> {
+                let mut conn =
+                    if keep_alive { Some(http::client::Conn::connect(addr)?) } else { None };
                 let mut lat = Vec::with_capacity(feats.len());
                 let mut correct = 0usize;
                 for (x, &y) in feats.iter().zip(&labels) {
@@ -151,8 +160,10 @@ fn main() -> Result<()> {
                     ])
                     .to_string();
                     let t0 = Instant::now();
-                    let (status, resp) =
-                        http::client::request(addr, "POST", "/predict", Some(&body))?;
+                    let (status, resp) = match conn.as_mut() {
+                        Some(c) => c.request("POST", "/predict", Some(&body))?,
+                        None => http::client::request(addr, "POST", "/predict", Some(&body))?,
+                    };
                     lat.push(t0.elapsed().as_secs_f64() * 1e3);
                     anyhow::ensure!(status == 200, "predict failed ({status}): {resp}");
                     let pred = json::parse(&resp)?
@@ -194,6 +205,31 @@ fn main() -> Result<()> {
         mj.get("batches_total").as_usize().unwrap_or(0),
         mj.get("latency_ms").get("p99").as_f64().unwrap_or(0.0),
     );
+    if keep_alive {
+        println!(
+            "  connections   : {} accepted, {} keep-alive reuses",
+            mj.get("connections_total").as_usize().unwrap_or(0),
+            mj.get("keepalive_requests_total").as_usize().unwrap_or(0),
+        );
+        // record the concurrency result next to the bench trajectory so
+        // the CI smoke's 512-connection run lands in BENCH_infer.json
+        let mode = std::env::var("FLEXOR_HTTP_MODE").unwrap_or_else(|_| "event_loop".into());
+        let recs = Json::arr(vec![Json::obj(vec![
+            ("name", Json::str("concurrent_connections_p99_ms")),
+            ("http_mode", Json::str(mode)),
+            ("connections", Json::num(clients as f64)),
+            ("requests", Json::num(total as f64)),
+            ("p50_ms", Json::num(ps[0])),
+            ("p99_ms", Json::num(ps[2])),
+            ("throughput_rps", Json::num(total as f64 / total_s)),
+        ])]);
+        let _ = merge_bench_json(
+            Path::new("BENCH_infer.json"),
+            "serve_concurrency",
+            recs.clone(),
+        );
+        let _ = merge_bench_history("serve_concurrency", recs);
+    }
 
     // 7. observability endpoints: the Prometheus exposition and the
     //    per-layer profile (populated when FLEXOR_TRACE samples forwards)

@@ -3,7 +3,10 @@
 //!
 //! * admission-queue push + coalescing pop throughput,
 //! * batched forward amortization (examples/s at batch 1 / 8 / 32),
-//! * end-to-end HTTP predict round-trip on loopback.
+//! * end-to-end HTTP predict round-trip on loopback,
+//! * keep-alive concurrency: hundreds of persistent connections against
+//!   the event-loop front-end vs the thread-per-connection oracle
+//!   (`concurrent_connections_*` records, DESIGN.md §14).
 //!
 //! ```bash
 //! cargo bench --bench serve            # full
@@ -17,7 +20,7 @@ use std::time::{Duration, Instant};
 use flexor::coordinator::export_synthetic_mlp_bundle;
 use flexor::inference::InferenceModel;
 use flexor::repo::BundleRepo;
-use flexor::serve::{http, BatchQueue, Registry, ServeConfig, Server};
+use flexor::serve::{http, BatchQueue, HttpMode, Registry, ServeConfig, Server};
 use flexor::substrate::bench::{black_box, merge_bench_history, merge_bench_json, Bench, CaseMeta};
 use flexor::substrate::fault::{self, FaultPlan};
 use flexor::substrate::json::Json;
@@ -187,6 +190,78 @@ fn main() {
     );
     server.shutdown();
 
+    // 7. concurrency headroom: N persistent keep-alive connections, one
+    //    socket per client, measured against both front-end modes. The
+    //    event loop holds every socket on one thread; the thread-per-
+    //    connection oracle runs at 1/16 the connection count as the
+    //    baseline the §14 "10× more connections at equal-or-better p99"
+    //    claim is judged against.
+    let mut conc_records: Vec<Json> = Vec::new();
+    {
+        let ev_conns = if quick { 64 } else { 512 };
+        let per_conn = if quick { 4 } else { 8 };
+        for (mode, conns) in
+            [(HttpMode::EventLoop, ev_conns), (HttpMode::Threads, (ev_conns / 16).max(4))]
+        {
+            let registry = Registry::new();
+            registry.load("bench", &dir, "bench").unwrap();
+            let cfg = ServeConfig {
+                max_wait_us: 0,
+                http_mode: Some(mode),
+                max_connections: Some(conns * 2),
+                ..ServeConfig::default()
+            };
+            let server = Server::start("127.0.0.1:0", registry, cfg).expect("server start");
+            let addr = server.local_addr();
+            let t_all = Instant::now();
+            let handles: Vec<_> = (0..conns)
+                .map(|_| {
+                    let body = body.clone();
+                    thread::spawn(move || -> Vec<f64> {
+                        let mut c = http::client::Conn::connect(addr).expect("connect");
+                        let mut lat = Vec::with_capacity(per_conn);
+                        for _ in 0..per_conn {
+                            let t0 = Instant::now();
+                            let (status, resp) =
+                                c.request("POST", "/predict", Some(&body)).expect("request");
+                            assert_eq!(status, 200, "{resp}");
+                            lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            let mut lat: Vec<f64> = Vec::with_capacity(conns * per_conn);
+            for h in handles {
+                lat.extend(h.join().expect("client thread panicked"));
+            }
+            let total_s = t_all.elapsed().as_secs_f64();
+            let p50_ms = {
+                let mut v = lat.clone();
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                v[v.len() / 2]
+            };
+            let p99_ms = p99(lat);
+            let rps = (conns * per_conn) as f64 / total_s;
+            println!(
+                "concurrency {}: {conns} keep-alive conns × {per_conn} req → \
+                 p50 {p50_ms:.3} ms, p99 {p99_ms:.3} ms, {rps:.0} req/s",
+                mode.label()
+            );
+            conc_records.push(Json::obj(vec![
+                ("name", Json::str(format!("concurrent keep-alive predict ({})", mode.label()))),
+                ("op", Json::str("concurrent_connections")),
+                ("http_mode", Json::str(mode.label())),
+                ("connections", Json::num(conns as f64)),
+                ("requests", Json::num((conns * per_conn) as f64)),
+                ("concurrent_connections_p50_ms", Json::num(p50_ms)),
+                ("concurrent_connections_p99_ms", Json::num(p99_ms)),
+                ("throughput_rps", Json::num(rps)),
+            ]));
+            server.shutdown();
+        }
+    }
+
     let mut records = b.to_json().as_arr().unwrap_or_default().to_vec();
     records.push(Json::obj(vec![
         ("name", Json::str("http predict p99 across hot-swap")),
@@ -195,6 +270,7 @@ fn main() {
         ("steady_p99_ms", Json::num(steady_p99_ms)),
         ("swap_under_load_p99_ms", Json::num(swap_p99_ms)),
     ]));
+    records.extend(conc_records);
     let records = Json::Arr(records);
     println!("\n{}", records.to_string_pretty());
     merge_bench_json(std::path::Path::new("BENCH_infer.json"), "serve", records.clone())

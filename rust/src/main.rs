@@ -212,7 +212,7 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
 }
 
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
-    use flexor::serve::{Registry, ServeConfig, Server};
+    use flexor::serve::{HttpMode, Registry, ServeConfig, Server};
 
     let a = Args::new(
         "flexor serve",
@@ -235,6 +235,26 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     .flag(
         "max-body-bytes",
         "request body bound, larger bodies get 413 (0 = FLEXOR_MAX_BODY_BYTES env, else 8 MiB)",
+        Some("0"),
+    )
+    .flag(
+        "http-mode",
+        "front-end: event-loop (nonblocking readiness loop, keep-alive + pipelining) or threads (one thread per connection; default: FLEXOR_HTTP_MODE env, else event-loop)",
+        Some(""),
+    )
+    .flag(
+        "idle-ms",
+        "event-loop: close keep-alive connections idle this long (0 = FLEXOR_HTTP_IDLE_MS env, else 30000)",
+        Some("0"),
+    )
+    .flag(
+        "header-ms",
+        "event-loop: 408 a connection whose request head/body stalls this long (0 = FLEXOR_HTTP_HEADER_MS env, else 10000)",
+        Some("0"),
+    )
+    .flag(
+        "max-connections",
+        "event-loop: concurrent connection cap, beyond it accepts get 503 (0 = FLEXOR_MAX_CONNECTIONS env, else 4096)",
         Some("0"),
     )
     .flag(
@@ -267,6 +287,15 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     };
     let deadline = a.get_u64("deadline-ms");
     let max_body = a.get_usize("max-body-bytes");
+    let http_mode = match a.get("http-mode") {
+        "" => None, // fall through to FLEXOR_HTTP_MODE, then the default
+        "threads" | "thread" => Some(HttpMode::Threads),
+        "event-loop" | "event_loop" | "eventloop" | "epoll" => Some(HttpMode::EventLoop),
+        other => anyhow::bail!("unknown --http-mode {other:?} (expected event-loop or threads)"),
+    };
+    let idle_ms = a.get_u64("idle-ms");
+    let header_ms = a.get_u64("header-ms");
+    let max_conns = a.get_usize("max-connections");
     let cfg = ServeConfig {
         workers: a.get_usize("workers"),
         intra_threads: a.get_usize("intra-threads"),
@@ -275,6 +304,10 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         queue_capacity: a.get_usize("queue-capacity"),
         default_deadline_ms: (deadline > 0).then_some(deadline),
         max_body_bytes: (max_body > 0).then_some(max_body),
+        http_mode,
+        idle_timeout_ms: (idle_ms > 0).then_some(idle_ms),
+        header_timeout_ms: (header_ms > 0).then_some(header_ms),
+        max_connections: (max_conns > 0).then_some(max_conns),
         trace: None,
     };
 

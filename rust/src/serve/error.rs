@@ -19,6 +19,9 @@ pub enum ErrorCode {
     NoRoute,
     /// 405 — route exists, method does not.
     MethodNotAllowed,
+    /// 408 — client was too slow delivering the request head or body
+    /// (per-connection header/body timeout).
+    RequestTimeout,
     /// 409 — a model swap is already in progress for the alias.
     SwapInProgress,
     /// 409 — bundle failed signature/digest/parse checks; nothing was
@@ -26,6 +29,8 @@ pub enum ErrorCode {
     BundleRejected,
     /// 413 — request body exceeds the configured byte bound.
     BodyTooLarge,
+    /// 431 — request line or header block exceeds the line/count bounds.
+    HeadersTooLarge,
     /// 500 — forward pass returned an error.
     Internal,
     /// 500 — a worker panicked while serving the batch.
@@ -49,8 +54,10 @@ impl ErrorCode {
             ErrorCode::BadRequest => 400,
             ErrorCode::UnknownModel | ErrorCode::NoRoute => 404,
             ErrorCode::MethodNotAllowed => 405,
+            ErrorCode::RequestTimeout => 408,
             ErrorCode::SwapInProgress | ErrorCode::BundleRejected => 409,
             ErrorCode::BodyTooLarge => 413,
+            ErrorCode::HeadersTooLarge => 431,
             ErrorCode::Internal | ErrorCode::WorkerPanic | ErrorCode::Integrity => 500,
             ErrorCode::QueueFull | ErrorCode::Draining | ErrorCode::DeadlineExceeded => 503,
             ErrorCode::Timeout => 504,
@@ -64,6 +71,8 @@ impl ErrorCode {
             ErrorCode::UnknownModel => "unknown_model",
             ErrorCode::NoRoute => "no_route",
             ErrorCode::MethodNotAllowed => "method_not_allowed",
+            ErrorCode::RequestTimeout => "request_timeout",
+            ErrorCode::HeadersTooLarge => "headers_too_large",
             ErrorCode::SwapInProgress => "swap_in_progress",
             ErrorCode::BundleRejected => "bundle_rejected",
             ErrorCode::BodyTooLarge => "body_too_large",
@@ -113,6 +122,8 @@ mod tests {
         assert_eq!(ErrorCode::SwapInProgress.status(), 409);
         assert_eq!(ErrorCode::BundleRejected.status(), 409);
         assert_eq!(ErrorCode::BodyTooLarge.status(), 413);
+        assert_eq!(ErrorCode::RequestTimeout.status(), 408);
+        assert_eq!(ErrorCode::HeadersTooLarge.status(), 431);
         assert_eq!(ErrorCode::WorkerPanic.status(), 500);
         assert_eq!(ErrorCode::QueueFull.status(), 503);
         assert_eq!(ErrorCode::DeadlineExceeded.status(), 503);

@@ -47,9 +47,22 @@
 //! arrivals get `503`/`draining`), stop accepting, drain the queue,
 //! join the workers.
 //!
-//! One thread per connection with keep-alive — plenty for the loopback /
-//! benchmark traffic this repo drives today; the accept loop is the
-//! obvious seam for a future acceptor/reactor upgrade.
+//! Two front-end concurrency models share this module (DESIGN.md §14):
+//!
+//! * [`HttpMode::EventLoop`] (default) — a single nonblocking readiness
+//!   loop (`substrate::net`, epoll on Linux) multiplexing every
+//!   connection: keep-alive + HTTP/1.1 pipelining, bounded
+//!   per-connection buffers, incremental framing ([`FrameParser`]),
+//!   idle/header timeouts (`408`/`431`), a connection cap, and explicit
+//!   backpressure — a full admission queue suspends reads instead of
+//!   buffering unboundedly. `/predict` bodies stream through the
+//!   zero-allocation [`json::Lexer`] via [`PredictVisitor`] into
+//!   arena-recycled feature buffers; worker completions come back over a
+//!   [`CompletionBoard`](super::worker::CompletionBoard) that wakes the
+//!   loop.
+//! * [`HttpMode::Threads`] — the original one-blocking-thread-per-
+//!   connection model, kept as a fallback (`FLEXOR_HTTP_MODE=threads`)
+//!   and as the behavioral oracle for differential tests.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -64,7 +77,7 @@ use super::error::ErrorCode;
 use super::metrics::ServeMetrics;
 use super::queue::{BatchQueue, PushError};
 use super::registry::{ControlError, Registry};
-use super::worker::{Request, WorkerPool};
+use super::worker::{Request, Responder, WorkerPool};
 use crate::inference::bitslice::popcount;
 use crate::substrate::json::{self, Json};
 use crate::substrate::pool;
@@ -72,6 +85,26 @@ use crate::substrate::trace::{self, Level};
 
 const CT_JSON: &str = "application/json";
 const CT_PROM: &str = "text/plain; version=0.0.4";
+
+/// Front-end concurrency model (DESIGN.md §14).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HttpMode {
+    /// One nonblocking readiness loop multiplexing every connection
+    /// (epoll on Linux via `substrate::net`). The default.
+    EventLoop,
+    /// One blocking thread per connection — the pre-§14 model, kept as a
+    /// fallback and as the behavioral oracle in differential tests.
+    Threads,
+}
+
+impl HttpMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            HttpMode::EventLoop => "event_loop",
+            HttpMode::Threads => "threads",
+        }
+    }
+}
 
 /// Serving policy knobs. Compute-engine selection is *not* here: it is
 /// a property of the registry the caller builds and hands to
@@ -106,6 +139,23 @@ pub struct ServeConfig {
     /// buffering. `None` (default) defers to `FLEXOR_MAX_BODY_BYTES`,
     /// else 8 MiB.
     pub max_body_bytes: Option<usize>,
+    /// Front-end concurrency model. `None` (default) defers to
+    /// `FLEXOR_HTTP_MODE` (`event_loop` | `threads`), else the event
+    /// loop. Non-unix platforms always fall back to threads.
+    pub http_mode: Option<HttpMode>,
+    /// Idle keep-alive connections are closed silently after this many
+    /// ms without traffic (event-loop mode). `None` (default) defers to
+    /// `FLEXOR_HTTP_IDLE_MS`, else 30 000.
+    pub idle_timeout_ms: Option<u64>,
+    /// A connection that dribbles its request head/body slower than this
+    /// budget (ms) gets `408`/`request_timeout` and is closed — the
+    /// slowloris defense (event-loop mode). `None` (default) defers to
+    /// `FLEXOR_HTTP_HEADER_MS`, else 10 000.
+    pub header_timeout_ms: Option<u64>,
+    /// Simultaneous-connection cap; beyond it new connections get an
+    /// immediate `503` + `Retry-After` (event-loop mode). `None`
+    /// (default) defers to `FLEXOR_MAX_CONNECTIONS`, else 4096.
+    pub max_connections: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -119,7 +169,23 @@ impl Default for ServeConfig {
             trace: None,
             default_deadline_ms: None,
             max_body_bytes: None,
+            http_mode: None,
+            idle_timeout_ms: None,
+            header_timeout_ms: None,
+            max_connections: None,
         }
+    }
+}
+
+fn env_u64(key: &str) -> Option<u64> {
+    std::env::var(key).ok().and_then(|v| v.trim().parse().ok())
+}
+
+fn http_mode_env() -> Option<HttpMode> {
+    match std::env::var("FLEXOR_HTTP_MODE").ok()?.trim().to_ascii_lowercase().as_str() {
+        "threads" | "thread" => Some(HttpMode::Threads),
+        "event_loop" | "event-loop" | "eventloop" | "epoll" => Some(HttpMode::EventLoop),
+        _ => None,
     }
 }
 
@@ -179,6 +245,26 @@ impl Server {
             })
             .filter(|&b| b > 0)
             .unwrap_or(DEFAULT_MAX_BODY_BYTES);
+        let mode = cfg.http_mode.or_else(http_mode_env).unwrap_or(HttpMode::EventLoop);
+        #[cfg(not(unix))]
+        let mode = HttpMode::Threads;
+        let dials = LoopDials {
+            idle_ms: cfg
+                .idle_timeout_ms
+                .or_else(|| env_u64("FLEXOR_HTTP_IDLE_MS"))
+                .filter(|&ms| ms > 0)
+                .unwrap_or(30_000),
+            header_ms: cfg
+                .header_timeout_ms
+                .or_else(|| env_u64("FLEXOR_HTTP_HEADER_MS"))
+                .filter(|&ms| ms > 0)
+                .unwrap_or(10_000),
+            max_conns: cfg
+                .max_connections
+                .or_else(|| env_u64("FLEXOR_MAX_CONNECTIONS").map(|v| v as usize))
+                .filter(|&n| n > 0)
+                .unwrap_or(4096),
+        };
         let listener = TcpListener::bind(addr).context("binding serve socket")?;
         let local = listener.local_addr()?;
 
@@ -200,44 +286,24 @@ impl Server {
             ("intra_threads", Json::num(pool::global().threads() as f64)),
             ("models", Json::num(registry.len() as f64)),
             ("trace", Json::str(trace_mode.label())),
+            ("http_mode", Json::str(mode.label())),
         ]);
 
         let shutdown = Arc::new(AtomicBool::new(false));
         let draining = Arc::new(AtomicBool::new(false));
         let workers_alive = workers.alive_handle();
-        let accept_handle = {
-            let shutdown = shutdown.clone();
-            let draining = draining.clone();
-            let registry = registry.clone();
-            let metrics = metrics.clone();
-            let queue = queue.clone();
-            thread::Builder::new()
-                .name("serve-accept".to_string())
-                .spawn(move || {
-                    for stream in listener.incoming() {
-                        if shutdown.load(Ordering::SeqCst) {
-                            break;
-                        }
-                        let Ok(stream) = stream else { continue };
-                        let ctx = ConnCtx {
-                            registry: registry.clone(),
-                            metrics: metrics.clone(),
-                            queue: queue.clone(),
-                            shutdown: shutdown.clone(),
-                            draining: draining.clone(),
-                            workers_alive: workers_alive.clone(),
-                            trace_mode,
-                            default_deadline,
-                            max_body,
-                        };
-                        thread::Builder::new()
-                            .name("serve-conn".to_string())
-                            .spawn(move || handle_conn(stream, &ctx))
-                            .ok();
-                    }
-                })
-                .context("spawning accept thread")?
+        let ctx = ConnCtx {
+            registry: registry.clone(),
+            metrics: metrics.clone(),
+            queue: queue.clone(),
+            shutdown: shutdown.clone(),
+            draining: draining.clone(),
+            workers_alive,
+            trace_mode,
+            default_deadline,
+            max_body,
         };
+        let accept_handle = spawn_front_end(mode, listener, ctx, dials)?;
 
         Ok(Server {
             addr: local,
@@ -304,6 +370,7 @@ impl Server {
     }
 }
 
+#[derive(Clone)]
 struct ConnCtx {
     registry: Arc<Registry>,
     metrics: Arc<ServeMetrics>,
@@ -316,6 +383,61 @@ struct ConnCtx {
     default_deadline: Option<u64>,
     /// Request body byte bound (`413` beyond it).
     max_body: usize,
+}
+
+/// Event-loop dials resolved per server start (env fallbacks are read at
+/// start, not OnceLock-cached, so tests can vary them in one process).
+#[derive(Clone, Copy, Debug)]
+#[allow(dead_code)] // unread in threads-only (non-unix) builds
+struct LoopDials {
+    idle_ms: u64,
+    header_ms: u64,
+    max_conns: usize,
+}
+
+#[cfg(unix)]
+fn spawn_front_end(
+    mode: HttpMode,
+    listener: TcpListener,
+    ctx: ConnCtx,
+    dials: LoopDials,
+) -> Result<thread::JoinHandle<()>> {
+    match mode {
+        HttpMode::EventLoop => ev::spawn(listener, ctx, dials),
+        HttpMode::Threads => spawn_thread_accept(listener, ctx),
+    }
+}
+
+#[cfg(not(unix))]
+fn spawn_front_end(
+    _mode: HttpMode,
+    listener: TcpListener,
+    ctx: ConnCtx,
+    _dials: LoopDials,
+) -> Result<thread::JoinHandle<()>> {
+    spawn_thread_accept(listener, ctx)
+}
+
+/// [`HttpMode::Threads`]: blocking accept loop, one thread per
+/// connection running [`handle_conn`].
+fn spawn_thread_accept(listener: TcpListener, ctx: ConnCtx) -> Result<thread::JoinHandle<()>> {
+    let shutdown = ctx.shutdown.clone();
+    thread::Builder::new()
+        .name("serve-accept".to_string())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let ctx = ctx.clone();
+                thread::Builder::new()
+                    .name("serve-conn".to_string())
+                    .spawn(move || handle_conn(stream, &ctx))
+                    .ok();
+            }
+        })
+        .context("spawning accept thread")
 }
 
 const DEFAULT_MAX_BODY_BYTES: usize = 8 << 20;
@@ -538,6 +660,339 @@ fn read_request<R: BufRead>(
         }
     }
     Err(bad("too many header lines".to_string()))
+}
+
+/// Accumulated request-head bound for the incremental parser; beyond it
+/// the connection gets `431` (the event-loop slowloris/garbage bound).
+pub const MAX_HEAD_BYTES: usize = 16 << 10;
+const MAX_METHOD_BYTES: usize = 16;
+const MAX_PATH_BYTES: usize = 256;
+
+/// A framing failure, carrying the wire contract directly: HTTP status,
+/// stable [`ErrorCode`], human message. The connection closes after the
+/// error response — framing state cannot be resynchronized.
+#[derive(Debug)]
+pub struct FrameError {
+    pub status: u16,
+    pub code: ErrorCode,
+    pub msg: String,
+}
+
+impl FrameError {
+    fn bad(msg: String) -> FrameError {
+        FrameError { status: 400, code: ErrorCode::BadRequest, msg }
+    }
+
+    fn too_large(msg: String) -> FrameError {
+        FrameError { status: 431, code: ErrorCode::HeadersTooLarge, msg }
+    }
+}
+
+/// One complete request framed off the wire, borrowing from the parser's
+/// buffers — no per-request allocation. `path` is empty when the raw
+/// path was oversized or non-UTF-8 (nothing routable is); `body` is raw
+/// bytes so `/predict` can stream-lex without materializing a `String`.
+pub struct Frame<'a> {
+    pub method: &'a str,
+    pub path: &'a str,
+    pub keep_alive: bool,
+    pub request_id: Option<&'a str>,
+    pub deadline_ms: Option<u64>,
+    pub body: &'a [u8],
+}
+
+enum FrameState {
+    /// Accumulating until the blank line ends the head.
+    Head,
+    /// Head parsed; waiting for `body_len` bytes after `head_len`.
+    Body { head_len: usize, body_len: usize },
+}
+
+/// Incremental, resumable HTTP/1.1 request framer for the event loop.
+///
+/// Feed raw socket bytes with [`feed`](FrameParser::feed); pull complete
+/// requests with [`next_frame`](FrameParser::next_frame) and release each
+/// with [`consume`](FrameParser::consume) (pipelined requests queue up in
+/// the same buffer). The state machine is byte-boundary agnostic: a
+/// request split at every byte yields exactly the same frames as one
+/// arriving whole. Steady state allocates nothing — head fields land in
+/// inline arrays, the buffer's warm capacity is reused, and `consume`
+/// compacts in place.
+///
+/// Error contract mirrors [`read_request`] (`400` malformed, `413`
+/// oversized body before buffering) plus `431` for head-size violations
+/// only the incremental path can meter (total head bytes, line length,
+/// header count).
+pub struct FrameParser {
+    buf: Vec<u8>,
+    /// Resume point for the head-terminator scan (no O(n²) re-scans
+    /// under byte-at-a-time arrival).
+    scan: usize,
+    state: FrameState,
+    max_body: usize,
+    method: [u8; MAX_METHOD_BYTES],
+    method_len: usize,
+    path: [u8; MAX_PATH_BYTES],
+    path_len: usize,
+    path_bad: bool,
+    rid: [u8; 64],
+    rid_len: usize,
+    keep_alive: bool,
+    deadline_ms: Option<u64>,
+    /// Bytes of the last yielded frame, drained by `consume`.
+    yielded: usize,
+}
+
+fn strip_cr(l: &[u8]) -> &[u8] {
+    match l.split_last() {
+        Some((&b'\r', rest)) => rest,
+        _ => l,
+    }
+}
+
+fn trim_bytes(mut b: &[u8]) -> &[u8] {
+    while let Some((f, rest)) = b.split_first() {
+        if f.is_ascii_whitespace() {
+            b = rest;
+        } else {
+            break;
+        }
+    }
+    while let Some((l, rest)) = b.split_last() {
+        if l.is_ascii_whitespace() {
+            b = rest;
+        } else {
+            break;
+        }
+    }
+    b
+}
+
+/// Digits-only integer parse with an overflow guard (19 digits max).
+fn parse_dec_u64(b: &[u8]) -> Option<u64> {
+    if b.is_empty() || b.len() > 19 {
+        return None;
+    }
+    let mut n = 0u64;
+    for &c in b {
+        if !c.is_ascii_digit() {
+            return None;
+        }
+        n = n * 10 + (c - b'0') as u64;
+    }
+    Some(n)
+}
+
+impl FrameParser {
+    pub fn new(max_body: usize) -> FrameParser {
+        FrameParser {
+            buf: Vec::new(),
+            scan: 0,
+            state: FrameState::Head,
+            max_body,
+            method: [0; MAX_METHOD_BYTES],
+            method_len: 0,
+            path: [0; MAX_PATH_BYTES],
+            path_len: 0,
+            path_bad: false,
+            rid: [0; 64],
+            rid_len: 0,
+            keep_alive: true,
+            deadline_ms: None,
+            yielded: 0,
+        }
+    }
+
+    /// Append raw socket bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet released by [`consume`](Self::consume).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Drop the last yielded frame's bytes; must be called once per
+    /// yielded frame before asking for the next one.
+    pub fn consume(&mut self) {
+        if self.yielded > 0 {
+            self.buf.drain(..self.yielded);
+            self.yielded = 0;
+        }
+        self.scan = 0;
+        self.state = FrameState::Head;
+    }
+
+    /// Try to frame one complete request out of the buffer. `Ok(None)` =
+    /// need more bytes; errors are terminal for the connection. Calling
+    /// again without [`consume`](Self::consume) re-yields the same frame.
+    pub fn next_frame(&mut self) -> Result<Option<Frame<'_>>, FrameError> {
+        if let FrameState::Head = self.state {
+            let Some(head_end) = self.find_head_end() else {
+                if self.buf.len() > MAX_HEAD_BYTES {
+                    return Err(FrameError::too_large(format!(
+                        "request head exceeds {MAX_HEAD_BYTES} bytes"
+                    )));
+                }
+                return Ok(None);
+            };
+            // parse out of a temporarily moved buffer so the head parse
+            // can fill `self`'s inline fields (no copy: Vec move)
+            let buf = std::mem::take(&mut self.buf);
+            let parsed = self.parse_head(&buf[..head_end]);
+            self.buf = buf;
+            let body_len = parsed?;
+            self.state = FrameState::Body { head_len: head_end, body_len };
+        }
+        let FrameState::Body { head_len, body_len } = self.state else { unreachable!() };
+        if self.buf.len() < head_len + body_len {
+            return Ok(None);
+        }
+        self.yielded = head_len + body_len;
+        Ok(Some(Frame {
+            method: core::str::from_utf8(&self.method[..self.method_len]).unwrap_or(""),
+            path: if self.path_bad {
+                ""
+            } else {
+                core::str::from_utf8(&self.path[..self.path_len]).unwrap_or("")
+            },
+            keep_alive: self.keep_alive,
+            request_id: if self.rid_len > 0 {
+                core::str::from_utf8(&self.rid[..self.rid_len]).ok()
+            } else {
+                None
+            },
+            deadline_ms: self.deadline_ms,
+            body: &self.buf[head_len..head_len + body_len],
+        }))
+    }
+
+    /// Index one past the head terminator (`\r\n\r\n` or, leniently like
+    /// [`read_request`]'s `read_line`, bare `\n\n` / `\n\r\n`).
+    fn find_head_end(&mut self) -> Option<usize> {
+        let buf = &self.buf;
+        let mut i = self.scan.saturating_sub(2);
+        while i < buf.len() {
+            if buf[i] == b'\n' {
+                if i + 1 < buf.len() && buf[i + 1] == b'\n' {
+                    return Some(i + 2);
+                }
+                if i + 2 < buf.len() && buf[i + 1] == b'\r' && buf[i + 2] == b'\n' {
+                    return Some(i + 3);
+                }
+            }
+            i += 1;
+        }
+        self.scan = buf.len();
+        None
+    }
+
+    /// Parse a complete head into the inline fields; returns the body
+    /// length. Semantics track [`read_request`] line by line.
+    fn parse_head(&mut self, head: &[u8]) -> Result<usize, FrameError> {
+        self.method_len = 0;
+        self.path_len = 0;
+        self.path_bad = false;
+        self.rid_len = 0;
+        self.deadline_ms = None;
+        let mut lines = head.split(|&b| b == b'\n');
+        let req_line = strip_cr(lines.next().unwrap_or(&[]));
+        if req_line.len() > MAX_LINE_BYTES {
+            return Err(FrameError::too_large(format!(
+                "request line exceeds {MAX_LINE_BYTES} bytes"
+            )));
+        }
+        let mut parts =
+            req_line.split(|&b| b == b' ' || b == b'\t').filter(|t| !t.is_empty());
+        let method = parts.next().unwrap_or(&[]);
+        let path = parts.next().unwrap_or(&[]);
+        let version = parts.next().unwrap_or(&[]);
+        if method.is_empty() || path.is_empty() || !version.starts_with(b"HTTP/") {
+            return Err(FrameError::bad(format!(
+                "malformed request line {:?}",
+                String::from_utf8_lossy(req_line)
+            )));
+        }
+        for (i, &b) in method.iter().take(MAX_METHOD_BYTES).enumerate() {
+            self.method[i] = b.to_ascii_uppercase();
+            self.method_len = i + 1;
+        }
+        if path.len() > MAX_PATH_BYTES || core::str::from_utf8(path).is_err() {
+            self.path_bad = true; // nothing routable is that long — 404s
+        } else {
+            self.path[..path.len()].copy_from_slice(path);
+            self.path_len = path.len();
+        }
+        self.keep_alive = version != &b"HTTP/1.0"[..];
+
+        let mut content_length = 0usize;
+        let mut nlines = 0usize;
+        for raw in lines {
+            let line = strip_cr(raw);
+            if line.is_empty() {
+                break; // blank terminator
+            }
+            nlines += 1;
+            if nlines > MAX_HEADER_LINES {
+                return Err(FrameError::too_large("too many header lines".to_string()));
+            }
+            if line.len() > MAX_LINE_BYTES {
+                return Err(FrameError::too_large(format!(
+                    "header line exceeds {MAX_LINE_BYTES} bytes"
+                )));
+            }
+            let Some(colon) = line.iter().position(|&b| b == b':') else { continue };
+            let name = &line[..colon];
+            let value = trim_bytes(&line[colon + 1..]);
+            if name.eq_ignore_ascii_case(b"content-length") {
+                content_length = parse_dec_u64(value).ok_or_else(|| {
+                    FrameError::bad(format!(
+                        "bad content-length {:?}",
+                        String::from_utf8_lossy(value)
+                    ))
+                })? as usize;
+                if content_length > self.max_body {
+                    return Err(FrameError {
+                        status: 413,
+                        code: ErrorCode::BodyTooLarge,
+                        msg: format!(
+                            "body too large ({content_length} bytes, limit {})",
+                            self.max_body
+                        ),
+                    });
+                }
+            } else if name.eq_ignore_ascii_case(b"connection") {
+                if value.eq_ignore_ascii_case(b"close") {
+                    self.keep_alive = false;
+                } else if value.eq_ignore_ascii_case(b"keep-alive") {
+                    self.keep_alive = true;
+                }
+            } else if name.eq_ignore_ascii_case(b"x-request-id") {
+                for &b in value {
+                    if self.rid_len == self.rid.len() {
+                        break;
+                    }
+                    if b.is_ascii_alphanumeric() || matches!(b, b'-' | b'_' | b'.') {
+                        self.rid[self.rid_len] = b;
+                        self.rid_len += 1;
+                    }
+                }
+            } else if name.eq_ignore_ascii_case(b"x-deadline-ms") {
+                let ms = parse_dec_u64(value).ok_or_else(|| {
+                    FrameError::bad(format!(
+                        "bad x-deadline-ms {:?}",
+                        String::from_utf8_lossy(value)
+                    ))
+                })?;
+                if ms == 0 {
+                    return Err(FrameError::bad("x-deadline-ms must be positive".to_string()));
+                }
+                self.deadline_ms = Some(ms);
+            }
+        }
+        Ok(content_length)
+    }
 }
 
 /// Route one request:
@@ -885,22 +1340,26 @@ fn retry_after_hint(ctx: &ConnCtx) -> u32 {
     ((1.0 + backlog_ms / 1000.0) as u32).clamp(1, 30)
 }
 
+/// Count + log a rejection that never reached a worker, so /metrics and
+/// the structured log show load shedding and client errors instead of a
+/// silent flat line. `shed` marks the 503-with-retry-hint flavour.
+fn record_reject(ctx: &ConnCtx, rid: &str, code: ErrorCode, msg: &str, shed: bool) {
+    ctx.metrics.record_rejected();
+    if shed {
+        // 503s with a retry hint are load shedding, not client error
+        ctx.metrics.record_shed();
+    }
+    trace::log(Level::Warn, "request_rejected", &[
+        ("request_id", Json::str(rid)),
+        ("status", Json::num(code.status() as f64)),
+        ("code", Json::str(code.label())),
+        ("reason", Json::str(msg)),
+    ]);
+}
+
 fn handle_predict(req: &HttpRequest, ctx: &ConnCtx, rid: &str) -> (u16, String, Option<u32>) {
-    // rejections never reach a worker; count + log them so /metrics and
-    // the structured log show load shedding and client errors instead of
-    // a silent flat line
     let reject = |code: ErrorCode, msg: &str, retry: Option<u32>| {
-        ctx.metrics.record_rejected();
-        if retry.is_some() {
-            // 503s with a retry hint are load shedding, not client error
-            ctx.metrics.record_shed();
-        }
-        trace::log(Level::Warn, "request_rejected", &[
-            ("request_id", Json::str(rid)),
-            ("status", Json::num(code.status() as f64)),
-            ("code", Json::str(code.label())),
-            ("reason", Json::str(msg)),
-        ]);
+        record_reject(ctx, rid, code, msg, retry.is_some());
         (code.status(), err_json(code, msg, Some(rid)), retry)
     };
     if ctx.draining.load(Ordering::SeqCst) {
@@ -978,7 +1437,7 @@ fn handle_predict(req: &HttpRequest, ctx: &ConnCtx, rid: &str) -> (u16, String, 
         .or(ctx.default_deadline)
         .map(|ms| enqueued + Duration::from_millis(ms));
     let (tx, rx) = mpsc::channel();
-    let request = Request { entry, features, respond: tx, enqueued, deadline };
+    let request = Request { entry, features, respond: Responder::Channel(tx), enqueued, deadline };
     if let Err((_, e)) = ctx.queue.try_push(request) {
         let (code, msg) = match e {
             PushError::Full => (ErrorCode::QueueFull, "admission queue full, retry later"),
@@ -1018,6 +1477,271 @@ fn handle_predict(req: &HttpRequest, ctx: &ConnCtx, rid: &str) -> (u16, String, 
     }
 }
 
+/// Longest model name the zero-allocation predict path captures inline;
+/// longer names are structurally valid but can never match a registered
+/// alias, so they report as unknown without being materialized.
+pub const MAX_MODEL_NAME: usize = 160;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum PendingKey {
+    None,
+    Model,
+    Features,
+}
+
+/// Streaming [`json::Visitor`] for the hot `/predict` body shape
+/// `{"model": <str?>, "features": [f32...]}` — extracts both fields in a
+/// single pass over the raw bytes with zero allocation in steady state:
+/// the model name lands in an inline array and the feature values are
+/// written directly into a recycled `Vec<f32>` from the connection
+/// arena. Unknown top-level keys are skipped; duplicate keys are
+/// last-wins, matching the tree parser the threads path uses.
+pub struct PredictVisitor {
+    pub features: Vec<f32>,
+    model: [u8; MAX_MODEL_NAME],
+    model_len: usize,
+    model_seen: bool,
+    model_bad: bool,
+    model_overflow: bool,
+    features_seen: bool,
+    features_bad: bool,
+    depth: u32,
+    pending: PendingKey,
+    in_features: bool,
+}
+
+impl PredictVisitor {
+    /// `features` should come from the arena (cleared); its warm capacity
+    /// is what makes the steady-state parse allocation-free.
+    pub fn new(features: Vec<f32>) -> PredictVisitor {
+        PredictVisitor {
+            features,
+            model: [0; MAX_MODEL_NAME],
+            model_len: 0,
+            model_seen: false,
+            model_bad: false,
+            model_overflow: false,
+            features_seen: false,
+            features_bad: false,
+            depth: 0,
+            pending: PendingKey::None,
+            in_features: false,
+        }
+    }
+
+    /// The captured model name; `None` when the field was absent, null,
+    /// or longer than [`MAX_MODEL_NAME`] (check [`model_seen`] /
+    /// [`model_overflow`] to tell which).
+    ///
+    /// [`model_seen`]: Self::model_seen
+    /// [`model_overflow`]: Self::model_overflow
+    pub fn model(&self) -> Option<&str> {
+        if !self.model_seen || self.model_overflow {
+            return None;
+        }
+        core::str::from_utf8(&self.model[..self.model_len]).ok()
+    }
+
+    /// Whether a non-null `model` value appeared (tree-parser parity:
+    /// `model: null` behaves exactly like an absent field).
+    pub fn model_seen(&self) -> bool {
+        self.model_seen
+    }
+
+    /// `model` was present but not a string.
+    pub fn model_bad(&self) -> bool {
+        self.model_bad
+    }
+
+    /// `model` was a string longer than the inline capture buffer.
+    pub fn model_overflow(&self) -> bool {
+        self.model_overflow
+    }
+
+    /// `features` was present and a flat array of numbers.
+    pub fn features_ok(&self) -> bool {
+        self.features_seen && !self.features_bad
+    }
+
+    /// Reclaim the feature buffer (for the queue or back to the arena).
+    pub fn into_features(self) -> Vec<f32> {
+        self.features
+    }
+
+    fn scalar_value(&mut self) {
+        if self.in_features {
+            if self.depth == 2 {
+                // handled by the typed callbacks; on_num pushes, the
+                // rest mark the array mixed-typed
+            } else {
+                self.features_bad = true;
+            }
+        }
+        self.pending = PendingKey::None;
+    }
+}
+
+impl json::Visitor for PredictVisitor {
+    fn on_key(&mut self, key: &str) -> Result<(), &'static str> {
+        if self.depth == 1 {
+            self.pending = match key {
+                "model" => {
+                    // duplicate key: last value wins, like the tree parser
+                    self.model_len = 0;
+                    self.model_seen = false;
+                    self.model_bad = false;
+                    self.model_overflow = false;
+                    PendingKey::Model
+                }
+                "features" => {
+                    self.features.clear();
+                    self.features_seen = false;
+                    self.features_bad = false;
+                    PendingKey::Features
+                }
+                _ => PendingKey::None,
+            };
+        }
+        Ok(())
+    }
+
+    fn on_null(&mut self) -> Result<(), &'static str> {
+        if self.depth == 1 && self.pending == PendingKey::Features {
+            self.features_seen = true;
+            self.features_bad = true;
+        }
+        if self.in_features && self.depth == 2 {
+            self.features_bad = true;
+        }
+        // model: null stays "unseen" — tree-parser parity with is_null()
+        self.scalar_value();
+        Ok(())
+    }
+
+    fn on_bool(&mut self, _b: bool) -> Result<(), &'static str> {
+        if self.depth == 1 {
+            match self.pending {
+                PendingKey::Model => {
+                    self.model_seen = true;
+                    self.model_bad = true;
+                }
+                PendingKey::Features => {
+                    self.features_seen = true;
+                    self.features_bad = true;
+                }
+                PendingKey::None => {}
+            }
+        }
+        if self.in_features && self.depth == 2 {
+            self.features_bad = true;
+        }
+        self.scalar_value();
+        Ok(())
+    }
+
+    fn on_num(&mut self, n: f64) -> Result<(), &'static str> {
+        if self.in_features && self.depth == 2 {
+            self.features.push(n as f32);
+        } else if self.depth == 1 {
+            match self.pending {
+                PendingKey::Model => {
+                    self.model_seen = true;
+                    self.model_bad = true;
+                }
+                PendingKey::Features => {
+                    self.features_seen = true;
+                    self.features_bad = true;
+                }
+                PendingKey::None => {}
+            }
+        }
+        self.scalar_value();
+        Ok(())
+    }
+
+    fn on_str(&mut self, s: &str) -> Result<(), &'static str> {
+        if self.depth == 1 {
+            match self.pending {
+                PendingKey::Model => {
+                    self.model_seen = true;
+                    if s.len() > MAX_MODEL_NAME {
+                        self.model_overflow = true;
+                    } else {
+                        self.model[..s.len()].copy_from_slice(s.as_bytes());
+                        self.model_len = s.len();
+                    }
+                }
+                PendingKey::Features => {
+                    self.features_seen = true;
+                    self.features_bad = true;
+                }
+                PendingKey::None => {}
+            }
+        }
+        if self.in_features && self.depth == 2 {
+            self.features_bad = true;
+        }
+        self.scalar_value();
+        Ok(())
+    }
+
+    fn begin_arr(&mut self) -> Result<(), &'static str> {
+        if self.in_features {
+            // nested array inside features → not a flat numeric vector
+            self.features_bad = true;
+        } else if self.depth == 1 {
+            match self.pending {
+                PendingKey::Features => {
+                    self.in_features = true;
+                    self.features_seen = true;
+                }
+                PendingKey::Model => {
+                    self.model_seen = true;
+                    self.model_bad = true;
+                }
+                PendingKey::None => {}
+            }
+        }
+        self.depth += 1;
+        self.pending = PendingKey::None;
+        Ok(())
+    }
+
+    fn end_arr(&mut self) -> Result<(), &'static str> {
+        self.depth = self.depth.saturating_sub(1);
+        if self.in_features && self.depth == 1 {
+            self.in_features = false;
+        }
+        Ok(())
+    }
+
+    fn begin_obj(&mut self) -> Result<(), &'static str> {
+        if self.in_features {
+            self.features_bad = true;
+        } else if self.depth == 1 {
+            match self.pending {
+                PendingKey::Model => {
+                    self.model_seen = true;
+                    self.model_bad = true;
+                }
+                PendingKey::Features => {
+                    self.features_seen = true;
+                    self.features_bad = true;
+                }
+                PendingKey::None => {}
+            }
+        }
+        self.depth += 1;
+        self.pending = PendingKey::None;
+        Ok(())
+    }
+
+    fn end_obj(&mut self) -> Result<(), &'static str> {
+        self.depth = self.depth.saturating_sub(1);
+        Ok(())
+    }
+}
+
 fn err_json(code: ErrorCode, msg: &str, rid: Option<&str>) -> String {
     let mut o = Json::obj(vec![
         ("error", Json::str(msg)),
@@ -1035,13 +1759,52 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         409 => "Conflict",
         413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         504 => "Gateway Timeout",
         _ => "Unknown",
     }
+}
+
+/// Render a full response to wire bytes — the single source of the
+/// response format for both front-ends (the thread-per-connection path
+/// writes it straight out; the event loop appends it to a write buffer).
+#[allow(clippy::too_many_arguments)]
+fn render_response(
+    status: u16,
+    body: &str,
+    content_type: &str,
+    request_id: Option<&str>,
+    retry_after: Option<u32>,
+    allow: Option<&'static str>,
+    keep_alive: bool,
+) -> Vec<u8> {
+    let rid_header = request_id
+        .map(|r| format!("X-Request-Id: {r}\r\n"))
+        .unwrap_or_default();
+    let retry_header = retry_after
+        .map(|s| format!("Retry-After: {s}\r\n"))
+        .unwrap_or_default();
+    let allow_header = allow
+        .map(|a| format!("Allow: {a}\r\n"))
+        .unwrap_or_default();
+    format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{}{}{}Connection: {}\r\n\r\n{}",
+        status,
+        reason(status),
+        content_type,
+        body.len(),
+        rid_header,
+        retry_header,
+        allow_header,
+        if keep_alive { "keep-alive" } else { "close" },
+        body
+    )
+    .into_bytes()
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -1057,28 +1820,9 @@ fn write_response<W: Write>(
 ) -> std::io::Result<()> {
     // one write_all per response: formatting straight into a NODELAY
     // socket would issue a syscall (and possibly a packet) per fragment
-    let rid_header = request_id
-        .map(|r| format!("X-Request-Id: {r}\r\n"))
-        .unwrap_or_default();
-    let retry_header = retry_after
-        .map(|s| format!("Retry-After: {s}\r\n"))
-        .unwrap_or_default();
-    let allow_header = allow
-        .map(|a| format!("Allow: {a}\r\n"))
-        .unwrap_or_default();
-    let msg = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{}{}{}Connection: {}\r\n\r\n{}",
-        status,
-        reason(status),
-        content_type,
-        body.len(),
-        rid_header,
-        retry_header,
-        allow_header,
-        if keep_alive { "keep-alive" } else { "close" },
-        body
-    );
-    w.write_all(msg.as_bytes())?;
+    let msg =
+        render_response(status, body, content_type, request_id, retry_after, allow, keep_alive);
+    w.write_all(&msg)?;
     w.flush()
 }
 
@@ -1122,6 +1866,50 @@ pub mod client {
         stream.flush()?;
 
         let mut reader = BufReader::new(stream);
+        read_response(&mut reader)
+    }
+
+    /// A persistent keep-alive connection: many requests over one
+    /// socket. This is what the concurrency bench/smoke uses to hold
+    /// hundreds of sockets open against the event-loop front-end —
+    /// each `request` reuses the established TCP connection instead of
+    /// paying a connect per call.
+    pub struct Conn {
+        reader: BufReader<TcpStream>,
+    }
+
+    impl Conn {
+        pub fn connect(addr: SocketAddr) -> Result<Self> {
+            let stream = TcpStream::connect(addr).context("connecting to server")?;
+            stream.set_nodelay(true).ok();
+            stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+            Ok(Conn { reader: BufReader::new(stream) })
+        }
+
+        /// Send one request on the persistent socket and read its
+        /// response; the connection stays open for the next call.
+        pub fn request(
+            &mut self,
+            method: &str,
+            path: &str,
+            body: Option<&str>,
+        ) -> Result<(u16, String)> {
+            let b = body.unwrap_or("");
+            let msg = format!(
+                "{method} {path} HTTP/1.1\r\nHost: flexor-serve\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{b}",
+                b.len()
+            );
+            let stream = self.reader.get_mut();
+            stream.write_all(msg.as_bytes())?;
+            stream.flush()?;
+            let (status, _headers, body) = read_response(&mut self.reader)?;
+            Ok((status, body))
+        }
+    }
+
+    fn read_response(
+        reader: &mut BufReader<TcpStream>,
+    ) -> Result<(u16, Vec<(String, String)>, String)> {
         let mut status_line = String::new();
         reader.read_line(&mut status_line)?;
         let status: u16 = status_line
@@ -1152,6 +1940,1057 @@ pub mod client {
         let mut buf = vec![0u8; content_length];
         reader.read_exact(&mut buf)?;
         Ok((status, resp_headers, String::from_utf8(buf).context("non-utf8 response body")?))
+    }
+}
+
+/// Nonblocking readiness-loop front-end: one thread, every connection.
+///
+/// Architecture (DESIGN.md §14): a level-triggered [`net::Poller`] owns
+/// the listener, a cross-thread waker, and all client sockets. Each
+/// connection carries an incremental [`FrameParser`], an ordered slot
+/// queue (pipelining), and a bounded write buffer. `/predict` bodies are
+/// stream-lexed by [`PredictVisitor`] into arena-recycled feature
+/// buffers and answered asynchronously through the worker-side
+/// [`CompletionBoard`]; admissions (disk + signature verify) and lazy
+/// model loads run on short-lived helper threads that answer through an
+/// equivalent HTTP board. Everything else routes inline through the same
+/// [`route`] used by the threads front-end.
+///
+/// Backpressure is explicit: a full admission queue, a full pipeline, or
+/// a slow reader *suspends* the connection — read interest is dropped,
+/// `flexor_http_suspended_connections` rises — and the tick resumes it
+/// once [`BatchQueue::has_space`] reports room again.
+#[cfg(unix)]
+mod ev {
+    use std::collections::{HashMap, VecDeque};
+    use std::io::ErrorKind;
+    use std::os::unix::io::AsRawFd;
+    use std::sync::Mutex;
+
+    use super::super::worker::{Completion, CompletionBoard, Response};
+    use super::*;
+    use crate::substrate::net::{self, Interest};
+
+    const TOKEN_LISTENER: u64 = 0;
+    const TOKEN_WAKER: u64 = 1;
+    /// In-flight + queued responses per connection before reads pause.
+    const MAX_PIPELINE: usize = 16;
+    /// Unflushed response bytes per connection before reads pause
+    /// (slow-reader bound; responses already promised still queue).
+    const MAX_WBUF_BYTES: usize = 256 << 10;
+    /// Hard cap on one in-flight request — mirrors the threads path's
+    /// 30 s `recv_timeout`; a later completion is dropped.
+    const PENDING_TIMEOUT: Duration = Duration::from_secs(30);
+    /// Poll timeout: timers (idle/header/pending) are checked per tick.
+    const TICK_MS: i32 = 50;
+    /// Feature buffers kept warm for zero-allocation `/predict` parses.
+    const MAX_ARENA_BUFS: usize = 64;
+    /// Shutdown waits this long for in-flight requests to flush.
+    const SHUTDOWN_GRACE: Duration = Duration::from_secs(5);
+
+    /// What a pending slot is waiting for — only used to label the
+    /// request log line once the answer arrives.
+    enum PendingKind {
+        Predict,
+        Admit,
+    }
+
+    impl PendingKind {
+        fn method_path(&self) -> (&'static str, &'static str) {
+            match self {
+                PendingKind::Predict => ("POST", "/predict"),
+                PendingKind::Admit => ("POST", "/models"),
+            }
+        }
+    }
+
+    /// Per-request slot, kept in arrival order so pipelined responses go
+    /// out in request order regardless of completion order.
+    enum Slot {
+        /// Rendered response bytes awaiting the write buffer.
+        Ready { bytes: Vec<u8>, close: bool },
+        /// Answer still being computed elsewhere.
+        Pending { seq: u64, t0: Instant, rid: String, keep_alive: bool, kind: PendingKind },
+    }
+
+    /// A finished off-loop HTTP unit of work (admission, lazy-load
+    /// failure, …) routed back to its connection/slot.
+    struct HttpDone {
+        conn: u64,
+        seq: u64,
+        status: u16,
+        body: String,
+        retry_after: Option<u32>,
+    }
+
+    /// [`CompletionBoard`]'s sibling for non-prediction results.
+    struct HttpBoard {
+        inner: Mutex<Vec<HttpDone>>,
+        waker: net::WakeHandle,
+    }
+
+    impl HttpBoard {
+        fn new(waker: net::WakeHandle) -> HttpBoard {
+            HttpBoard { inner: Mutex::new(Vec::new()), waker }
+        }
+
+        fn push(&self, d: HttpDone) {
+            self.inner.lock().unwrap().push(d);
+            self.waker.wake();
+        }
+
+        fn drain(&self, out: &mut Vec<HttpDone>) {
+            out.append(&mut self.inner.lock().unwrap());
+        }
+    }
+
+    /// Immediate outcome of dispatching one framed request.
+    enum Out {
+        Ready { bytes: Vec<u8>, close: bool, suspend: bool },
+        Pending { rid: String, keep_alive: bool, kind: PendingKind, t0: Instant },
+    }
+
+    /// An asynchronous answer arriving at the loop.
+    enum Done {
+        Predict(Response),
+        Http { status: u16, body: String, retry_after: Option<u32> },
+    }
+
+    struct Conn {
+        stream: TcpStream,
+        token: u64,
+        parser: FrameParser,
+        slots: VecDeque<Slot>,
+        next_seq: u64,
+        wbuf: Vec<u8>,
+        wpos: usize,
+        last_activity: Instant,
+        /// When an incomplete request head/body started arriving (the
+        /// slowloris clock); cleared on a complete frame or empty buffer.
+        head_started: Option<Instant>,
+        suspended: bool,
+        peer_closed: bool,
+        close_after_flush: bool,
+        /// Requests served on this connection (keep-alive accounting).
+        served: u64,
+    }
+
+    pub(super) fn spawn(
+        listener: TcpListener,
+        ctx: ConnCtx,
+        dials: LoopDials,
+    ) -> Result<thread::JoinHandle<()>> {
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let mut poller = net::Poller::new().context("creating poller")?;
+        let waker = net::Waker::new().context("creating waker")?;
+        poller
+            .register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::Read)
+            .context("registering listener")?;
+        poller
+            .register(waker.fd(), TOKEN_WAKER, Interest::Read)
+            .context("registering waker")?;
+        let board = Arc::new(CompletionBoard::new(waker.handle()));
+        let http_board = Arc::new(HttpBoard::new(waker.handle()));
+        thread::Builder::new()
+            .name("serve-loop".to_string())
+            .spawn(move || run(listener, poller, waker, board, http_board, ctx, dials))
+            .context("spawning event loop")
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run(
+        listener: TcpListener,
+        mut poller: net::Poller,
+        mut waker: net::Waker,
+        board: Arc<CompletionBoard>,
+        http_board: Arc<HttpBoard>,
+        ctx: ConnCtx,
+        dials: LoopDials,
+    ) {
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut next_token: u64 = 2;
+        let mut events: Vec<net::Event> = Vec::with_capacity(256);
+        let mut done: Vec<Completion> = Vec::new();
+        let mut admin: Vec<HttpDone> = Vec::new();
+        let mut arena: Vec<Vec<f32>> = Vec::new();
+        let mut lexer = json::Lexer::new();
+        let mut shutdown_since: Option<Instant> = None;
+        let mut dead: Vec<u64> = Vec::new();
+
+        loop {
+            if poller.wait(TICK_MS, &mut events).is_err() {
+                thread::sleep(Duration::from_millis(5));
+            }
+            let now = Instant::now();
+            let shutting_down = ctx.shutdown.load(Ordering::SeqCst);
+            if shutting_down && shutdown_since.is_none() {
+                shutdown_since = Some(now);
+                poller.deregister(listener.as_raw_fd()).ok();
+            }
+
+            for e in &events {
+                match e.token {
+                    TOKEN_LISTENER => accept_ready(
+                        &listener,
+                        &mut poller,
+                        &mut conns,
+                        &mut next_token,
+                        &ctx,
+                        &dials,
+                        shutting_down,
+                        now,
+                    ),
+                    TOKEN_WAKER => waker.drain(),
+                    tok => {
+                        let Some(conn) = conns.get_mut(&tok) else { continue };
+                        let mut alive = true;
+                        if e.readable && !conn.suspended {
+                            alive = conn_read(
+                                conn,
+                                &ctx,
+                                &mut lexer,
+                                &mut arena,
+                                &board,
+                                &http_board,
+                                shutting_down,
+                                now,
+                            );
+                        }
+                        if alive {
+                            alive = flush_conn(conn, now);
+                        }
+                        if !alive || (e.closed && !e.readable) {
+                            dead.push(tok);
+                        } else {
+                            update_interest(&mut poller, conn);
+                        }
+                    }
+                }
+            }
+
+            // answers computed elsewhere: workers (predictions, with the
+            // feature buffer riding back for the arena) and helper
+            // threads (admissions, lazy loads)
+            board.drain(&mut done);
+            for c in done.drain(..) {
+                recycle(&mut arena, c.features);
+                deliver(&mut conns, &mut poller, &ctx, c.conn, c.seq, Done::Predict(c.result), now, &mut dead);
+            }
+            http_board.drain(&mut admin);
+            for d in admin.drain(..) {
+                let out = Done::Http { status: d.status, body: d.body, retry_after: d.retry_after };
+                deliver(&mut conns, &mut poller, &ctx, d.conn, d.seq, out, now, &mut dead);
+            }
+
+            // timers + backpressure resume, once per tick
+            for (tok, conn) in conns.iter_mut() {
+                if dead.contains(tok) {
+                    continue;
+                }
+                let mut changed = false;
+                if conn.suspended
+                    && ctx.queue.has_space()
+                    && conn.slots.len() < MAX_PIPELINE
+                    && conn.wbuf.len() - conn.wpos <= MAX_WBUF_BYTES
+                {
+                    set_suspended(conn, false, &ctx.metrics);
+                    process_frames(
+                        conn,
+                        &ctx,
+                        &mut lexer,
+                        &mut arena,
+                        &board,
+                        &http_board,
+                        shutting_down,
+                        now,
+                    );
+                    changed = true;
+                }
+                if let Some(t) = conn.head_started {
+                    if !conn.close_after_flush
+                        && now.duration_since(t).as_millis() as u64 > dials.header_ms
+                    {
+                        // slowloris: an incomplete head/body outstayed its
+                        // budget — answer 408 and hang up
+                        let rid = trace::next_request_id();
+                        let msg = "timed out waiting for request head/body";
+                        record_reject(&ctx, &rid, ErrorCode::RequestTimeout, msg, false);
+                        let body = err_json(ErrorCode::RequestTimeout, msg, Some(&rid));
+                        conn.slots.push_back(Slot::Ready {
+                            bytes: render_response(408, &body, CT_JSON, Some(&rid), None, None, false),
+                            close: true,
+                        });
+                        conn.close_after_flush = true;
+                        conn.head_started = None;
+                        changed = true;
+                    }
+                }
+                if conn.parser.buffered() == 0
+                    && conn.slots.is_empty()
+                    && conn.wpos == conn.wbuf.len()
+                    && now.duration_since(conn.last_activity).as_millis() as u64 > dials.idle_ms
+                {
+                    dead.push(*tok);
+                    continue;
+                }
+                for slot in conn.slots.iter_mut() {
+                    let (rid, keep_alive, t0, method, path) = match &*slot {
+                        Slot::Pending { rid, keep_alive, t0, kind, .. }
+                            if now.duration_since(*t0) > PENDING_TIMEOUT =>
+                        {
+                            let (m, p) = kind.method_path();
+                            (rid.clone(), *keep_alive, *t0, m, p)
+                        }
+                        _ => continue,
+                    };
+                    log_request(&rid, method, path, 504, t0);
+                    let body = err_json(ErrorCode::Timeout, "inference timed out", Some(&rid));
+                    let bytes =
+                        render_response(504, &body, CT_JSON, Some(&rid), None, None, keep_alive);
+                    *slot = Slot::Ready { bytes, close: !keep_alive };
+                    changed = true;
+                }
+                if changed {
+                    if flush_conn(conn, now) {
+                        update_interest(&mut poller, conn);
+                    } else {
+                        dead.push(*tok);
+                    }
+                }
+            }
+
+            dead.sort_unstable();
+            dead.dedup();
+            for tok in dead.drain(..) {
+                if let Some(conn) = conns.remove(&tok) {
+                    poller.deregister(conn.stream.as_raw_fd()).ok();
+                    if conn.suspended {
+                        ctx.metrics.conn_resumed();
+                    }
+                    ctx.metrics.conn_closed();
+                }
+            }
+
+            if let Some(t) = shutdown_since {
+                let busy = conns.values().any(|c| {
+                    c.wpos < c.wbuf.len()
+                        || c.slots.iter().any(|s| matches!(s, Slot::Pending { .. }))
+                });
+                if !busy || now.duration_since(t) > SHUTDOWN_GRACE {
+                    break;
+                }
+            }
+        }
+
+        for (_, conn) in conns.drain() {
+            poller.deregister(conn.stream.as_raw_fd()).ok();
+            if conn.suspended {
+                ctx.metrics.conn_resumed();
+            }
+            ctx.metrics.conn_closed();
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn accept_ready(
+        listener: &TcpListener,
+        poller: &mut net::Poller,
+        conns: &mut HashMap<u64, Conn>,
+        next_token: &mut u64,
+        ctx: &ConnCtx,
+        dials: &LoopDials,
+        shutting_down: bool,
+        now: Instant,
+    ) {
+        loop {
+            let (stream, _peer) = match listener.accept() {
+                Ok(s) => s,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            };
+            if shutting_down {
+                continue; // shutdown wake-connect or a last-gasp client
+            }
+            if conns.len() >= dials.max_conns {
+                let rid = trace::next_request_id();
+                let msg = format!("connection limit reached ({}), retry later", dials.max_conns);
+                record_reject(ctx, &rid, ErrorCode::QueueFull, &msg, true);
+                let body = err_json(ErrorCode::QueueFull, &msg, Some(&rid));
+                let bytes = render_response(503, &body, CT_JSON, Some(&rid), Some(1), None, false);
+                // best-effort: the 503 fits in the socket buffer or the
+                // client just sees a close — either way we shed
+                stream.set_nonblocking(true).ok();
+                let _ = (&stream).write(&bytes);
+                continue;
+            }
+            stream.set_nodelay(true).ok();
+            if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            let token = *next_token;
+            *next_token += 1;
+            if poller.register(stream.as_raw_fd(), token, Interest::Read).is_err() {
+                continue;
+            }
+            ctx.metrics.conn_opened();
+            conns.insert(token, Conn {
+                stream,
+                token,
+                parser: FrameParser::new(ctx.max_body),
+                slots: VecDeque::new(),
+                next_seq: 0,
+                wbuf: Vec::new(),
+                wpos: 0,
+                last_activity: now,
+                head_started: None,
+                suspended: false,
+                peer_closed: false,
+                close_after_flush: false,
+                served: 0,
+            });
+        }
+    }
+
+    /// Pull everything the socket has, then frame + dispatch. `false` =
+    /// connection is finished.
+    #[allow(clippy::too_many_arguments)]
+    fn conn_read(
+        conn: &mut Conn,
+        ctx: &ConnCtx,
+        lexer: &mut json::Lexer,
+        arena: &mut Vec<Vec<f32>>,
+        board: &Arc<CompletionBoard>,
+        http_board: &Arc<HttpBoard>,
+        shutting_down: bool,
+        now: Instant,
+    ) -> bool {
+        let mut scratch = [0u8; 16 << 10];
+        loop {
+            match (&conn.stream).read(&mut scratch) {
+                Ok(0) => {
+                    conn.peer_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.parser.feed(&scratch[..n]);
+                    conn.last_activity = now;
+                    // a body + pipelined head can legitimately buffer up
+                    // to max_body + a head; beyond that, let frames drain
+                    if conn.parser.buffered() > ctx.max_body + MAX_HEAD_BYTES + scratch.len() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        process_frames(conn, ctx, lexer, arena, board, http_board, shutting_down, now);
+        if conn.peer_closed
+            && conn.slots.is_empty()
+            && conn.wpos == conn.wbuf.len()
+            && conn.parser.buffered() == 0
+        {
+            return false;
+        }
+        true
+    }
+
+    /// Frame and dispatch as many buffered requests as backpressure
+    /// allows; updates the slowloris clock.
+    #[allow(clippy::too_many_arguments)]
+    fn process_frames(
+        conn: &mut Conn,
+        ctx: &ConnCtx,
+        lexer: &mut json::Lexer,
+        arena: &mut Vec<Vec<f32>>,
+        board: &Arc<CompletionBoard>,
+        http_board: &Arc<HttpBoard>,
+        shutting_down: bool,
+        now: Instant,
+    ) {
+        loop {
+            if conn.close_after_flush {
+                break;
+            }
+            if conn.slots.len() >= MAX_PIPELINE || conn.wbuf.len() - conn.wpos > MAX_WBUF_BYTES {
+                set_suspended(conn, true, &ctx.metrics);
+                break;
+            }
+            let seq = conn.next_seq;
+            let out = match conn.parser.next_frame() {
+                Ok(None) => break,
+                Err(fe) => {
+                    // framing is unrecoverable: answer + close, like the
+                    // threads path's bad-request arm
+                    let rid = trace::next_request_id();
+                    ctx.metrics.record_rejected();
+                    trace::log(Level::Warn, "bad_request", &[
+                        ("request_id", Json::str(rid.clone())),
+                        ("status", Json::num(fe.status as f64)),
+                        ("error", Json::str(fe.msg.clone())),
+                    ]);
+                    let body = err_json(fe.code, &fe.msg, Some(&rid));
+                    conn.slots.push_back(Slot::Ready {
+                        bytes: render_response(fe.status, &body, CT_JSON, Some(&rid), None, None, false),
+                        close: true,
+                    });
+                    conn.close_after_flush = true;
+                    break;
+                }
+                Ok(Some(frame)) => dispatch_frame(
+                    frame,
+                    conn.token,
+                    seq,
+                    ctx,
+                    lexer,
+                    arena,
+                    board,
+                    http_board,
+                    shutting_down,
+                ),
+            };
+            conn.parser.consume();
+            conn.served += 1;
+            if conn.served > 1 {
+                ctx.metrics.record_keepalive_reuse();
+            }
+            match out {
+                Out::Ready { bytes, close, suspend } => {
+                    conn.slots.push_back(Slot::Ready { bytes, close });
+                    if close {
+                        conn.close_after_flush = true;
+                    }
+                    if suspend {
+                        set_suspended(conn, true, &ctx.metrics);
+                    }
+                    if close || suspend {
+                        break;
+                    }
+                }
+                Out::Pending { rid, keep_alive, kind, t0 } => {
+                    conn.slots.push_back(Slot::Pending { seq, t0, rid, keep_alive, kind });
+                    conn.next_seq += 1;
+                    if !keep_alive {
+                        conn.close_after_flush = true;
+                        break;
+                    }
+                }
+            }
+        }
+        conn.head_started = if conn.parser.buffered() > 0
+            && !conn.suspended
+            && !conn.close_after_flush
+        {
+            Some(conn.head_started.unwrap_or(now))
+        } else {
+            None
+        };
+    }
+
+    /// One framed request → an immediate response or a pending slot.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_frame(
+        frame: Frame<'_>,
+        token: u64,
+        seq: u64,
+        ctx: &ConnCtx,
+        lexer: &mut json::Lexer,
+        arena: &mut Vec<Vec<f32>>,
+        board: &Arc<CompletionBoard>,
+        http_board: &Arc<HttpBoard>,
+        shutting_down: bool,
+    ) -> Out {
+        let t0 = Instant::now();
+        let rid = frame.request_id.map(str::to_string).unwrap_or_else(trace::next_request_id);
+        let keep_alive = frame.keep_alive && !shutting_down;
+        let path_only = frame.path.split('?').next().unwrap_or("");
+        if frame.method == "POST" && path_only == "/predict" {
+            return ev_predict(
+                frame.body,
+                frame.deadline_ms,
+                rid,
+                keep_alive,
+                token,
+                seq,
+                ctx,
+                lexer,
+                arena,
+                board,
+                http_board,
+                t0,
+            );
+        }
+        if frame.method == "POST" && path_only == "/models" {
+            // admissions hit disk + signature verification — off-loop
+            let Ok(body) = core::str::from_utf8(frame.body) else {
+                let msg = "body is not utf-8";
+                record_reject(ctx, &rid, ErrorCode::BadRequest, msg, false);
+                log_request(&rid, "POST", "/models", 400, t0);
+                let body = err_json(ErrorCode::BadRequest, msg, Some(&rid));
+                return Out::Ready {
+                    bytes: render_response(400, &body, CT_JSON, Some(&rid), None, None, keep_alive),
+                    close: !keep_alive,
+                    suspend: false,
+                };
+            };
+            let body = body.to_string();
+            let ctx2 = ctx.clone();
+            let hb = http_board.clone();
+            let rid2 = rid.clone();
+            let deadline_ms = frame.deadline_ms;
+            let spawned = thread::Builder::new()
+                .name("serve-admit".to_string())
+                .spawn(move || {
+                    let req = HttpRequest {
+                        method: "POST".to_string(),
+                        path: "/models".to_string(),
+                        keep_alive: true,
+                        request_id: Some(rid2.clone()),
+                        deadline_ms,
+                        body,
+                    };
+                    let (status, body) = handle_admit(&req, &ctx2, &rid2);
+                    hb.push(HttpDone { conn: token, seq, status, body, retry_after: None });
+                })
+                .is_ok();
+            if !spawned {
+                let msg = "admission worker unavailable";
+                record_reject(ctx, &rid, ErrorCode::Internal, msg, false);
+                log_request(&rid, "POST", "/models", 500, t0);
+                let body = err_json(ErrorCode::Internal, msg, Some(&rid));
+                return Out::Ready {
+                    bytes: render_response(500, &body, CT_JSON, Some(&rid), None, None, keep_alive),
+                    close: !keep_alive,
+                    suspend: false,
+                };
+            }
+            return Out::Pending { rid, keep_alive, kind: PendingKind::Admit, t0 };
+        }
+        // everything else (metrics, health, registry peeks, 404/405s) is
+        // in-memory cheap — route inline, exactly as the threads path
+        let req = HttpRequest {
+            method: frame.method.to_string(),
+            path: frame.path.to_string(),
+            keep_alive,
+            request_id: Some(rid.clone()),
+            deadline_ms: frame.deadline_ms,
+            body: String::new(),
+        };
+        let (status, body, ctype, retry_after, allow) = route(&req, ctx, &rid);
+        log_request(&rid, &req.method, &req.path, status, t0);
+        Out::Ready {
+            bytes: render_response(status, &body, ctype, Some(&rid), retry_after, allow, keep_alive),
+            close: !keep_alive,
+            suspend: false,
+        }
+    }
+
+    /// Reject a `/predict` without touching a worker: count, log the
+    /// request line, render. `suspend` marks queue-full backpressure.
+    #[allow(clippy::too_many_arguments)]
+    fn reject(
+        ctx: &ConnCtx,
+        rid: &str,
+        code: ErrorCode,
+        msg: &str,
+        retry: Option<u32>,
+        keep_alive: bool,
+        suspend: bool,
+        t0: Instant,
+    ) -> Out {
+        record_reject(ctx, rid, code, msg, retry.is_some());
+        log_request(rid, "POST", "/predict", code.status(), t0);
+        let body = err_json(code, msg, Some(rid));
+        Out::Ready {
+            bytes: render_response(code.status(), &body, CT_JSON, Some(rid), retry, None, keep_alive),
+            close: !keep_alive,
+            suspend,
+        }
+    }
+
+    /// The hot path: stream-lex the body straight into an arena buffer,
+    /// resolve the model without locks when it is resident, enqueue with
+    /// a [`Responder::Completion`] so the answer comes back through the
+    /// board. Error contract is byte-for-byte the threads path's.
+    #[allow(clippy::too_many_arguments)]
+    fn ev_predict(
+        body: &[u8],
+        deadline_ms: Option<u64>,
+        rid: String,
+        keep_alive: bool,
+        token: u64,
+        seq: u64,
+        ctx: &ConnCtx,
+        lexer: &mut json::Lexer,
+        arena: &mut Vec<Vec<f32>>,
+        board: &Arc<CompletionBoard>,
+        http_board: &Arc<HttpBoard>,
+        t0: Instant,
+    ) -> Out {
+        if ctx.draining.load(Ordering::SeqCst) {
+            return reject(
+                ctx,
+                &rid,
+                ErrorCode::Draining,
+                "server is draining, not accepting new requests",
+                Some(retry_after_hint(ctx)),
+                keep_alive,
+                false,
+                t0,
+            );
+        }
+        let mut feats = arena.pop().unwrap_or_default();
+        feats.clear();
+        let mut v = PredictVisitor::new(feats);
+        if let Err(e) = lexer.lex(body, &mut v) {
+            let msg = format!("bad json body: {e}");
+            recycle(arena, v.into_features());
+            return reject(ctx, &rid, ErrorCode::BadRequest, &msg, None, keep_alive, false, t0);
+        }
+        if v.model_bad() {
+            recycle(arena, v.into_features());
+            return reject(
+                ctx,
+                &rid,
+                ErrorCode::BadRequest,
+                "field 'model' must be a string",
+                None,
+                keep_alive,
+                false,
+                t0,
+            );
+        }
+        // lock-free-ish fast path: resident models resolve with a peek;
+        // anything that might need a bundle load leaves the loop thread
+        let entry = if !v.model_seen() {
+            ctx.registry.sole()
+        } else if let Some(name) = v.model() {
+            ctx.registry.get(name)
+        } else {
+            // longer than any registrable alias — cannot exist
+            let msg = format!("unknown model (name exceeds {MAX_MODEL_NAME} bytes)");
+            recycle(arena, v.into_features());
+            return reject(ctx, &rid, ErrorCode::UnknownModel, &msg, None, keep_alive, false, t0);
+        };
+        let Some(entry) = entry else {
+            return offload_predict(v, deadline_ms, rid, keep_alive, token, seq, ctx, board, http_board, t0);
+        };
+        if !v.features_ok() {
+            recycle(arena, v.into_features());
+            return reject(
+                ctx,
+                &rid,
+                ErrorCode::BadRequest,
+                "field 'features' must be an array of numbers",
+                None,
+                keep_alive,
+                false,
+                t0,
+            );
+        }
+        if v.features.len() != entry.feature_len {
+            let msg = format!(
+                "expected {} features for model '{}', got {}",
+                entry.feature_len,
+                entry.name,
+                v.features.len()
+            );
+            recycle(arena, v.into_features());
+            return reject(ctx, &rid, ErrorCode::BadRequest, &msg, None, keep_alive, false, t0);
+        }
+        let enqueued = Instant::now();
+        let deadline = deadline_ms
+            .or(ctx.default_deadline)
+            .map(|ms| enqueued + Duration::from_millis(ms));
+        let request = Request {
+            entry,
+            features: v.into_features(),
+            respond: Responder::Completion { board: board.clone(), conn: token, seq },
+            enqueued,
+            deadline,
+        };
+        match ctx.queue.try_push(request) {
+            Ok(()) => Out::Pending { rid, keep_alive, kind: PendingKind::Predict, t0 },
+            Err((req, e)) => {
+                recycle(arena, req.features);
+                let (code, msg) = match e {
+                    PushError::Full => (ErrorCode::QueueFull, "admission queue full, retry later"),
+                    PushError::Closed => (ErrorCode::Draining, "server is shutting down"),
+                };
+                // Full → stop reading this connection until the queue
+                // drains (satellite contract: stalled queue is visible
+                // as rising suspended-connection gauge, not a read spin)
+                let suspend = e == PushError::Full;
+                reject(ctx, &rid, code, msg, Some(retry_after_hint(ctx)), keep_alive, suspend, t0)
+            }
+        }
+    }
+
+    /// Slow-path `/predict`: the model may need a repo load (disk +
+    /// signature verify), which must not stall the loop. A helper thread
+    /// resolves, re-validates, and either enqueues (same completion
+    /// route) or pushes the rejection through the HTTP board.
+    #[allow(clippy::too_many_arguments)]
+    fn offload_predict(
+        v: PredictVisitor,
+        deadline_ms: Option<u64>,
+        rid: String,
+        keep_alive: bool,
+        token: u64,
+        seq: u64,
+        ctx: &ConnCtx,
+        board: &Arc<CompletionBoard>,
+        http_board: &Arc<HttpBoard>,
+        t0: Instant,
+    ) -> Out {
+        let ctx2 = ctx.clone();
+        let board = board.clone();
+        let hb = http_board.clone();
+        let rid2 = rid.clone();
+        let name = v.model().map(str::to_string);
+        let features_ok = v.features_ok();
+        let features = v.into_features();
+        let spawned = thread::Builder::new()
+            .name("serve-resolve".to_string())
+            .spawn(move || {
+                let fail = |code: ErrorCode, msg: &str, retry: Option<u32>| {
+                    record_reject(&ctx2, &rid2, code, msg, retry.is_some());
+                    hb.push(HttpDone {
+                        conn: token,
+                        seq,
+                        status: code.status(),
+                        body: err_json(code, msg, Some(&rid2)),
+                        retry_after: retry,
+                    });
+                };
+                let resolved = match &name {
+                    None => match ctx2.registry.resolve_sole() {
+                        Ok(Some(e)) => Ok(e),
+                        Ok(None) => Err((
+                            ErrorCode::BadRequest,
+                            "field 'model' is required when multiple models are registered"
+                                .to_string(),
+                        )),
+                        Err(e) => Err((ErrorCode::Internal, format!("model load failed: {e:#}"))),
+                    },
+                    Some(n) => match ctx2.registry.resolve(n) {
+                        Ok(Some(e)) => Ok(e),
+                        Ok(None) => Err((ErrorCode::UnknownModel, format!("unknown model '{n}'"))),
+                        Err(e) => Err((ErrorCode::Internal, format!("model load failed: {e:#}"))),
+                    },
+                };
+                let entry = match resolved {
+                    Ok(e) => e,
+                    Err((code, msg)) => return fail(code, &msg, None),
+                };
+                if !features_ok {
+                    return fail(
+                        ErrorCode::BadRequest,
+                        "field 'features' must be an array of numbers",
+                        None,
+                    );
+                }
+                if features.len() != entry.feature_len {
+                    let msg = format!(
+                        "expected {} features for model '{}', got {}",
+                        entry.feature_len,
+                        entry.name,
+                        features.len()
+                    );
+                    return fail(ErrorCode::BadRequest, &msg, None);
+                }
+                let enqueued = Instant::now();
+                let deadline = deadline_ms
+                    .or(ctx2.default_deadline)
+                    .map(|ms| enqueued + Duration::from_millis(ms));
+                let request = Request {
+                    entry,
+                    features,
+                    respond: Responder::Completion { board, conn: token, seq },
+                    enqueued,
+                    deadline,
+                };
+                if let Err((_, e)) = ctx2.queue.try_push(request) {
+                    let (code, msg) = match e {
+                        PushError::Full => {
+                            (ErrorCode::QueueFull, "admission queue full, retry later")
+                        }
+                        PushError::Closed => (ErrorCode::Draining, "server is shutting down"),
+                    };
+                    fail(code, msg, Some(retry_after_hint(&ctx2)));
+                }
+            })
+            .is_ok();
+        if !spawned {
+            let msg = "resolver worker unavailable";
+            return reject(ctx, &rid, ErrorCode::Internal, msg, None, keep_alive, false, t0);
+        }
+        Out::Pending { rid, keep_alive, kind: PendingKind::Predict, t0 }
+    }
+
+    /// Route an asynchronous answer into its connection's slot, keeping
+    /// pipelined response order. A missing connection or slot means the
+    /// client is gone or the request already 504'd — drop silently.
+    #[allow(clippy::too_many_arguments)]
+    fn deliver(
+        conns: &mut HashMap<u64, Conn>,
+        poller: &mut net::Poller,
+        ctx: &ConnCtx,
+        tok: u64,
+        seq: u64,
+        done: Done,
+        now: Instant,
+        dead: &mut Vec<u64>,
+    ) {
+        let Some(conn) = conns.get_mut(&tok) else { return };
+        let Some(idx) = conn.slots.iter().position(|s| match s {
+            Slot::Pending { seq: s2, .. } => *s2 == seq,
+            Slot::Ready { .. } => false,
+        }) else {
+            return;
+        };
+        let (rid, keep_alive, t0, method, path) = match &conn.slots[idx] {
+            Slot::Pending { rid, keep_alive, t0, kind, .. } => {
+                let (m, p) = kind.method_path();
+                (rid.clone(), *keep_alive, *t0, m, p)
+            }
+            Slot::Ready { .. } => return,
+        };
+        let (status, body, retry_after) = match done {
+            Done::Predict(Ok(p)) => (
+                200,
+                Json::obj(vec![
+                    ("model", Json::str(p.model)),
+                    ("prediction", Json::num(p.class as f64)),
+                    ("batch_size", Json::num(p.batch_size as f64)),
+                    ("latency_ms", Json::num(p.latency_ms)),
+                    ("request_id", Json::str(rid.clone())),
+                ])
+                .to_string(),
+                None,
+            ),
+            Done::Predict(Err(e)) => {
+                let retry = if e.code == ErrorCode::DeadlineExceeded {
+                    Some(retry_after_hint(ctx))
+                } else {
+                    None
+                };
+                (e.status(), err_json(e.code, &e.message, Some(&rid)), retry)
+            }
+            Done::Http { status, body, retry_after } => (status, body, retry_after),
+        };
+        log_request(&rid, method, path, status, t0);
+        conn.slots[idx] = Slot::Ready {
+            bytes: render_response(status, &body, CT_JSON, Some(&rid), retry_after, None, keep_alive),
+            close: !keep_alive,
+        };
+        if flush_conn(conn, now) {
+            update_interest(poller, conn);
+        } else {
+            dead.push(tok);
+        }
+    }
+
+    /// Promote the contiguous Ready prefix into the write buffer, then
+    /// push bytes until the socket would block. `false` = connection
+    /// finished (closing response flushed, or peer gone and drained).
+    fn flush_conn(conn: &mut Conn, now: Instant) -> bool {
+        while matches!(conn.slots.front(), Some(Slot::Ready { .. })) {
+            let Some(Slot::Ready { bytes, close }) = conn.slots.pop_front() else {
+                unreachable!()
+            };
+            conn.wbuf.extend_from_slice(&bytes);
+            if close {
+                conn.close_after_flush = true;
+            }
+        }
+        while conn.wpos < conn.wbuf.len() {
+            match (&conn.stream).write(&conn.wbuf[conn.wpos..]) {
+                Ok(0) => return false,
+                Ok(n) => {
+                    conn.wpos += n;
+                    conn.last_activity = now;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        if conn.wpos == conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.wpos = 0;
+            if conn.close_after_flush && conn.slots.is_empty() {
+                return false;
+            }
+            if conn.peer_closed && conn.slots.is_empty() && conn.parser.buffered() == 0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Re-derive the poller interest set from connection state. Uses
+    /// idempotent `register` (not `set_interest`) so a fully-parked
+    /// connection that was deregistered can come back.
+    fn update_interest(poller: &mut net::Poller, conn: &Conn) {
+        let wants_write = conn.wpos < conn.wbuf.len();
+        let wants_read = !conn.suspended
+            && !conn.close_after_flush
+            && !conn.peer_closed
+            && conn.slots.len() < MAX_PIPELINE;
+        let fd = conn.stream.as_raw_fd();
+        let res = match (wants_read, wants_write) {
+            (true, true) => poller.register(fd, conn.token, Interest::ReadWrite),
+            (true, false) => poller.register(fd, conn.token, Interest::Read),
+            (false, true) => poller.register(fd, conn.token, Interest::Write),
+            // level-triggered: a parked connection must leave the set or
+            // its readable socket would spin the loop; the tick timer is
+            // what watches it while parked
+            (false, false) => poller.deregister(fd),
+        };
+        res.ok();
+    }
+
+    fn set_suspended(conn: &mut Conn, on: bool, metrics: &ServeMetrics) {
+        if conn.suspended == on {
+            return;
+        }
+        conn.suspended = on;
+        if on {
+            metrics.conn_suspended();
+        } else {
+            metrics.conn_resumed();
+        }
+    }
+
+    /// Return a feature buffer to the warm arena (bounded).
+    fn recycle(arena: &mut Vec<Vec<f32>>, mut buf: Vec<f32>) {
+        if arena.len() < MAX_ARENA_BUFS {
+            buf.clear();
+            arena.push(buf);
+        }
+    }
+
+    /// The per-request log line, mirroring the threads path exactly.
+    fn log_request(rid: &str, method: &str, path: &str, status: u16, t0: Instant) {
+        let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut f = vec![
+            ("request_id", Json::str(rid)),
+            ("method", Json::str(method)),
+            ("path", Json::str(path)),
+            ("status", Json::num(status as f64)),
+            ("latency_ms", Json::num(latency_ms)),
+        ];
+        if status >= 500 {
+            trace::log(Level::Error, "request_failed", &f);
+        } else if latency_ms > slow_ms() {
+            f.push(("threshold_ms", Json::num(slow_ms())));
+            trace::log(Level::Warn, "slow_request", &f);
+        } else {
+            trace::log(Level::Debug, "request", &f);
+        }
     }
 }
 
@@ -1333,8 +3172,134 @@ mod tests {
     #[test]
     fn status_reasons() {
         assert_eq!(reason(200), "OK");
+        assert_eq!(reason(408), "Request Timeout");
         assert_eq!(reason(413), "Payload Too Large");
+        assert_eq!(reason(431), "Request Header Fields Too Large");
         assert_eq!(reason(503), "Service Unavailable");
         assert_eq!(reason(599), "Unknown");
+    }
+
+    #[test]
+    fn frame_parser_frames_whole_and_split_requests() {
+        let wire = b"POST /predict HTTP/1.1\r\nContent-Length: 5\r\nX-Request-Id: r-1\r\n\r\nhello";
+        let mut p = FrameParser::new(1024);
+        p.feed(wire);
+        {
+            let f = p.next_frame().unwrap().unwrap();
+            assert_eq!(f.method, "POST");
+            assert_eq!(f.path, "/predict");
+            assert!(f.keep_alive);
+            assert_eq!(f.request_id, Some("r-1"));
+            assert_eq!(f.body, b"hello");
+        }
+        p.consume();
+        assert!(p.next_frame().unwrap().is_none());
+        assert_eq!(p.buffered(), 0);
+        // byte-boundary independence: a request cut at any point frames
+        // identically once the rest arrives
+        for cut in 1..wire.len() {
+            let mut p = FrameParser::new(1024);
+            p.feed(&wire[..cut]);
+            assert!(p.next_frame().unwrap().is_none(), "cut at {cut}");
+            p.feed(&wire[cut..]);
+            let f = p.next_frame().unwrap().unwrap();
+            assert_eq!(f.method, "POST");
+            assert_eq!(f.body, b"hello");
+        }
+    }
+
+    #[test]
+    fn frame_parser_pipelines_back_to_back_requests() {
+        let mut p = FrameParser::new(1024);
+        p.feed(
+            b"GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.0\r\nConnection: keep-alive\r\n\r\n",
+        );
+        // re-yield before consume is idempotent
+        let first = {
+            let f = p.next_frame().unwrap().unwrap();
+            f.path.to_string()
+        };
+        let again = {
+            let f = p.next_frame().unwrap().unwrap();
+            f.path.to_string()
+        };
+        assert_eq!(first, "/healthz");
+        assert_eq!(first, again);
+        p.consume();
+        {
+            let f = p.next_frame().unwrap().unwrap();
+            assert_eq!(f.path, "/metrics");
+            assert!(f.keep_alive); // HTTP/1.0 + explicit keep-alive
+        }
+        p.consume();
+        assert!(p.next_frame().unwrap().is_none());
+        assert_eq!(p.buffered(), 0);
+    }
+
+    #[test]
+    fn frame_parser_rejects_oversized_and_malformed() {
+        // terminator-free garbage → 431 once past the head bound
+        let mut p = FrameParser::new(1024);
+        p.feed(&vec![b'a'; MAX_HEAD_BYTES + 1]);
+        let e = p.next_frame().unwrap_err();
+        assert_eq!(e.status, 431);
+        assert_eq!(e.code, ErrorCode::HeadersTooLarge);
+        // declared body beyond max_body → 413 before any body byte
+        let mut p = FrameParser::new(8);
+        p.feed(b"POST /predict HTTP/1.1\r\nContent-Length: 9\r\n\r\n");
+        let e = p.next_frame().unwrap_err();
+        assert_eq!(e.status, 413);
+        assert!(e.msg.contains("body too large"), "{}", e.msg);
+        // malformed request line → 400
+        let mut p = FrameParser::new(8);
+        p.feed(b"NOT-HTTP\r\n\r\n");
+        assert_eq!(p.next_frame().unwrap_err().status, 400);
+        // zero deadline → 400 (parity with read_request)
+        let mut p = FrameParser::new(64);
+        p.feed(b"POST /p HTTP/1.1\r\nX-Deadline-Ms: 0\r\n\r\n");
+        assert_eq!(p.next_frame().unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn predict_visitor_matches_tree_parser() {
+        let mut lx = json::Lexer::new();
+        let mut v = PredictVisitor::new(Vec::new());
+        lx.lex(br#"{"model": "resnet20@v2", "features": [1, 2.5, -3e-2]}"#, &mut v).unwrap();
+        assert_eq!(v.model(), Some("resnet20@v2"));
+        assert!(v.features_ok());
+        assert_eq!(v.features, vec![1.0, 2.5, -0.03]);
+        // model: null behaves like an absent field (sole-model path)
+        let mut v = PredictVisitor::new(Vec::new());
+        lx.lex(br#"{"model": null, "features": []}"#, &mut v).unwrap();
+        assert!(!v.model_seen());
+        assert!(v.features_ok());
+        // non-string model is a distinct client error
+        let mut v = PredictVisitor::new(Vec::new());
+        lx.lex(br#"{"model": 3, "features": [1]}"#, &mut v).unwrap();
+        assert!(v.model_bad());
+        // anything but a flat numeric array is not a feature vector
+        for bad in [
+            &br#"{"features": [1, "x"]}"#[..],
+            br#"{"features": [1, null]}"#,
+            br#"{"features": [[1]]}"#,
+            br#"{"features": {"a": 1}}"#,
+            br#"{"features": null}"#,
+            br#"{"features": "1,2"}"#,
+            br#"{"model": "m"}"#,
+        ] {
+            let mut v = PredictVisitor::new(Vec::new());
+            lx.lex(bad, &mut v).unwrap();
+            assert!(!v.features_ok(), "{}", String::from_utf8_lossy(bad));
+        }
+        // unknown/nested keys skipped; duplicate keys are last-wins
+        let mut v = PredictVisitor::new(Vec::new());
+        lx.lex(
+            br#"{"extra": {"features": [9]}, "features": [7], "model": "a", "model": "b"}"#,
+            &mut v,
+        )
+        .unwrap();
+        assert_eq!(v.model(), Some("b"));
+        assert!(v.features_ok());
+        assert_eq!(v.features, vec![7.0]);
     }
 }

@@ -12,6 +12,7 @@
 //! stalls the workers recording latencies.
 
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -123,12 +124,75 @@ struct Inner {
 pub struct ServeMetrics {
     start: Instant,
     inner: Mutex<Inner>,
+    /// Connection-level counters live outside the mutex: the event loop
+    /// bumps them on its hot path (accept, suspend/resume, keep-alive
+    /// reuse), where a contended lock would serialize all connections.
+    conn_open: AtomicU64,
+    conn_total: AtomicU64,
+    conn_suspended: AtomicU64,
+    keepalive_requests: AtomicU64,
 }
 
 impl ServeMetrics {
     /// Fresh metrics; uptime starts now.
     pub fn new() -> Self {
-        ServeMetrics { start: Instant::now(), inner: Mutex::new(Inner::default()) }
+        ServeMetrics {
+            start: Instant::now(),
+            inner: Mutex::new(Inner::default()),
+            conn_open: AtomicU64::new(0),
+            conn_total: AtomicU64::new(0),
+            conn_suspended: AtomicU64::new(0),
+            keepalive_requests: AtomicU64::new(0),
+        }
+    }
+
+    // ---- connection-level accounting (event-loop front-end) ----------------
+
+    /// A connection was accepted.
+    pub fn conn_opened(&self) {
+        self.conn_open.fetch_add(1, Ordering::Relaxed);
+        self.conn_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A connection was closed (any reason).
+    pub fn conn_closed(&self) {
+        self.conn_open.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// A connection stopped being read (backpressure / pipeline cap).
+    pub fn conn_suspended(&self) {
+        self.conn_suspended.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A suspended connection resumed reading.
+    pub fn conn_resumed(&self) {
+        self.conn_suspended.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// A request was served on an already-used connection (keep-alive or
+    /// pipelining reuse — request ≥ 2 on its connection).
+    pub fn record_keepalive_reuse(&self) {
+        self.keepalive_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Currently open connections.
+    pub fn connections_open(&self) -> u64 {
+        self.conn_open.load(Ordering::Relaxed)
+    }
+
+    /// Connections accepted since start.
+    pub fn connections_total(&self) -> u64 {
+        self.conn_total.load(Ordering::Relaxed)
+    }
+
+    /// Connections currently suspended for backpressure.
+    pub fn suspended_connections(&self) -> u64 {
+        self.conn_suspended.load(Ordering::Relaxed)
+    }
+
+    /// Requests served beyond the first on their connection.
+    pub fn keepalive_requests_total(&self) -> u64 {
+        self.keepalive_requests.load(Ordering::Relaxed)
     }
 
     /// One forward pass on `model` served `n` coalesced requests.
@@ -244,6 +308,10 @@ impl ServeMetrics {
                  ])
              }))),
             ("queue_depth", Json::num(queue_depth as f64)),
+            ("connections_open", Json::num(self.connections_open() as f64)),
+            ("connections_total", Json::num(self.connections_total() as f64)),
+            ("suspended_connections", Json::num(self.suspended_connections() as f64)),
+            ("keepalive_requests_total", Json::num(self.keepalive_requests_total() as f64)),
             ("queue_wait_ms", moments_json(&m.queue_wait_ms)),
             ("batch_assembly_ms", moments_json(&m.assembly_ms)),
             ("latency_ms", m.global.latency_json()),
@@ -306,6 +374,26 @@ impl ServeMetrics {
         p.line("flexor_mean_batch_size", &[], m.global.mean_batch());
         p.header("flexor_queue_depth", "Admission queue depth at scrape time.", "gauge");
         p.line("flexor_queue_depth", &[], queue_depth as f64);
+        p.header("flexor_http_connections_open", "Open HTTP connections.", "gauge");
+        p.line("flexor_http_connections_open", &[], self.connections_open() as f64);
+        p.header("flexor_http_connections_total", "HTTP connections accepted.", "counter");
+        p.line("flexor_http_connections_total", &[], self.connections_total() as f64);
+        p.header(
+            "flexor_http_suspended_connections",
+            "Connections paused by backpressure (queue full / pipeline cap).",
+            "gauge",
+        );
+        p.line("flexor_http_suspended_connections", &[], self.suspended_connections() as f64);
+        p.header(
+            "flexor_http_keepalive_requests_total",
+            "Requests served beyond the first on their connection.",
+            "counter",
+        );
+        p.line(
+            "flexor_http_keepalive_requests_total",
+            &[],
+            self.keepalive_requests_total() as f64,
+        );
 
         p.header("flexor_request_latency_ms", "Request latency (window percentiles).", "summary");
         p.summary("flexor_request_latency_ms", &[], &m.global);
@@ -482,6 +570,34 @@ mod tests {
             "flexor_deadline_expired_total 2",
             "flexor_worker_panics_total 1",
             "flexor_worker_restarts_total 1",
+        ] {
+            assert!(text.contains(line), "missing {line:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn connection_counters_land_in_both_expositions() {
+        let m = ServeMetrics::new();
+        m.conn_opened();
+        m.conn_opened();
+        m.conn_closed();
+        m.conn_suspended();
+        m.record_keepalive_reuse();
+        m.record_keepalive_reuse();
+        m.record_keepalive_reuse();
+        let j = m.snapshot(0);
+        assert_eq!(j.get("connections_open").as_usize(), Some(1));
+        assert_eq!(j.get("connections_total").as_usize(), Some(2));
+        assert_eq!(j.get("suspended_connections").as_usize(), Some(1));
+        assert_eq!(j.get("keepalive_requests_total").as_usize(), Some(3));
+        m.conn_resumed();
+        assert_eq!(m.suspended_connections(), 0);
+        let text = m.prometheus(0);
+        for line in [
+            "flexor_http_connections_open 1",
+            "flexor_http_connections_total 2",
+            "flexor_http_suspended_connections 0",
+            "flexor_http_keepalive_requests_total 3",
         ] {
             assert!(text.contains(line), "missing {line:?} in:\n{text}");
         }

@@ -35,7 +35,13 @@
 //!   `DELETE /models/<name>`, `/metrics` — `?format=prometheus` for the
 //!   text exposition, `/models/<name>/profile`, `/healthz` liveness,
 //!   `/readyz` readiness), `X-Request-Id` generation/echo, structured
-//!   request logging, plus a one-shot client for tests/benches;
+//!   request logging, plus a one-shot client for tests/benches. Two
+//!   front-end modes (DESIGN.md §14): the default nonblocking readiness
+//!   loop (epoll/poll via `substrate::net`, keep-alive + pipelining,
+//!   incremental framing, idle/header timeouts, suspension-based
+//!   backpressure, streaming zero-allocation `/predict` parsing) and the
+//!   thread-per-connection fallback (`FLEXOR_HTTP_MODE=threads`), kept
+//!   as the behavioral oracle;
 //! * [`error`]    — the stable error-code vocabulary every non-2xx body
 //!   carries (`code` field), shared between workers and the HTTP layer.
 //!
@@ -62,8 +68,8 @@ pub mod registry;
 pub mod worker;
 
 pub use error::{ErrorCode, ServeError};
-pub use http::{ServeConfig, Server};
+pub use http::{Frame, FrameError, FrameParser, HttpMode, PredictVisitor, ServeConfig, Server};
 pub use metrics::ServeMetrics;
 pub use queue::{BatchQueue, PushError};
 pub use registry::{ControlError, ModelEntry, Registry, SwapReport};
-pub use worker::{Prediction, Request, Response, WorkerPool};
+pub use worker::{Prediction, Request, Responder, Response, WorkerPool};

@@ -72,6 +72,15 @@ impl<T> BatchQueue<T> {
         self.state.lock().unwrap().closed
     }
 
+    /// Whether an admission would currently succeed. Racy by nature —
+    /// used by the event-loop front-end as the backpressure hint for
+    /// resuming suspended connections, where a stale answer only costs
+    /// one extra `try_push` round trip.
+    pub fn has_space(&self) -> bool {
+        let s = self.state.lock().unwrap();
+        !s.closed && s.items.len() < self.capacity
+    }
+
     /// Non-blocking admission; returns the item back on rejection.
     pub fn try_push(&self, item: T) -> Result<(), (T, PushError)> {
         let mut s = self.state.lock().unwrap();

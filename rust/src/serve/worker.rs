@@ -39,7 +39,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::substrate::json::Json;
-use crate::substrate::{fault, trace};
+use crate::substrate::{fault, net, trace};
 
 use super::error::{ErrorCode, ServeError};
 use super::metrics::ServeMetrics;
@@ -67,14 +67,73 @@ pub struct Prediction {
 /// What comes back on a request's response channel.
 pub type Response = std::result::Result<Prediction, ServeError>;
 
+/// One finished prediction handed back to the event loop: which
+/// connection/sequence slot it answers, the result, and the features
+/// buffer riding along so the loop thread can recycle it through its
+/// thread-local arena (arenas do not share across threads).
+pub struct Completion {
+    pub conn: u64,
+    pub seq: u64,
+    pub result: Response,
+    pub features: Vec<f32>,
+}
+
+/// Shared mailbox between worker threads and a nonblocking event loop:
+/// workers push finished predictions and nudge the loop's waker; the
+/// loop drains on wakeup. The blocking front-end never uses this — it
+/// keeps per-request channels.
+pub struct CompletionBoard {
+    inner: Mutex<Vec<Completion>>,
+    waker: net::WakeHandle,
+}
+
+impl CompletionBoard {
+    pub fn new(waker: net::WakeHandle) -> CompletionBoard {
+        CompletionBoard { inner: Mutex::new(Vec::new()), waker }
+    }
+
+    pub fn push(&self, c: Completion) {
+        self.inner.lock().unwrap().push(c);
+        self.waker.wake();
+    }
+
+    /// Move all pending completions into `out` (amortized allocation:
+    /// the internal Vec keeps its capacity).
+    pub fn drain(&self, out: &mut Vec<Completion>) {
+        out.append(&mut self.inner.lock().unwrap());
+    }
+}
+
+/// Where a request's answer goes: a blocking one-shot channel
+/// (thread-per-connection mode, benches, direct tests) or a completion
+/// slot on the event loop's board. `complete` consumes the responder —
+/// every request is answered exactly once.
+pub enum Responder {
+    Channel(mpsc::Sender<Response>),
+    Completion { board: Arc<CompletionBoard>, conn: u64, seq: u64 },
+}
+
+impl Responder {
+    pub fn complete(self, result: Response, features: Vec<f32>) {
+        match self {
+            Responder::Channel(tx) => {
+                tx.send(result).ok();
+            }
+            Responder::Completion { board, conn, seq } => {
+                board.push(Completion { conn, seq, result, features });
+            }
+        }
+    }
+}
+
 /// One admitted inference request.
 pub struct Request {
     /// Resolved at admission so workers never need the registry lock.
     pub entry: Arc<ModelEntry>,
     /// Flat input features, length `entry.feature_len`.
     pub features: Vec<f32>,
-    /// One-shot response channel back to the waiting connection handler.
-    pub respond: mpsc::Sender<Response>,
+    /// One-shot response path back to the waiting connection.
+    pub respond: Responder,
     /// Admission timestamp (latency accounting).
     pub enqueued: Instant,
     /// Absolute deadline (from `X-Deadline-Ms` / `FLEXOR_DEADLINE_MS`);
@@ -278,12 +337,14 @@ fn worker_loop(
                             ("queue_wait_ms", Json::num(waited_ms)),
                         ],
                     );
-                    r.respond
-                        .send(Err(ServeError::new(
+                    let Request { respond, features, .. } = r;
+                    respond.complete(
+                        Err(ServeError::new(
                             ErrorCode::DeadlineExceeded,
                             format!("deadline exceeded after {waited_ms:.1} ms in queue"),
-                        )))
-                        .ok();
+                        )),
+                        features,
+                    );
                     continue;
                 }
             }
@@ -329,7 +390,8 @@ fn serve_group(reqs: Vec<Request>, metrics: &ServeMetrics, mode: trace::TraceMod
                 r.features.len()
             );
             metrics.record_request(&entry.name, elapsed_ms(&r), false);
-            r.respond.send(Err(ServeError::new(ErrorCode::BadRequest, msg))).ok();
+            let Request { respond, features, .. } = r;
+            respond.complete(Err(ServeError::new(ErrorCode::BadRequest, msg)), features);
         }
     }
     if batch.is_empty() {
@@ -351,17 +413,19 @@ fn serve_group(reqs: Vec<Request>, metrics: &ServeMetrics, mode: trace::TraceMod
     }));
     match result {
         Ok(Ok(preds)) => {
-            for (r, &class) in batch.iter().zip(&preds) {
-                let latency_ms = elapsed_ms(r);
+            for (r, &class) in batch.into_iter().zip(&preds) {
+                let latency_ms = elapsed_ms(&r);
                 metrics.record_request(&entry.name, latency_ms, true);
-                r.respond
-                    .send(Ok(Prediction {
+                let Request { respond, features, .. } = r;
+                respond.complete(
+                    Ok(Prediction {
                         model: entry.name.clone(),
                         class,
                         batch_size: n,
                         latency_ms,
-                    }))
-                    .ok();
+                    }),
+                    features,
+                );
             }
             false
         }
@@ -376,11 +440,10 @@ fn serve_group(reqs: Vec<Request>, metrics: &ServeMetrics, mode: trace::TraceMod
                     ("error", Json::str(format!("{e:#}"))),
                 ],
             );
-            for r in &batch {
-                metrics.record_request(&entry.name, elapsed_ms(r), false);
-                r.respond
-                    .send(Err(ServeError::new(ErrorCode::Internal, msg.clone())))
-                    .ok();
+            for r in batch {
+                metrics.record_request(&entry.name, elapsed_ms(&r), false);
+                let Request { respond, features, .. } = r;
+                respond.complete(Err(ServeError::new(ErrorCode::Internal, msg.clone())), features);
             }
             false
         }
@@ -404,11 +467,13 @@ fn serve_group(reqs: Vec<Request>, metrics: &ServeMetrics, mode: trace::TraceMod
             } else {
                 ErrorCode::WorkerPanic
             };
-            for r in &batch {
-                metrics.record_request(&entry.name, elapsed_ms(r), false);
-                r.respond
-                    .send(Err(ServeError::new(code, format!("worker panicked: {msg}"))))
-                    .ok();
+            for r in batch {
+                metrics.record_request(&entry.name, elapsed_ms(&r), false);
+                let Request { respond, features, .. } = r;
+                respond.complete(
+                    Err(ServeError::new(code, format!("worker panicked: {msg}"))),
+                    features,
+                );
             }
             true
         }

@@ -477,6 +477,497 @@ impl<'a> Parser<'a> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// streaming lexer (SAX-style visitor)
+// ---------------------------------------------------------------------------
+
+/// Maximum container nesting the streaming lexer accepts. The explicit
+/// frame stack is preallocated to exactly this depth, so steady-state
+/// lexing performs zero heap allocations; the recursive tree parser has
+/// no such bound, so keep generated oracle documents shallower than this.
+pub const MAX_LEX_DEPTH: usize = 128;
+
+/// Visitor callbacks emitted by [`Lexer::lex`] in document order.
+/// Returning `Err(msg)` aborts the lex with a [`ParseError`] at the
+/// current byte offset. All methods default to "accept and continue" so
+/// visitors only override the events they care about.
+pub trait Visitor {
+    fn on_null(&mut self) -> Result<(), &'static str> {
+        Ok(())
+    }
+    fn on_bool(&mut self, _b: bool) -> Result<(), &'static str> {
+        Ok(())
+    }
+    fn on_num(&mut self, _n: f64) -> Result<(), &'static str> {
+        Ok(())
+    }
+    fn on_str(&mut self, _s: &str) -> Result<(), &'static str> {
+        Ok(())
+    }
+    fn on_key(&mut self, _k: &str) -> Result<(), &'static str> {
+        Ok(())
+    }
+    fn begin_arr(&mut self) -> Result<(), &'static str> {
+        Ok(())
+    }
+    fn end_arr(&mut self) -> Result<(), &'static str> {
+        Ok(())
+    }
+    fn begin_obj(&mut self) -> Result<(), &'static str> {
+        Ok(())
+    }
+    fn end_obj(&mut self) -> Result<(), &'static str> {
+        Ok(())
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Frame {
+    Arr,
+    Obj,
+}
+
+/// Where a scanned string lives: borrowed straight from the input when
+/// escape-free, or decoded into the lexer's reusable scratch buffer.
+enum StrSpan {
+    Borrowed(usize, usize),
+    Scratch,
+}
+
+/// Reusable streaming JSON lexer. One instance per connection/thread:
+/// the scratch `String` (escape decoding) and the container frame stack
+/// are allocated once and recycled across calls, so lexing a request
+/// whose strings fit the warm scratch capacity allocates nothing.
+///
+/// Grammar and acceptance are transcribed from [`parse`] (the tree
+/// parser is the oracle the property tests pin this lexer to), with one
+/// deliberate divergence: nesting deeper than [`MAX_LEX_DEPTH`] is
+/// rejected instead of recursing.
+///
+/// # Examples
+///
+/// ```
+/// use flexor::substrate::json::{Lexer, TreeBuilder, parse};
+///
+/// let doc = r#"{"model":"m","features":[1,2.5,-3e2]}"#;
+/// let mut builder = TreeBuilder::new();
+/// Lexer::new().lex(doc.as_bytes(), &mut builder).unwrap();
+/// assert_eq!(builder.take(), parse(doc).ok());
+/// ```
+pub struct Lexer {
+    scratch: String,
+    stack: Vec<Frame>,
+}
+
+impl Default for Lexer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Lexer {
+    pub fn new() -> Lexer {
+        Lexer { scratch: String::with_capacity(128), stack: Vec::with_capacity(MAX_LEX_DEPTH) }
+    }
+
+    /// Lex `input` end to end, emitting events into `v`. Exactly one
+    /// top-level value is accepted (leading/trailing whitespace allowed),
+    /// matching [`parse`].
+    pub fn lex<V: Visitor>(&mut self, input: &[u8], v: &mut V) -> Result<(), ParseError> {
+        self.stack.clear();
+        let b = input;
+        let mut i = 0usize;
+        skip_ws(b, &mut i);
+
+        // Iterative value loop: each pass parses one value, then unwinds
+        // closing brackets / separators until the next value position.
+        'value: loop {
+            match b.get(i).copied() {
+                Some(b'n') => {
+                    lit(b, &mut i, "null")?;
+                    v.on_null().map_err(|m| verr(i, m))?;
+                }
+                Some(b't') => {
+                    lit(b, &mut i, "true")?;
+                    v.on_bool(true).map_err(|m| verr(i, m))?;
+                }
+                Some(b'f') => {
+                    lit(b, &mut i, "false")?;
+                    v.on_bool(false).map_err(|m| verr(i, m))?;
+                }
+                Some(b'"') => {
+                    let span = self.scan_string(b, &mut i)?;
+                    let s = self.span_str(b, span);
+                    v.on_str(s).map_err(|m| verr(i, m))?;
+                }
+                Some(b'[') => {
+                    if self.stack.len() >= MAX_LEX_DEPTH {
+                        return Err(verr(i, "nesting too deep"));
+                    }
+                    i += 1;
+                    v.begin_arr().map_err(|m| verr(i, m))?;
+                    skip_ws(b, &mut i);
+                    if b.get(i) == Some(&b']') {
+                        i += 1;
+                        v.end_arr().map_err(|m| verr(i, m))?;
+                    } else {
+                        self.stack.push(Frame::Arr);
+                        skip_ws(b, &mut i);
+                        continue 'value;
+                    }
+                }
+                Some(b'{') => {
+                    if self.stack.len() >= MAX_LEX_DEPTH {
+                        return Err(verr(i, "nesting too deep"));
+                    }
+                    i += 1;
+                    v.begin_obj().map_err(|m| verr(i, m))?;
+                    skip_ws(b, &mut i);
+                    if b.get(i) == Some(&b'}') {
+                        i += 1;
+                        v.end_obj().map_err(|m| verr(i, m))?;
+                    } else {
+                        self.stack.push(Frame::Obj);
+                        skip_ws(b, &mut i);
+                        let span = self.scan_string(b, &mut i)?;
+                        {
+                            let k = self.span_str(b, span);
+                            v.on_key(k).map_err(|m| verr(i, m))?;
+                        }
+                        skip_ws(b, &mut i);
+                        expect(b, &mut i, b':')?;
+                        skip_ws(b, &mut i);
+                        continue 'value;
+                    }
+                }
+                Some(c) if c == b'-' || c.is_ascii_digit() => {
+                    let n = scan_number(b, &mut i)?;
+                    v.on_num(n).map_err(|m| verr(i, m))?;
+                }
+                Some(_) => return Err(verr(i, "unexpected character")),
+                None => return Err(verr(i, "unexpected end of input")),
+            }
+
+            // A value just closed; pop containers / consume separators.
+            loop {
+                let Some(&frame) = self.stack.last() else {
+                    skip_ws(b, &mut i);
+                    if i != b.len() {
+                        return Err(verr(i, "trailing characters"));
+                    }
+                    return Ok(());
+                };
+                skip_ws(b, &mut i);
+                match frame {
+                    Frame::Arr => match b.get(i).copied() {
+                        Some(b',') => {
+                            i += 1;
+                            skip_ws(b, &mut i);
+                            continue 'value;
+                        }
+                        Some(b']') => {
+                            i += 1;
+                            self.stack.pop();
+                            v.end_arr().map_err(|m| verr(i, m))?;
+                        }
+                        _ => return Err(verr(i, "expected ',' or ']'")),
+                    },
+                    Frame::Obj => match b.get(i).copied() {
+                        Some(b',') => {
+                            i += 1;
+                            skip_ws(b, &mut i);
+                            let span = self.scan_string(b, &mut i)?;
+                            {
+                                let k = self.span_str(b, span);
+                                v.on_key(k).map_err(|m| verr(i, m))?;
+                            }
+                            skip_ws(b, &mut i);
+                            expect(b, &mut i, b':')?;
+                            skip_ws(b, &mut i);
+                            continue 'value;
+                        }
+                        Some(b'}') => {
+                            i += 1;
+                            self.stack.pop();
+                            v.end_obj().map_err(|m| verr(i, m))?;
+                        }
+                        _ => return Err(verr(i, "expected ',' or '}'")),
+                    },
+                }
+            }
+        }
+    }
+
+    fn span_str<'a>(&'a self, b: &'a [u8], span: StrSpan) -> &'a str {
+        match span {
+            // Safety-free: scan_string validated this span as UTF-8.
+            StrSpan::Borrowed(a, z) => std::str::from_utf8(&b[a..z]).unwrap_or(""),
+            StrSpan::Scratch => &self.scratch,
+        }
+    }
+
+    /// Scan a quoted string at `*i`. Escape-free strings are returned as
+    /// a borrowed span (validated UTF-8, no copy); strings with escapes
+    /// are decoded into the reusable scratch buffer. Acceptance matches
+    /// `Parser::string`, including its `\u` quirks.
+    fn scan_string(&mut self, b: &[u8], i: &mut usize) -> Result<StrSpan, ParseError> {
+        expect(b, i, b'"')?;
+        let start = *i;
+        // Fast path: find the closing quote; bail to slow path on '\\'.
+        // Byte-wise scanning is safe: '"' and '\\' are ASCII and cannot
+        // appear inside a UTF-8 multi-byte sequence.
+        loop {
+            match b.get(*i).copied() {
+                None => return Err(verr(*i, "unterminated string")),
+                Some(b'"') => {
+                    let span = &b[start..*i];
+                    if std::str::from_utf8(span).is_err() {
+                        return Err(verr(*i, "invalid utf-8"));
+                    }
+                    if span.iter().any(|&c| c < 0x20) {
+                        return Err(verr(*i, "control char in string"));
+                    }
+                    *i += 1;
+                    return Ok(StrSpan::Borrowed(start, *i - 1));
+                }
+                Some(b'\\') => break,
+                Some(_) => *i += 1,
+            }
+        }
+
+        // Slow path: decode into scratch, starting from the clean prefix.
+        self.scratch.clear();
+        {
+            let prefix = &b[start..*i];
+            let p = std::str::from_utf8(prefix).map_err(|_| verr(*i, "invalid utf-8"))?;
+            if p.bytes().any(|c| c < 0x20) {
+                return Err(verr(*i, "control char in string"));
+            }
+            self.scratch.push_str(p);
+        }
+        loop {
+            match b.get(*i).copied() {
+                None => return Err(verr(*i, "unterminated string")),
+                Some(b'"') => {
+                    *i += 1;
+                    return Ok(StrSpan::Scratch);
+                }
+                Some(b'\\') => {
+                    *i += 1;
+                    match b.get(*i).copied() {
+                        Some(b'"') => self.scratch.push('"'),
+                        Some(b'\\') => self.scratch.push('\\'),
+                        Some(b'/') => self.scratch.push('/'),
+                        Some(b'b') => self.scratch.push('\u{8}'),
+                        Some(b'f') => self.scratch.push('\u{c}'),
+                        Some(b'n') => self.scratch.push('\n'),
+                        Some(b'r') => self.scratch.push('\r'),
+                        Some(b't') => self.scratch.push('\t'),
+                        Some(b'u') => {
+                            *i += 1;
+                            let hi = hex4(b, i)?;
+                            let c = if (0xD800..0xDC00).contains(&hi) {
+                                if !b[*i..].starts_with(b"\\u") {
+                                    return Err(verr(*i, "lone high surrogate"));
+                                }
+                                *i += 2;
+                                let lo = hex4(b, i)?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(verr(*i, "invalid low surrogate"));
+                                }
+                                let cp = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                char::from_u32(cp)
+                            } else {
+                                char::from_u32(hi)
+                            };
+                            match c {
+                                Some(c) => self.scratch.push(c),
+                                None => return Err(verr(*i, "invalid codepoint")),
+                            }
+                            continue; // hex4 advanced past the escape
+                        }
+                        _ => return Err(verr(*i, "bad escape")),
+                    }
+                    *i += 1;
+                }
+                Some(c) => {
+                    // Copy a maximal escape-free run in one validated chunk.
+                    if c < 0x20 {
+                        return Err(verr(*i, "control char in string"));
+                    }
+                    let run_start = *i;
+                    while let Some(&c) = b.get(*i) {
+                        if c == b'"' || c == b'\\' || c < 0x20 {
+                            break;
+                        }
+                        *i += 1;
+                    }
+                    let run = std::str::from_utf8(&b[run_start..*i])
+                        .map_err(|_| verr(*i, "invalid utf-8"))?;
+                    self.scratch.push_str(run);
+                }
+            }
+        }
+    }
+}
+
+fn verr(offset: usize, msg: &str) -> ParseError {
+    ParseError { offset, msg: msg.to_string() }
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while matches!(b.get(*i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+        *i += 1;
+    }
+}
+
+fn expect(b: &[u8], i: &mut usize, c: u8) -> Result<(), ParseError> {
+    if b.get(*i) == Some(&c) {
+        *i += 1;
+        Ok(())
+    } else {
+        Err(verr(*i, &format!("expected '{}'", c as char)))
+    }
+}
+
+fn lit(b: &[u8], i: &mut usize, s: &str) -> Result<(), ParseError> {
+    if b[*i..].starts_with(s.as_bytes()) {
+        *i += s.len();
+        Ok(())
+    } else {
+        Err(verr(*i, &format!("expected '{s}'")))
+    }
+}
+
+fn hex4(b: &[u8], i: &mut usize) -> Result<u32, ParseError> {
+    if *i + 4 > b.len() {
+        return Err(verr(*i, "truncated \\u escape"));
+    }
+    let hex = std::str::from_utf8(&b[*i..*i + 4]).map_err(|_| verr(*i, "bad \\u escape"))?;
+    let v = u32::from_str_radix(hex, 16).map_err(|_| verr(*i, "bad hex"))?;
+    *i += 4;
+    Ok(v)
+}
+
+fn scan_number(b: &[u8], i: &mut usize) -> Result<f64, ParseError> {
+    let start = *i;
+    if b.get(*i) == Some(&b'-') {
+        *i += 1;
+    }
+    while matches!(b.get(*i), Some(c) if c.is_ascii_digit()) {
+        *i += 1;
+    }
+    if b.get(*i) == Some(&b'.') {
+        *i += 1;
+        while matches!(b.get(*i), Some(c) if c.is_ascii_digit()) {
+            *i += 1;
+        }
+    }
+    if matches!(b.get(*i), Some(b'e' | b'E')) {
+        *i += 1;
+        if matches!(b.get(*i), Some(b'+' | b'-')) {
+            *i += 1;
+        }
+        while matches!(b.get(*i), Some(c) if c.is_ascii_digit()) {
+            *i += 1;
+        }
+    }
+    // The number span is ASCII by construction; str::parse is the same
+    // final arbiter the tree parser uses, so acceptance stays identical.
+    let text = std::str::from_utf8(&b[start..*i]).unwrap();
+    text.parse::<f64>().map_err(|_| verr(start, "bad number"))
+}
+
+/// Visitor that rebuilds the [`Json`] tree — the bridge used to check
+/// lexer ≡ parser equivalence, and a drop-in for callers that want the
+/// streaming entry point but still need a tree.
+pub struct TreeBuilder {
+    stack: Vec<Json>,
+    keys: Vec<String>,
+    root: Option<Json>,
+}
+
+impl Default for TreeBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TreeBuilder {
+    pub fn new() -> TreeBuilder {
+        TreeBuilder { stack: Vec::new(), keys: Vec::new(), root: None }
+    }
+
+    /// The finished document (once [`Lexer::lex`] returned `Ok`).
+    pub fn take(&mut self) -> Option<Json> {
+        self.root.take()
+    }
+
+    fn place(&mut self, v: Json) -> Result<(), &'static str> {
+        match self.stack.last_mut() {
+            None => {
+                self.root = Some(v);
+                Ok(())
+            }
+            Some(Json::Arr(items)) => {
+                items.push(v);
+                Ok(())
+            }
+            Some(Json::Obj(map)) => {
+                let k = self.keys.pop().ok_or("object value without key")?;
+                map.insert(k, v);
+                Ok(())
+            }
+            Some(_) => Err("value placed in non-container"),
+        }
+    }
+
+    fn close(&mut self) -> Result<(), &'static str> {
+        let v = self.stack.pop().ok_or("unbalanced close")?;
+        self.place(v)
+    }
+}
+
+impl Visitor for TreeBuilder {
+    fn on_null(&mut self) -> Result<(), &'static str> {
+        self.place(Json::Null)
+    }
+    fn on_bool(&mut self, b: bool) -> Result<(), &'static str> {
+        self.place(Json::Bool(b))
+    }
+    fn on_num(&mut self, n: f64) -> Result<(), &'static str> {
+        self.place(Json::Num(n))
+    }
+    fn on_str(&mut self, s: &str) -> Result<(), &'static str> {
+        self.place(Json::Str(s.to_string()))
+    }
+    fn on_key(&mut self, k: &str) -> Result<(), &'static str> {
+        self.keys.push(k.to_string());
+        Ok(())
+    }
+    fn begin_arr(&mut self) -> Result<(), &'static str> {
+        self.stack.push(Json::Arr(Vec::new()));
+        Ok(())
+    }
+    fn end_arr(&mut self) -> Result<(), &'static str> {
+        self.close()
+    }
+    fn begin_obj(&mut self) -> Result<(), &'static str> {
+        self.stack.push(Json::Obj(BTreeMap::new()));
+        Ok(())
+    }
+    fn end_obj(&mut self) -> Result<(), &'static str> {
+        self.close()
+    }
+}
+
+/// Convenience: lex `input` into a rebuilt tree with a fresh [`Lexer`].
+pub fn lex_to_tree(input: &[u8]) -> Result<Json, ParseError> {
+    let mut builder = TreeBuilder::new();
+    Lexer::new().lex(input, &mut builder)?;
+    builder.take().ok_or_else(|| verr(0, "empty document"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -594,6 +1085,92 @@ mod tests {
         assert_eq!(back, None); // scalar, not array
         let arr = Json::arr([j]);
         assert_eq!(parse(&arr.to_string()).unwrap().as_f32_vec(), Some(vec![x]));
+    }
+
+    #[test]
+    fn lexer_matches_parser_on_basics() {
+        for doc in [
+            "null",
+            "true",
+            "false",
+            "3.5",
+            "-42",
+            "1e3",
+            "01",
+            "1.",
+            "\"hi\"",
+            "[]",
+            "{}",
+            "[1, [2, []], {\"a\": null}]",
+            r#"{"model":"mlp@v1","features":[0.5,-1e-3,3]}"#,
+            r#""a\n\t\"\\Aé""#,
+            r#""😀""#,
+            r#""\ud83d\ude00""#,
+            "  [ 1 , 2 ]  ",
+        ] {
+            assert_eq!(lex_to_tree(doc.as_bytes()).ok(), parse(doc).ok(), "doc={doc:?}");
+        }
+    }
+
+    #[test]
+    fn lexer_rejects_what_parser_rejects() {
+        for doc in [
+            "",
+            "{",
+            "[1,]",
+            "tru",
+            "1 2",
+            r#"{"a" 1}"#,
+            "\"\\ud800x\"",
+            "\"unterminated",
+            "\"ctl\u{1}\"",
+            "[1, 2",
+            "{\"a\":}",
+            "-",
+            "1e",
+            ".5",
+            "nan",
+            "\"bad\\escape\"",
+            "\"\\u12\"",
+        ] {
+            assert_eq!(
+                lex_to_tree(doc.as_bytes()).is_ok(),
+                parse(doc).is_ok(),
+                "verdict diverged on {doc:?}"
+            );
+            assert!(lex_to_tree(doc.as_bytes()).is_err(), "lexer accepted {doc:?}");
+        }
+    }
+
+    #[test]
+    fn lexer_depth_bound_is_enforced() {
+        let deep_ok = format!("{}0{}", "[".repeat(MAX_LEX_DEPTH), "]".repeat(MAX_LEX_DEPTH));
+        assert!(lex_to_tree(deep_ok.as_bytes()).is_ok());
+        let too_deep =
+            format!("{}0{}", "[".repeat(MAX_LEX_DEPTH + 1), "]".repeat(MAX_LEX_DEPTH + 1));
+        assert!(lex_to_tree(too_deep.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn lexer_reuse_across_documents() {
+        let mut lexer = Lexer::new();
+        for doc in [r#"{"a":"x\ny"}"#, "[1,2,3]", r#""plain""#] {
+            let mut b = TreeBuilder::new();
+            lexer.lex(doc.as_bytes(), &mut b).unwrap();
+            assert_eq!(b.take(), parse(doc).ok(), "doc={doc:?}");
+        }
+    }
+
+    #[test]
+    fn visitor_abort_surfaces_as_parse_error() {
+        struct NoStrings;
+        impl Visitor for NoStrings {
+            fn on_str(&mut self, _s: &str) -> Result<(), &'static str> {
+                Err("strings not allowed here")
+            }
+        }
+        let err = Lexer::new().lex(br#"[1, "x"]"#, &mut NoStrings).unwrap_err();
+        assert!(err.msg.contains("strings not allowed"), "{err}");
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 pub mod prng;
 pub mod json;
+pub mod net;
 pub mod argparse;
 pub mod stats;
 pub mod bench;

@@ -1,0 +1,509 @@
+//! Nonblocking readiness primitives built in-repo (DESIGN.md §5: no
+//! external crates, so the mio-shaped surface the event-loop front-end
+//! needs — an OS readiness queue plus a cross-thread waker — is vendored
+//! here directly on top of raw syscalls).
+//!
+//! The [`Poller`] wraps `epoll(7)` on Linux and `poll(2)` on other unix
+//! platforms behind one level-triggered API keyed by caller-chosen
+//! `u64` tokens. The [`Waker`] is a loopback TCP socketpair: writing a
+//! byte to one end makes the other end readable, which wakes a blocked
+//! [`Poller::wait`] without any non-std `pipe()`/`eventfd()` bindings.
+//! Both are deliberately tiny: the HTTP event loop in `serve/http.rs`
+//! owns all buffering, timeout, and state-machine policy; this module
+//! only answers "which sockets are ready right now?".
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+
+/// Readiness interest for a registered descriptor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Interest {
+    /// Wake when the descriptor is readable (or closed/errored).
+    Read,
+    /// Wake when the descriptor is writable (or closed/errored).
+    Write,
+    /// Wake on either direction.
+    ReadWrite,
+}
+
+impl Interest {
+    fn wants_read(self) -> bool {
+        matches!(self, Interest::Read | Interest::ReadWrite)
+    }
+
+    fn wants_write(self) -> bool {
+        matches!(self, Interest::Write | Interest::ReadWrite)
+    }
+}
+
+/// One readiness report from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Caller-chosen token passed at registration.
+    pub token: u64,
+    /// Descriptor has bytes to read (or a pending accept).
+    pub readable: bool,
+    /// Descriptor can accept more bytes.
+    pub writable: bool,
+    /// Peer hung up or the descriptor errored; the owner should close.
+    pub closed: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Linux: epoll via direct syscall declarations (no libc crate).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use super::*;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    /// Kernel `struct epoll_event` — packed on x86-64 by ABI contract.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    /// Level-triggered epoll instance. Level triggering keeps the event
+    /// loop simple and loss-proof: a socket with unconsumed bytes keeps
+    /// reporting readable, so suspending a connection is just "skip the
+    /// read this tick" with no re-arm bookkeeping.
+    pub struct Poller {
+        epfd: i32,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            // Safety: plain syscall; a negative return is reported via errno.
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 1024] })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, interest: Option<Interest>, token: u64) -> io::Result<()> {
+            let mut ev = EpollEvent { events: 0, data: token };
+            if let Some(i) = interest {
+                if i.wants_read() {
+                    ev.events |= EPOLLIN | EPOLLRDHUP;
+                }
+                if i.wants_write() {
+                    ev.events |= EPOLLOUT;
+                }
+            }
+            // Safety: `ev` outlives the call; the kernel copies it.
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, Some(interest), token)
+        }
+
+        pub fn reregister(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, Some(interest), token)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, None, 0)
+        }
+
+        pub fn wait(&mut self, timeout_ms: i32, out: &mut Vec<Event>) -> io::Result<()> {
+            out.clear();
+            let n = loop {
+                // Safety: `buf` stays alive and sized for the whole call.
+                let rc = unsafe {
+                    epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as i32, timeout_ms)
+                };
+                if rc >= 0 {
+                    break rc as usize;
+                }
+                let err = io::Error::last_os_error();
+                if err.kind() != io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+            };
+            for ev in &self.buf[..n] {
+                let bits = ev.events;
+                out.push(Event {
+                    token: ev.data,
+                    readable: bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP) != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    closed: bits & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            // Safety: fd is owned by this instance and closed exactly once.
+            unsafe { close(self.epfd) };
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Other unix: poll(2) fallback. Same level-triggered semantics, O(n) scan.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    use super::*;
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+    }
+
+    pub struct Poller {
+        entries: Vec<(RawFd, u64, Interest)>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { entries: Vec::new() })
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.entries.push((fd, token, interest));
+            Ok(())
+        }
+
+        pub fn reregister(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            for e in &mut self.entries {
+                if e.0 == fd {
+                    *e = (fd, token, interest);
+                    return Ok(());
+                }
+            }
+            Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"))
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.entries.retain(|e| e.0 != fd);
+            Ok(())
+        }
+
+        pub fn wait(&mut self, timeout_ms: i32, out: &mut Vec<Event>) -> io::Result<()> {
+            out.clear();
+            let mut fds: Vec<PollFd> = self
+                .entries
+                .iter()
+                .map(|&(fd, _, interest)| {
+                    let mut events = 0i16;
+                    if interest.wants_read() {
+                        events |= POLLIN;
+                    }
+                    if interest.wants_write() {
+                        events |= POLLOUT;
+                    }
+                    PollFd { fd, events, revents: 0 }
+                })
+                .collect();
+            let n = loop {
+                // Safety: `fds` is a live, correctly-sized C-layout array.
+                let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, timeout_ms) };
+                if rc >= 0 {
+                    break rc;
+                }
+                let err = io::Error::last_os_error();
+                if err.kind() != io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+            };
+            if n == 0 {
+                return Ok(());
+            }
+            for (pfd, &(_, token, _)) in fds.iter().zip(self.entries.iter()) {
+                let r = pfd.revents;
+                if r == 0 {
+                    continue;
+                }
+                out.push(Event {
+                    token,
+                    readable: r & (POLLIN | POLLHUP) != 0,
+                    writable: r & POLLOUT != 0,
+                    closed: r & (POLLERR | POLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Non-unix: compile but fail at runtime (the threaded front-end remains
+// available via FLEXOR_HTTP_MODE=threads).
+// ---------------------------------------------------------------------------
+
+#[cfg(not(unix))]
+mod sys {
+    use super::*;
+
+    pub struct Poller;
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "event-loop poller requires unix; use FLEXOR_HTTP_MODE=threads",
+            ))
+        }
+
+        pub fn register(&mut self, _fd: RawFd, _token: u64, _i: Interest) -> io::Result<()> {
+            unreachable!("Poller cannot be constructed on this platform")
+        }
+
+        pub fn reregister(&mut self, _fd: RawFd, _token: u64, _i: Interest) -> io::Result<()> {
+            unreachable!("Poller cannot be constructed on this platform")
+        }
+
+        pub fn deregister(&mut self, _fd: RawFd) -> io::Result<()> {
+            unreachable!("Poller cannot be constructed on this platform")
+        }
+
+        pub fn wait(&mut self, _timeout_ms: i32, _out: &mut Vec<Event>) -> io::Result<()> {
+            unreachable!("Poller cannot be constructed on this platform")
+        }
+    }
+}
+
+/// OS readiness queue: register descriptors under tokens, then block in
+/// [`wait`](Poller::wait) until any become ready. Level-triggered on
+/// every backend — an unconsumed readable socket reports again next
+/// tick, which is exactly what connection-suspension backpressure needs.
+pub struct Poller {
+    inner: sys::Poller,
+    /// Interest book-keeping so callers can `set_interest` idempotently
+    /// without tracking registration state themselves.
+    interests: HashMap<RawFd, Interest>,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller { inner: sys::Poller::new()?, interests: HashMap::new() })
+    }
+
+    /// Register `fd` under `token`. Registering an already-registered fd
+    /// updates its token and interest instead of erroring.
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        if self.interests.contains_key(&fd) {
+            self.inner.reregister(fd, token, interest)?;
+        } else {
+            self.inner.register(fd, token, interest)?;
+        }
+        self.interests.insert(fd, interest);
+        Ok(())
+    }
+
+    /// Change the interest set of a registered fd; no-op when unchanged.
+    pub fn set_interest(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        if self.interests.get(&fd) == Some(&interest) {
+            return Ok(());
+        }
+        self.inner.reregister(fd, token, interest)?;
+        self.interests.insert(fd, interest);
+        Ok(())
+    }
+
+    /// Remove `fd` from the readiness set (call before closing it).
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        if self.interests.remove(&fd).is_some() {
+            self.inner.deregister(fd)?;
+        }
+        Ok(())
+    }
+
+    /// Block up to `timeout_ms` (negative = forever, 0 = poll) and fill
+    /// `out` with ready descriptors. Spurious wakeups (empty `out`) are
+    /// legal; EINTR is retried internally.
+    pub fn wait(&mut self, timeout_ms: i32, out: &mut Vec<Event>) -> io::Result<()> {
+        self.inner.wait(timeout_ms, out)
+    }
+}
+
+/// Cross-thread wakeup for a blocked [`Poller::wait`], built from a
+/// loopback TCP socketpair so it needs nothing beyond std. The read end
+/// is registered in the poller under a reserved token; any thread holding
+/// a [`WakeHandle`] can make it readable.
+pub struct Waker {
+    reader: TcpStream,
+    writer: TcpStream,
+}
+
+/// Cheap clonable sender half of a [`Waker`].
+#[derive(Clone)]
+pub struct WakeHandle {
+    writer: TcpStream,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        // Loopback socketpair: connect to a throwaway ephemeral listener.
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let writer = TcpStream::connect(listener.local_addr()?)?;
+        let (reader, _) = listener.accept()?;
+        reader.set_nonblocking(true)?;
+        writer.set_nonblocking(true)?;
+        writer.set_nodelay(true)?;
+        Ok(Waker { reader, writer })
+    }
+
+    /// Descriptor to register for `Interest::Read` in the poller.
+    pub fn fd(&self) -> RawFd {
+        self.reader.as_raw_fd()
+    }
+
+    /// Sender half; clone freely across threads.
+    pub fn handle(&self) -> WakeHandle {
+        WakeHandle { writer: self.writer.try_clone().expect("waker clone") }
+    }
+
+    /// Drain pending wake bytes after the poller reports the waker fd
+    /// readable, so level-triggered polling does not spin.
+    pub fn drain(&mut self) {
+        let mut buf = [0u8; 64];
+        loop {
+            match self.reader.read(&mut buf) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+impl WakeHandle {
+    /// Make the poller's waker fd readable. Best-effort: a full socket
+    /// buffer already guarantees a pending wakeup, and errors mean the
+    /// loop is gone, so both are ignored.
+    pub fn wake(&self) {
+        let mut w = &self.writer;
+        let _ = w.write(&[1u8]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn waker_wakes_blocked_poll() {
+        let mut poller = Poller::new().unwrap();
+        let mut waker = Waker::new().unwrap();
+        poller.register(waker.fd(), 7, Interest::Read).unwrap();
+
+        let handle = waker.handle();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            handle.wake();
+        });
+
+        let start = Instant::now();
+        let mut events = Vec::new();
+        // Generous ceiling: the wake must arrive long before 5 s.
+        poller.wait(5_000, &mut events).unwrap();
+        assert!(start.elapsed() < Duration::from_secs(4), "poll did not wake early");
+        assert!(events.iter().any(|e| e.token == 7 && e.readable), "waker event missing");
+        waker.drain();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn listener_readable_on_pending_accept() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut poller = Poller::new().unwrap();
+        poller.register(listener.as_raw_fd(), 1, Interest::Read).unwrap();
+
+        let mut events = Vec::new();
+        poller.wait(0, &mut events).unwrap();
+        assert!(events.is_empty(), "no pending accept yet");
+
+        let _client = TcpStream::connect(addr).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut saw = false;
+        while Instant::now() < deadline {
+            poller.wait(100, &mut events).unwrap();
+            if events.iter().any(|e| e.token == 1 && e.readable) {
+                saw = true;
+                break;
+            }
+        }
+        assert!(saw, "listener never reported readable");
+        let (conn, _) = listener.accept().unwrap();
+        drop(conn);
+    }
+
+    #[test]
+    fn interest_switching_gates_write_events() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        client.set_nonblocking(true).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+
+        let mut poller = Poller::new().unwrap();
+        let fd = client.as_raw_fd();
+        poller.register(fd, 3, Interest::Read).unwrap();
+
+        // Idle socket with read-only interest: nothing to report.
+        let mut events = Vec::new();
+        poller.wait(50, &mut events).unwrap();
+        assert!(!events.iter().any(|e| e.token == 3), "spurious read event");
+
+        // Add write interest: an idle TCP socket is immediately writable.
+        poller.set_interest(fd, 3, Interest::ReadWrite).unwrap();
+        poller.wait(1_000, &mut events).unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 3 && e.writable),
+            "writable not reported after interest switch"
+        );
+
+        poller.deregister(fd).unwrap();
+        drop(server_side);
+    }
+}

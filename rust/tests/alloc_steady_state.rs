@@ -1,0 +1,98 @@
+//! Zero-allocation guarantee for the hot `/predict` parse path
+//! (DESIGN.md §14): once a connection's buffers are warm, framing a
+//! request ([`FrameParser`]) and stream-lexing its body into a recycled
+//! feature buffer ([`Lexer`] + [`PredictVisitor`]) must perform **zero**
+//! heap allocations per request. This is the property that lets the
+//! event loop serve steady-state traffic without touching the allocator.
+//!
+//! The test installs a counting `#[global_allocator]`, so it lives in
+//! its own integration-test binary: it is the only `#[test]` here, which
+//! keeps other tests' allocations out of the measured window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use flexor::serve::http::{FrameParser, PredictVisitor};
+use flexor::substrate::json::Lexer;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// One full parse cycle: feed the raw request, frame it, lex the body
+/// into the recycled feature buffer, hand the buffer back. Exactly what
+/// the event loop does per request on a warm connection.
+fn cycle(parser: &mut FrameParser, lexer: &mut Lexer, features: Vec<f32>, raw: &[u8]) -> Vec<f32> {
+    parser.feed(raw);
+    let frame = parser
+        .next_frame()
+        .expect("frame rejected")
+        .expect("frame incomplete");
+    let mut v = PredictVisitor::new(features);
+    lexer.lex(frame.body, &mut v).expect("body rejected");
+    assert_eq!(v.model(), Some("steady"), "model extraction changed");
+    assert!(v.features_ok(), "features extraction changed");
+    assert_eq!(v.features.len(), 12);
+    let mut features = v.into_features();
+    features.clear();
+    parser.consume();
+    features
+}
+
+#[test]
+fn predict_parse_path_is_allocation_free_at_steady_state() {
+    let body = r#"{"model":"steady","features":[1,2.5,-3e-2,4,5.5,6,7,8e0,9,10,11.25,12]}"#;
+    let raw = format!(
+        "POST /predict HTTP/1.1\r\nHost: x\r\nX-Request-Id: warm-1\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+
+    let mut parser = FrameParser::new(8 << 20);
+    let mut lexer = Lexer::new();
+    let mut features: Vec<f32> = Vec::new();
+
+    // Warm-up: let every reusable buffer (parser buf, lexer stack +
+    // scratch, feature vec) reach its steady-state capacity.
+    for _ in 0..32 {
+        features = cycle(&mut parser, &mut lexer, features, raw.as_bytes());
+    }
+
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..256 {
+        features = cycle(&mut parser, &mut lexer, features, raw.as_bytes());
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state /predict parse path allocated {} times over 256 requests",
+        after - before
+    );
+    assert!(features.is_empty());
+}

@@ -1,0 +1,677 @@
+//! Deterministic structure-aware fuzzing of the serving front-end's two
+//! incremental parsers (DESIGN.md §14):
+//!
+//! * [`FrameParser`] — the resumable HTTP/1.1 request framer the event
+//!   loop feeds from nonblocking sockets. Fuzzed with generated requests
+//!   run through structural mutations (truncation, byte flips, header
+//!   splicing, pipelined duplication) and delivered at randomized chunk
+//!   boundaries. Invariant: never panics, never yields a frame violating
+//!   its own bounds, and every rejection carries a coded 4xx status.
+//! * The streaming JSON [`Lexer`] — differentially fuzzed against the
+//!   recursive tree parser (`json::parse`), which the thread-per-
+//!   connection front-end still uses and which therefore serves as the
+//!   behavioral oracle: both must agree accept/reject on every input,
+//!   and on acceptance the rebuilt tree must be identical. The
+//!   [`PredictVisitor`] extraction is checked against the tree-based
+//!   field extraction `handle_predict` performs.
+//!
+//! Everything is seeded: `FLEXOR_FUZZ_SEED` picks the master seed
+//! (CI passes a time-derived one), `FLEXOR_FUZZ_CASES` the case count
+//! (default 10_000 — the tier-1 budget). Each case derives its own
+//! splitmix64 stream from the master seed, and a failing case prints
+//! `seed=…` plus the exact input bytes so any failure replays with
+//! `FLEXOR_FUZZ_SEED=<seed> cargo test --test fuzz_http_json`.
+
+use std::panic::{self, AssertUnwindSafe};
+
+use flexor::serve::http::{FrameParser, PredictVisitor, MAX_MODEL_NAME};
+use flexor::substrate::json::{self, lex_to_tree, Json, Lexer};
+
+// ---------------------------------------------------------------------------
+// splitmix64: tiny, seedable, and stable across platforms — the per-case
+// stream is fully determined by (master seed, case index).
+// ---------------------------------------------------------------------------
+
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed)
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `0..n` (n > 0).
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+
+    /// True with probability `percent`/100.
+    fn chance(&mut self, percent: u64) -> bool {
+        self.next() % 100 < percent
+    }
+
+    fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+fn master_seed() -> u64 {
+    match std::env::var("FLEXOR_FUZZ_SEED") {
+        Ok(s) => {
+            let t = s.trim();
+            let parsed = match t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+                Some(hex) => u64::from_str_radix(hex, 16),
+                None => t.parse(),
+            };
+            parsed.unwrap_or_else(|_| panic!("unparseable FLEXOR_FUZZ_SEED {s:?}"))
+        }
+        Err(_) => 0x5eed_f1e0_2020_0001,
+    }
+}
+
+fn case_count() -> usize {
+    match std::env::var("FLEXOR_FUZZ_CASES") {
+        Ok(s) => s.trim().parse().unwrap_or_else(|_| panic!("unparseable FLEXOR_FUZZ_CASES {s:?}")),
+        Err(_) => 10_000,
+    }
+}
+
+/// Derive the per-case seed. Mixing through splitmix keeps neighboring
+/// cases decorrelated even for sequential master seeds.
+fn case_seed(master: u64, case: usize) -> u64 {
+    Rng::new(master ^ (case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)).next()
+}
+
+/// Printable escape of fuzz input for failure reports.
+fn escape(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() + 16);
+    for &b in bytes.iter().take(2048) {
+        match b {
+            b'\\' => s.push_str("\\\\"),
+            b'\n' => s.push_str("\\n"),
+            b'\r' => s.push_str("\\r"),
+            b'\t' => s.push_str("\\t"),
+            0x20..=0x7e => s.push(b as char),
+            _ => s.push_str(&format!("\\x{b:02x}")),
+        }
+    }
+    if bytes.len() > 2048 {
+        s.push_str(&format!("… ({} bytes total)", bytes.len()));
+    }
+    s
+}
+
+/// Run one fuzz case with panic containment: any panic (assertion or
+/// parser bug) is re-raised with the seed and input attached so the case
+/// replays deterministically.
+fn run_case(master: u64, case: usize, input: &[u8], f: impl FnOnce()) {
+    let seed = case_seed(master, case);
+    if let Err(e) = panic::catch_unwind(AssertUnwindSafe(f)) {
+        let msg = e
+            .downcast_ref::<String>()
+            .map(|s| s.as_str())
+            .or_else(|| e.downcast_ref::<&str>().copied())
+            .unwrap_or("non-string panic payload");
+        panic!(
+            "fuzz case failed: seed=0x{master:x} case={case} case_seed=0x{seed:x}\n\
+             input: {}\npanic: {msg}",
+            escape(input)
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON document generator
+// ---------------------------------------------------------------------------
+
+const NUM_POOL: &[&str] = &[
+    "0",
+    "-0",
+    "1",
+    "-1",
+    "42",
+    "3.25",
+    "-3e-2",
+    "0.1",
+    "1E+2",
+    "1e308",
+    "-1e-308",
+    "5e-324",
+    "2.2250738585072014e-308",
+    "1.7976931348623157e308",
+    "123456789012345678",
+    "9007199254740993",
+    "1e999",
+    "0.000001",
+];
+
+fn gen_number(rng: &mut Rng, out: &mut String) {
+    if rng.chance(70) {
+        out.push_str(rng.pick(NUM_POOL));
+    } else {
+        let a = rng.next() % 1_000_000;
+        let b = rng.next() % 1000;
+        let e = (rng.next() % 40) as i64 - 20;
+        out.push_str(&format!("{}{a}.{b}e{e}", if rng.chance(30) { "-" } else { "" }));
+    }
+}
+
+const STR_PIECES: &[&str] = &[
+    "a", "model", "features", "serve", "é", "🦀", " ", "_", "-", "0", "\\\"", "\\\\", "\\n",
+    "\\t", "\\u0041", "\\ud83d\\ude00", "\\u00e9", "\\/",
+];
+
+fn gen_string(rng: &mut Rng, out: &mut String) {
+    out.push('"');
+    for _ in 0..rng.below(6) {
+        out.push_str(rng.pick(STR_PIECES));
+    }
+    out.push('"');
+}
+
+fn gen_value(rng: &mut Rng, depth: usize, out: &mut String) {
+    let choice = if depth >= 5 { rng.below(4) } else { rng.below(6) };
+    match choice {
+        0 => out.push_str("null"),
+        1 => out.push_str(if rng.chance(50) { "true" } else { "false" }),
+        2 => gen_number(rng, out),
+        3 => gen_string(rng, out),
+        4 => {
+            out.push('[');
+            let n = rng.below(5);
+            for i in 0..n {
+                if i > 0 {
+                    out.push(',');
+                }
+                gen_value(rng, depth + 1, out);
+            }
+            out.push(']');
+        }
+        _ => {
+            out.push('{');
+            let n = rng.below(4);
+            for i in 0..n {
+                if i > 0 {
+                    out.push(',');
+                }
+                gen_string(rng, out);
+                out.push(':');
+                gen_value(rng, depth + 1, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+/// A predict-shaped document: the hot-path schema plus adversarial
+/// variations (wrong-typed fields, oversized names, duplicate keys,
+/// extra nested keys the visitor must skip).
+fn gen_predict_doc(rng: &mut Rng, out: &mut String) {
+    out.push('{');
+    let mut first = true;
+    let mut sep = |out: &mut String, first: &mut bool| {
+        if !*first {
+            out.push(',');
+        }
+        *first = false;
+    };
+    if rng.chance(85) {
+        sep(out, &mut first);
+        out.push_str("\"model\":");
+        match rng.below(6) {
+            0 => out.push_str("null"),
+            1 => gen_number(rng, out),
+            2 => out.push_str(&format!("\"{}\"", "m".repeat(MAX_MODEL_NAME + 1 + rng.below(8)))),
+            _ => gen_string(rng, out),
+        }
+    }
+    if rng.chance(90) {
+        sep(out, &mut first);
+        out.push_str("\"features\":");
+        match rng.below(8) {
+            0 => out.push_str("null"),
+            1 => gen_string(rng, out),
+            2 => out.push_str("{\"nested\":1}"),
+            3 => out.push_str("[1,null,2]"),
+            4 => out.push_str("[[1],2]"),
+            _ => {
+                out.push('[');
+                let n = rng.below(10);
+                for i in 0..n {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    gen_number(rng, out);
+                }
+                out.push(']');
+            }
+        }
+    }
+    for _ in 0..rng.below(3) {
+        sep(out, &mut first);
+        gen_string(rng, out);
+        out.push(':');
+        gen_value(rng, 1, out);
+    }
+    if rng.chance(15) {
+        // duplicate key: last value wins in both parsers
+        sep(out, &mut first);
+        out.push_str("\"model\":\"dup\"");
+    }
+    out.push('}');
+}
+
+/// Structural mutations shared by both fuzz targets.
+fn mutate(rng: &mut Rng, bytes: &mut Vec<u8>) {
+    match rng.below(6) {
+        0 => {} // passthrough: the unmutated document must be accepted
+        1 => {
+            // truncate
+            if !bytes.is_empty() {
+                bytes.truncate(rng.below(bytes.len()));
+            }
+        }
+        2 => {
+            // flip 1–4 bytes
+            for _ in 0..1 + rng.below(4) {
+                if bytes.is_empty() {
+                    break;
+                }
+                let i = rng.below(bytes.len());
+                bytes[i] ^= 1 << rng.below(8);
+            }
+        }
+        3 => {
+            // insert random bytes
+            for _ in 0..1 + rng.below(3) {
+                let i = rng.below(bytes.len() + 1);
+                bytes.insert(i, rng.next() as u8);
+            }
+        }
+        4 => {
+            // delete a byte
+            if !bytes.is_empty() {
+                bytes.remove(rng.below(bytes.len()));
+            }
+        }
+        _ => {
+            // splice a random self-slice into a random position
+            if bytes.len() >= 2 {
+                let a = rng.below(bytes.len());
+                let b = (a + 1 + rng.below(16)).min(bytes.len());
+                let slice: Vec<u8> = bytes[a..b].to_vec();
+                let at = rng.below(bytes.len());
+                bytes.splice(at..at, slice);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HTTP request generator + mutations
+// ---------------------------------------------------------------------------
+
+const METHODS: &[&str] = &["GET", "POST", "DELETE", "PUT", "HEAD", "patch"];
+const PATHS: &[&str] = &[
+    "/predict",
+    "/metrics",
+    "/metrics?format=prometheus",
+    "/models",
+    "/models/bench/profile",
+    "/healthz",
+    "/readyz",
+    "/a/b/c",
+];
+const RID_CHARS: &[u8] = b"abcXYZ019._-@! \t\x7f";
+
+fn gen_request(rng: &mut Rng, out: &mut Vec<u8>) {
+    let nl = if rng.chance(70) { "\r\n" } else { "\n" };
+    let method = *rng.pick(METHODS);
+    let path = *rng.pick(PATHS);
+    let version = if rng.chance(85) { "HTTP/1.1" } else { "HTTP/1.0" };
+    out.extend_from_slice(format!("{method} {path} {version}{nl}").as_bytes());
+    out.extend_from_slice(format!("Host: fuzz{nl}").as_bytes());
+    let mut body = String::new();
+    if rng.chance(60) {
+        if rng.chance(70) {
+            gen_predict_doc(rng, &mut body);
+        } else {
+            gen_value(rng, 0, &mut body);
+        }
+    }
+    if !body.is_empty() || rng.chance(30) {
+        out.extend_from_slice(format!("Content-Length: {}{nl}", body.len()).as_bytes());
+        out.extend_from_slice(format!("Content-Type: application/json{nl}").as_bytes());
+    }
+    if rng.chance(40) {
+        let n = 1 + rng.below(70);
+        let rid: Vec<u8> = (0..n).map(|_| *rng.pick(RID_CHARS)).collect();
+        out.extend_from_slice(b"X-Request-Id: ");
+        out.extend_from_slice(&rid);
+        out.extend_from_slice(nl.as_bytes());
+    }
+    if rng.chance(30) {
+        out.extend_from_slice(format!("X-Deadline-Ms: {}{nl}", 1 + rng.below(10_000)).as_bytes());
+    }
+    if rng.chance(30) {
+        let c = if rng.chance(50) { "close" } else { "keep-alive" };
+        out.extend_from_slice(format!("Connection: {c}{nl}").as_bytes());
+    }
+    out.extend_from_slice(nl.as_bytes());
+    out.extend_from_slice(body.as_bytes());
+}
+
+/// Header-splicing mutation: inject a pathological header line at a
+/// random line boundary in the head.
+const SPLICE_HEADERS: &[&str] = &[
+    "Content-Length: 18446744073709551616",
+    "Content-Length: -1",
+    "Content-Length: 99999999",
+    "Content-Length: two",
+    "X-Deadline-Ms: 0",
+    "X-Deadline-Ms: -5",
+    "Connection: close",
+    "X-Request-Id: @@@@@@@@",
+    ": empty-name",
+    "No-Colon-Header",
+];
+
+fn splice_header(rng: &mut Rng, bytes: &mut Vec<u8>) {
+    // find line starts within the head (up to the first blank line)
+    let mut starts = vec![0usize];
+    let mut i = 0;
+    while i + 1 < bytes.len() {
+        if bytes[i] == b'\n' {
+            starts.push(i + 1);
+            if bytes[i + 1] == b'\n' || (i + 2 < bytes.len() && bytes[i + 1] == b'\r') {
+                break;
+            }
+        }
+        i += 1;
+    }
+    let at = starts[rng.below(starts.len())];
+    let line = if rng.chance(20) {
+        // oversized line → the framer's 431 per-line bound
+        format!("X-Big: {}\r\n", "a".repeat(9000))
+    } else if rng.chance(10) {
+        // header flood → the framer's 64-line bound
+        "X-Flood: 1\r\n".repeat(70)
+    } else {
+        format!("{}\r\n", rng.pick(SPLICE_HEADERS))
+    };
+    bytes.splice(at..at, line.into_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// fuzz: FrameParser
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fuzz_frame_parser_structure_aware() {
+    let master = master_seed();
+    let cases = case_count();
+    eprintln!("frame-parser fuzz: seed=0x{master:x} cases={cases}");
+    for case in 0..cases {
+        let mut rng = Rng::new(case_seed(master, case));
+        // 1–3 pipelined requests on one "connection"
+        let copies = 1 + rng.below(3);
+        let mut input = Vec::new();
+        for _ in 0..copies {
+            gen_request(&mut rng, &mut input);
+        }
+        let mutated = rng.below(10);
+        match mutated {
+            0..=5 => mutate(&mut rng, &mut input),
+            6 => splice_header(&mut rng, &mut input),
+            _ => {} // pristine
+        }
+        let pristine = mutated >= 7;
+        let max_body = if rng.chance(20) { 512 } else { 8 << 20 };
+        let input_c = input.clone();
+        run_case(master, case, &input_c, move || {
+            let mut p = FrameParser::new(max_body);
+            let mut fed = 0usize;
+            let mut frames = 0usize;
+            let mut errored = false;
+            'feed: while fed < input.len() {
+                // chunk-boundary shuffling: deliver 1..=64 bytes at a time
+                let n = (1 + rng.below(64)).min(input.len() - fed);
+                p.feed(&input[fed..fed + n]);
+                fed += n;
+                loop {
+                    match p.next_frame() {
+                        Ok(None) => break,
+                        Ok(Some(f)) => {
+                            assert!(f.method.len() <= 16, "method too long: {:?}", f.method);
+                            assert!(f.path.len() <= 256, "path too long");
+                            assert!(f.body.len() <= max_body, "body exceeds max_body");
+                            if let Some(rid) = f.request_id {
+                                assert!(rid.len() <= 64, "request id too long: {rid:?}");
+                                assert!(
+                                    rid.bytes().all(|b| b.is_ascii_alphanumeric()
+                                        || b == b'.'
+                                        || b == b'_'
+                                        || b == b'-'),
+                                    "unsanitized request id {rid:?}"
+                                );
+                            }
+                            if let Some(d) = f.deadline_ms {
+                                assert!(d > 0, "zero deadline yielded");
+                            }
+                            frames += 1;
+                            p.consume();
+                            assert!(frames <= 1000, "frame explosion");
+                        }
+                        Err(e) => {
+                            assert!(
+                                matches!(e.status, 400 | 413 | 431),
+                                "uncoded rejection: status {} ({})",
+                                e.status,
+                                e.msg
+                            );
+                            assert!(!e.msg.is_empty(), "empty rejection message");
+                            errored = true;
+                            break 'feed;
+                        }
+                    }
+                }
+            }
+            if pristine && max_body == 8 << 20 {
+                // an unmutated request stream must frame completely
+                assert!(!errored, "pristine request rejected");
+                assert_eq!(frames, copies, "pristine request stream under-framed");
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fuzz: streaming lexer ≡ tree parser (+ PredictVisitor extraction)
+// ---------------------------------------------------------------------------
+
+/// The tree-side oracle for [`PredictVisitor`]: exactly the field
+/// extraction `handle_predict` performs on the parsed tree.
+fn check_visitor_against_tree(bytes: &[u8], tree: &Json) {
+    let mut v = PredictVisitor::new(Vec::new());
+    let mut lx = Lexer::new();
+    lx.lex(bytes, &mut v).expect("lexer rejected a doc the tree parser accepted");
+    let m = tree.get("model");
+    if m.is_null() {
+        assert!(!v.model_seen(), "visitor saw a model the tree treats as absent");
+    } else {
+        match m.as_str() {
+            None => assert!(
+                v.model_seen() && v.model_bad(),
+                "non-string model not flagged by visitor"
+            ),
+            Some(name) if name.len() > MAX_MODEL_NAME => {
+                assert!(v.model_overflow(), "oversized model name not flagged");
+                assert_eq!(v.model(), None);
+            }
+            Some(name) => {
+                assert!(!v.model_bad(), "valid model flagged bad");
+                assert_eq!(v.model(), Some(name), "visitor extracted a different model");
+            }
+        }
+    }
+    match tree.get("features").as_f32_vec() {
+        Some(expect) => {
+            assert!(v.features_ok(), "valid features rejected by visitor");
+            assert_eq!(v.into_features(), expect, "visitor extracted different features");
+        }
+        None => assert!(!v.features_ok(), "invalid features accepted by visitor"),
+    }
+}
+
+#[test]
+fn fuzz_json_lexer_differential() {
+    let master = master_seed();
+    let cases = case_count();
+    eprintln!("json-lexer fuzz: seed=0x{master:x} cases={cases}");
+    for case in 0..cases {
+        // decorrelate from the frame-parser test's per-case streams
+        let mut rng = Rng::new(case_seed(master, case) ^ 0x6a50_6e5f_7374_7265);
+        let mut doc = String::new();
+        if rng.chance(60) {
+            gen_predict_doc(&mut rng, &mut doc);
+        } else {
+            gen_value(&mut rng, 0, &mut doc);
+        }
+        let mut bytes = doc.into_bytes();
+        mutate(&mut rng, &mut bytes);
+        let input = bytes.clone();
+        run_case(master, case, &input, move || {
+            let lexed = lex_to_tree(&bytes);
+            match std::str::from_utf8(&bytes) {
+                Err(_) => {
+                    // non-UTF-8 can never survive the lexer: strings are
+                    // validated and everything structural is ASCII
+                    assert!(lexed.is_err(), "lexer accepted non-utf8 input");
+                }
+                Ok(s) => match json::parse(s) {
+                    Ok(tree) => {
+                        let built =
+                            lexed.expect("lexer rejected a doc the tree parser accepted");
+                        assert_eq!(built, tree, "lexer rebuilt a different tree");
+                        check_visitor_against_tree(&bytes, &tree);
+                    }
+                    Err(e) => assert!(
+                        lexed.is_err(),
+                        "lexer accepted a doc the tree parser rejected ({e})"
+                    ),
+                },
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// curated property corpora: the documented edge cases, always exercised
+// even at low fuzz budgets
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lexer_matches_tree_parser_on_valid_corpus() {
+    let nested_open = "[".repeat(64);
+    let nested_close = "]".repeat(64);
+    let deep = format!("{nested_open}1{nested_close}");
+    let corpus: Vec<&str> = vec![
+        "0",
+        "-0",
+        "null",
+        "true",
+        "false",
+        "\"\"",
+        "[]",
+        "{}",
+        "[[]]",
+        "{\"a\":{}}",
+        " { \"a\" : [ 1 , 2 ] } ",
+        "1e308",
+        "-1e-308",
+        "5e-324",
+        "1.7976931348623157e308",
+        "1e999",
+        "123456789012345678901234567890",
+        "9007199254740993",
+        "01",
+        "0.0001E+5",
+        "-3e-2",
+        "\"\\u0041\\u00e9\\ud83d\\ude00\"",
+        "\"\\\"\\\\\\/\\b\\f\\n\\r\\t\"",
+        "\"é🦀\"",
+        "{\"model\":\"m\",\"features\":[1,2.5,-3e-2]}",
+        "{\"model\":null,\"features\":[]}",
+        "{\"a\":1,\"a\":2}",
+        "[null,true,false,0,\"x\",[],{}]",
+        &deep,
+    ];
+    for doc in corpus {
+        let tree = json::parse(doc).unwrap_or_else(|e| panic!("tree parser rejected {doc:?}: {e}"));
+        let built = lex_to_tree(doc.as_bytes())
+            .unwrap_or_else(|e| panic!("lexer rejected {doc:?}: {e}"));
+        assert_eq!(built, tree, "divergent trees for {doc:?}");
+    }
+}
+
+#[test]
+fn lexer_and_tree_parser_reject_same_invalid_corpus() {
+    let corpus: &[&str] = &[
+        "",
+        "   ",
+        "{",
+        "}",
+        "[",
+        "]",
+        "[1,]",
+        "{\"a\":}",
+        "{\"a\" 1}",
+        "{\"a\":1,}",
+        "{1:2}",
+        "[1 2]",
+        "tru",
+        "nul",
+        "falsy",
+        "+1",
+        ".5",
+        "-",
+        "1e",
+        "\"abc",
+        "\"\\x\"",
+        "\"\\u12\"",
+        "\"\\ud800\"",
+        "\"\\ud800\\u0041\"",
+        "\"a\nb\"",
+        "[1]]",
+        "1 2",
+        "\"a\"b",
+        "{\"a\":1}}",
+    ];
+    for doc in corpus {
+        assert!(json::parse(doc).is_err(), "tree parser accepted invalid {doc:?}");
+        assert!(lex_to_tree(doc.as_bytes()).is_err(), "lexer accepted invalid {doc:?}");
+    }
+}
+
+/// Non-UTF-8 byte sequences (not expressible as `&str`) must be rejected
+/// by the lexer wherever they appear.
+#[test]
+fn lexer_rejects_non_utf8_bytes() {
+    let cases: &[&[u8]] = &[
+        b"\"\xff\"",
+        b"\"a\xc3\"",
+        b"[\xff]",
+        b"{\"a\xf0\x28\":1}",
+        b"\xef\xbb\xbf1", // BOM is not whitespace
+    ];
+    for c in cases {
+        assert!(lex_to_tree(c).is_err(), "lexer accepted non-utf8 {:?}", escape(c));
+    }
+}

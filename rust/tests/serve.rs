@@ -4,7 +4,8 @@
 //! PJRT runtime needed — the bundle still goes through the full
 //! decrypt-at-load + binary-code forward path).
 
-use std::net::SocketAddr;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc};
 use std::thread;
@@ -13,8 +14,10 @@ use std::time::{Duration, Instant};
 use flexor::coordinator::{export_synthetic_mlp_bundle, export_synthetic_resnet_bundle};
 use flexor::inference::InferenceModel;
 use flexor::serve::{
-    http, BatchQueue, Registry, Request, ServeConfig, ServeMetrics, Server, WorkerPool,
+    http, BatchQueue, Registry, Request, Responder, ServeConfig, ServeMetrics, Server,
+    WorkerPool,
 };
+use flexor::substrate::fault::{self, FaultPlan};
 use flexor::substrate::json::{self, Json};
 use flexor::substrate::prng::Pcg32;
 use flexor::substrate::trace::TraceMode;
@@ -395,7 +398,7 @@ fn worker_sheds_expired_requests_and_serves_the_rest() {
             .try_push(Request {
                 entry: entry.clone(),
                 features: x.clone(),
-                respond: tx,
+                respond: Responder::Channel(tx),
                 enqueued: now,
                 // `now` is already in the past by the time a worker pops
                 deadline: expired.then_some(now),
@@ -408,7 +411,7 @@ fn worker_sheds_expired_requests_and_serves_the_rest() {
     let overflow = Request {
         entry: entry.clone(),
         features: x.clone(),
-        respond: tx,
+        respond: Responder::Channel(tx),
         enqueued: Instant::now(),
         deadline: None,
     };
@@ -444,6 +447,364 @@ fn worker_sheds_expired_requests_and_serves_the_rest() {
 
     queue.close();
     pool.join();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Event-loop torture tests (DESIGN.md §14). These drive the default
+// nonblocking front-end over raw sockets: byte-at-a-time framing,
+// pipelining, slowloris stalls, oversized heads, keep-alive accounting,
+// and queue-stall backpressure. Gated on unix, where the readiness loop
+// (and its epoll backend) is the default front-end.
+// ---------------------------------------------------------------------------
+
+/// Read one HTTP/1.1 response off a raw socket: status, headers
+/// (lower-cased names), and the `Content-Length`-framed body. `None` on
+/// EOF before a complete response.
+#[cfg(unix)]
+fn read_raw_response(r: &mut BufReader<TcpStream>) -> Option<(u16, Vec<(String, String)>, String)> {
+    let mut line = String::new();
+    if r.read_line(&mut line).ok()? == 0 {
+        return None;
+    }
+    let status: u16 = line.split_whitespace().nth(1)?.parse().ok()?;
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        if r.read_line(&mut h).ok()? == 0 {
+            return None;
+        }
+        let t = h.trim();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            let k = k.to_ascii_lowercase();
+            let v = v.trim().to_string();
+            if k == "content-length" {
+                content_length = v.parse().ok()?;
+            }
+            headers.push((k, v));
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body).ok()?;
+    Some((status, headers, String::from_utf8(body).ok()?))
+}
+
+#[cfg(unix)]
+fn raw_predict_request(rid: &str, features: &[f32]) -> Vec<u8> {
+    let body = predict_body("served", features);
+    format!(
+        "POST /predict HTTP/1.1\r\nHost: torture\r\nX-Request-Id: {rid}\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .into_bytes()
+}
+
+#[cfg(unix)]
+fn header_value(headers: &[(String, String)], name: &str) -> String {
+    headers
+        .iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v.clone())
+        .unwrap_or_default()
+}
+
+/// Pipelining: several requests written back-to-back in one `write` on
+/// one connection must come back as in-order responses — `X-Request-Id`
+/// echo proves the ordering — and the reuse shows up in the keep-alive
+/// counter.
+#[cfg(unix)]
+#[test]
+fn pipelined_requests_are_answered_in_order_on_one_connection() {
+    let (server, dir) = start_server("pipeline", ServeConfig::default());
+    let addr = server.local_addr();
+    let good: Vec<f32> = vec![0.5; D_IN];
+
+    let mut wire = Vec::new();
+    for i in 0..3 {
+        wire.extend_from_slice(&raw_predict_request(&format!("pipe-{i}"), &good));
+    }
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.write_all(&wire).unwrap();
+
+    let mut reader = BufReader::new(stream);
+    for i in 0..3 {
+        let (status, headers, body) =
+            read_raw_response(&mut reader).unwrap_or_else(|| panic!("missing response {i}"));
+        assert_eq!(status, 200, "response {i}: {body}");
+        assert_eq!(
+            header_value(&headers, "x-request-id"),
+            format!("pipe-{i}"),
+            "pipelined responses out of order"
+        );
+        let v = json::parse(&body).unwrap();
+        assert!(v.get("prediction").as_i64().is_some(), "{v}");
+    }
+
+    let (_, m) = http::client::request(addr, "GET", "/metrics", None).unwrap();
+    let mj = json::parse(&m).unwrap();
+    assert!(
+        mj.get("keepalive_requests_total").as_usize().unwrap_or(0) >= 2,
+        "pipelined reuse not counted: {mj}"
+    );
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Incremental framing: a valid request split into two writes at *every*
+/// byte boundary must still parse to exactly one 200. This walks the
+/// resumable parser through every possible partial-read suspension
+/// point (mid-request-line, mid-header, mid-body).
+#[cfg(unix)]
+#[test]
+fn request_framing_survives_a_split_at_every_byte_boundary() {
+    let cfg = ServeConfig { max_wait_us: 0, ..ServeConfig::default() };
+    let (server, dir) = start_server("split", cfg);
+    let addr = server.local_addr();
+    let good: Vec<f32> = vec![0.25; D_IN];
+    let wire = raw_predict_request("split", &good);
+
+    for cut in 1..wire.len() {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        stream.write_all(&wire[..cut]).unwrap();
+        stream.flush().unwrap();
+        stream.write_all(&wire[cut..]).unwrap();
+        let mut reader = BufReader::new(stream);
+        let (status, _headers, body) = read_raw_response(&mut reader)
+            .unwrap_or_else(|| panic!("no response when split at byte {cut}"));
+        assert_eq!(status, 200, "split at byte {cut}: {body}");
+    }
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Slowloris: a client that sends a partial header block and then stalls
+/// gets a coded `408 request_timeout` once the header window elapses,
+/// and the connection is closed — it cannot pin a connection slot open.
+#[cfg(unix)]
+#[test]
+fn slowloris_header_stall_gets_408_and_the_connection_closed() {
+    let cfg = ServeConfig { header_timeout_ms: Some(150), ..ServeConfig::default() };
+    let (server, dir) = start_server("slowloris", cfg);
+    let addr = server.local_addr();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.set_nodelay(true).ok();
+    // drip a partial request head one byte per write, then stall forever
+    for &b in b"POST /predict HTTP/1.1\r\nHost: slow\r\n" {
+        stream.write_all(&[b]).unwrap();
+    }
+    let t0 = Instant::now();
+
+    // a fast client is unaffected while the slow one stalls
+    let good: Vec<f32> = vec![0.5; D_IN];
+    let (status, v) = post_predict(addr, &predict_body("served", &good));
+    assert_eq!(status, 200, "fast client starved by a slowloris peer: {v}");
+
+    let mut reader = BufReader::new(stream);
+    let (status, _headers, body) =
+        read_raw_response(&mut reader).expect("no response for a stalled header block");
+    assert_eq!(status, 408, "{body}");
+    let v = json::parse(&body).unwrap();
+    assert_eq!(v.get("code").as_str(), Some("request_timeout"), "{v}");
+    assert!(
+        t0.elapsed() >= Duration::from_millis(100),
+        "408 arrived before the header window could elapse"
+    );
+
+    // after the timeout response the server hangs up
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).expect("connection not closed after 408");
+    assert!(rest.is_empty(), "unexpected bytes after the 408: {rest:?}");
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Oversized heads: a single huge header line, and a head that never
+/// terminates within the 16 KiB bound, both get a coded
+/// `431 headers_too_large` instead of unbounded buffering.
+#[cfg(unix)]
+#[test]
+fn oversized_header_block_rejected_with_431() {
+    let (server, dir) = start_server("bighead", ServeConfig::default());
+    let addr = server.local_addr();
+
+    // one 9 KB header line: over the per-line bound
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let req = format!(
+        "GET /healthz HTTP/1.1\r\nHost: t\r\nX-Big: {}\r\n\r\n",
+        "a".repeat(9000)
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream);
+    let (status, _h, body) = read_raw_response(&mut reader).expect("no response to big header");
+    assert_eq!(status, 431, "{body}");
+    assert_eq!(
+        json::parse(&body).unwrap().get("code").as_str(),
+        Some("headers_too_large"),
+        "{body}"
+    );
+
+    // ~20 KB of headers with no terminating blank line: over the
+    // whole-head bound (written as one buffer so the server drains it
+    // before closing)
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut flood = b"GET /healthz HTTP/1.1\r\n".to_vec();
+    let pad = format!("X-Pad: {}\r\n", "b".repeat(400));
+    for _ in 0..50 {
+        flood.extend_from_slice(pad.as_bytes());
+    }
+    stream.write_all(&flood).unwrap();
+    let mut reader = BufReader::new(stream);
+    let (status, _h, body) =
+        read_raw_response(&mut reader).expect("no response to unterminated head");
+    assert_eq!(status, 431, "{body}");
+    assert_eq!(
+        json::parse(&body).unwrap().get("code").as_str(),
+        Some("headers_too_large"),
+        "{body}"
+    );
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Keep-alive accounting: five predicts through one persistent
+/// [`http::client::Conn`] are exactly one accepted connection with four
+/// reuses; the `/metrics` fetch itself is the second connection.
+#[cfg(unix)]
+#[test]
+fn keep_alive_connection_reuse_shows_in_connection_metrics() {
+    let (server, dir) = start_server("keepalive", ServeConfig::default());
+    let addr = server.local_addr();
+    let good: Vec<f32> = vec![0.5; D_IN];
+    let body = predict_body("served", &good);
+
+    let mut conn = http::client::Conn::connect(addr).unwrap();
+    for i in 0..5 {
+        let (status, resp) = conn.request("POST", "/predict", Some(&body)).unwrap();
+        assert_eq!(status, 200, "keep-alive request {i}: {resp}");
+    }
+
+    let (status, m) = http::client::request(addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let mj = json::parse(&m).unwrap();
+    assert_eq!(mj.get("keepalive_requests_total").as_usize(), Some(4), "{mj}");
+    assert_eq!(mj.get("connections_total").as_usize(), Some(2), "{mj}");
+    assert_eq!(mj.get("connections_open").as_usize(), Some(2), "{mj}");
+
+    drop(conn);
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Backpressure regression: with a one-slot queue and a stalled worker
+/// (`FLEXOR_FAULT=queue_stall` semantics, armed in-process), a client
+/// pipelining four requests must see the loop *stop reading its socket*
+/// — the `suspended_connections` gauge rises while the stall holds, at
+/// least one request is shed with a 503, responses still come back in
+/// pipeline order, and the gauge returns to zero once the queue drains.
+#[cfg(unix)]
+#[test]
+fn queue_stall_suspends_the_connection_and_resumes_after_drain() {
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait_us: 0,
+        queue_capacity: 1,
+        ..ServeConfig::default()
+    };
+    let (server, dir) = start_server("stall", cfg);
+    let addr = server.local_addr();
+    fault::arm(FaultPlan { queue_stall_ms: 300, ..FaultPlan::default() });
+
+    let good: Vec<f32> = vec![0.5; D_IN];
+    let mut wire = Vec::new();
+    for i in 0..4 {
+        wire.extend_from_slice(&raw_predict_request(&format!("stall-{i}"), &good));
+    }
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.write_all(&wire).unwrap();
+
+    // While the worker stalls the queue stays full, so the loop must
+    // park this socket: the suspension gauge rises. `/metrics` is served
+    // inline by the event loop, so it stays reachable throughout.
+    let mut saw_suspended = false;
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_secs(10) {
+        let (status, m) = http::client::request(addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(status, 200);
+        let mj = json::parse(&m).unwrap();
+        if mj.get("suspended_connections").as_usize().unwrap_or(0) >= 1 {
+            saw_suspended = true;
+            break;
+        }
+        thread::sleep(Duration::from_millis(5));
+    }
+    assert!(saw_suspended, "queue stall never suspended the flooding connection");
+    fault::disarm();
+
+    // Responses arrive strictly in pipeline order; under the stall at
+    // least one of the four was shed with a 503, and the first (which
+    // reached the queue before it filled) was served.
+    let mut reader = BufReader::new(stream);
+    let mut statuses = Vec::new();
+    for i in 0..4 {
+        let (status, headers, body) =
+            read_raw_response(&mut reader).unwrap_or_else(|| panic!("missing response {i}"));
+        assert_eq!(
+            header_value(&headers, "x-request-id"),
+            format!("stall-{i}"),
+            "responses out of order: {body}"
+        );
+        assert!(
+            status == 200 || status == 503,
+            "response {i}: unexpected status {status}: {body}"
+        );
+        if status == 503 {
+            let v = json::parse(&body).unwrap();
+            assert_eq!(v.get("code").as_str(), Some("queue_full"), "{v}");
+        }
+        statuses.push(status);
+    }
+    assert_eq!(statuses[0], 200, "first pipelined request must be served: {statuses:?}");
+    assert!(
+        statuses.iter().any(|&s| s == 503),
+        "no request was shed while the queue was stalled: {statuses:?}"
+    );
+
+    // Once the stall is gone and the pipeline is drained, the gauge
+    // must return to zero (the socket resumed reading).
+    let t0 = Instant::now();
+    loop {
+        let (_, m) = http::client::request(addr, "GET", "/metrics", None).unwrap();
+        let mj = json::parse(&m).unwrap();
+        if mj.get("suspended_connections").as_usize() == Some(0) {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "suspension never cleared after drain: {mj}"
+        );
+        thread::sleep(Duration::from_millis(10));
+    }
+
+    server.shutdown();
     std::fs::remove_dir_all(&dir).ok();
 }
 
